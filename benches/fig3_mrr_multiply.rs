@@ -1,0 +1,47 @@
+//! Bench for Fig. 3(c): single-MRR multiplication — device-sim throughput
+//! and the error statistics the paper reports (σ = 0.019, 6.72 bits).
+
+use photonic_dfa::experiments::fig3c_multiply;
+use photonic_dfa::photonics::{BankConfig, BpdMode, WeightBank};
+use photonic_dfa::util::benchx::{bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    // correctness numbers first (what the figure actually shows)
+    let m = fig3c_multiply(3900, 7).unwrap();
+    println!(
+        "fig3c stats: n={} sigma={:.4} mean={:+.4} bits={:.2} [paper 0.019 / 6.72]",
+        m.n, m.sigma, m.mean, m.effective_bits
+    );
+
+    // throughput of the device-level multiply (inscribe + readout)
+    let mut bank = WeightBank::new(BankConfig {
+        rows: 1,
+        cols: 1,
+        ..BankConfig::testbed(BpdMode::SingleMrr)
+    })
+    .unwrap();
+    let mut rng = Pcg64::seed(1);
+    let r = bench_throughput("fig3c/multiply_with_inscribe", &cfg, 1.0, "mult", || {
+        let x = rng.uniform() as f32;
+        let w = rng.uniform_in(-1.0, 1.0) as f32;
+        bank.multiply(x, w).unwrap()
+    });
+    println!("{}", r.report());
+
+    // readout-only path (weights already locked — the per-cycle cost)
+    let mut bank2 = WeightBank::new(BankConfig {
+        rows: 1,
+        cols: 1,
+        ..BankConfig::testbed(BpdMode::SingleMrr)
+    })
+    .unwrap();
+    let tile = photonic_dfa::tensor::Tensor::new(&[1, 1], vec![0.5]).unwrap();
+    bank2.inscribe(&tile).unwrap();
+    let r = bench_throughput("fig3c/readout_only_cycle", &cfg, 1.0, "cycle", || {
+        bank2.matvec(&[0.7]).unwrap()
+    });
+    println!("{}", r.report());
+}

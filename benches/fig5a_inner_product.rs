@@ -1,0 +1,47 @@
+//! Bench for Fig. 5(a): 1×4 photonic inner products through both BPD
+//! circuits — error statistics + device-sim measurement rate.
+
+use photonic_dfa::experiments::fig5a_inner_products;
+use photonic_dfa::photonics::{BankConfig, BpdMode, WeightBank};
+use photonic_dfa::util::benchx::{bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    for (label, mode, paper_sigma) in [
+        ("offchip", BpdMode::OffChip, 0.098),
+        ("onchip", BpdMode::OnChip, 0.202),
+    ] {
+        let m = fig5a_inner_products(mode, 2000, 7).unwrap();
+        println!(
+            "fig5a/{label}: sigma={:.4} mean={:+.4} bits={:.2} [paper sigma {paper_sigma}]",
+            m.sigma, m.mean, m.effective_bits
+        );
+    }
+
+    // full measurement loop (inscribe + read), the experiment's inner loop
+    let mut bank = WeightBank::new(BankConfig::testbed(BpdMode::OffChip)).unwrap();
+    let mut rng = Pcg64::seed(3);
+    let r = bench_throughput(
+        "fig5a/measurement_incl_inscribe",
+        &cfg,
+        4.0,
+        "MAC",
+        || {
+            let w: Vec<f32> = (0..4).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+            let x: Vec<f32> = (0..4).map(|_| rng.uniform() as f32).collect();
+            bank.inner_product(&x, &w).unwrap()
+        },
+    );
+    println!("{}", r.report());
+
+    // pure optical cycles on a locked bank (the hardware's 10 GHz path)
+    let tile = photonic_dfa::tensor::Tensor::new(&[1, 4], vec![0.5, -0.2, 0.8, 0.1])
+        .unwrap();
+    bank.inscribe(&tile).unwrap();
+    let r = bench_throughput("fig5a/locked_bank_cycle", &cfg, 4.0, "MAC", || {
+        bank.matvec(&[0.9, 0.4, 0.6, 0.2]).unwrap()
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,69 @@
+//! Bench for Fig. 5(b): end-to-end training-step latency of the fused AOT
+//! artifacts (the workload behind the validation curves).
+//!
+//! Reports per-step latency and MAC throughput for the DFA step (with and
+//! without noise) and the backprop baseline, per network config.
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::runtime::Engine;
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let bench_cfg = BenchConfig::default();
+
+    for config in ["tiny", "small", "mnist"] {
+        let dims = engine.manifest().net_dims(config).unwrap().clone();
+        let mut rng = Pcg64::seed(1);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, (r % dims.d_out) as usize, 1.0);
+        }
+        let n1 = Tensor::randn(&[dims.d_h1, dims.batch], 1.0, &mut rng);
+        let n2 = Tensor::randn(&[dims.d_h2, dims.batch], 1.0, &mut rng);
+
+        // total forward+backward+update MACs per step (dense layers x2 for
+        // fwd+update outer products + the DFA gradient matvec)
+        let fwd_macs = dims.batch
+            * (dims.d_in * dims.d_h1 + dims.d_h1 * dims.d_h2 + dims.d_h2 * dims.d_out);
+        let dfa_macs = dims.batch * (dims.d_h1 + dims.d_h2) * dims.d_out;
+        let macs = (3 * fwd_macs + dfa_macs) as f64;
+
+        let dfa = engine.load(&format!("dfa_step_{config}")).unwrap();
+        let mut inputs: Vec<Tensor> = state.tensors.clone();
+        inputs.extend([
+            b1.clone(), b2.clone(), x.clone(), y.clone(), n1.clone(), n2.clone(),
+            Tensor::scalar(0.098), Tensor::scalar(0.0),
+            Tensor::scalar(0.01), Tensor::scalar(0.9),
+        ]);
+        let r = bench_throughput(
+            &format!("fig5b/dfa_step_{config}"),
+            &bench_cfg,
+            macs,
+            "MAC",
+            || dfa.execute(&inputs).unwrap(),
+        );
+        println!("{}", r.report());
+
+        let bp = engine.load(&format!("bp_step_{config}")).unwrap();
+        let mut bp_inputs: Vec<Tensor> = state.tensors.clone();
+        bp_inputs.extend([
+            x.clone(), y.clone(), Tensor::scalar(0.01), Tensor::scalar(0.9),
+        ]);
+        let r = bench_throughput(
+            &format!("fig5b/bp_step_{config}"),
+            &bench_cfg,
+            macs,
+            "MAC",
+            || bp.execute(&bp_inputs).unwrap(),
+        );
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench for Fig. 5(c): the resolution-sweep workload — verifies that the
+//! runtime noise/quantisation scalars do not change step latency (a single
+//! artifact serves every sweep point) and reports short-sweep accuracies.
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::experiments::fig5c_sweep;
+use photonic_dfa::runtime::Engine;
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let bench_cfg = BenchConfig::default();
+    let config = "small";
+    let dims = engine.manifest().net_dims(config).unwrap().clone();
+    let mut rng = Pcg64::seed(1);
+    let state = NetState::init(&dims, &mut rng);
+    let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+    let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
+    let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+    for r in 0..dims.batch {
+        y.set(r, r % dims.d_out, 1.0);
+    }
+    let n1 = Tensor::randn(&[dims.d_h1, dims.batch], 1.0, &mut rng);
+    let n2 = Tensor::randn(&[dims.d_h2, dims.batch], 1.0, &mut rng);
+    let dfa = engine.load(&format!("dfa_step_{config}")).unwrap();
+
+    // latency must be flat across the sweep's runtime scalars
+    for (label, sigma, bits) in [
+        ("clean", 0.0f32, 0.0f32),
+        ("sigma_0.098", 0.098, 0.0),
+        ("sigma_1.0", 1.0, 0.0),
+        ("quant_3b", 0.0, 3.0),
+        ("quant_8b", 0.0, 8.0),
+    ] {
+        let mut inputs: Vec<Tensor> = state.tensors.clone();
+        inputs.extend([
+            b1.clone(), b2.clone(), x.clone(), y.clone(), n1.clone(), n2.clone(),
+            Tensor::scalar(sigma), Tensor::scalar(bits),
+            Tensor::scalar(0.01), Tensor::scalar(0.9),
+        ]);
+        let r = bench(&format!("fig5c/step_{label}"), &bench_cfg, || {
+            dfa.execute(&inputs).unwrap()
+        });
+        println!("{}", r.report());
+    }
+
+    // a micro sweep for the accuracy shape (full sweep: resolution_sweep example)
+    let pts = fig5c_sweep(engine, config, &[2.0, 4.0, 8.0], 1, 1, 2048, 512, Some(16))
+        .unwrap();
+    for p in pts {
+        println!(
+            "fig5c/acc bits={:.1} sigma={:.4} test_acc={:.4}",
+            p.bits, p.sigma, p.test_acc
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench for Fig. 6: the optimal-E_op sweep — prints the table rows the
+//! figure plots and times the analytic model (it backs interactive tools,
+//! so planning latency matters).
+
+use photonic_dfa::energy::components::MrrTuning;
+use photonic_dfa::energy::model::ArchitectureModel;
+use photonic_dfa::energy::sweep::optimal_for_cells;
+use photonic_dfa::experiments::fig6_rows;
+use photonic_dfa::util::benchx::{bench, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig::default();
+
+    println!("fig6 rows (cells, E_op heater pJ, E_op trimmed pJ):");
+    for (cells, h, t) in fig6_rows(25, 100_000, 14) {
+        println!("fig6/row {cells:>7} {:>8.3} {:>8.3}", h * 1e12, t * 1e12);
+    }
+
+    let base = ArchitectureModel::paper(MrrTuning::Trimmed);
+    let r = bench("fig6/optimal_for_1000_cells", &cfg, || {
+        optimal_for_cells(base, 1000, 5).unwrap()
+    });
+    println!("{}", r.report());
+
+    let r = bench("fig6/full_sweep_14pts", &cfg, || {
+        fig6_rows(25, 100_000, 14)
+    });
+    println!("{}", r.report());
+
+    let r = bench("fig6/single_eop_eval", &cfg, || {
+        base.with_dims(50, 20).energy_per_op()
+    });
+    println!("{}", r.report());
+}

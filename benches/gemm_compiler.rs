@@ -1,0 +1,59 @@
+//! GeMM-compiler bench: planning cost and tiled mat-vec execution over the
+//! numeric and device executors for the paper's layer shapes.
+
+use photonic_dfa::dfa::device_backend::DeviceBackend;
+use photonic_dfa::gemm::compiler::{GemmCompiler, NumericExecutor};
+use photonic_dfa::gemm::schedule::Order;
+use photonic_dfa::photonics::BpdMode;
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg64::seed(1);
+
+    // planning cost for the paper's 800x10 feedback matrix
+    let exec = NumericExecutor::new(50, 20);
+    let r = bench("gemm/plan_800x10_on_50x20", &cfg, || {
+        GemmCompiler::plan(800, 10, &exec, Order::ColMajor).unwrap()
+    });
+    println!("{}", r.report());
+
+    // numeric execution (16 cycles per matvec)
+    let bmat = Tensor::rand_uniform(&[800, 10], -1.0, 1.0, &mut rng);
+    let e: Vec<f32> = (0..10).map(|_| rng.normal(0.0, 0.5) as f32).collect();
+    let mut exec = NumericExecutor::new(50, 20);
+    let plan = GemmCompiler::plan(800, 10, &exec, Order::ColMajor).unwrap();
+    let r = bench_throughput(
+        "gemm/numeric_matvec_800x10",
+        &cfg,
+        (800 * 10) as f64,
+        "MAC",
+        || plan.matvec(&mut exec, &bmat, &e).unwrap(),
+    );
+    println!("{}", r.report());
+
+    // device-level execution with pre-compiled (analog-memory) tiles
+    let mut be = DeviceBackend::new(BpdMode::OffChip, 3).unwrap();
+    let fb = be.compile_feedback(&bmat).unwrap();
+    let r = bench_throughput(
+        "gemm/device_matvec_800x10",
+        &cfg,
+        (800 * 10) as f64,
+        "MAC",
+        || be.matvec(&fb, &e, None).unwrap(),
+    );
+    println!("{}", r.report());
+
+    // schedule statistics for the paper's case (prints the cycle count the
+    // energy model consumes)
+    let stats = plan.schedule.stats(10e9, true);
+    println!(
+        "gemm/schedule_800x10: cycles={} encodes={} macs={} compute_time={:.2} ns @10GHz",
+        stats.cycles,
+        stats.input_encodes,
+        stats.macs,
+        stats.compute_time_s * 1e9
+    );
+}

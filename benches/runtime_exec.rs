@@ -1,0 +1,51 @@
+//! Runtime bench: PJRT dispatch + marshalling overhead per artifact.
+//!
+//! Separates (a) Tensor -> Literal conversion, (b) execute, and (c) output
+//! decomposition, to keep the coordinator's overhead honest (perf target:
+//! marshalling < 10% of step latency on the mnist config).
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::runtime::engine::tensor_to_literal;
+use photonic_dfa::runtime::Engine;
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let cfg = BenchConfig::default();
+
+    for config in ["small", "mnist"] {
+        let dims = engine.manifest().net_dims(config).unwrap().clone();
+        let mut rng = Pcg64::seed(1);
+        let state = NetState::init(&dims, &mut rng);
+        let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
+        let fwd = engine.load(&format!("fwd_{config}")).unwrap();
+        let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        inputs.push(x);
+
+        let r = bench(&format!("runtime/marshal_inputs_{config}"), &cfg, || {
+            inputs
+                .iter()
+                .map(|t| tensor_to_literal(t).unwrap())
+                .collect::<Vec<_>>()
+        });
+        println!("{}", r.report());
+
+        let r = bench(&format!("runtime/fwd_execute_{config}"), &cfg, || {
+            fwd.execute(&inputs).unwrap()
+        });
+        println!("{}", r.report());
+    }
+
+    // artifact compile cost (amortised once per process by the cache)
+    let t0 = std::time::Instant::now();
+    let fresh = Engine::new("artifacts").unwrap();
+    fresh.load("dfa_step_small").unwrap();
+    println!(
+        "runtime/compile_dfa_step_small once: {:.2?} (cached afterwards)",
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,55 @@
+//! Device-simulator bench: the 50×20 photonic weight bank's operational
+//! cycle, inscription, calibration and analog-memory switch costs — the
+//! hot path of device-mode training.
+
+use photonic_dfa::photonics::{BankConfig, BpdMode, WeightBank};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg64::seed(1);
+
+    // bank construction includes per-ring fabrication + calibration
+    let t0 = std::time::Instant::now();
+    let mut bank = WeightBank::new(BankConfig::paper(BpdMode::OffChip)).unwrap();
+    println!(
+        "weight_bank/build_and_calibrate_50x20 once: {:.2?} (1000 rings)",
+        t0.elapsed()
+    );
+
+    let tile = Tensor::rand_uniform(&[50, 20], -0.9, 0.9, &mut rng);
+    let r = bench("weight_bank/inscribe_50x20", &cfg, || {
+        bank.inscribe(&tile).unwrap()
+    });
+    println!("{}", r.report());
+
+    let snap = bank.snapshot();
+    let r = bench("weight_bank/analog_memory_restore", &cfg, || {
+        bank.restore(&snap).unwrap()
+    });
+    println!("{}", r.report());
+
+    let x: Vec<f32> = (0..20).map(|_| rng.uniform() as f32).collect();
+    let r = bench_throughput(
+        "weight_bank/cycle_50x20",
+        &cfg,
+        (50 * 20) as f64,
+        "MAC",
+        || bank.matvec(&x).unwrap(),
+    );
+    println!("{}", r.report());
+
+    // ideal (noise-free) bank: the numeric floor of the simulator
+    let mut ideal = WeightBank::new(BankConfig::paper(BpdMode::Ideal)).unwrap();
+    ideal.inscribe(&tile).unwrap();
+    let r = bench_throughput(
+        "weight_bank/cycle_50x20_ideal",
+        &cfg,
+        (50 * 20) as f64,
+        "MAC",
+        || ideal.matvec(&x).unwrap(),
+    );
+    println!("{}", r.report());
+}

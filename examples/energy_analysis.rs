@@ -1,0 +1,41 @@
+//! Reproduce the paper's §5 energy/speed analysis: the headline numbers
+//! (Eq. 2-4) and the Fig. 6 optimal-E_op sweep.
+//!
+//! ```bash
+//! cargo run --release --example energy_analysis
+//! ```
+
+use photonic_dfa::energy::components::MrrTuning;
+use photonic_dfa::energy::model::ArchitectureModel;
+use photonic_dfa::experiments::energy_tables;
+
+fn main() {
+    println!("=== §5 headline summary (model vs paper) ===\n");
+    print!("{}", energy_tables::render_headline());
+
+    println!("\n=== Eq. (4) wall-plug power breakdown, 50x20 bank ===\n");
+    for (name, tuning) in [
+        ("heater-locked", MrrTuning::HeaterLocked),
+        ("trimmed", MrrTuning::Trimmed),
+    ] {
+        let m = ArchitectureModel::paper(tuning);
+        let b = m.power_breakdown();
+        println!(
+            "{name:>14}: laser {:>7.3} W | MRR {:>7.3} W | DAC {:>6.3} W | \
+             TIA {:>6.3} W | ADC {:>6.3} W | total {:>7.3} W",
+            b.laser_w, b.mrr_w, b.dac_w, b.tia_w, b.adc_w,
+            b.total_w()
+        );
+    }
+
+    println!("\n=== Fig. 6 — optimal E_op vs number of MAC cells ===\n");
+    println!("cells     E_op heater (pJ)   E_op trimmed (pJ)");
+    for (cells, h, t) in photonic_dfa::experiments::fig6_rows(25, 100_000, 16) {
+        println!("{cells:>7}   {:>12.3}      {:>12.3}", h * 1e12, t * 1e12);
+    }
+
+    println!(
+        "\npaper anchor: 50x20 bank @ 10 GHz => 20 TOPS, 1.0 pJ/op (heaters), \
+         0.28 pJ/op (trimming), 5.78 TOPS/mm²"
+    );
+}

@@ -1,0 +1,52 @@
+//! Reproduce the device-characterisation experiments of §2/§4:
+//!
+//! * Fig. 3(b): add-drop MRR transmission profile (r = 0.95, lossless)
+//! * Fig. 3(c): 3900 single-MRR multiplications — error σ and bits
+//! * Fig. 5(a): 5000 photonic 1×4 inner products per BPD circuit
+//!
+//! ```bash
+//! cargo run --release --example photonic_characterization
+//! ```
+
+use photonic_dfa::experiments::{fig3b_curve, fig3c_multiply, fig5a_inner_products};
+use photonic_dfa::photonics::BpdMode;
+
+fn main() -> photonic_dfa::Result<()> {
+    println!("=== Fig. 3(b): add-drop transmission profile (ASCII) ===\n");
+    // render T_drop and the weight as a terminal plot
+    let rows = fig3b_curve(61);
+    for (phi, tp, td, w) in &rows {
+        if (phi * 10.0).round() % 2.0 != 0.0 {
+            continue;
+        }
+        let bar = |v: f64| {
+            let n = ((v + 1.0) / 2.0 * 40.0).round() as usize;
+            format!("{}*", " ".repeat(n))
+        };
+        println!(
+            "phi {phi:>6.2}  Tp {tp:>6.3}  Td {td:>6.3}  w {w:>6.3} |{}",
+            bar(*w)
+        );
+    }
+
+    println!("\n=== Fig. 3(c): single-MRR multiplication (n = 3900) ===\n");
+    let m = fig3c_multiply(3900, 7)?;
+    println!(
+        "measured: sigma = {:.4}, mean = {:+.4}, effective resolution = {:.2} bits",
+        m.sigma, m.mean, m.effective_bits
+    );
+    println!("paper:    sigma = 0.0190, mean = -0.0010, effective resolution = 6.72 bits");
+
+    println!("\n=== Fig. 5(a): 1x4 photonic inner products (n = 5000 each) ===\n");
+    for (label, mode, psig, pbits) in [
+        ("off-chip BPD", BpdMode::OffChip, 0.098, 4.35),
+        ("on-chip BPD", BpdMode::OnChip, 0.202, 3.31),
+    ] {
+        let m = fig5a_inner_products(mode, 5000, 7)?;
+        println!(
+            "{label:<13} measured sigma {:.4} ({:.2} bits)   paper {psig} ({pbits} bits)",
+            m.sigma, m.effective_bits
+        );
+    }
+    Ok(())
+}

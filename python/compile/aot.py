@@ -1,0 +1,189 @@
+"""AOT compile path: lower every L2 function to HLO *text* + a manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO **text**, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's XLA
+(xla_extension 0.5.1, via the `xla` crate) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Alongside the .hlo.txt files we emit `manifest.json`: for every artifact the
+ordered input/output names, shapes and dtypes, plus the network configs.
+The Rust runtime (runtime::manifest) is entirely manifest-driven — no shape
+is hard-coded on the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import BANK_COLS, BANK_ROWS, mrr_bank_matvec
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _io(names_shapes):
+    return [
+        {"name": n, "shape": list(s), "dtype": "f32"} for n, s in names_shapes
+    ]
+
+
+def _state_io(cfg: model.NetConfig, prefix=""):
+    out = []
+    for name, shape in cfg.param_shapes:
+        out.append((prefix + name, shape))
+    for name, shape in cfg.param_shapes:
+        out.append((prefix + "v" + name, shape))
+    return out
+
+
+def build_artifacts(cfg: model.NetConfig):
+    """Returns {artifact_name: (lowered, inputs, outputs)} for one config."""
+    p_specs = [_spec(s) for _, s in cfg.param_shapes]
+    state_specs = p_specs + p_specs  # params + momentum
+    x_spec = _spec((cfg.batch, cfg.d_in))
+    y_spec = _spec((cfg.batch, cfg.d_out))
+    b1_spec = _spec((cfg.d_h1, cfg.d_out))
+    b2_spec = _spec((cfg.d_h2, cfg.d_out))
+    n1_spec = _spec((cfg.d_h1, cfg.batch))
+    n2_spec = _spec((cfg.d_h2, cfg.batch))
+    scalar = _spec(())
+
+    arts = {}
+
+    fwd_lowered = jax.jit(model.forward).lower(*p_specs, x_spec)
+    arts[f"fwd_{cfg.name}"] = (
+        fwd_lowered,
+        _io([(n, s) for n, s in cfg.param_shapes] + [("x", x_spec.shape)]),
+        _io([
+            ("logits", (cfg.batch, cfg.d_out)),
+            ("a1", (cfg.batch, cfg.d_h1)),
+            ("a2", (cfg.batch, cfg.d_h2)),
+            ("h1", (cfg.batch, cfg.d_h1)),
+            ("h2", (cfg.batch, cfg.d_h2)),
+        ]),
+    )
+
+    dfa_lowered = jax.jit(model.dfa_step).lower(
+        *state_specs, b1_spec, b2_spec, x_spec, y_spec, n1_spec, n2_spec,
+        scalar, scalar, scalar, scalar,
+    )
+    dfa_inputs = _state_io(cfg) + [
+        ("bmat1", b1_spec.shape), ("bmat2", b2_spec.shape),
+        ("x", x_spec.shape), ("y", y_spec.shape),
+        ("noise1", n1_spec.shape), ("noise2", n2_spec.shape),
+        ("sigma", ()), ("bits", ()), ("lr", ()), ("momentum", ()),
+    ]
+    step_outputs = _state_io(cfg) + [("loss", ()), ("ncorrect", ())]
+    arts[f"dfa_step_{cfg.name}"] = (dfa_lowered, _io(dfa_inputs), _io(step_outputs))
+
+    bp_lowered = jax.jit(model.bp_step).lower(
+        *state_specs, x_spec, y_spec, scalar, scalar,
+    )
+    bp_inputs = _state_io(cfg) + [
+        ("x", x_spec.shape), ("y", y_spec.shape),
+        ("lr", ()), ("momentum", ()),
+    ]
+    arts[f"bp_step_{cfg.name}"] = (bp_lowered, _io(bp_inputs), _io(step_outputs))
+
+    apply_lowered = jax.jit(model.apply_grads).lower(
+        *state_specs, x_spec,
+        _spec((cfg.batch, cfg.d_h1)), _spec((cfg.batch, cfg.d_h2)),
+        y_spec, n1_spec, n2_spec, scalar, scalar,
+    )
+    apply_inputs = _state_io(cfg) + [
+        ("x", x_spec.shape),
+        ("h1", (cfg.batch, cfg.d_h1)), ("h2", (cfg.batch, cfg.d_h2)),
+        ("e", y_spec.shape),
+        ("d1t", n1_spec.shape), ("d2t", n2_spec.shape),
+        ("lr", ()), ("momentum", ()),
+    ]
+    arts[f"apply_grads_{cfg.name}"] = (
+        apply_lowered, _io(apply_inputs), _io(_state_io(cfg)),
+    )
+    return arts
+
+
+def build_photonic_matvec():
+    """Device-physics artifact at the paper's bank size (50 x 20)."""
+    m, k = BANK_ROWS, BANK_COLS
+    lowered = jax.jit(mrr_bank_matvec).lower(
+        _spec((k,)), _spec((m, k)), _spec(()), _spec(())
+    )
+    inputs = _io([("x", (k,)), ("phi", (m, k)), ("r", ()), ("a", ())])
+    outputs = _io([("out", (m,))])
+    return {"photonic_matvec": (lowered, inputs, outputs)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs", default="tiny,small,mnist",
+        help="comma-separated subset of configs to build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": 1, "configs": {}, "artifacts": {}}
+    for name in args.configs.split(","):
+        cfg = model.CONFIGS[name]
+        manifest["configs"][name] = {
+            "d_in": cfg.d_in, "d_h1": cfg.d_h1, "d_h2": cfg.d_h2,
+            "d_out": cfg.d_out, "batch": cfg.batch,
+        }
+        for art_name, (lowered, inputs, outputs) in build_artifacts(cfg).items():
+            path = f"{art_name}.hlo.txt"
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out, path), "w") as f:
+                f.write(text)
+            manifest["artifacts"][art_name] = {
+                "file": path, "config": name,
+                "inputs": inputs, "outputs": outputs,
+            }
+            print(f"  {art_name}: {len(text)} chars, "
+                  f"{len(inputs)} inputs, {len(outputs)} outputs")
+
+    for art_name, (lowered, inputs, outputs) in build_photonic_matvec().items():
+        path = f"{art_name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"][art_name] = {
+            "file": path, "config": "bank",
+            "inputs": inputs, "outputs": outputs,
+        }
+        manifest["configs"]["bank"] = {"rows": BANK_ROWS, "cols": BANK_COLS}
+        print(f"  {art_name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts "
+          f"to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

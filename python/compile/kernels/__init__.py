@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the photonic weight-bank datapath.
+
+Every kernel has a pure-jnp oracle in ref.py; pytest enforces agreement.
+"""
+
+from . import ref  # noqa: F401
+from .mrr import mrr_bank_matvec  # noqa: F401
+from .quantize import quantize  # noqa: F401
+from .weight_bank import (  # noqa: F401
+    BANK_COLS,
+    BANK_ROWS,
+    analog_matvec,
+    bank_cycles,
+    dfa_gradient,
+)

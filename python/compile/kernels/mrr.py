@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: device-level MRR weight-bank transfer (Fig. 3).
+
+Computes the balanced-photodetector output of an M x K add-drop MRR array
+from first principles: each MRR's through/drop transmissions are Lorentzian
+functions of its round-trip phase detuning phi (Bogaerts 2012), the weight
+is w = T_d - T_p, and each row's BPD sums the weighted channel powers.
+
+This is the physics half of the "device mode" validation path: the Rust
+photonic simulator computes detunings (via its calibration LUT) and either
+evaluates this artifact or its native implementation (photonics::mrr) —
+both must agree with ref.mrr_bank_matvec_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .weight_bank import BANK_ROWS, _pad_axis
+
+
+def _mrr_bank_kernel(x_ref, phi_ref, r_ref, a_ref, o_ref):
+    phi = phi_ref[...]                    # (BM, K)
+    r = r_ref[0, 0]
+    a = a_ref[0, 0]
+    r2a = r * r * a
+    denom = 1.0 - 2.0 * r2a * jnp.cos(phi) + r2a * r2a
+    t_drop = (1.0 - r * r) ** 2 * a / denom
+    t_thru = ((r * a) ** 2 - 2.0 * r2a * jnp.cos(phi) + r * r) / denom
+    w = t_drop - t_thru                   # (BM, K)
+    # BPD: photocurrent difference summed over the K WDM channels.
+    o_ref[...] = jnp.sum(w * x_ref[...], axis=1, keepdims=True)
+
+
+def mrr_bank_matvec(
+    x: jnp.ndarray,     # (K,) channel amplitudes
+    phi: jnp.ndarray,   # (M, K) round-trip phase detunings
+    r: jnp.ndarray,     # () self-coupling coefficient
+    a: jnp.ndarray,     # () single-pass amplitude transmission
+) -> jnp.ndarray:
+    """Returns (M,) per-row BPD outputs for the physical bank."""
+    m, k = phi.shape
+    bm = BANK_ROWS if m > BANK_ROWS else m
+    phi_p = _pad_axis(phi, 0, bm)
+    mp = phi_p.shape[0]
+    ni = mp // bm
+
+    x2d = jnp.reshape(x.astype(jnp.float32), (1, k))
+    r2d = jnp.reshape(r.astype(jnp.float32), (1, 1))
+    a2d = jnp.reshape(a.astype(jnp.float32), (1, 1))
+
+    out = pl.pallas_call(
+        _mrr_bank_kernel,
+        grid=(ni,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        interpret=True,
+    )(x2d, phi_p, r2d, a2d)
+    return out[:m, 0]

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: fixed-point ADC quantiser (Fig. 5(c) resolution sweep).
+
+Standalone elementwise quantiser with a *runtime* bit-depth scalar, so a
+single AOT artifact serves every point of the paper's resolution sweep.
+bits <= 0 is the "off" sentinel (identity), matching ref.quantize_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, bits_ref, o_ref):
+    x = x_ref[...]
+    b = bits_ref[0, 0]
+    levels = jnp.exp2(b - 1.0)
+    q = jnp.clip(jnp.round(x * levels) / levels, -1.0, 1.0)
+    o_ref[...] = jnp.where(b > 0.0, q, x)
+
+
+def quantize(x: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Quantise ``x`` (any 2-D f32 array, values nominally in [-1,1])."""
+    m, n = x.shape
+    bits2d = jnp.reshape(bits.astype(jnp.float32), (1, 1))
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), bits2d)

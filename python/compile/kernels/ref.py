@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its `*_ref` counterpart to float32 tolerance under pytest
+(see python/tests/test_kernels.py). They also document the analog semantics
+of the photonic datapath in plain numpy-style code.
+
+Analog encoding convention (paper §2, §4):
+  * weight-bank entries are inscribed in [-1, 1] (add-drop MRR, w = T_d - T_p)
+  * the input vector (the DFA error e) is amplitude-encoded, normalised
+    per-sample to [-1, 1] by its max-abs
+  * the receiver chain (TIA gain + ADC range) is set to the bank's actual
+    full-scale output swing, range = max_rows sum_cols |B| — the maximum
+    possible BPD output for the inscribed weights. Dividing by it gives the
+    normalised analog output in [-1, 1] on which the measured noise sigma
+    and the effective ADC resolution are defined (exactly the Fig. 5(a)
+    protocol, where measured outputs are scaled to the observed range)
+  * Gaussian read noise N(0, sigma) and optional N_b-bit quantisation are
+    applied in the normalised domain, then the result is rescaled back.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def quantize_ref(x: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Mid-rise fixed-point quantiser on [-1, 1].
+
+    ``bits`` is a runtime scalar; ``bits <= 0`` is the sentinel for
+    "quantisation off" (identity). Matches the paper's effective-resolution
+    definition: an N_b-bit converter has 2^N_b levels across the range 2.
+    """
+    b = jnp.asarray(bits, dtype=jnp.float32)
+    levels = jnp.exp2(b - 1.0)  # half-range level count
+    q = jnp.clip(jnp.round(x * levels) / levels, -1.0, 1.0)
+    return jnp.where(b > 0.0, q, x)
+
+
+def analog_matvec_ref(
+    bmat: jnp.ndarray,
+    e: jnp.ndarray,
+    noise: jnp.ndarray,
+    sigma: jnp.ndarray,
+    bits: jnp.ndarray,
+) -> jnp.ndarray:
+    """Photonic weight-bank matrix-vector product with analog read noise.
+
+    bmat:  (M, K) inscribed weights in [-1, 1]
+    e:     (K, B) input vectors (one column per batch sample)
+    noise: (M, B) standard-normal draws (sampled by the Rust coordinator)
+    sigma: ()     noise std in the normalised output domain
+    bits:  ()     ADC resolution (<= 0 disables quantisation)
+
+    Returns (M, B): bmat @ e computed "in the analog domain".
+    """
+    s = jnp.maximum(jnp.max(jnp.abs(e), axis=0, keepdims=True), _EPS)  # (1,B)
+    e_n = e / s
+    # full-scale output swing of the inscribed bank (receiver range)
+    rng = jnp.maximum(jnp.max(jnp.sum(jnp.abs(bmat), axis=1)), _EPS)
+    y_n = bmat @ e_n / rng                     # normalised BPD output
+    y_n = y_n + sigma * noise                  # measured inner-product error
+    y_n = quantize_ref(y_n, bits)              # ADC
+    return y_n * (rng * s)                     # back to digital scale
+
+
+def dfa_gradient_ref(
+    bmat: jnp.ndarray,
+    e: jnp.ndarray,
+    noise: jnp.ndarray,
+    gprime: jnp.ndarray,
+    sigma: jnp.ndarray,
+    bits: jnp.ndarray,
+) -> jnp.ndarray:
+    """Eq. (1): delta(k) = B(k) e  (in analog)  ⊙ g'(a(k))  (TIA gains).
+
+    gprime: (M, B), the activation derivative encoded as TIA gain.
+    """
+    return analog_matvec_ref(bmat, e, noise, sigma, bits) * gprime
+
+
+def mrr_through_ref(phi: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Add-drop MRR through-port power transmission vs round-trip phase.
+
+    Symmetric coupling r1 = r2 = r, single-pass amplitude transmission a
+    (Bogaerts et al., Laser Photon. Rev. 6, 47 (2012), add-drop form).
+    """
+    denom = 1.0 - 2.0 * r * r * a * jnp.cos(phi) + (r * r * a) ** 2
+    num = (r * a) ** 2 - 2.0 * r * r * a * jnp.cos(phi) + r * r
+    return num / denom
+
+
+def mrr_drop_ref(phi: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Add-drop MRR drop-port power transmission vs round-trip phase."""
+    denom = 1.0 - 2.0 * r * r * a * jnp.cos(phi) + (r * r * a) ** 2
+    return (1.0 - r * r) ** 2 * a / denom
+
+
+def mrr_weight_ref(phi: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Inscribed weight w = T_d - T_p in [-1, 1] (Fig. 3(b))."""
+    return mrr_drop_ref(phi, r, a) - mrr_through_ref(phi, r, a)
+
+
+def mrr_bank_matvec_ref(
+    x: jnp.ndarray, phi: jnp.ndarray, r: jnp.ndarray, a: jnp.ndarray
+) -> jnp.ndarray:
+    """Device-level weight-bank transfer: out_m = sum_n x_n (T_d - T_p)(phi_mn).
+
+    x:   (K,) non-negative channel amplitudes (optical power, a.u.)
+    phi: (M, K) per-MRR round-trip phase detuning
+    Returns (M,): per-row balanced-photodetector output.
+    """
+    w = mrr_weight_ref(phi, r, a)  # (M, K)
+    return w @ x

@@ -1,0 +1,172 @@
+"""L1 Pallas kernel: the photonic weight bank datapath (Fig. 4(b)).
+
+The physical system computes an M x N block of MACs per operational cycle
+(the paper's headline bank is 50 x 20); a GeMM compiler tiles larger
+matrix-vector products over bank-sized blocks. The kernel grid mirrors that
+schedule exactly: grid step (i, j) is one bank cycle computing the partial
+inner products of row-block i against channel-block j, and the final j step
+applies the analog post-processing chain — normalisation to the BPD range,
+additive Gaussian read noise, ADC quantisation, rescale, and (for the fused
+DFA variant) the Hadamard product with g'(a) implemented by the TIA gains.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a real TPU the
+(BM, BK) B-tile and (BK, B) e-tile live in VMEM and the MAC block maps onto
+the MXU; BlockSpec expresses the HBM<->VMEM schedule that the PIC implements
+with SRAM -> DAC -> MRR loads. Here the kernel is lowered with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls).
+
+All kernels must match their oracles in ref.py (python/tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Paper's headline photonic weight bank: M=50 rows x N=20 WDM channels.
+BANK_ROWS = 50
+BANK_COLS = 20
+
+_EPS = 1e-12
+
+
+def _dfa_gradient_kernel(
+    b_ref,       # (BM, BK)  weight-bank tile of B(k)
+    e_ref,       # (BK, B)   normalised error tile (shared across row blocks)
+    noise_ref,   # (BM, B)   standard-normal read noise
+    gp_ref,      # (BM, B)   g'(a) tile (TIA gains)
+    s_ref,       # (1, B)    per-sample normalisation scale max|e|
+    rng_ref,     # (1, 1)    receiver full-scale range max_r sum_c |B|
+    sig_ref,     # (1, 1)    noise std in the normalised domain
+    bits_ref,    # (1, 1)    ADC bits (<= 0: off)
+    o_ref,       # (BM, B)   output tile, revisited across j (accumulator)
+    *,
+    nj: int,
+    fuse_gprime: bool,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # One bank operational cycle: the MAC block for this (row, channel) tile.
+    o_ref[...] += jnp.dot(
+        b_ref[...], e_ref[...], preferred_element_type=jnp.float32
+    )
+
+    # After the last channel block the BPD has integrated the full inner
+    # product; apply the analog output chain.
+    @pl.when(j == nj - 1)
+    def _finish():
+        full_scale = rng_ref[0, 0]
+        y_n = o_ref[...] / full_scale                 # normalised BPD output
+        y_n = y_n + sig_ref[0, 0] * noise_ref[...]    # analog read noise
+        b = bits_ref[0, 0]
+        levels = jnp.exp2(b - 1.0)
+        q = jnp.clip(jnp.round(y_n * levels) / levels, -1.0, 1.0)
+        y_n = jnp.where(b > 0.0, q, y_n)              # ADC quantisation
+        y = y_n * (full_scale * s_ref[...])           # rescale to digital
+        if fuse_gprime:
+            y = y * gp_ref[...]                       # TIA Hadamard product
+        o_ref[...] = y
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_sizes(m: int, k: int) -> tuple[int, int]:
+    bm = BANK_ROWS if m > BANK_ROWS else m
+    bk = BANK_COLS if k > BANK_COLS else k
+    return bm, bk
+
+
+def dfa_gradient(
+    bmat: jnp.ndarray,    # (M, K)
+    e: jnp.ndarray,       # (K, B)
+    noise: jnp.ndarray,   # (M, B)
+    gprime: jnp.ndarray,  # (M, B)
+    sigma: jnp.ndarray,   # ()
+    bits: jnp.ndarray,    # ()
+) -> jnp.ndarray:
+    """Fused Eq. (1) gradient: (B @ e in analog) ⊙ g'(a). Returns (M, B)."""
+    return _run_bank(bmat, e, noise, sigma, bits, gprime=gprime)
+
+
+def analog_matvec(
+    bmat: jnp.ndarray,
+    e: jnp.ndarray,
+    noise: jnp.ndarray,
+    sigma: jnp.ndarray,
+    bits: jnp.ndarray,
+) -> jnp.ndarray:
+    """Weight-bank mat-vec with analog noise, no Hadamard. Returns (M, B)."""
+    return _run_bank(bmat, e, noise, sigma, bits, gprime=None)
+
+
+def _run_bank(bmat, e, noise, sigma, bits, *, gprime):
+    m, k = bmat.shape
+    batch = e.shape[1]
+    fuse = gprime is not None
+    if gprime is None:
+        gprime = jnp.ones((m, batch), dtype=jnp.float32)
+
+    # Per-sample amplitude-encoding scale (done digitally by the control
+    # system before driving the input-modulator DACs).
+    s = jnp.maximum(jnp.max(jnp.abs(e), axis=0, keepdims=True), _EPS)  # (1,B)
+    e_n = e / s
+    # Receiver full-scale range: the bank's maximum possible output swing
+    # for the inscribed weights (sets TIA gain / ADC range; static per B).
+    rng = jnp.maximum(jnp.max(jnp.sum(jnp.abs(bmat), axis=1)), _EPS)
+
+    bm, bk = _block_sizes(m, k)
+    bmat_p = _pad_axis(_pad_axis(bmat, 0, bm), 1, bk)
+    e_p = _pad_axis(e_n, 0, bk)
+    noise_p = _pad_axis(noise, 0, bm)
+    gp_p = _pad_axis(gprime, 0, bm)
+    mp, kp = bmat_p.shape
+    ni, nj = mp // bm, kp // bk
+
+    rng2d = jnp.reshape(rng.astype(jnp.float32), (1, 1))
+    sig2d = jnp.reshape(sigma.astype(jnp.float32), (1, 1))
+    bits2d = jnp.reshape(bits.astype(jnp.float32), (1, 1))
+
+    out = pl.pallas_call(
+        functools.partial(_dfa_gradient_kernel, nj=nj, fuse_gprime=fuse),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),   # B tile
+            pl.BlockSpec((bk, batch), lambda i, j: (j, 0)),  # e tile
+            pl.BlockSpec((bm, batch), lambda i, j: (i, 0)),  # noise
+            pl.BlockSpec((bm, batch), lambda i, j: (i, 0)),  # g'
+            pl.BlockSpec((1, batch), lambda i, j: (0, 0)),   # scale
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),       # range
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),       # sigma
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),       # bits
+        ],
+        out_specs=pl.BlockSpec((bm, batch), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, batch), jnp.float32),
+        interpret=True,
+    )(bmat_p, e_p, noise_p, gp_p, s, rng2d, sig2d, bits2d)
+    return out[:m, :]
+
+
+def bank_cycles(m: int, k: int) -> int:
+    """Number of weight-bank operational cycles the grid performs — the
+    quantity the GeMM schedule (rust gemm::schedule) must agree with."""
+    bm, bk = _block_sizes(m, k)
+    mp = m + ((-m) % bm)
+    kp = k + ((-k) % bk)
+    return (mp // bm) * (kp // bk)

@@ -1,0 +1,194 @@
+"""L2: the neural network trained by the photonic DFA architecture.
+
+The paper's experiment (§4): a feed-forward MLP (784 x 800 x 800 x 10 for
+MNIST), ReLU hidden activations, softmax output, cross-entropy loss, trained
+with SGD + momentum (lr 0.01, momentum 0.9, batch 64). The backward pass is
+Direct Feedback Alignment (Eq. 1): per hidden layer k,
+
+    delta(k) = B(k) e  ⊙  g'(a(k))
+
+with the B(k) e mat-vec executed *in the analog photonic domain* — here the
+weight-bank Pallas kernel (kernels.weight_bank) with additive Gaussian read
+noise and optional ADC quantisation, both runtime scalars so one artifact
+serves the noise-free, off-chip-BPD (sigma=0.098), on-chip-BPD (sigma=0.202)
+and resolution-sweep configurations of Figs. 5(b,c).
+
+Everything here is traced ONCE by aot.py into HLO text; Python never runs on
+the training path. Argument lists are flat and positional — the artifact
+manifest records their order for the Rust runtime.
+
+Functions:
+  forward          inference pass, returns logits + pre/post activations
+  dfa_step         one full DFA training step (fwd + analog bwd + update)
+  bp_step          backpropagation baseline step (noise-free, digital)
+  apply_grads      device-mode weight update from externally computed deltas
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .kernels import dfa_gradient
+
+
+class NetConfig(NamedTuple):
+    """Static network/shape configuration baked into each artifact."""
+
+    name: str
+    d_in: int
+    d_h1: int
+    d_h2: int
+    d_out: int
+    batch: int
+
+    @property
+    def param_shapes(self):
+        return [
+            ("w1", (self.d_in, self.d_h1)),
+            ("b1", (self.d_h1,)),
+            ("w2", (self.d_h1, self.d_h2)),
+            ("b2", (self.d_h2,)),
+            ("w3", (self.d_h2, self.d_out)),
+            ("b3", (self.d_out,)),
+        ]
+
+
+# The three artifact configurations (DESIGN.md §4).
+CONFIGS = {
+    "tiny": NetConfig("tiny", 16, 32, 32, 4, 8),
+    "small": NetConfig("small", 784, 128, 128, 10, 64),
+    "mnist": NetConfig("mnist", 784, 800, 800, 10, 64),
+}
+
+N_PARAMS = 6  # w1 b1 w2 b2 w3 b3
+
+
+def forward(w1, b1, w2, b2, w3, b3, x):
+    """Inference. x: (batch, d_in). Returns (logits, a1, a2, h1, h2)."""
+    a1 = x @ w1 + b1
+    h1 = jnp.maximum(a1, 0.0)
+    a2 = h1 @ w2 + b2
+    h2 = jnp.maximum(a2, 0.0)
+    logits = h2 @ w3 + b3
+    return logits, a1, a2, h1, h2
+
+
+def _loss_and_error(logits, y):
+    """Softmax cross-entropy. y: (batch, C) one-hot.
+
+    Returns (mean loss, per-sample error e = dL/dlogits * batch, #correct).
+    The paper's e is the per-example gradient of the loss: softmax(z) - y.
+    """
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - zmax
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - logsumexp
+    loss = -jnp.mean(jnp.sum(y * logp, axis=1))
+    e = jnp.exp(logp) - y  # (batch, C)
+    ncorrect = jnp.sum(
+        (jnp.argmax(logits, axis=1) == jnp.argmax(y, axis=1)).astype(jnp.float32)
+    )
+    return loss, e, ncorrect
+
+
+def _sgd_momentum(params, vels, grads, lr, momentum):
+    new_v = [momentum * v + g for v, g in zip(vels, grads)]
+    new_p = [p - lr * v for p, v in zip(params, new_v)]
+    return new_p, new_v
+
+
+def _grads_from_deltas(x, h1, h2, e, d1t, d2t, batch):
+    """Weight/bias gradients given hidden-layer deltas.
+
+    d1t, d2t: (H, batch) — note the transposed (analog-output) layout.
+    """
+    gw3 = h2.T @ e / batch
+    gb3 = jnp.sum(e, axis=0) / batch
+    gw2 = h1.T @ d2t.T / batch
+    gb2 = jnp.sum(d2t, axis=1) / batch
+    gw1 = x.T @ d1t.T / batch
+    gb1 = jnp.sum(d1t, axis=1) / batch
+    return [gw1, gb1, gw2, gb2, gw3, gb3]
+
+
+def dfa_step(
+    w1, b1, w2, b2, w3, b3,
+    vw1, vb1, vw2, vb2, vw3, vb3,
+    bmat1,   # (H1, C) fixed random feedback for hidden layer 1
+    bmat2,   # (H2, C) fixed random feedback for hidden layer 2
+    x,       # (batch, d_in)
+    y,       # (batch, C) one-hot targets
+    noise1,  # (H1, batch) standard-normal draws (Rust-sampled)
+    noise2,  # (H2, batch)
+    sigma,   # () analog read-noise std (normalised domain); 0 = noise-free
+    bits,    # () ADC resolution; <= 0 = off
+    lr,      # ()
+    momentum,  # ()
+):
+    """One DFA training step. Returns 12 updated state arrays + loss + #correct.
+
+    The two B(k) e mat-vecs — the only backward-pass operations the photonic
+    circuit performs — run through the weight-bank Pallas kernel; everything
+    else (inference, error, update) is full-precision digital, exactly as in
+    the paper's experimental protocol (§4).
+    """
+    params = [w1, b1, w2, b2, w3, b3]
+    vels = [vw1, vb1, vw2, vb2, vw3, vb3]
+    batch = x.shape[0]
+
+    logits, a1, a2, h1, h2 = forward(*params, x)
+    loss, e, ncorrect = _loss_and_error(logits, y)
+
+    # Analog backward pass: both hidden layers in parallel, same error.
+    gp1 = (a1 > 0.0).astype(jnp.float32).T  # (H1, batch) TIA gains
+    gp2 = (a2 > 0.0).astype(jnp.float32).T
+    et = e.T  # (C, batch): error amplitude-encoded on C WDM channels
+    d1t = dfa_gradient(bmat1, et, noise1, gp1, sigma, bits)
+    d2t = dfa_gradient(bmat2, et, noise2, gp2, sigma, bits)
+
+    grads = _grads_from_deltas(x, h1, h2, e, d1t, d2t, batch)
+    new_p, new_v = _sgd_momentum(params, vels, grads, lr, momentum)
+    return (*new_p, *new_v, loss, ncorrect)
+
+
+def bp_step(
+    w1, b1, w2, b2, w3, b3,
+    vw1, vb1, vw2, vb2, vw3, vb3,
+    x, y, lr, momentum,
+):
+    """Backpropagation baseline (digital, noise-free). Same returns as dfa_step."""
+    params = [w1, b1, w2, b2, w3, b3]
+    vels = [vw1, vb1, vw2, vb2, vw3, vb3]
+    batch = x.shape[0]
+
+    logits, a1, a2, h1, h2 = forward(*params, x)
+    loss, e, ncorrect = _loss_and_error(logits, y)
+
+    d2 = (e @ w3.T) * (a2 > 0.0).astype(jnp.float32)  # (batch, H2)
+    d1 = (d2 @ w2.T) * (a1 > 0.0).astype(jnp.float32)
+
+    grads = _grads_from_deltas(x, h1, h2, e, d1.T, d2.T, batch)
+    new_p, new_v = _sgd_momentum(params, vels, grads, lr, momentum)
+    return (*new_p, *new_v, loss, ncorrect)
+
+
+def apply_grads(
+    w1, b1, w2, b2, w3, b3,
+    vw1, vb1, vw2, vb2, vw3, vb3,
+    x, h1, h2,
+    e,       # (batch, C)
+    d1t,     # (H1, batch) delta from the device-level photonic simulator
+    d2t,     # (H2, batch)
+    lr, momentum,
+):
+    """Device-mode update: deltas were computed by the Rust photonic
+    simulator (photonics::weight_bank); this artifact applies the digital
+    outer-product weight update (§3: performed by the control system)."""
+    params = [w1, b1, w2, b2, w3, b3]
+    vels = [vw1, vb1, vw2, vb2, vw3, vb3]
+    batch = x.shape[0]
+    grads = _grads_from_deltas(x, h1, h2, e, d1t, d2t, batch)
+    new_p, new_v = _sgd_momentum(params, vels, grads, lr, momentum)
+    return (*new_p, *new_v)

@@ -1,0 +1,67 @@
+"""AOT path tests: manifest structure and HLO-text emission."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_manifest_io_counts():
+    cfg = model.CONFIGS["tiny"]
+    arts = aot.build_artifacts(cfg)
+    assert set(arts) == {
+        "fwd_tiny", "dfa_step_tiny", "bp_step_tiny", "apply_grads_tiny"
+    }
+    _, inputs, outputs = arts["dfa_step_tiny"]
+    assert len(inputs) == 12 + 2 + 2 + 2 + 4   # state + B + data + noise + scalars
+    assert len(outputs) == 14
+    names = [i["name"] for i in inputs]
+    assert names[:6] == ["w1", "b1", "w2", "b2", "w3", "b3"]
+    assert names[-4:] == ["sigma", "bits", "lr", "momentum"]
+
+
+def test_hlo_text_emitted(tmp_path):
+    cfg = model.CONFIGS["tiny"]
+    arts = aot.build_artifacts(cfg)
+    lowered, inputs, _ = arts["fwd_tiny"]
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # one HLO parameter per manifest input, in order
+    for i, inp in enumerate(inputs):
+        assert f"parameter({i})" in text
+
+
+def test_shapes_recorded_match_lowered():
+    cfg = model.CONFIGS["tiny"]
+    arts = aot.build_artifacts(cfg)
+    _, inputs, _ = arts["dfa_step_tiny"]
+    by_name = {i["name"]: tuple(i["shape"]) for i in inputs}
+    assert by_name["w1"] == (cfg.d_in, cfg.d_h1)
+    assert by_name["bmat1"] == (cfg.d_h1, cfg.d_out)
+    assert by_name["noise2"] == (cfg.d_h2, cfg.batch)
+    assert by_name["sigma"] == ()
+
+
+def test_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--configs", "tiny"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+        timeout=600,
+    )
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == 1
+    assert "dfa_step_tiny" in manifest["artifacts"]
+    assert "photonic_matvec" in manifest["artifacts"]
+    for art in manifest["artifacts"].values():
+        assert (out / art["file"]).exists()
+    assert manifest["configs"]["tiny"]["d_in"] == 16
+    assert manifest["configs"]["bank"] == {"rows": 50, "cols": 20}

@@ -1,0 +1,180 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-multiples of the 50x20 bank tile so
+the padding/tiling path is exercised), noise levels and ADC depths; every
+kernel output must match its ref.py oracle to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    BANK_COLS,
+    BANK_ROWS,
+    analog_matvec,
+    bank_cycles,
+    dfa_gradient,
+    mrr_bank_matvec,
+    quantize,
+    ref,
+)
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _allclose(a, b, atol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=1e-4)
+
+
+dims = st.tuples(
+    st.integers(1, 3 * BANK_ROWS + 7),   # M: crosses several row tiles
+    st.integers(1, 2 * BANK_COLS + 3),   # K: crosses channel tiles
+    st.integers(1, 9),                   # batch
+)
+
+
+@given(dims=dims, sigma=st.sampled_from([0.0, 0.019, 0.098, 0.202]),
+       bits=st.sampled_from([0.0, 3.0, 6.0, 8.0]), seed=st.integers(0, 2**31))
+def test_analog_matvec_matches_ref(dims, sigma, bits, seed):
+    m, k, b = dims
+    rng = np.random.default_rng(seed)
+    bmat = jnp.array(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    e = jnp.array(rng.normal(0, 0.5, (k, b)).astype(np.float32))
+    noise = jnp.array(rng.normal(0, 1, (m, b)).astype(np.float32))
+    s, q = jnp.float32(sigma), jnp.float32(bits)
+    _allclose(
+        analog_matvec(bmat, e, noise, s, q),
+        ref.analog_matvec_ref(bmat, e, noise, s, q),
+        atol=1e-4 * max(1.0, k),
+    )
+
+
+@given(dims=dims, sigma=st.sampled_from([0.0, 0.098]),
+       bits=st.sampled_from([0.0, 6.0]), seed=st.integers(0, 2**31))
+def test_dfa_gradient_matches_ref(dims, sigma, bits, seed):
+    m, k, b = dims
+    rng = np.random.default_rng(seed)
+    bmat = jnp.array(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    e = jnp.array(rng.normal(0, 0.5, (k, b)).astype(np.float32))
+    noise = jnp.array(rng.normal(0, 1, (m, b)).astype(np.float32))
+    gp = jnp.array((rng.random((m, b)) > 0.5).astype(np.float32))
+    s, q = jnp.float32(sigma), jnp.float32(bits)
+    _allclose(
+        dfa_gradient(bmat, e, noise, gp, s, q),
+        ref.dfa_gradient_ref(bmat, e, noise, gp, s, q),
+        atol=1e-4 * max(1.0, k),
+    )
+
+
+def test_relu_mask_zeroes_rows():
+    """g' = 0 rows must be exactly zero (the TIA gain gates them off)."""
+    m, k, b = 60, 10, 4
+    rng = np.random.default_rng(7)
+    bmat = jnp.array(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    e = jnp.array(rng.normal(0, 1, (k, b)).astype(np.float32))
+    noise = jnp.array(rng.normal(0, 1, (m, b)).astype(np.float32))
+    gp = jnp.zeros((m, b), jnp.float32)
+    out = dfa_gradient(bmat, e, noise, gp, jnp.float32(0.2), jnp.float32(0.0))
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+def test_noise_free_is_exact_matvec():
+    m, k, b = 123, 10, 8
+    rng = np.random.default_rng(3)
+    bmat = jnp.array(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    e = jnp.array(rng.normal(0, 1, (k, b)).astype(np.float32))
+    zero = jnp.zeros((m, b), jnp.float32)
+    out = analog_matvec(bmat, e, zero, jnp.float32(0.0), jnp.float32(0.0))
+    _allclose(out, bmat @ e, atol=1e-4)
+
+
+def test_noise_statistics_match_sigma():
+    """Injected read noise must have std sigma in the normalised domain."""
+    m, k, b = 800, 10, 64
+    rng = np.random.default_rng(11)
+    bmat = jnp.array(rng.uniform(-1, 1, (m, k)).astype(np.float32))
+    e = jnp.array(rng.normal(0, 1, (k, b)).astype(np.float32))
+    noise = jnp.array(rng.normal(0, 1, (m, b)).astype(np.float32))
+    sigma = 0.098
+    noisy = analog_matvec(bmat, e, noise, jnp.float32(sigma), jnp.float32(0.0))
+    clean = analog_matvec(bmat, e, jnp.zeros_like(noise), jnp.float32(0.0),
+                          jnp.float32(0.0))
+    s = np.maximum(np.max(np.abs(np.asarray(e)), axis=0, keepdims=True), 1e-12)
+    rng_fs = np.max(np.sum(np.abs(np.asarray(bmat)), axis=1))
+    resid_norm = (np.asarray(noisy) - np.asarray(clean)) / (rng_fs * s)
+    assert abs(float(resid_norm.std()) - sigma) < 0.01
+
+
+@given(bits=st.integers(1, 10), seed=st.integers(0, 2**31))
+def test_quantize_properties(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.uniform(-1.2, 1.2, (17, 9)).astype(np.float32))
+    b = jnp.float32(bits)
+    q = quantize(x, b)
+    _allclose(q, ref.quantize_ref(x, b), atol=1e-6)
+    # idempotent
+    _allclose(quantize(q, b), q, atol=1e-6)
+    # bounded
+    assert float(jnp.max(jnp.abs(q))) <= 1.0 + 1e-6
+    # max error is half a step for in-range values
+    xc = jnp.clip(x, -1.0, 1.0)
+    step = 2.0 ** (1 - bits)
+    assert float(jnp.max(jnp.abs(quantize(xc, b) - xc))) <= step / 2 + 1e-6
+
+
+def test_quantize_off_sentinel():
+    x = jnp.array(np.linspace(-2, 2, 40, dtype=np.float32).reshape(8, 5))
+    _allclose(quantize(x, jnp.float32(0.0)), x, atol=0)
+    _allclose(quantize(x, jnp.float32(-3.0)), x, atol=0)
+
+
+@given(
+    m=st.integers(1, 2 * BANK_ROWS + 5),
+    k=st.integers(1, BANK_COLS),
+    seed=st.integers(0, 2**31),
+)
+def test_mrr_bank_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.random(k).astype(np.float32))
+    phi = jnp.array(rng.normal(0, 0.5, (m, k)).astype(np.float32))
+    r, a = jnp.float32(0.95), jnp.float32(0.999)
+    _allclose(
+        mrr_bank_matvec(x, phi, r, a),
+        ref.mrr_bank_matvec_ref(x, phi, r, a),
+        atol=1e-5 * max(1, k),
+    )
+
+
+def test_mrr_weight_physics():
+    """Fig. 3(b): on resonance w -> +1, far detuned w -> ~ -1, lossless."""
+    r, a = jnp.float32(0.95), jnp.float32(1.0)
+    w_res = ref.mrr_weight_ref(jnp.float32(0.0), r, a)
+    w_off = ref.mrr_weight_ref(jnp.float32(np.pi), r, a)
+    assert abs(float(w_res) - 1.0) < 1e-5  # f32 round-off at resonance
+    assert float(w_off) < -0.98
+    # energy conservation: Tp + Td = 1 for a = 1
+    phi = jnp.array(np.linspace(-np.pi, np.pi, 101, dtype=np.float32))
+    tot = ref.mrr_through_ref(phi, r, a) + ref.mrr_drop_ref(phi, r, a)
+    _allclose(tot, np.ones(101), atol=1e-5)
+
+
+def test_mrr_weight_is_monotone_in_detuning():
+    """Weight sweeps monotonically from +1 at resonance toward the floor —
+    the property the calibration LUT (rust photonics::calibration) relies on."""
+    r, a = jnp.float32(0.95), jnp.float32(0.9995)
+    phi = jnp.array(np.linspace(0, np.pi, 400, dtype=np.float32))
+    w = np.asarray(ref.mrr_weight_ref(phi, r, a))
+    assert np.all(np.diff(w) < 1e-7)
+
+
+@given(m=st.integers(1, 500), k=st.integers(1, 80))
+def test_bank_cycles_consistent_with_tiling(m, k):
+    """Grid step count == ceil(M/BM) * ceil(K/BK) with bank-clamped tiles —
+    must equal the Rust GeMM scheduler's cycle count for the same dims."""
+    bm = min(m, BANK_ROWS)
+    bk = min(k, BANK_COLS)
+    want = -(-m // bm) * (-(-k // bk))
+    assert bank_cycles(m, k) == want

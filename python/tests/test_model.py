@@ -1,0 +1,202 @@
+"""L2 model tests: shapes, learning behaviour, and DFA/BP cross-checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.CONFIGS["tiny"]
+
+
+def _init_state(seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    params = [
+        jnp.array(rng.normal(0, scale, s).astype(np.float32))
+        for _, s in CFG.param_shapes
+    ]
+    vels = [jnp.zeros(s, jnp.float32) for _, s in CFG.param_shapes]
+    return params, vels, rng
+
+
+def _toy_batch(rng):
+    x = jnp.array(rng.normal(0, 1, (CFG.batch, CFG.d_in)).astype(np.float32))
+    yi = rng.integers(0, CFG.d_out, CFG.batch)
+    y = jnp.array(np.eye(CFG.d_out, dtype=np.float32)[yi])
+    return x, y
+
+
+def _feedback(rng):
+    b1 = jnp.array(rng.uniform(-1, 1, (CFG.d_h1, CFG.d_out)).astype(np.float32))
+    b2 = jnp.array(rng.uniform(-1, 1, (CFG.d_h2, CFG.d_out)).astype(np.float32))
+    return b1, b2
+
+
+SC = jnp.float32
+
+
+def test_forward_shapes():
+    params, _, rng = _init_state()
+    x, _ = _toy_batch(rng)
+    logits, a1, a2, h1, h2 = model.forward(*params, x)
+    assert logits.shape == (CFG.batch, CFG.d_out)
+    assert a1.shape == h1.shape == (CFG.batch, CFG.d_h1)
+    assert a2.shape == h2.shape == (CFG.batch, CFG.d_h2)
+    np.testing.assert_array_equal(np.asarray(h1), np.maximum(np.asarray(a1), 0))
+
+
+def test_loss_and_error_against_numpy():
+    params, _, rng = _init_state()
+    x, y = _toy_batch(rng)
+    logits, *_ = model.forward(*params, x)
+    loss, e, ncorrect = model._loss_and_error(logits, y)
+    z = np.asarray(logits, dtype=np.float64)
+    p = np.exp(z - z.max(1, keepdims=True))
+    p /= p.sum(1, keepdims=True)
+    want_loss = -np.mean(np.log(p[np.arange(len(p)), np.argmax(np.asarray(y), 1)]))
+    assert abs(float(loss) - want_loss) < 1e-5
+    np.testing.assert_allclose(np.asarray(e), p - np.asarray(y), atol=1e-5)
+    want_correct = np.sum(np.argmax(z, 1) == np.argmax(np.asarray(y), 1))
+    assert float(ncorrect) == want_correct
+
+
+def _run_steps(step_fn, state, args, n):
+    losses = []
+    for _ in range(n):
+        out = step_fn(*state, *args)
+        state = list(out[:12])
+        losses.append(float(out[12]))
+    return state, losses
+
+
+def test_dfa_learns_noise_free():
+    params, vels, rng = _init_state()
+    x, y = _toy_batch(rng)
+    b1, b2 = _feedback(rng)
+    n1 = jnp.zeros((CFG.d_h1, CFG.batch), jnp.float32)
+    n2 = jnp.zeros((CFG.d_h2, CFG.batch), jnp.float32)
+    args = (b1, b2, x, y, n1, n2, SC(0.0), SC(0.0), SC(0.05), SC(0.9))
+    _, losses = _run_steps(jax.jit(model.dfa_step), params + vels, args, 25)
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_dfa_learns_with_offchip_noise():
+    """Paper §4: training remains effective at sigma = 0.098 (off-chip BPD)."""
+    params, vels, rng = _init_state(seed=2)
+    x, y = _toy_batch(rng)
+    b1, b2 = _feedback(rng)
+    step = jax.jit(model.dfa_step)
+    state = params + vels
+    losses = []
+    for _ in range(30):
+        n1 = jnp.array(rng.normal(0, 1, (CFG.d_h1, CFG.batch)).astype(np.float32))
+        n2 = jnp.array(rng.normal(0, 1, (CFG.d_h2, CFG.batch)).astype(np.float32))
+        out = step(*state, b1, b2, x, y, n1, n2,
+                   SC(0.098), SC(0.0), SC(0.05), SC(0.9))
+        state = list(out[:12])
+        losses.append(float(out[12]))
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_bp_learns():
+    params, vels, rng = _init_state(seed=3)
+    x, y = _toy_batch(rng)
+    _, losses = _run_steps(
+        jax.jit(model.bp_step), params + vels, (x, y, SC(0.05), SC(0.9)), 25
+    )
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_bp_matches_autodiff():
+    """bp_step's hand-written backward pass == jax.grad of the same loss."""
+    params, vels, rng = _init_state(seed=4)
+    x, y = _toy_batch(rng)
+
+    def loss_fn(ps):
+        logits, *_ = model.forward(*ps, x)
+        loss, _, _ = model._loss_and_error(logits, y)
+        return loss
+
+    grads = jax.grad(loss_fn)(params)
+    out = model.bp_step(*params, *vels, x, y, SC(1.0), SC(0.0))
+    # with momentum 0 and lr 1: new_p = p - g  =>  g = p - new_p
+    for p, new_p, g in zip(params, out[:6], grads):
+        np.testing.assert_allclose(
+            np.asarray(p - new_p), np.asarray(g), atol=1e-5
+        )
+
+
+def test_dfa_step_matches_manual_composition():
+    """dfa_step == forward + ref.dfa_gradient_ref + manual SGD update."""
+    params, vels, rng = _init_state(seed=5)
+    x, y = _toy_batch(rng)
+    b1, b2 = _feedback(rng)
+    n1 = jnp.array(rng.normal(0, 1, (CFG.d_h1, CFG.batch)).astype(np.float32))
+    n2 = jnp.array(rng.normal(0, 1, (CFG.d_h2, CFG.batch)).astype(np.float32))
+    sigma, bits, lr, mom = SC(0.05), SC(6.0), SC(0.01), SC(0.9)
+
+    out = model.dfa_step(*params, *vels, b1, b2, x, y, n1, n2,
+                         sigma, bits, lr, mom)
+
+    logits, a1, a2, h1, h2 = model.forward(*params, x)
+    _, e, _ = model._loss_and_error(logits, y)
+    gp1 = (a1 > 0).astype(jnp.float32).T
+    gp2 = (a2 > 0).astype(jnp.float32).T
+    d1t = ref.dfa_gradient_ref(b1, e.T, n1, gp1, sigma, bits)
+    d2t = ref.dfa_gradient_ref(b2, e.T, n2, gp2, sigma, bits)
+    grads = model._grads_from_deltas(x, h1, h2, e, d1t, d2t, CFG.batch)
+    for i, (p, v, g) in enumerate(zip(params, vels, grads)):
+        v_new = 0.9 * v + g
+        p_new = p - 0.01 * v_new
+        np.testing.assert_allclose(
+            np.asarray(out[i]), np.asarray(p_new), atol=1e-5,
+            err_msg=f"param {i}",
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[6 + i]), np.asarray(v_new), atol=1e-5
+        )
+
+
+def test_apply_grads_consistent_with_dfa_step():
+    """Device mode must reproduce simulation mode: feeding apply_grads the
+    deltas that dfa_step computes internally yields identical new params."""
+    params, vels, rng = _init_state(seed=6)
+    x, y = _toy_batch(rng)
+    b1, b2 = _feedback(rng)
+    n1 = jnp.array(rng.normal(0, 1, (CFG.d_h1, CFG.batch)).astype(np.float32))
+    n2 = jnp.array(rng.normal(0, 1, (CFG.d_h2, CFG.batch)).astype(np.float32))
+    sigma, bits, lr, mom = SC(0.098), SC(0.0), SC(0.01), SC(0.9)
+
+    out = model.dfa_step(*params, *vels, b1, b2, x, y, n1, n2,
+                         sigma, bits, lr, mom)
+
+    logits, a1, a2, h1, h2 = model.forward(*params, x)
+    _, e, _ = model._loss_and_error(logits, y)
+    gp1 = (a1 > 0).astype(jnp.float32).T
+    gp2 = (a2 > 0).astype(jnp.float32).T
+    d1t = ref.dfa_gradient_ref(b1, e.T, n1, gp1, sigma, bits)
+    d2t = ref.dfa_gradient_ref(b2, e.T, n2, gp2, sigma, bits)
+    out2 = model.apply_grads(*params, *vels, x, h1, h2, e, d1t, d2t, lr, mom)
+    for i in range(12):
+        np.testing.assert_allclose(
+            np.asarray(out[i]), np.asarray(out2[i]), atol=1e-5
+        )
+
+
+def test_dfa_noise_perturbs_but_preserves_signal():
+    """With moderate sigma the delta stays correlated with the clean delta —
+    the alignment property DFA training relies on (paper §4, ref 29)."""
+    params, vels, rng = _init_state(seed=7)
+    x, y = _toy_batch(rng)
+    b1, b2 = _feedback(rng)
+    logits, a1, a2, h1, h2 = model.forward(*params, x)
+    _, e, _ = model._loss_and_error(logits, y)
+    gp1 = (a1 > 0).astype(jnp.float32).T
+    n1 = jnp.array(rng.normal(0, 1, (CFG.d_h1, CFG.batch)).astype(np.float32))
+    clean = ref.dfa_gradient_ref(b1, e.T, jnp.zeros_like(n1), gp1,
+                                 SC(0.0), SC(0.0))
+    noisy = ref.dfa_gradient_ref(b1, e.T, n1, gp1, SC(0.098), SC(0.0))
+    c = np.corrcoef(np.asarray(clean).ravel(), np.asarray(noisy).ravel())[0, 1]
+    assert c > 0.5

@@ -1,0 +1,111 @@
+//! Counters and timers for the training coordinator.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+/// Accumulated run metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    timers: BTreeMap<&'static str, Duration>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.counters.entry(key).or_default() += n;
+    }
+
+    pub fn count(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    /// Time a closure under `key`.
+    pub fn time<T>(&mut self, key: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *self.timers.entry(key).or_default() += t0.elapsed();
+        out
+    }
+
+    pub fn add_time(&mut self, key: &'static str, d: Duration) {
+        *self.timers.entry(key).or_default() += d;
+    }
+
+    pub fn seconds(&self, key: &str) -> f64 {
+        self.timers.get(key).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Steps-per-second style rate for a counter over a timer.
+    pub fn rate(&self, counter: &str, timer: &str) -> f64 {
+        let s = self.seconds(timer);
+        if s > 0.0 {
+            self.count(counter) as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs: Vec<(&str, Value)> = Vec::new();
+        for (k, v) in &self.counters {
+            pairs.push((k, Value::Number(*v as f64)));
+        }
+        for (k, v) in &self.timers {
+            // timer keys suffixed to avoid clashing with counters
+            pairs.push((k, Value::Number(v.as_secs_f64())));
+        }
+        Value::object(pairs)
+    }
+
+    pub fn summary_line(&self) -> String {
+        let mut parts: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        parts.extend(
+            self.timers
+                .iter()
+                .map(|(k, v)| format!("{k}={:.2}s", v.as_secs_f64())),
+        );
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_and_timing() {
+        let mut m = Metrics::new();
+        m.add("steps", 3);
+        m.add("steps", 2);
+        assert_eq!(m.count("steps"), 5);
+        assert_eq!(m.count("missing"), 0);
+        let out = m.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(m.seconds("work") >= 0.004);
+        assert!(m.rate("steps", "work") > 0.0);
+    }
+
+    #[test]
+    fn json_and_summary() {
+        let mut m = Metrics::new();
+        m.add("macs", 1000);
+        m.add_time("exec_s", Duration::from_millis(100));
+        let j = m.to_json();
+        assert_eq!(j.get("macs").as_f64(), Some(1000.0));
+        assert!(j.get("exec_s").as_f64().unwrap() > 0.09);
+        assert!(m.summary_line().contains("macs=1000"));
+    }
+}

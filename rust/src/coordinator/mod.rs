@@ -1,0 +1,21 @@
+//! The digital control system around the training loop.
+//!
+//! In the paper's architecture (§3, Fig. 4(b)) a digital controller fetches
+//! the error vector from SRAM, drives the DACs, collects ADC results and
+//! updates the network parameters. Here the equivalent roles are:
+//!
+//! * [`pipeline`] — a producer thread that assembles the next step's
+//!   inputs (mini-batch gather + one-hot + analog-noise draws) while PJRT
+//!   executes the current step — the SRAM-fetch/compute overlap
+//! * [`metrics`]  — counters and timers (steps, MACs, wall time, per-phase
+//!   latency) feeding the throughput numbers in EXPERIMENTS.md
+//! * [`run`]      — run directory management: config + history JSON,
+//!   parameter checkpoints
+
+pub mod metrics;
+pub mod pipeline;
+pub mod run;
+
+pub use metrics::Metrics;
+pub use pipeline::{BatchFeeder, StepInput};
+pub use run::RunRecorder;

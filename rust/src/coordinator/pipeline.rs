@@ -1,0 +1,164 @@
+//! Input pipeline: overlap batch assembly with PJRT execution.
+//!
+//! A single producer thread gathers the next mini-batch, one-hot encodes
+//! the labels and samples the analog read-noise tensors while the consumer
+//! (the trainer) executes the current step — the role the SRAM + DMA
+//! engine plays in the paper's control system. A bounded channel provides
+//! backpressure. Single-threaded production keeps runs bit-deterministic.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::data::{Batcher, Dataset};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Everything one training step consumes.
+pub struct StepInput {
+    pub x: Tensor,
+    pub y: Tensor,
+    /// Standard-normal draws for the two hidden layers, or None when the
+    /// noise mode doesn't need them (zeros are passed to the artifact).
+    pub noise1: Option<Tensor>,
+    pub noise2: Option<Tensor>,
+    pub step_in_epoch: usize,
+}
+
+/// Producer handle; iterate to consume the epoch.
+pub struct BatchFeeder {
+    rx: mpsc::Receiver<StepInput>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchFeeder {
+    /// Start producing one epoch of batches.
+    ///
+    /// `noise_dims = Some((h1, h2))` enables per-step noise tensor draws of
+    /// shapes (h1, batch) and (h2, batch). `rng` seeds both shuffling and
+    /// noise; pass a fork of the run RNG so epochs differ.
+    pub fn start(
+        dataset: Arc<Dataset>,
+        batch: usize,
+        noise_dims: Option<(usize, usize)>,
+        mut rng: Pcg64,
+        max_steps: Option<usize>,
+        depth: usize,
+    ) -> BatchFeeder {
+        let (tx, rx) = mpsc::sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let batcher = Batcher::new(dataset.len(), batch, &mut rng);
+            for (step, idx) in batcher.enumerate() {
+                if let Some(cap) = max_steps {
+                    if step >= cap {
+                        break;
+                    }
+                }
+                let (x, y) = dataset.batch(&idx);
+                let (noise1, noise2) = match noise_dims {
+                    Some((h1, h2)) => {
+                        let mut n1 = Tensor::zeros(&[h1, batch]);
+                        rng.fill_gaussian_f32(n1.data_mut());
+                        let mut n2 = Tensor::zeros(&[h2, batch]);
+                        rng.fill_gaussian_f32(n2.data_mut());
+                        (Some(n1), Some(n2))
+                    }
+                    None => (None, None),
+                };
+                if tx
+                    .send(StepInput { x, y, noise1, noise2, step_in_epoch: step })
+                    .is_err()
+                {
+                    break; // consumer hung up early
+                }
+            }
+        });
+        BatchFeeder { rx, handle: Some(handle) }
+    }
+}
+
+impl Iterator for BatchFeeder {
+    type Item = StepInput;
+
+    fn next(&mut self) -> Option<StepInput> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for BatchFeeder {
+    fn drop(&mut self) {
+        // Disconnect the channel so a blocked producer unblocks, then join.
+        let (_tx, dummy) = mpsc::sync_channel(1);
+        drop(std::mem::replace(&mut self.rx, dummy));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Arc<Dataset> {
+        Arc::new(Dataset::synthetic(96, 5))
+    }
+
+    #[test]
+    fn yields_full_epoch_in_order() {
+        let f = BatchFeeder::start(dataset(), 32, None, Pcg64::seed(1), None, 2);
+        let steps: Vec<StepInput> = f.collect();
+        assert_eq!(steps.len(), 3);
+        for (i, s) in steps.iter().enumerate() {
+            assert_eq!(s.step_in_epoch, i);
+            assert_eq!(s.x.shape(), &[32, 784]);
+            assert_eq!(s.y.shape(), &[32, 10]);
+            assert!(s.noise1.is_none());
+        }
+    }
+
+    #[test]
+    fn noise_tensors_when_requested() {
+        let f = BatchFeeder::start(
+            dataset(),
+            32,
+            Some((64, 48)),
+            Pcg64::seed(2),
+            None,
+            2,
+        );
+        let first = f.into_iter().next().unwrap();
+        let n1 = first.noise1.unwrap();
+        assert_eq!(n1.shape(), &[64, 32]);
+        assert_eq!(first.noise2.unwrap().shape(), &[48, 32]);
+        // standard-normal-ish
+        let mean = n1.sum() / n1.len() as f32;
+        assert!(mean.abs() < 0.2);
+    }
+
+    #[test]
+    fn max_steps_caps_epoch() {
+        let f = BatchFeeder::start(dataset(), 32, None, Pcg64::seed(3), Some(2), 2);
+        assert_eq!(f.count(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed: u64| -> Vec<f32> {
+            BatchFeeder::start(dataset(), 32, Some((8, 8)), Pcg64::seed(seed), None, 2)
+                .flat_map(|s| {
+                    let mut v = s.x.data()[..8].to_vec();
+                    v.extend_from_slice(&s.noise1.unwrap().data()[..8]);
+                    v
+                })
+                .collect()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let f = BatchFeeder::start(dataset(), 32, None, Pcg64::seed(4), None, 1);
+        drop(f); // producer must unblock and join
+    }
+}

@@ -1,0 +1,87 @@
+//! Run recording: config, per-epoch history and checkpoints on disk.
+//!
+//! Layout: `<out_dir>/<run_name>/{config.json, history.json, final.ckpt}`.
+//! History is plain JSON so EXPERIMENTS.md tables can be regenerated from
+//! recorded runs without re-training.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+use crate::Result;
+
+pub struct RunRecorder {
+    pub dir: PathBuf,
+    history: Vec<Value>,
+}
+
+impl RunRecorder {
+    pub fn create(out_dir: impl AsRef<Path>, run_name: &str) -> Result<RunRecorder> {
+        let dir = out_dir.as_ref().join(run_name);
+        std::fs::create_dir_all(&dir)?;
+        Ok(RunRecorder { dir, history: Vec::new() })
+    }
+
+    pub fn write_config(&self, config: &Value) -> Result<()> {
+        std::fs::write(self.dir.join("config.json"), config.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Append one epoch record and rewrite history.json (crash-safe-ish:
+    /// the file is always a complete valid document).
+    pub fn record_epoch(&mut self, record: Value) -> Result<()> {
+        self.history.push(record);
+        let doc = Value::Array(self.history.clone());
+        let tmp = self.dir.join("history.json.tmp");
+        std::fs::write(&tmp, doc.to_string_pretty())?;
+        std::fs::rename(&tmp, self.dir.join("history.json"))?;
+        Ok(())
+    }
+
+    pub fn write_checkpoint(&self, name: &str, bytes: &[u8]) -> Result<()> {
+        std::fs::write(self.dir.join(name), bytes)?;
+        Ok(())
+    }
+
+    pub fn write_report(&self, name: &str, report: &Value) -> Result<()> {
+        std::fs::write(self.dir.join(name), report.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn history(&self) -> &[Value] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_persists() {
+        let base = std::env::temp_dir().join("pdfa_run_test");
+        let mut rec = RunRecorder::create(&base, "unit").unwrap();
+        rec.write_config(&Value::object(vec![("lr", Value::Number(0.01))]))
+            .unwrap();
+        rec.record_epoch(Value::object(vec![
+            ("epoch", Value::Number(1.0)),
+            ("val_acc", Value::Number(0.91)),
+        ]))
+        .unwrap();
+        rec.record_epoch(Value::object(vec![
+            ("epoch", Value::Number(2.0)),
+            ("val_acc", Value::Number(0.93)),
+        ]))
+        .unwrap();
+        rec.write_checkpoint("final.ckpt", &[1, 2, 3]).unwrap();
+
+        let hist =
+            Value::parse(&std::fs::read_to_string(rec.dir.join("history.json")).unwrap())
+                .unwrap();
+        assert_eq!(hist.as_array().unwrap().len(), 2);
+        assert_eq!(
+            hist.as_array().unwrap()[1].get("val_acc").as_f64(),
+            Some(0.93)
+        );
+        assert_eq!(std::fs::read(rec.dir.join("final.ckpt")).unwrap(), vec![1, 2, 3]);
+    }
+}

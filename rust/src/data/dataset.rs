@@ -1,0 +1,203 @@
+//! In-memory dataset with normalisation, one-hot labels and shuffled
+//! mini-batching — the data path of the §4 training experiment
+//! (mini-batch 64, pixels scaled to [0, 1]).
+
+use std::path::Path;
+
+use super::idx::IdxArray;
+use super::synth;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// A split: flattened normalised images + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// (n, d) pixels in [0, 1].
+    pub x: Tensor,
+    /// class indices
+    pub y: Vec<u8>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn from_idx(images: &IdxArray, labels: &IdxArray, n_classes: usize) -> Result<Dataset> {
+        if images.dims.len() < 2 || images.dims[0] != labels.dims[0] {
+            return Err(Error::Data(format!(
+                "images {:?} / labels {:?} mismatch",
+                images.dims, labels.dims
+            )));
+        }
+        let n = images.dims[0];
+        let d: usize = images.dims[1..].iter().product();
+        let data: Vec<f32> = images.data.iter().map(|&b| b as f32 / 255.0).collect();
+        if labels.data.iter().any(|&l| l as usize >= n_classes) {
+            return Err(Error::Data("label out of range".into()));
+        }
+        Ok(Dataset {
+            x: Tensor::new(&[n, d], data)?,
+            y: labels.data.clone(),
+            n_classes,
+        })
+    }
+
+    /// Load a split from IDX files under `dir`, trying the canonical MNIST
+    /// names with and without `.gz`.
+    pub fn load_split(dir: impl AsRef<Path>, train: bool) -> Result<Dataset> {
+        let dir = dir.as_ref();
+        let (img_base, lab_base) = if train {
+            ("train-images-idx3-ubyte", "train-labels-idx1-ubyte")
+        } else {
+            ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")
+        };
+        let find = |base: &str| -> Result<IdxArray> {
+            for name in [base.to_string(), format!("{base}.gz")] {
+                let p = dir.join(&name);
+                if p.exists() {
+                    return IdxArray::load(&p);
+                }
+            }
+            Err(Error::Data(format!(
+                "no {base}[.gz] under {} (run `pdfa gen-data` or point --data-dir at MNIST)",
+                dir.display()
+            )))
+        };
+        Dataset::from_idx(&find(img_base)?, &find(lab_base)?, synth::N_CLASSES)
+    }
+
+    /// Generate the synthetic split in memory (no files).
+    pub fn synthetic(n: usize, seed: u64) -> Dataset {
+        let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+        let (img, lab) = synth::generate_split_parallel(n, seed, threads);
+        Dataset::from_idx(&img, &lab, synth::N_CLASSES).expect("synth arrays are consistent")
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// One-hot encode labels for rows `idx` -> (len, n_classes).
+    pub fn one_hot(&self, idx: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(&[idx.len(), self.n_classes]);
+        for (r, &i) in idx.iter().enumerate() {
+            t.set(r, self.y[i] as usize, 1.0);
+        }
+        t
+    }
+
+    /// Gather an (x, y_onehot) batch by indices.
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        (self.x.gather_rows(idx), self.one_hot(idx))
+    }
+}
+
+/// Epoch iterator: shuffles indices and yields fixed-size batches
+/// (dropping the ragged tail, as the fixed-shape AOT artifacts require).
+pub struct Batcher {
+    indices: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, rng: &mut Pcg64) -> Batcher {
+        assert!(batch > 0);
+        let mut indices: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut indices);
+        Batcher { indices, batch, pos: 0 }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.indices.len() / self.batch
+    }
+}
+
+impl Iterator for Batcher {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos + self.batch > self.indices.len() {
+            return None;
+        }
+        let out = self.indices[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset() -> Dataset {
+        Dataset::synthetic(64, 1)
+    }
+
+    #[test]
+    fn synthetic_normalised_and_shaped() {
+        let d = tiny_dataset();
+        assert_eq!(d.len(), 64);
+        assert_eq!(d.dim(), 784);
+        assert!(d.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let d = tiny_dataset();
+        let oh = d.one_hot(&[0, 5, 9]);
+        assert_eq!(oh.shape(), &[3, 10]);
+        for r in 0..3 {
+            assert_eq!(oh.row(r).iter().sum::<f32>(), 1.0);
+            assert_eq!(oh.at(r, d.y[[0, 5, 9][r]] as usize), 1.0);
+        }
+    }
+
+    #[test]
+    fn batcher_covers_without_repeats() {
+        let mut rng = Pcg64::seed(0);
+        let b = Batcher::new(100, 32, &mut rng);
+        assert_eq!(b.batches_per_epoch(), 3);
+        let mut seen = Vec::new();
+        let mut count = 0;
+        for batch in b {
+            assert_eq!(batch.len(), 32);
+            seen.extend(batch);
+            count += 1;
+        }
+        assert_eq!(count, 3);
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 96); // no repeats; 4 dropped (ragged tail)
+    }
+
+    #[test]
+    fn idx_roundtrip_through_files() {
+        let dir = std::env::temp_dir().join("pdfa_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (img, lab) = synth::generate_split(32, 3);
+        img.save(dir.join("train-images-idx3-ubyte.gz")).unwrap();
+        lab.save(dir.join("train-labels-idx1-ubyte.gz")).unwrap();
+        let d = Dataset::load_split(&dir, true).unwrap();
+        assert_eq!(d.len(), 32);
+        assert!(Dataset::load_split(&dir, false).is_err()); // no test split
+    }
+
+    #[test]
+    fn from_idx_validates() {
+        let img = IdxArray::new(vec![2, 2, 2], vec![0; 8]).unwrap();
+        let lab_ok = IdxArray::new(vec![2], vec![0, 9]).unwrap();
+        let lab_bad_len = IdxArray::new(vec![3], vec![0, 1, 2]).unwrap();
+        let lab_bad_class = IdxArray::new(vec![2], vec![0, 10]).unwrap();
+        assert!(Dataset::from_idx(&img, &lab_ok, 10).is_ok());
+        assert!(Dataset::from_idx(&img, &lab_bad_len, 10).is_err());
+        assert!(Dataset::from_idx(&img, &lab_bad_class, 10).is_err());
+    }
+}

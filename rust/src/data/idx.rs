@@ -1,0 +1,144 @@
+//! IDX file format (the MNIST container): read/write, transparent gzip.
+//!
+//! Format: big-endian magic `[0, 0, dtype, ndims]`, then ndims u32 dims,
+//! then row-major payload. Only dtype 0x08 (u8) is needed for MNIST.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::{Error, Result};
+
+const DTYPE_U8: u8 = 0x08;
+
+/// An IDX tensor of u8 (images: [n, 28, 28]; labels: [n]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdxArray {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl IdxArray {
+    pub fn new(dims: Vec<usize>, data: Vec<u8>) -> Result<IdxArray> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Data(format!(
+                "idx dims {dims:?} want {n} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(IdxArray { dims, data })
+    }
+
+    /// Parse from raw IDX bytes.
+    pub fn parse(bytes: &[u8]) -> Result<IdxArray> {
+        if bytes.len() < 4 || bytes[0] != 0 || bytes[1] != 0 {
+            return Err(Error::Data("bad idx magic".into()));
+        }
+        if bytes[2] != DTYPE_U8 {
+            return Err(Error::Data(format!(
+                "unsupported idx dtype 0x{:02x} (only u8)",
+                bytes[2]
+            )));
+        }
+        let ndims = bytes[3] as usize;
+        let header = 4 + 4 * ndims;
+        if bytes.len() < header {
+            return Err(Error::Data("truncated idx header".into()));
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        for d in 0..ndims {
+            let o = 4 + 4 * d;
+            dims.push(u32::from_be_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]])
+                as usize);
+        }
+        let n: usize = dims.iter().product();
+        if bytes.len() != header + n {
+            return Err(Error::Data(format!(
+                "idx payload size {} != expected {n}",
+                bytes.len() - header
+            )));
+        }
+        Ok(IdxArray { dims, data: bytes[header..].to_vec() })
+    }
+
+    /// Serialize to raw IDX bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + 4 * self.dims.len() + self.data.len());
+        out.extend_from_slice(&[0, 0, DTYPE_U8, self.dims.len() as u8]);
+        for &d in &self.dims {
+            out.extend_from_slice(&(d as u32).to_be_bytes());
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    /// Load from a file; `.gz` suffix (or gzip magic) is decompressed.
+    pub fn load(path: impl AsRef<Path>) -> Result<IdxArray> {
+        let raw = std::fs::read(path.as_ref())?;
+        let bytes = if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
+            let mut out = Vec::new();
+            flate2::read::GzDecoder::new(&raw[..]).read_to_end(&mut out)?;
+            out
+        } else {
+            raw
+        };
+        Self::parse(&bytes)
+    }
+
+    /// Save, gzipped when the path ends in `.gz`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = self.to_bytes();
+        if path.extension().is_some_and(|e| e == "gz") {
+            let f = std::fs::File::create(path)?;
+            let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+            enc.write_all(&bytes)?;
+            enc.finish()?;
+        } else {
+            std::fs::write(path, bytes)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bytes() {
+        let a = IdxArray::new(vec![2, 3], (0u8..6).collect()).unwrap();
+        let b = IdxArray::parse(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_files_plain_and_gz() {
+        let dir = std::env::temp_dir().join("pdfa_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = IdxArray::new(vec![4, 7], (0u8..28).collect()).unwrap();
+        for name in ["t.idx", "t.idx.gz"] {
+            let p = dir.join(name);
+            a.save(&p).unwrap();
+            assert_eq!(IdxArray::load(&p).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn mnist_shaped_header() {
+        let imgs = IdxArray::new(vec![2, 28, 28], vec![7; 2 * 28 * 28]).unwrap();
+        let bytes = imgs.to_bytes();
+        assert_eq!(&bytes[..4], &[0, 0, 0x08, 3]);
+        assert_eq!(&bytes[4..8], &2u32.to_be_bytes());
+        assert_eq!(&bytes[8..12], &28u32.to_be_bytes());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(IdxArray::parse(&[]).is_err());
+        assert!(IdxArray::parse(&[1, 0, 8, 1, 0, 0, 0, 0]).is_err()); // magic
+        assert!(IdxArray::parse(&[0, 0, 0x0d, 1, 0, 0, 0, 0]).is_err()); // dtype
+        assert!(IdxArray::parse(&[0, 0, 8, 1, 0, 0, 0, 5, 1, 2]).is_err()); // short
+        assert!(IdxArray::new(vec![2, 2], vec![0; 3]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Dataset substrate.
+//!
+//! The paper trains on MNIST; this sandbox has no network access, so the
+//! drop-in substitute is a deterministic procedural digit generator
+//! ([`synth`]) with the same geometry (28×28 grayscale, 10 classes,
+//! 60k/10k split) and comparable MLP difficulty. Real MNIST IDX files
+//! (optionally gzipped) load through [`idx`] with zero code changes —
+//! point `--data-dir` at them. See DESIGN.md §5 (substitutions).
+//!
+//! * [`idx`]     — IDX file format reader/writer (+ gzip)
+//! * [`synth`]   — procedural stroke-based digit renderer
+//! * [`dataset`] — in-memory dataset, normalisation, shuffled batching
+
+pub mod dataset;
+pub mod idx;
+pub mod synth;
+
+pub use dataset::{Batcher, Dataset};

@@ -1,0 +1,290 @@
+//! Procedural digit dataset ("synth-MNIST").
+//!
+//! Deterministic stand-in for MNIST (no network access in this sandbox —
+//! DESIGN.md §5): each class has a handwritten-style stroke skeleton
+//! (polylines + arcs on the unit square) rendered at 28×28 through a
+//! random affine jitter (rotation, scale, shear, translation), random
+//! stroke thickness, soft-edge rasterisation, and pixel noise. Same
+//! geometry and value range as MNIST; an MLP plateaus in the high 90s,
+//! leaving the paper's noise-degradation effects visible.
+
+use super::idx::IdxArray;
+use crate::util::rng::Pcg64;
+
+pub const IMG_SIDE: usize = 28;
+pub const N_CLASSES: usize = 10;
+
+type Pt = (f32, f32);
+
+/// Stroke skeleton of one digit: polylines in [0,1]² (y grows downward).
+fn skeleton(class: usize) -> Vec<Vec<Pt>> {
+    // helper: arc from a0 to a1 (radians) on ellipse centre (cx,cy) radii (rx,ry)
+    let arc = |cx: f32, cy: f32, rx: f32, ry: f32, a0: f32, a1: f32, n: usize| -> Vec<Pt> {
+        (0..=n)
+            .map(|i| {
+                let a = a0 + (a1 - a0) * i as f32 / n as f32;
+                (cx + rx * a.cos(), cy + ry * a.sin())
+            })
+            .collect()
+    };
+    use std::f32::consts::PI;
+    match class {
+        0 => vec![arc(0.5, 0.5, 0.28, 0.38, 0.0, 2.0 * PI, 24)],
+        1 => vec![
+            vec![(0.38, 0.30), (0.55, 0.15), (0.55, 0.85)],
+        ],
+        2 => vec![
+            arc(0.5, 0.32, 0.26, 0.20, -PI, 0.0, 12),
+            vec![(0.76, 0.32), (0.30, 0.85)],
+            vec![(0.30, 0.85), (0.78, 0.85)],
+        ],
+        3 => vec![
+            arc(0.47, 0.32, 0.24, 0.18, -PI, 0.5 * PI, 14),
+            arc(0.47, 0.68, 0.26, 0.20, -0.5 * PI, PI, 14),
+        ],
+        4 => vec![
+            vec![(0.62, 0.15), (0.25, 0.62), (0.80, 0.62)],
+            vec![(0.62, 0.15), (0.62, 0.88)],
+        ],
+        5 => vec![
+            vec![(0.75, 0.15), (0.32, 0.15), (0.30, 0.48)],
+            arc(0.50, 0.66, 0.26, 0.21, -0.6 * PI, 0.8 * PI, 16),
+        ],
+        6 => vec![
+            arc(0.58, 0.30, 0.30, 0.45, 0.8 * PI, 1.45 * PI, 12),
+            arc(0.50, 0.66, 0.24, 0.20, 0.0, 2.0 * PI, 18),
+        ],
+        7 => vec![
+            vec![(0.25, 0.17), (0.78, 0.17), (0.42, 0.88)],
+        ],
+        8 => vec![
+            arc(0.5, 0.32, 0.21, 0.17, 0.0, 2.0 * PI, 18),
+            arc(0.5, 0.70, 0.25, 0.19, 0.0, 2.0 * PI, 18),
+        ],
+        9 => vec![
+            arc(0.52, 0.34, 0.22, 0.19, 0.0, 2.0 * PI, 18),
+            vec![(0.74, 0.34), (0.70, 0.88)],
+        ],
+        _ => panic!("class must be 0..10"),
+    }
+}
+
+/// Distance from point p to segment (a, b).
+fn seg_dist(p: Pt, a: Pt, b: Pt) -> f32 {
+    let (px, py) = (p.0 - a.0, p.1 - a.1);
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 > 0.0 { ((px * vx + py * vy) / len2).clamp(0.0, 1.0) } else { 0.0 };
+    let (dx, dy) = (px - t * vx, py - t * vy);
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Render one digit image (row-major, values 0..=255).
+pub fn render_digit(class: usize, rng: &mut Pcg64) -> Vec<u8> {
+    let strokes = skeleton(class);
+
+    // random affine jitter around the image centre
+    let rot = rng.normal(0.0, 0.10) as f32; // ~±17°at 3σ
+    let scale = rng.uniform_in(0.85, 1.10) as f32;
+    let shear = rng.normal(0.0, 0.08) as f32;
+    let (dx, dy) = (
+        rng.normal(0.0, 0.035) as f32,
+        rng.normal(0.0, 0.035) as f32,
+    );
+    let (sin, cos) = (rot.sin(), rot.cos());
+    let xform = |p: Pt| -> Pt {
+        let (x, y) = (p.0 - 0.5, p.1 - 0.5);
+        let (x, y) = (x + shear * y, y);
+        let (x, y) = (scale * (cos * x - sin * y), scale * (sin * x + cos * y));
+        (x + 0.5 + dx, y + 0.5 + dy)
+    };
+
+    // transformed segments
+    let mut segs: Vec<(Pt, Pt)> = Vec::new();
+    for stroke in &strokes {
+        for w in stroke.windows(2) {
+            segs.push((xform(w[0]), xform(w[1])));
+        }
+    }
+
+    let thick = rng.uniform_in(0.035, 0.058) as f32; // stroke half-width
+    let soft = 0.022f32; // antialias band
+    let mut img = vec![0u8; IMG_SIDE * IMG_SIDE];
+    for iy in 0..IMG_SIDE {
+        for ix in 0..IMG_SIDE {
+            let p = (
+                (ix as f32 + 0.5) / IMG_SIDE as f32,
+                (iy as f32 + 0.5) / IMG_SIDE as f32,
+            );
+            let mut d = f32::INFINITY;
+            for &(a, b) in &segs {
+                d = d.min(seg_dist(p, a, b));
+                if d <= 0.0 {
+                    break;
+                }
+            }
+            let v = if d <= thick {
+                1.0
+            } else if d < thick + soft {
+                1.0 - (d - thick) / soft
+            } else {
+                0.0
+            };
+            // ink-intensity jitter + sensor noise
+            let noisy = (v * rng.uniform_in(0.82, 1.0) as f32
+                + rng.normal(0.0, 0.02) as f32)
+                .clamp(0.0, 1.0);
+            img[iy * IMG_SIDE + ix] = (noisy * 255.0) as u8;
+        }
+    }
+    img
+}
+
+/// Generate a full split: `n` images + labels, balanced classes, as IDX
+/// arrays (identical container format to real MNIST).
+pub fn generate_split(n: usize, seed: u64) -> (IdxArray, IdxArray) {
+    let mut rng = Pcg64::new(seed, 0x5e17);
+    let mut images = Vec::with_capacity(n * IMG_SIDE * IMG_SIDE);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = (rng.below(N_CLASSES as u64)) as usize;
+        let _ = i;
+        images.extend_from_slice(&render_digit(class, &mut rng));
+        labels.push(class as u8);
+    }
+    (
+        IdxArray::new(vec![n, IMG_SIDE, IMG_SIDE], images).unwrap(),
+        IdxArray::new(vec![n], labels).unwrap(),
+    )
+}
+
+/// Generate with multiple threads (rendering is embarrassingly parallel).
+///
+/// Output is independent of `threads`: work is split into fixed-size
+/// chunks, each with its own RNG stream keyed by chunk index.
+pub fn generate_split_parallel(n: usize, seed: u64, threads: usize) -> (IdxArray, IdxArray) {
+    const CHUNK: usize = 1024;
+    let n_chunks = n.div_ceil(CHUNK).max(1);
+    let threads = threads.clamp(1, n_chunks);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut parts: Vec<(usize, Vec<u8>, Vec<u8>)> = Vec::with_capacity(n_chunks);
+    let parts_mx = std::sync::Mutex::new(&mut parts);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let count = CHUNK.min(n - c * CHUNK);
+                let mut rng = Pcg64::new(seed, 0x517e_ad00 + c as u64);
+                let mut images = Vec::with_capacity(count * IMG_SIDE * IMG_SIDE);
+                let mut labels = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let class = rng.below(N_CLASSES as u64) as usize;
+                    images.extend_from_slice(&render_digit(class, &mut rng));
+                    labels.push(class as u8);
+                }
+                parts_mx.lock().unwrap().push((c, images, labels));
+            });
+        }
+    });
+    parts.sort_by_key(|p| p.0);
+    let mut images = Vec::with_capacity(n * IMG_SIDE * IMG_SIDE);
+    let mut labels = Vec::with_capacity(n);
+    for (_, im, la) in parts {
+        images.extend(im);
+        labels.extend(la);
+    }
+    (
+        IdxArray::new(vec![n, IMG_SIDE, IMG_SIDE], images).unwrap(),
+        IdxArray::new(vec![n], labels).unwrap(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes() {
+        let mut rng = Pcg64::seed(0);
+        for class in 0..N_CLASSES {
+            let img = render_digit(class, &mut rng);
+            assert_eq!(img.len(), 784);
+            let ink: u32 = img.iter().map(|&v| v as u32).sum();
+            // some ink, not a full page
+            assert!(ink > 5_000, "class {class} too faint: {ink}");
+            assert!(ink < 120_000, "class {class} too dense: {ink}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a_img, a_lab) = generate_split(20, 7);
+        let (b_img, b_lab) = generate_split(20, 7);
+        assert_eq!(a_img, b_img);
+        assert_eq!(a_lab, b_lab);
+        let (c_img, _) = generate_split(20, 8);
+        assert_ne!(a_img, c_img);
+    }
+
+    #[test]
+    fn split_shapes_and_label_range() {
+        let (img, lab) = generate_split(50, 1);
+        assert_eq!(img.dims, vec![50, 28, 28]);
+        assert_eq!(lab.dims, vec![50]);
+        assert!(lab.data.iter().all(|&l| l < 10));
+        // roughly balanced classes
+        let mut counts = [0u32; 10];
+        for &l in &lab.data {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn parallel_matches_shape_and_balance() {
+        let (img, lab) = generate_split_parallel(64, 3, 4);
+        assert_eq!(img.dims, vec![64, 28, 28]);
+        assert_eq!(lab.data.len(), 64);
+        assert!(lab.data.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn parallel_is_thread_count_invariant() {
+        let (a_img, a_lab) = generate_split_parallel(40, 9, 1);
+        let (b_img, b_lab) = generate_split_parallel(40, 9, 4);
+        assert_eq!(a_img, b_img);
+        assert_eq!(a_lab, b_lab);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean intra-class pixel distance must be far below inter-class —
+        // the separability the MLP relies on
+        let mut rng = Pcg64::seed(5);
+        let n_per = 8;
+        let mut means: Vec<Vec<f32>> = Vec::new();
+        for class in 0..N_CLASSES {
+            let mut mean = vec![0f32; 784];
+            for _ in 0..n_per {
+                for (m, &v) in mean.iter_mut().zip(&render_digit(class, &mut rng)) {
+                    *m += v as f32 / 255.0 / n_per as f32;
+                }
+            }
+            means.push(mean);
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        for i in 0..N_CLASSES {
+            for j in (i + 1)..N_CLASSES {
+                assert!(
+                    dist(&means[i], &means[j]) > 2.0,
+                    "classes {i} and {j} overlap"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Training configuration.
+//!
+//! Defaults are the paper's §4 protocol: SGD with momentum 0.9, learning
+//! rate 0.01, mini-batch 64, cross-entropy loss, ReLU hidden layers.
+
+use super::noise_model::NoiseMode;
+use crate::util::json::Value;
+use crate::{Error, Result};
+
+/// Which backward-pass algorithm trains the network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Direct feedback alignment through the photonic path (the paper).
+    Dfa,
+    /// Backpropagation baseline (digital, noise-free).
+    Backprop,
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact config name: "tiny", "small" or "mnist".
+    pub config: String,
+    pub algorithm: Algorithm,
+    pub noise: NoiseMode,
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Master seed: init, shuffling, noise draws, dataset synthesis.
+    pub seed: u64,
+    /// Dataset sizes (synthetic generation or subset of loaded files).
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Optional directory of IDX files (real MNIST drop-in); None = synth.
+    pub data_dir: Option<String>,
+    /// Evaluate on the validation set every `eval_every` epochs.
+    pub eval_every: usize,
+    /// Optional cap on steps per epoch (quick smoke runs).
+    pub max_steps_per_epoch: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            config: "mnist".into(),
+            algorithm: Algorithm::Dfa,
+            noise: NoiseMode::Clean,
+            epochs: 10,
+            lr: 0.01,
+            momentum: 0.9,
+            seed: 1,
+            n_train: 60_000,
+            n_test: 10_000,
+            data_dir: None,
+            eval_every: 1,
+            max_steps_per_epoch: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Serialise for the run record.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("config", Value::str(&self.config)),
+            (
+                "algorithm",
+                Value::str(match self.algorithm {
+                    Algorithm::Dfa => "dfa",
+                    Algorithm::Backprop => "backprop",
+                }),
+            ),
+            ("noise", Value::str(self.noise.describe())),
+            ("epochs", Value::Number(self.epochs as f64)),
+            ("lr", Value::Number(self.lr as f64)),
+            ("momentum", Value::Number(self.momentum as f64)),
+            ("seed", Value::Number(self.seed as f64)),
+            ("n_train", Value::Number(self.n_train as f64)),
+            ("n_test", Value::Number(self.n_test as f64)),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            return Err(Error::Config("epochs must be >= 1".into()));
+        }
+        if !(self.lr > 0.0) {
+            return Err(Error::Config("lr must be positive".into()));
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            return Err(Error::Config("momentum must be in [0, 1)".into()));
+        }
+        if self.n_train == 0 || self.n_test == 0 {
+            return Err(Error::Config("dataset sizes must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = TrainConfig::default();
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.momentum, 0.9);
+        assert_eq!(c.config, "mnist");
+        assert_eq!(c.n_train, 60_000);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = TrainConfig::default();
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.lr = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.momentum = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_round_trips_keys() {
+        let c = TrainConfig::default();
+        let j = c.to_json();
+        assert_eq!(j.get("lr").as_f64(), Some(0.01f32 as f64));
+        assert_eq!(j.get("algorithm").as_str(), Some("dfa"));
+    }
+}

@@ -1,0 +1,262 @@
+//! Device mode: the backward-pass gradient computed through the
+//! device-level photonic weight bank instead of the Gaussian-noise model.
+//!
+//! Per hidden layer the fixed feedback matrix B(k) is tiled onto the bank
+//! by the GeMM compiler; every tile's inscription is snapshotted once (the
+//! paper's analog weight memory, §5) and restored per cycle — so training
+//! steps never pay the feedback-lock cost again. Negative error values use
+//! differential encoding: B·e = B·e⁺ − B·e⁻ with non-negative channel
+//! amplitudes (two optical cycles), avoiding per-sample re-inscription.
+//!
+//! Everything outside the mat-vec (error, Hadamard via TIA gains, update)
+//! matches the reference implementation.
+
+use crate::gemm::tiler::Tiling;
+use crate::photonics::weight_bank::Inscription;
+use crate::photonics::{BankConfig, BpdMode, WeightBank};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A feedback matrix pre-compiled onto the photonic bank.
+pub struct CompiledFeedback {
+    tiling: Tiling,
+    /// Snapshot per tile, in tiling order.
+    inscriptions: Vec<Inscription>,
+    /// Digital gain undoing the full-range inscription amplification.
+    amp: f32,
+    /// Signed weights kept for reference/debug.
+    pub bmat: Tensor,
+}
+
+/// The photonic gradient engine of device mode.
+pub struct DeviceBackend {
+    pub bank: WeightBank,
+}
+
+impl DeviceBackend {
+    /// Build a bank in the requested BPD mode at the paper's 50 × 20
+    /// geometry.
+    pub fn new(bpd: BpdMode, seed: u64) -> Result<DeviceBackend> {
+        let bank = WeightBank::new(BankConfig { seed, ..BankConfig::paper(bpd) })?;
+        Ok(DeviceBackend { bank })
+    }
+
+    /// Tile + inscribe a feedback matrix; snapshots every tile inscription.
+    ///
+    /// The weights are amplified to fill the bank's inscribable range
+    /// (max |B| -> ~weight_max) and the inverse gain is applied digitally
+    /// after readout — standard analog practice: small inscribed weights
+    /// would waste receiver dynamic range and drown in BPD noise.
+    pub fn compile_feedback(&mut self, bmat: &Tensor) -> Result<CompiledFeedback> {
+        let (m, k) = (bmat.rows(), bmat.cols());
+        let tiling = Tiling::new(m, k, self.bank.rows(), self.bank.cols())?;
+        let w_max = self.bank.weight_range().1.min(0.95) as f32;
+        let amp = (bmat.max_abs() / w_max).max(1e-12);
+        let mut inscriptions = Vec::with_capacity(tiling.tiles.len());
+        let (br, bc) = (self.bank.rows(), self.bank.cols());
+        let mut tile_w = Tensor::zeros(&[br, bc]);
+        for tile in &tiling.tiles {
+            tile_w.data_mut().fill(0.0);
+            for r in 0..tile.rows() {
+                for c in 0..tile.cols() {
+                    tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
+                }
+            }
+            self.bank.inscribe(&tile_w)?;
+            inscriptions.push(self.bank.snapshot());
+        }
+        Ok(CompiledFeedback { tiling, inscriptions, amp, bmat: bmat.clone() })
+    }
+
+    /// y = B @ e for one sample through the photonic bank, with the TIA
+    /// gains implementing the per-row Hadamard mask `gprime` (or all-ones).
+    ///
+    /// e is signed; differential encoding splits it into e⁺/e⁻ cycles.
+    pub fn matvec(
+        &mut self,
+        fb: &CompiledFeedback,
+        e: &[f32],
+        gprime: Option<&[f32]>,
+    ) -> Result<Vec<f32>> {
+        let t = &fb.tiling;
+        if e.len() != t.k {
+            return Err(Error::Shape(format!(
+                "device matvec: e length {} != {}",
+                e.len(),
+                t.k
+            )));
+        }
+        if let Some(g) = gprime {
+            if g.len() != t.m {
+                return Err(Error::Shape("gprime length != output rows".into()));
+            }
+        }
+        let s = e.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let bc = self.bank.cols();
+        let mut y = vec![0.0f32; t.m];
+        let mut x_pos = vec![0.0f32; bc];
+        let mut x_neg = vec![0.0f32; bc];
+        for (tile, ins) in t.tiles.iter().zip(&fb.inscriptions) {
+            self.bank.restore(ins)?;
+            // TIA gains for this tile's rows
+            let mut gains = vec![0.0f32; self.bank.rows()];
+            for r in 0..tile.rows() {
+                gains[r] = gprime.map_or(1.0, |g| g[tile.row0 + r]);
+            }
+            for g in gains.iter_mut().skip(tile.rows()) {
+                *g = 0.0; // padding rows gated off
+            }
+            self.bank.set_tia_gains(&gains)?;
+
+            x_pos.fill(0.0);
+            x_neg.fill(0.0);
+            let mut any_neg = false;
+            for c in 0..tile.cols() {
+                let v = e[tile.col0 + c] / s;
+                if v >= 0.0 {
+                    x_pos[c] = v.min(1.0);
+                } else {
+                    x_neg[c] = (-v).min(1.0);
+                    any_neg = true;
+                }
+            }
+            let gain = bc as f32 * s * fb.amp; // undo bank norm + amplification
+            let out_pos = self.bank.matvec(&x_pos)?;
+            for r in 0..tile.rows() {
+                y[tile.row0 + r] += out_pos[r] * gain;
+            }
+            if any_neg {
+                let out_neg = self.bank.matvec(&x_neg)?;
+                for r in 0..tile.rows() {
+                    y[tile.row0 + r] -= out_neg[r] * gain;
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// Batched gradient: delta(k)^T (m, batch) for error rows `e` (batch, k)
+    /// and pre-activations `a` (batch, m) — Eq. (1) end-to-end on-device.
+    pub fn dfa_gradient(
+        &mut self,
+        fb: &CompiledFeedback,
+        e: &Tensor,
+        a: &Tensor,
+    ) -> Result<Tensor> {
+        let batch = e.rows();
+        let m = fb.tiling.m;
+        let mut out = Tensor::zeros(&[m, batch]);
+        let mut gprime = vec![0.0f32; m];
+        for smp in 0..batch {
+            for (j, g) in gprime.iter_mut().enumerate() {
+                *g = if a.at(smp, j) > 0.0 { 1.0 } else { 0.0 };
+            }
+            let y = self.matvec(fb, e.row(smp), Some(&gprime))?;
+            for (j, v) in y.into_iter().enumerate() {
+                out.set(j, smp, v);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total bank cycles consumed so far (energy/throughput accounting).
+    pub fn cycles(&self) -> u64 {
+        self.bank.cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_close;
+    use crate::util::rng::Pcg64;
+
+    fn ideal_backend() -> DeviceBackend {
+        DeviceBackend::new(BpdMode::Ideal, 11).unwrap()
+    }
+
+    #[test]
+    fn device_matvec_matches_dense() {
+        let mut be = ideal_backend();
+        let mut rng = Pcg64::seed(4);
+        // 80 x 10: ragged over the 50 x 20 bank (2 row tiles, half-full cols)
+        let bmat = Tensor::rand_uniform(&[80, 10], -0.9, 0.9, &mut rng);
+        let fb = be.compile_feedback(&bmat).unwrap();
+        let e: Vec<f32> = (0..10).map(|_| rng.normal(0.0, 0.5) as f32).collect();
+        let y = be.matvec(&fb, &e, None).unwrap();
+        let want: Vec<f32> = (0..80)
+            .map(|r| bmat.row(r).iter().zip(&e).map(|(&w, &x)| w * x).sum())
+            .collect();
+        // ideal device: small systematic error from lock tolerance/crosstalk
+        let scale = e.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert_close(&y, &want, 0.15 * scale * 10.0).unwrap();
+        // correlation should be essentially 1
+        let c = crate::util::stats::correlation(
+            &y.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &want.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(c > 0.98, "correlation {c}");
+    }
+
+    #[test]
+    fn gprime_gates_rows_on_device() {
+        let mut be = ideal_backend();
+        let mut rng = Pcg64::seed(5);
+        let bmat = Tensor::rand_uniform(&[20, 4], -0.9, 0.9, &mut rng);
+        let fb = be.compile_feedback(&bmat).unwrap();
+        let e = [0.5f32, -0.3, 0.2, 0.1];
+        let mut gp = vec![1.0f32; 20];
+        for g in gp.iter_mut().take(10) {
+            *g = 0.0;
+        }
+        let y = be.matvec(&fb, &e, Some(&gp)).unwrap();
+        for (r, &v) in y.iter().enumerate().take(10) {
+            assert_eq!(v, 0.0, "row {r} should be gated");
+        }
+        assert!(y[10..].iter().any(|&v| v.abs() > 0.01));
+    }
+
+    #[test]
+    fn batched_gradient_shape_and_masking() {
+        let mut be = ideal_backend();
+        let mut rng = Pcg64::seed(6);
+        let bmat = Tensor::rand_uniform(&[30, 4], -0.9, 0.9, &mut rng);
+        let fb = be.compile_feedback(&bmat).unwrap();
+        let e = Tensor::randn(&[3, 4], 0.5, &mut rng);
+        let mut a = Tensor::randn(&[3, 30], 1.0, &mut rng);
+        // force one sample fully inactive
+        for j in 0..30 {
+            a.set(1, j, -1.0);
+        }
+        let d = be.dfa_gradient(&fb, &e, &a).unwrap();
+        assert_eq!(d.shape(), &[30, 3]);
+        for j in 0..30 {
+            assert_eq!(d.at(j, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn cycle_accounting_grows() {
+        let mut be = ideal_backend();
+        let mut rng = Pcg64::seed(7);
+        let bmat = Tensor::rand_uniform(&[50, 20], -0.9, 0.9, &mut rng);
+        let fb = be.compile_feedback(&bmat).unwrap();
+        let before = be.cycles();
+        let e: Vec<f32> = (0..20).map(|_| rng.uniform() as f32).collect(); // all >= 0
+        be.matvec(&fb, &e, None).unwrap();
+        assert_eq!(be.cycles() - before, 1); // single tile, no negatives: 1 cycle
+        let e_signed: Vec<f32> = (0..20).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let before = be.cycles();
+        be.matvec(&fb, &e_signed, None).unwrap();
+        assert_eq!(be.cycles() - before, 2); // differential: 2 cycles
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut be = ideal_backend();
+        let bmat = Tensor::zeros(&[10, 4]);
+        let fb = be.compile_feedback(&bmat).unwrap();
+        assert!(be.matvec(&fb, &[0.0; 3], None).is_err());
+        assert!(be.matvec(&fb, &[0.0; 4], Some(&[1.0; 3])).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! DFA training orchestration — the system the paper's architecture serves.
+//!
+//! The coordinator drives the AOT train-step artifacts (L2+L1, via PJRT)
+//! with the photonic noise/quantisation parameters of the experiment being
+//! reproduced, or — in *device mode* — computes the backward-pass gradient
+//! mat-vecs through the device-level photonic simulator and applies the
+//! update with the `apply_grads` artifact.
+//!
+//! * [`config`]        — training configuration (paper §4 defaults)
+//! * [`params`]        — parameter/momentum state management + init
+//! * [`noise_model`]   — the Fig. 5(b)/(c) noise modes
+//! * [`reference`]     — pure-Rust forward/backward oracle (cross-checks
+//!   the artifacts end-to-end; mirrors kernels/ref.py)
+//! * [`trainer`]       — the training loop (simulation + device modes)
+//! * [`device_backend`]— photonic-bank gradient computation (device mode)
+
+pub mod config;
+pub mod device_backend;
+pub mod noise_model;
+pub mod params;
+pub mod reference;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use noise_model::NoiseMode;
+pub use trainer::{EpochStats, TrainResult, Trainer};

@@ -1,0 +1,153 @@
+//! Noise modes of the gradient mat-vec — the experimental axes of
+//! Figs. 5(b) and 5(c).
+
+use crate::photonics::BpdMode;
+use crate::util::stats::sigma_for_bits;
+
+/// How the analog B(k)·e products are degraded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseMode {
+    /// No noise (the paper's 98.10% reference curve).
+    Clean,
+    /// Additive Gaussian read noise of std `sigma` in the normalised
+    /// domain — Fig. 5(b) with the measured σ of each circuit.
+    Gaussian { sigma: f64 },
+    /// Effective-resolution sweep (Fig. 5(c)): noise equivalent to `bits`
+    /// of resolution over the [-1, 1] range, σ = 2 / 2^bits.
+    Resolution { bits: f64 },
+    /// True fixed-point quantisation of the mat-vec output to `bits`
+    /// (ablation: quantisation-limited rather than noise-limited).
+    Quantized { bits: f64 },
+    /// Full device-level simulation through the photonic weight bank.
+    Device { bpd: BpdMode },
+}
+
+impl NoiseMode {
+    /// The paper's three Fig. 5 measurement conditions.
+    pub fn offchip() -> NoiseMode {
+        NoiseMode::Gaussian { sigma: crate::photonics::constants::SIGMA_OFFCHIP_BPD }
+    }
+
+    pub fn onchip() -> NoiseMode {
+        NoiseMode::Gaussian { sigma: crate::photonics::constants::SIGMA_ONCHIP_BPD }
+    }
+
+    /// (sigma, bits) scalar inputs for the dfa_step artifact. Device mode
+    /// has no scalar encoding (the trainer routes through the device
+    /// backend instead).
+    pub fn artifact_inputs(&self) -> Option<(f32, f32)> {
+        match *self {
+            NoiseMode::Clean => Some((0.0, 0.0)),
+            NoiseMode::Gaussian { sigma } => Some((sigma as f32, 0.0)),
+            NoiseMode::Resolution { bits } => {
+                Some((sigma_for_bits(2.0, bits) as f32, 0.0))
+            }
+            NoiseMode::Quantized { bits } => Some((0.0, bits as f32)),
+            NoiseMode::Device { .. } => None,
+        }
+    }
+
+    /// Whether the trainer must sample Gaussian noise tensors.
+    pub fn needs_noise_draws(&self) -> bool {
+        matches!(
+            self,
+            NoiseMode::Gaussian { .. } | NoiseMode::Resolution { .. }
+        )
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            NoiseMode::Clean => "clean".into(),
+            NoiseMode::Gaussian { sigma } => format!("gaussian(sigma={sigma})"),
+            NoiseMode::Resolution { bits } => format!("resolution({bits} bits)"),
+            NoiseMode::Quantized { bits } => format!("quantized({bits} bits)"),
+            NoiseMode::Device { bpd } => format!("device({bpd:?})"),
+        }
+    }
+
+    /// Parse "clean" | "offchip" | "onchip" | "gaussian:0.1" |
+    /// "resolution:4" | "quantized:6" | "device:offchip" etc.
+    pub fn parse(s: &str) -> Option<NoiseMode> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match (head, arg) {
+            ("clean", None) => Some(NoiseMode::Clean),
+            ("offchip", None) => Some(Self::offchip()),
+            ("onchip", None) => Some(Self::onchip()),
+            ("gaussian", Some(a)) => {
+                a.parse().ok().map(|sigma| NoiseMode::Gaussian { sigma })
+            }
+            ("resolution", Some(a)) => {
+                a.parse().ok().map(|bits| NoiseMode::Resolution { bits })
+            }
+            ("quantized", Some(a)) => {
+                a.parse().ok().map(|bits| NoiseMode::Quantized { bits })
+            }
+            ("device", Some(a)) => {
+                let bpd = match a {
+                    "ideal" => BpdMode::Ideal,
+                    "offchip" => BpdMode::OffChip,
+                    "onchip" => BpdMode::OnChip,
+                    _ => return None,
+                };
+                Some(NoiseMode::Device { bpd })
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_inputs_per_mode() {
+        assert_eq!(NoiseMode::Clean.artifact_inputs(), Some((0.0, 0.0)));
+        assert_eq!(
+            NoiseMode::offchip().artifact_inputs(),
+            Some((0.098, 0.0))
+        );
+        let (s, b) = NoiseMode::Resolution { bits: 4.35 }.artifact_inputs().unwrap();
+        assert!((s - 0.098).abs() < 0.002, "{s}"); // 4.35 bits ≡ σ 0.098
+        assert_eq!(b, 0.0);
+        assert_eq!(
+            NoiseMode::Quantized { bits: 6.0 }.artifact_inputs(),
+            Some((0.0, 6.0))
+        );
+        assert!(NoiseMode::Device { bpd: BpdMode::OffChip }
+            .artifact_inputs()
+            .is_none());
+    }
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(NoiseMode::parse("clean"), Some(NoiseMode::Clean));
+        assert_eq!(NoiseMode::parse("offchip"), Some(NoiseMode::offchip()));
+        assert_eq!(NoiseMode::parse("onchip"), Some(NoiseMode::onchip()));
+        assert_eq!(
+            NoiseMode::parse("gaussian:0.25"),
+            Some(NoiseMode::Gaussian { sigma: 0.25 })
+        );
+        assert_eq!(
+            NoiseMode::parse("resolution:3"),
+            Some(NoiseMode::Resolution { bits: 3.0 })
+        );
+        assert_eq!(
+            NoiseMode::parse("device:onchip"),
+            Some(NoiseMode::Device { bpd: BpdMode::OnChip })
+        );
+        assert_eq!(NoiseMode::parse("bogus"), None);
+        assert_eq!(NoiseMode::parse("gaussian:abc"), None);
+    }
+
+    #[test]
+    fn needs_draws() {
+        assert!(!NoiseMode::Clean.needs_noise_draws());
+        assert!(NoiseMode::offchip().needs_noise_draws());
+        assert!(NoiseMode::Resolution { bits: 4.0 }.needs_noise_draws());
+        assert!(!NoiseMode::Quantized { bits: 4.0 }.needs_noise_draws());
+    }
+}

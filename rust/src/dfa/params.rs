@@ -1,0 +1,199 @@
+//! Network parameter state: initialisation and (de)serialisation.
+//!
+//! State layout matches the artifact manifest exactly:
+//! `[w1, b1, w2, b2, w3, b3, vw1, vb1, vw2, vb2, vw3, vb3]`.
+
+use crate::runtime::manifest::NetDims;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+pub const N_STATE: usize = 12;
+
+/// Parameter + momentum state of the 3-layer MLP.
+#[derive(Debug, Clone)]
+pub struct NetState {
+    /// 12 tensors in manifest order.
+    pub tensors: Vec<Tensor>,
+}
+
+impl NetState {
+    /// He-style initialisation (ReLU layers): W ~ N(0, sqrt(2/fan_in)),
+    /// biases zero, momentum zero. Matches the Python tests' protocol.
+    pub fn init(dims: &NetDims, rng: &mut Pcg64) -> NetState {
+        let he = |fan_in: usize| (2.0 / fan_in as f32).sqrt();
+        let shapes = Self::param_shapes(dims);
+        let mut tensors = Vec::with_capacity(N_STATE);
+        for (i, shape) in shapes.iter().enumerate() {
+            if shape.len() == 2 {
+                tensors.push(Tensor::randn(shape, he(shape[0]), rng));
+            } else {
+                tensors.push(Tensor::zeros(shape));
+            }
+            let _ = i;
+        }
+        for shape in &shapes {
+            tensors.push(Tensor::zeros(shape)); // momentum
+        }
+        NetState { tensors }
+    }
+
+    /// The 6 parameter shapes (weights interleaved with biases).
+    pub fn param_shapes(dims: &NetDims) -> Vec<Vec<usize>> {
+        vec![
+            vec![dims.d_in, dims.d_h1],
+            vec![dims.d_h1],
+            vec![dims.d_h1, dims.d_h2],
+            vec![dims.d_h2],
+            vec![dims.d_h2, dims.d_out],
+            vec![dims.d_out],
+        ]
+    }
+
+    /// Fixed random feedback matrices B(k) ~ U(-a, a) with a = 1/sqrt(C):
+    /// inside the photonic weight bank's inscribable [-1, 1] range (§3),
+    /// scaled so the DFA delta magnitudes match the true-gradient scale
+    /// (Nøkland-style feedback init; keeps the paper's lr = 0.01 stable).
+    pub fn init_feedback(dims: &NetDims, rng: &mut Pcg64) -> (Tensor, Tensor) {
+        let a = 1.0 / (dims.d_out as f32).sqrt();
+        (
+            Tensor::rand_uniform(&[dims.d_h1, dims.d_out], -a, a, rng),
+            Tensor::rand_uniform(&[dims.d_h2, dims.d_out], -a, a, rng),
+        )
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.tensors[..6]
+    }
+
+    /// Replace state from an artifact's first 12 outputs.
+    pub fn update_from(&mut self, outputs: &mut Vec<Tensor>) -> Result<()> {
+        if outputs.len() < N_STATE {
+            return Err(Error::Shape(format!(
+                "expected >= {N_STATE} outputs, got {}",
+                outputs.len()
+            )));
+        }
+        for (i, t) in outputs.drain(..N_STATE).enumerate() {
+            if t.shape() != self.tensors[i].shape() {
+                return Err(Error::Shape(format!(
+                    "state tensor {i} shape changed: {:?} -> {:?}",
+                    self.tensors[i].shape(),
+                    t.shape()
+                )));
+            }
+            self.tensors[i] = t;
+        }
+        Ok(())
+    }
+
+    /// Serialise to a flat little-endian f32 blob (checkpointing).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for t in &self.tensors {
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Restore from [`Self::to_bytes`] given the dims.
+    pub fn from_bytes(dims: &NetDims, bytes: &[u8]) -> Result<NetState> {
+        let shapes: Vec<Vec<usize>> = Self::param_shapes(dims)
+            .into_iter()
+            .cycle()
+            .take(N_STATE)
+            .collect();
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if bytes.len() != total * 4 {
+            return Err(Error::Data(format!(
+                "checkpoint size {} != expected {}",
+                bytes.len(),
+                total * 4
+            )));
+        }
+        let mut tensors = Vec::with_capacity(N_STATE);
+        let mut off = 0;
+        for shape in &shapes {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n)
+                .map(|i| {
+                    let o = off + i * 4;
+                    f32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]])
+                })
+                .collect();
+            off += n * 4;
+            tensors.push(Tensor::new(shape, data)?);
+        }
+        Ok(NetState { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> NetDims {
+        NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 }
+    }
+
+    #[test]
+    fn init_shapes_and_scales() {
+        let mut rng = Pcg64::seed(0);
+        let s = NetState::init(&dims(), &mut rng);
+        assert_eq!(s.tensors.len(), 12);
+        assert_eq!(s.tensors[0].shape(), &[16, 32]);
+        assert_eq!(s.tensors[1].shape(), &[32]);
+        assert_eq!(s.tensors[4].shape(), &[32, 4]);
+        // biases and momentum start at zero
+        assert_eq!(s.tensors[1].sum(), 0.0);
+        for t in &s.tensors[6..] {
+            assert_eq!(t.sum(), 0.0);
+        }
+        // He std
+        let w1 = &s.tensors[0];
+        let std = (w1.data().iter().map(|v| v * v).sum::<f32>() / w1.len() as f32).sqrt();
+        assert!((std - (2.0f32 / 16.0).sqrt()).abs() < 0.03, "{std}");
+    }
+
+    #[test]
+    fn feedback_in_inscribable_range() {
+        let mut rng = Pcg64::seed(1);
+        let (b1, b2) = NetState::init_feedback(&dims(), &mut rng);
+        assert_eq!(b1.shape(), &[32, 4]);
+        assert_eq!(b2.shape(), &[32, 4]);
+        assert!(b1.data().iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn update_from_drains_and_validates() {
+        let mut rng = Pcg64::seed(2);
+        let mut s = NetState::init(&dims(), &mut rng);
+        let replacement: Vec<Tensor> = s
+            .tensors
+            .iter()
+            .map(|t| Tensor::full(t.shape(), 7.0))
+            .chain([Tensor::scalar(0.5), Tensor::scalar(3.0)])
+            .collect();
+        let mut outs = replacement;
+        s.update_from(&mut outs).unwrap();
+        assert_eq!(outs.len(), 2); // loss and ncorrect left behind
+        assert_eq!(s.tensors[0].data()[0], 7.0);
+        // wrong shapes rejected
+        let mut bad = vec![Tensor::zeros(&[1]); 12];
+        assert!(s.update_from(&mut bad).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mut rng = Pcg64::seed(3);
+        let s = NetState::init(&dims(), &mut rng);
+        let bytes = s.to_bytes();
+        let back = NetState::from_bytes(&dims(), &bytes).unwrap();
+        for (a, b) in s.tensors.iter().zip(&back.tensors) {
+            assert_eq!(a, b);
+        }
+        assert!(NetState::from_bytes(&dims(), &bytes[..10]).is_err());
+    }
+}

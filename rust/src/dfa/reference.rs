@@ -1,0 +1,371 @@
+//! Pure-Rust reference implementation of the forward/backward passes.
+//!
+//! Mirrors `python/compile/model.py` + `kernels/ref.py` operation-for-
+//! operation, so the AOT artifacts can be cross-validated end-to-end from
+//! Rust (tests/artifact_vs_reference.rs): same normalisation, same noise
+//! injection point, same update rule. Also used by the device backend for
+//! everything outside the photonic mat-vec.
+
+use crate::tensor::{ops, Tensor};
+
+const EPS: f32 = 1e-12;
+
+/// Forward activations of one batch.
+#[derive(Debug, Clone)]
+pub struct Forward {
+    pub a1: Tensor,
+    pub h1: Tensor,
+    pub a2: Tensor,
+    pub h2: Tensor,
+    pub logits: Tensor,
+}
+
+/// x: (batch, d_in); params: [w1, b1, w2, b2, w3, b3].
+pub fn forward(params: &[Tensor], x: &Tensor) -> Forward {
+    let linear = |inp: &Tensor, w: &Tensor, b: &Tensor| -> Tensor {
+        let mut out = inp.matmul(w).expect("shape-checked upstream");
+        let cols = out.cols();
+        for r in 0..out.rows() {
+            for (v, bv) in out.row_mut(r).iter_mut().zip(&b.data()[..cols]) {
+                *v += bv;
+            }
+        }
+        out
+    };
+    let a1 = linear(x, &params[0], &params[1]);
+    let h1 = a1.map(|v| v.max(0.0));
+    let a2 = linear(&h1, &params[2], &params[3]);
+    let h2 = a2.map(|v| v.max(0.0));
+    let logits = linear(&h2, &params[4], &params[5]);
+    Forward { a1, h1, a2, h2, logits }
+}
+
+/// Softmax cross-entropy: returns (mean loss, error e = softmax - y, #correct).
+pub fn loss_and_error(logits: &Tensor, y: &Tensor) -> (f32, Tensor, usize) {
+    let (n, c) = (logits.rows(), logits.cols());
+    let mut e = Tensor::zeros(&[n, c]);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..n {
+        let row = logits.row(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let yrow = y.row(r);
+        let mut y_idx = 0;
+        let mut z_idx = 0;
+        for j in 0..c {
+            let p = exps[j] / sum;
+            e.set(r, j, p - yrow[j]);
+            if yrow[j] > yrow[y_idx] {
+                y_idx = j;
+            }
+            if row[j] > row[z_idx] {
+                z_idx = j;
+            }
+        }
+        loss -= ((exps[y_idx] / sum).max(1e-30) as f64).ln();
+        if y_idx == z_idx {
+            correct += 1;
+        }
+    }
+    ((loss / n as f64) as f32, e, correct)
+}
+
+/// The analog mat-vec of kernels/ref.py: B (m,k) @ e (k,batch) with
+/// per-sample normalisation, additive noise sigma, optional quantisation.
+pub fn analog_matvec(
+    bmat: &Tensor,
+    e_t: &Tensor,     // (k, batch)
+    noise: &Tensor,   // (m, batch)
+    sigma: f32,
+    bits: f32,
+) -> Tensor {
+    let batch = e_t.cols();
+    // per-sample scale
+    let mut s = vec![EPS; batch];
+    for r in 0..e_t.rows() {
+        for (c, sv) in s.iter_mut().enumerate() {
+            *sv = sv.max(e_t.at(r, c).abs());
+        }
+    }
+    let mut e_n = e_t.clone();
+    for r in 0..e_n.rows() {
+        for c in 0..batch {
+            let v = e_n.at(r, c) / s[c];
+            e_n.set(r, c, v);
+        }
+    }
+    // receiver full-scale range: max possible bank output swing for B
+    let mut range = EPS;
+    for r in 0..bmat.rows() {
+        let swing: f32 = bmat.row(r).iter().map(|v| v.abs()).sum();
+        range = range.max(swing);
+    }
+    let mut y = bmat.matmul(&e_n).expect("dims ok");
+    let levels = (2f32).powf(bits - 1.0);
+    for r in 0..y.rows() {
+        for c in 0..batch {
+            let mut v = y.at(r, c) / range; // normalised BPD output
+            v += sigma * noise.at(r, c);
+            if bits > 0.0 {
+                v = (v * levels).round() / levels;
+                v = v.clamp(-1.0, 1.0);
+            }
+            y.set(r, c, v * range * s[c]);
+        }
+    }
+    y
+}
+
+/// Eq. (1): delta(k) = (B e in analog) ⊙ g'(a), transposed layout (m, batch).
+pub fn dfa_gradient(
+    bmat: &Tensor,
+    e: &Tensor,      // (batch, k) — row-major error
+    noise: &Tensor,  // (m, batch)
+    a: &Tensor,      // (batch, m) pre-activations
+    sigma: f32,
+    bits: f32,
+) -> Tensor {
+    let y = analog_matvec(bmat, &e.t(), noise, sigma, bits);
+    let mut out = y;
+    for r in 0..out.rows() {
+        for c in 0..out.cols() {
+            if a.at(c, r) <= 0.0 {
+                out.set(r, c, 0.0);
+            }
+        }
+    }
+    out
+}
+
+/// Gradients from deltas (transposed layout), matching model.py.
+pub struct Grads {
+    pub gw1: Tensor,
+    pub gb1: Tensor,
+    pub gw2: Tensor,
+    pub gb2: Tensor,
+    pub gw3: Tensor,
+    pub gb3: Tensor,
+}
+
+pub fn grads_from_deltas(
+    x: &Tensor,
+    h1: &Tensor,
+    h2: &Tensor,
+    e: &Tensor,
+    d1t: &Tensor, // (h1, batch)
+    d2t: &Tensor, // (h2, batch)
+) -> Grads {
+    let batch = x.rows() as f32;
+    let gw3 = ops::matmul_at(h2, e).unwrap().scale(1.0 / batch);
+    let gb3 = ops::col_mean(e);
+    let gw2 = ops::matmul_at(h1, &d2t.t()).unwrap().scale(1.0 / batch);
+    let gb2 = ops::row_mean(d2t);
+    let gw1 = ops::matmul_at(x, &d1t.t()).unwrap().scale(1.0 / batch);
+    let gb1 = ops::row_mean(d1t);
+    Grads { gw1, gb1, gw2, gb2, gw3, gb3 }
+}
+
+/// SGD + momentum in place over [params..., momentum...] (12 tensors).
+pub fn sgd_momentum(state: &mut [Tensor], grads: &Grads, lr: f32, momentum: f32) {
+    let gs = [
+        &grads.gw1, &grads.gb1, &grads.gw2, &grads.gb2, &grads.gw3, &grads.gb3,
+    ];
+    for (i, g) in gs.iter().enumerate() {
+        let (ps, vs) = state.split_at_mut(6);
+        let v = &mut vs[i];
+        for (vv, gv) in v.data_mut().iter_mut().zip(g.data()) {
+            *vv = momentum * *vv + gv;
+        }
+        let p = &mut ps[i];
+        for (pv, vv) in p.data_mut().iter_mut().zip(v.data()) {
+            *pv -= lr * vv;
+        }
+    }
+}
+
+/// One full DFA step (the reference twin of the dfa_step artifact).
+/// Returns (loss, #correct).
+#[allow(clippy::too_many_arguments)]
+pub fn dfa_step(
+    state: &mut [Tensor],
+    bmat1: &Tensor,
+    bmat2: &Tensor,
+    x: &Tensor,
+    y: &Tensor,
+    noise1: &Tensor,
+    noise2: &Tensor,
+    sigma: f32,
+    bits: f32,
+    lr: f32,
+    momentum: f32,
+) -> (f32, usize) {
+    let fwd = forward(&state[..6], x);
+    let (loss, e, correct) = loss_and_error(&fwd.logits, y);
+    let d1t = dfa_gradient(bmat1, &e, noise1, &fwd.a1, sigma, bits);
+    let d2t = dfa_gradient(bmat2, &e, noise2, &fwd.a2, sigma, bits);
+    let grads = grads_from_deltas(x, &fwd.h1, &fwd.h2, &e, &d1t, &d2t);
+    sgd_momentum(state, &grads, lr, momentum);
+    (loss, correct)
+}
+
+/// One backprop step (baseline twin of the bp_step artifact).
+pub fn bp_step(
+    state: &mut [Tensor],
+    x: &Tensor,
+    y: &Tensor,
+    lr: f32,
+    momentum: f32,
+) -> (f32, usize) {
+    let fwd = forward(&state[..6], x);
+    let (loss, e, correct) = loss_and_error(&fwd.logits, y);
+    // d2 = (e @ w3^T) ⊙ relu'(a2); d1 = (d2 @ w2^T) ⊙ relu'(a1)
+    let mut d2 = ops::matmul_bt(&e, &state[4]).unwrap();
+    for r in 0..d2.rows() {
+        for c in 0..d2.cols() {
+            if fwd.a2.at(r, c) <= 0.0 {
+                d2.set(r, c, 0.0);
+            }
+        }
+    }
+    let mut d1 = ops::matmul_bt(&d2, &state[2]).unwrap();
+    for r in 0..d1.rows() {
+        for c in 0..d1.cols() {
+            if fwd.a1.at(r, c) <= 0.0 {
+                d1.set(r, c, 0.0);
+            }
+        }
+    }
+    let grads = grads_from_deltas(x, &fwd.h1, &fwd.h2, &e, &d1.t(), &d2.t());
+    sgd_momentum(state, &grads, lr, momentum);
+    (loss, correct)
+}
+
+/// Accuracy of `params` on (x, y) evaluated in `batch`-row chunks.
+pub fn accuracy(params: &[Tensor], x: &Tensor, labels: &[u8]) -> f64 {
+    let fwd = forward(params, x);
+    let pred = fwd.logits.argmax_rows();
+    let correct = pred
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &l)| p == l as usize)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::NetDims;
+    use crate::dfa::params::NetState;
+    use crate::util::rng::Pcg64;
+
+    fn dims() -> NetDims {
+        NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 }
+    }
+
+    fn toy_batch(rng: &mut Pcg64) -> (Tensor, Tensor, Vec<u8>) {
+        let d = dims();
+        let x = Tensor::randn(&[d.batch, d.d_in], 1.0, rng);
+        let mut y = Tensor::zeros(&[d.batch, d.d_out]);
+        let mut labels = Vec::new();
+        for r in 0..d.batch {
+            let c = rng.below(d.d_out as u64) as usize;
+            y.set(r, c, 1.0);
+            labels.push(c as u8);
+        }
+        (x, y, labels)
+    }
+
+    #[test]
+    fn forward_shapes_and_relu() {
+        let mut rng = Pcg64::seed(0);
+        let s = NetState::init(&dims(), &mut rng);
+        let (x, _, _) = toy_batch(&mut rng);
+        let f = forward(s.params(), &x);
+        assert_eq!(f.logits.shape(), &[8, 4]);
+        assert!(f.h1.data().iter().all(|&v| v >= 0.0));
+        for (h, a) in f.h1.data().iter().zip(f.a1.data()) {
+            assert_eq!(*h, a.max(0.0));
+        }
+    }
+
+    #[test]
+    fn loss_is_lnc_at_uniform() {
+        // zero logits -> loss = ln(4)
+        let logits = Tensor::zeros(&[5, 4]);
+        let mut y = Tensor::zeros(&[5, 4]);
+        for r in 0..5 {
+            y.set(r, r % 4, 1.0);
+        }
+        let (loss, e, _) = loss_and_error(&logits, &y);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+        // error rows sum to 0 (softmax sums to 1, one-hot sums to 1)
+        for r in 0..5 {
+            assert!(e.row(r).iter().sum::<f32>().abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dfa_learns_toy_problem() {
+        let mut rng = Pcg64::seed(1);
+        let d = dims();
+        let mut s = NetState::init(&d, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&d, &mut rng);
+        let (x, y, _) = toy_batch(&mut rng);
+        let zero1 = Tensor::zeros(&[d.d_h1, d.batch]);
+        let zero2 = Tensor::zeros(&[d.d_h2, d.batch]);
+        let (first, _) = dfa_step(
+            &mut s.tensors, &b1, &b2, &x, &y, &zero1, &zero2, 0.0, 0.0, 0.05, 0.9,
+        );
+        let mut last = first;
+        for _ in 0..25 {
+            let (l, _) = dfa_step(
+                &mut s.tensors, &b1, &b2, &x, &y, &zero1, &zero2, 0.0, 0.0, 0.05, 0.9,
+            );
+            last = l;
+        }
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn bp_learns_toy_problem() {
+        let mut rng = Pcg64::seed(2);
+        let d = dims();
+        let mut s = NetState::init(&d, &mut rng);
+        let (x, y, _) = toy_batch(&mut rng);
+        let (first, _) = bp_step(&mut s.tensors, &x, &y, 0.05, 0.9);
+        let mut last = first;
+        for _ in 0..25 {
+            last = bp_step(&mut s.tensors, &x, &y, 0.05, 0.9).0;
+        }
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn noise_free_matvec_is_exact() {
+        let mut rng = Pcg64::seed(3);
+        let bmat = Tensor::rand_uniform(&[30, 4], -1.0, 1.0, &mut rng);
+        let e_t = Tensor::randn(&[4, 8], 0.5, &mut rng);
+        let zero = Tensor::zeros(&[30, 8]);
+        let got = analog_matvec(&bmat, &e_t, &zero, 0.0, 0.0);
+        let want = bmat.matmul(&e_t).unwrap();
+        crate::util::check::assert_close(got.data(), want.data(), 1e-4).unwrap();
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let params = vec![
+            Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+            Tensor::zeros(&[2]),
+            Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+            Tensor::zeros(&[2]),
+            Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+            Tensor::zeros(&[2]),
+        ];
+        let x = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        assert_eq!(accuracy(&params, &x, &[0, 1]), 1.0);
+        assert_eq!(accuracy(&params, &x, &[1, 0]), 0.0);
+    }
+}

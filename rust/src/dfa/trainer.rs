@@ -1,0 +1,493 @@
+//! The training loop — the end-to-end system driver.
+//!
+//! Simulation mode (the paper's §4 protocol): one PJRT dispatch per step
+//! executes the fused `dfa_step` artifact (forward + analog backward
+//! through the L1 weight-bank kernel + SGD update), with the coordinator
+//! sampling read-noise draws and streaming mini-batches through the
+//! [`crate::coordinator::pipeline`]. Python is never on this path.
+//!
+//! Device mode: the gradient mat-vecs route through the device-level
+//! photonic simulator ([`super::device_backend`]); forward and update use
+//! the `fwd` / `apply_grads` artifacts.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::config::{Algorithm, TrainConfig};
+use super::device_backend::{CompiledFeedback, DeviceBackend};
+use super::noise_model::NoiseMode;
+use super::params::NetState;
+use super::reference;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::BatchFeeder;
+use crate::data::Dataset;
+use crate::runtime::manifest::NetDims;
+use crate::runtime::{Engine, LoadedArtifact};
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Per-epoch statistics.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    /// Validation accuracy (None on non-eval epochs).
+    pub val_acc: Option<f64>,
+    pub wall_s: f64,
+    pub steps: usize,
+}
+
+impl EpochStats {
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("epoch", Value::Number(self.epoch as f64)),
+            ("train_loss", Value::Number(self.train_loss)),
+            ("train_acc", Value::Number(self.train_acc)),
+            (
+                "val_acc",
+                self.val_acc.map_or(Value::Null, Value::Number),
+            ),
+            ("wall_s", Value::Number(self.wall_s)),
+            ("steps", Value::Number(self.steps as f64)),
+        ])
+    }
+}
+
+/// Final outcome of a run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub history: Vec<EpochStats>,
+    pub test_acc: f64,
+    pub total_steps: usize,
+    pub wall_s: f64,
+    /// Gradient-matvec MACs performed on the (simulated) photonic path.
+    pub photonic_macs: u64,
+}
+
+/// The coordinator-owned trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    dims: NetDims,
+    engine: Arc<Engine>,
+    step_art: Arc<LoadedArtifact>,
+    fwd_art: Arc<LoadedArtifact>,
+    apply_art: Arc<LoadedArtifact>,
+    pub state: NetState,
+    bmat1: Tensor,
+    bmat2: Tensor,
+    rng: Pcg64,
+    device: Option<(DeviceBackend, CompiledFeedback, CompiledFeedback)>,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    pub fn new(engine: Arc<Engine>, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let dims = engine.manifest().net_dims(&cfg.config)?.clone();
+        let mut rng = Pcg64::seed(cfg.seed);
+        let state = NetState::init(&dims, &mut rng);
+        let (bmat1, bmat2) = NetState::init_feedback(&dims, &mut rng);
+
+        let step_name = match cfg.algorithm {
+            Algorithm::Dfa => format!("dfa_step_{}", cfg.config),
+            Algorithm::Backprop => format!("bp_step_{}", cfg.config),
+        };
+        let step_art = engine.load(&step_name)?;
+        let fwd_art = engine.load(&format!("fwd_{}", cfg.config))?;
+        let apply_art = engine.load(&format!("apply_grads_{}", cfg.config))?;
+
+        let device = match cfg.noise {
+            NoiseMode::Device { bpd } => {
+                if cfg.algorithm != Algorithm::Dfa {
+                    return Err(Error::Config(
+                        "device mode requires the DFA algorithm".into(),
+                    ));
+                }
+                log::info!("building photonic device backend ({bpd:?})...");
+                let mut be = DeviceBackend::new(bpd, cfg.seed ^ 0xdeu64)?;
+                let fb1 = be.compile_feedback(&bmat1)?;
+                let fb2 = be.compile_feedback(&bmat2)?;
+                Some((be, fb1, fb2))
+            }
+            _ => None,
+        };
+
+        Ok(Trainer {
+            cfg,
+            dims,
+            engine,
+            step_art,
+            fwd_art,
+            apply_art,
+            state,
+            bmat1,
+            bmat2,
+            rng,
+            device,
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn dims(&self) -> &NetDims {
+        &self.dims
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Load (or synthesise) the train/test datasets per the config.
+    pub fn load_data(&self) -> Result<(Arc<Dataset>, Arc<Dataset>)> {
+        let (train, test) = match &self.cfg.data_dir {
+            Some(dir) => {
+                let tr = Dataset::load_split(dir, true)?;
+                let te = Dataset::load_split(dir, false)?;
+                (tr, te)
+            }
+            None => (
+                Dataset::synthetic(self.cfg.n_train, self.cfg.seed ^ 0x7a11),
+                Dataset::synthetic(self.cfg.n_test, self.cfg.seed ^ 0x7e57),
+            ),
+        };
+        if train.dim() != self.dims.d_in {
+            return Err(Error::Data(format!(
+                "dataset dim {} != network d_in {}",
+                train.dim(),
+                self.dims.d_in
+            )));
+        }
+        Ok((Arc::new(train), Arc::new(test)))
+    }
+
+    /// One training step in simulation mode (fused artifact).
+    fn step_artifact(
+        &mut self,
+        x: &Tensor,
+        y: &Tensor,
+        noise1: Tensor,
+        noise2: Tensor,
+        sigma: f32,
+        bits: f32,
+    ) -> Result<(f32, usize)> {
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(22);
+        inputs.extend(self.state.tensors.iter().cloned());
+        match self.cfg.algorithm {
+            Algorithm::Dfa => {
+                inputs.push(self.bmat1.clone());
+                inputs.push(self.bmat2.clone());
+                inputs.push(x.clone());
+                inputs.push(y.clone());
+                inputs.push(noise1);
+                inputs.push(noise2);
+                inputs.push(Tensor::scalar(sigma));
+                inputs.push(Tensor::scalar(bits));
+            }
+            Algorithm::Backprop => {
+                inputs.push(x.clone());
+                inputs.push(y.clone());
+            }
+        }
+        inputs.push(Tensor::scalar(self.cfg.lr));
+        inputs.push(Tensor::scalar(self.cfg.momentum));
+
+        let mut outputs = self.step_art.execute(&inputs)?;
+        let ncorrect = outputs.pop().expect("ncorrect").item() as usize;
+        let loss = outputs.pop().expect("loss").item();
+        self.state.update_from(&mut outputs)?;
+        Ok((loss, ncorrect))
+    }
+
+    /// One training step in device mode (photonic gradient).
+    fn step_device(&mut self, x: &Tensor, y: &Tensor) -> Result<(f32, usize)> {
+        // forward through the artifact
+        let mut inputs: Vec<Tensor> = self.state.tensors[..6].to_vec();
+        inputs.push(x.clone());
+        let fwd = self.fwd_art.execute(&inputs)?;
+        let (logits, a1, a2, h1, h2) = (&fwd[0], &fwd[1], &fwd[2], &fwd[3], &fwd[4]);
+        let (loss, e, correct) = reference::loss_and_error(logits, y);
+
+        // photonic backward
+        let (be, fb1, fb2) = self.device.as_mut().expect("device mode");
+        let d1t = be.dfa_gradient(fb1, &e, a1)?;
+        let d2t = be.dfa_gradient(fb2, &e, a2)?;
+
+        // digital update through the apply_grads artifact
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(20);
+        inputs.extend(self.state.tensors.iter().cloned());
+        inputs.push(x.clone());
+        inputs.push(h1.clone());
+        inputs.push(h2.clone());
+        inputs.push(e);
+        inputs.push(d1t);
+        inputs.push(d2t);
+        inputs.push(Tensor::scalar(self.cfg.lr));
+        inputs.push(Tensor::scalar(self.cfg.momentum));
+        let mut outputs = self.apply_art.execute(&inputs)?;
+        self.state.update_from(&mut outputs)?;
+        Ok((loss, correct))
+    }
+
+    /// Evaluate accuracy on a dataset through the `fwd` artifact (batched;
+    /// the ragged tail is dropped, as in the fixed-shape §4 protocol).
+    pub fn evaluate(&mut self, data: &Dataset) -> Result<f64> {
+        let batch = self.dims.batch;
+        let n_batches = data.len() / batch;
+        if n_batches == 0 {
+            return Err(Error::Data("dataset smaller than one batch".into()));
+        }
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        for b in 0..n_batches {
+            let idx: Vec<usize> = (b * batch..(b + 1) * batch).collect();
+            let (x, _) = data.batch(&idx);
+            let mut inputs: Vec<Tensor> = self.state.tensors[..6].to_vec();
+            inputs.push(x);
+            let out = self.fwd_art.execute(&inputs)?;
+            let preds = out[0].argmax_rows();
+            for (p, &i) in preds.iter().zip(&idx) {
+                if *p == data.y[i] as usize {
+                    correct += 1;
+                }
+            }
+            seen += batch;
+        }
+        Ok(correct as f64 / seen as f64)
+    }
+
+    /// Run the configured training job.
+    pub fn train(
+        &mut self,
+        train: Arc<Dataset>,
+        test: Arc<Dataset>,
+        mut on_epoch: impl FnMut(&EpochStats),
+    ) -> Result<TrainResult> {
+        let t0 = Instant::now();
+        let (sigma, bits) = self.cfg.noise.artifact_inputs().unwrap_or((0.0, 0.0));
+        let noise_dims = if self.cfg.noise.needs_noise_draws() {
+            Some((self.dims.d_h1, self.dims.d_h2))
+        } else {
+            None
+        };
+        let batch = self.dims.batch;
+        let gradient_macs_per_step =
+            (self.dims.d_h1 + self.dims.d_h2) * self.dims.d_out * batch;
+
+        let mut history = Vec::new();
+        let mut total_steps = 0usize;
+        for epoch in 1..=self.cfg.epochs {
+            let e0 = Instant::now();
+            let feeder = BatchFeeder::start(
+                train.clone(),
+                batch,
+                noise_dims,
+                self.rng.fork(epoch as u64),
+                self.cfg.max_steps_per_epoch,
+                4,
+            );
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0usize;
+            let mut steps = 0usize;
+            for input in feeder {
+                let (loss, ncorrect) = if self.device.is_some() {
+                    self.step_device(&input.x, &input.y)?
+                } else {
+                    let zeros1 = || Tensor::zeros(&[self.dims.d_h1, batch]);
+                    let zeros2 = || Tensor::zeros(&[self.dims.d_h2, batch]);
+                    self.step_artifact(
+                        &input.x,
+                        &input.y,
+                        input.noise1.unwrap_or_else(zeros1),
+                        input.noise2.unwrap_or_else(zeros2),
+                        sigma,
+                        bits,
+                    )?
+                };
+                loss_sum += loss as f64;
+                correct += ncorrect;
+                steps += 1;
+            }
+            total_steps += steps;
+            self.metrics.add("steps", steps as u64);
+            self.metrics
+                .add("photonic_macs", (steps * gradient_macs_per_step) as u64);
+
+            let val_acc = if epoch % self.cfg.eval_every == 0 || epoch == self.cfg.epochs
+            {
+                let te = Instant::now();
+                let acc = self.evaluate(&test)?;
+                self.metrics.add_time("eval_s", te.elapsed());
+                Some(acc)
+            } else {
+                None
+            };
+            let stats = EpochStats {
+                epoch,
+                train_loss: loss_sum / steps.max(1) as f64,
+                train_acc: correct as f64 / (steps.max(1) * batch) as f64,
+                val_acc,
+                wall_s: e0.elapsed().as_secs_f64(),
+                steps,
+            };
+            log::info!(
+                "epoch {epoch:3}: loss {:.4} train_acc {:.4} val_acc {} ({:.1}s, {} steps)",
+                stats.train_loss,
+                stats.train_acc,
+                stats
+                    .val_acc
+                    .map_or("-".to_string(), |a| format!("{a:.4}")),
+                stats.wall_s,
+                steps
+            );
+            on_epoch(&stats);
+            history.push(stats);
+        }
+
+        let test_acc = self.evaluate(&test)?;
+        Ok(TrainResult {
+            history,
+            test_acc,
+            total_steps,
+            wall_s: t0.elapsed().as_secs_f64(),
+            photonic_macs: self.metrics.count("photonic_macs"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Arc::new(Engine::new(dir).unwrap()))
+        } else {
+            None
+        }
+    }
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            config: "tiny".into(),
+            epochs: 3,
+            lr: 0.05,
+            n_train: 128,
+            n_test: 64,
+            seed: 3,
+            ..TrainConfig::default()
+        }
+    }
+
+    // The tiny config has d_in = 16, so synthetic 784-dim digits don't fit;
+    // build a random separable 16-dim problem instead.
+    fn tiny_data(n: usize, seed: u64) -> Dataset {
+        use crate::data::idx::IdxArray;
+        let mut rng = Pcg64::seed(seed);
+        let mut pixels = Vec::with_capacity(n * 16);
+        let mut labels = Vec::with_capacity(n);
+        // 4 classes: bright block at one of 4 positions + noise
+        for _ in 0..n {
+            let c = rng.below(4) as usize;
+            for j in 0..16 {
+                let base = if j / 4 == c { 200.0 } else { 30.0 };
+                let v = (base + rng.normal(0.0, 25.0)).clamp(0.0, 255.0);
+                pixels.push(v as u8);
+            }
+            labels.push(c as u8);
+        }
+        Dataset::from_idx(
+            &IdxArray::new(vec![n, 16], pixels).unwrap(),
+            &IdxArray::new(vec![n], labels).unwrap(),
+            4,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dfa_trains_tiny_network_via_artifacts() {
+        let Some(engine) = engine() else { return };
+        let mut t = Trainer::new(engine, tiny_cfg()).unwrap();
+        let train = Arc::new(tiny_data(256, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert_eq!(res.history.len(), 3);
+        assert!(
+            res.history.last().unwrap().train_loss
+                < 0.7 * res.history[0].train_loss,
+            "loss should fall: {:?}",
+            res.history.iter().map(|h| h.train_loss).collect::<Vec<_>>()
+        );
+        assert!(res.test_acc > 0.5, "test acc {}", res.test_acc);
+        assert!(res.photonic_macs > 0);
+    }
+
+    #[test]
+    fn backprop_baseline_trains() {
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg();
+        cfg.algorithm = Algorithm::Backprop;
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let train = Arc::new(tiny_data(256, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert!(res.test_acc > 0.5, "test acc {}", res.test_acc);
+    }
+
+    #[test]
+    fn noisy_training_still_learns() {
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg();
+        cfg.noise = NoiseMode::offchip();
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let train = Arc::new(tiny_data(256, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert!(res.test_acc > 0.4, "test acc {}", res.test_acc);
+    }
+
+    #[test]
+    fn artifact_step_matches_pure_rust_reference() {
+        // the end-to-end L1/L2-vs-L3 numerics cross-check
+        let Some(engine) = engine() else { return };
+        let mut cfg = tiny_cfg();
+        cfg.noise = NoiseMode::Gaussian { sigma: 0.1 };
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let data = tiny_data(64, 9);
+        let idx: Vec<usize> = (0..8).collect();
+        let (x, y) = data.batch(&idx);
+        let mut rng = Pcg64::seed(42);
+        let mut n1 = Tensor::zeros(&[32, 8]);
+        rng.fill_gaussian_f32(n1.data_mut());
+        let mut n2 = Tensor::zeros(&[32, 8]);
+        rng.fill_gaussian_f32(n2.data_mut());
+
+        // pure-rust twin
+        let mut ref_state = t.state.tensors.clone();
+        let (ref_loss, ref_correct) = reference::dfa_step(
+            &mut ref_state, &t.bmat1, &t.bmat2, &x, &y, &n1, &n2, 0.1, 0.0,
+            t.cfg.lr, t.cfg.momentum,
+        );
+
+        let (loss, correct) =
+            t.step_artifact(&x, &y, n1, n2, 0.1, 0.0).unwrap();
+        assert!((loss - ref_loss).abs() < 1e-4, "{loss} vs {ref_loss}");
+        assert_eq!(correct, ref_correct);
+        for (i, (a, b)) in t.state.tensors.iter().zip(&ref_state).enumerate() {
+            crate::util::check::assert_close(a.data(), b.data(), 2e-4)
+                .unwrap_or_else(|e| panic!("state tensor {i}: {e}"));
+        }
+    }
+
+    #[test]
+    fn eval_is_deterministic() {
+        let Some(engine) = engine() else { return };
+        let mut t = Trainer::new(engine, tiny_cfg()).unwrap();
+        let test = tiny_data(64, 2);
+        let a = t.evaluate(&test).unwrap();
+        let b = t.evaluate(&test).unwrap();
+        assert_eq!(a, b);
+    }
+}

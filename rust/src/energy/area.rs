@@ -1,0 +1,48 @@
+//! Chip area and compute density (§5).
+
+use crate::photonics::constants as k;
+
+/// Area of an M × N bank of photonic MAC cells (m²). The 47.4 µm × 73.0 µm
+/// cell already includes waveguide/electronic routing, bonding pads and
+/// anti-crosstalk spacing (§5).
+pub fn bank_area_m2(m: usize, n: usize) -> f64 {
+    (m * n) as f64 * k::MAC_CELL_AREA_M2
+}
+
+/// Compute density in OPS per m².
+pub fn compute_density_ops_per_m2(m: usize, n: usize, f_s_hz: f64) -> f64 {
+    2.0 * f_s_hz * (m * n) as f64 / bank_area_m2(m, n)
+}
+
+/// Compute density in TOPS/mm² — the unit §5 quotes (5.78 for any bank,
+/// since both OPS and area scale with M·N).
+pub fn compute_density_tops_per_mm2(f_s_hz: f64) -> f64 {
+    2.0 * f_s_hz / k::MAC_CELL_AREA_M2 / 1e12 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_density_578() {
+        let d = compute_density_tops_per_mm2(k::F_S_HZ);
+        assert!((d - 5.78).abs() < 0.02, "density {d}");
+    }
+
+    #[test]
+    fn headline_bank_area() {
+        // 1000 cells x 3460.2 µm² ≈ 3.46 mm²
+        let a = bank_area_m2(50, 20);
+        assert!((a - 3.4602e-6).abs() < 1e-9, "{a}");
+        let d = compute_density_ops_per_m2(50, 20, k::F_S_HZ);
+        assert!((d / 1e18 - 5.78).abs() < 0.02); // 5.78e18 OPS/m² = 5.78 TOPS/mm²
+    }
+
+    #[test]
+    fn density_independent_of_shape() {
+        let a = compute_density_ops_per_m2(10, 10, k::F_S_HZ);
+        let b = compute_density_ops_per_m2(200, 17, k::F_S_HZ);
+        assert!((a - b).abs() < 1e-6 * a);
+    }
+}

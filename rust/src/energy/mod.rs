@@ -1,0 +1,23 @@
+//! Energy & speed model of the photonic DFA architecture (paper §5).
+//!
+//! Reproduces, analytically, every number in the evaluation:
+//!
+//! * Eq. (2): OPS = 2·f_s·M·N (Fig. 6 x-axis scale, 20 TOPS headline)
+//! * Eq. (3): per-laser optical power floor (in photonics::laser)
+//! * Eq. (4): wall-plug power roll-up over lasers, MRRs, DACs, TIAs, ADCs
+//! * Fig. 6: optimal E_op vs MAC-cell count for heater-locked vs trimmed MRRs
+//! * compute density: 5.78 TOPS/mm² at the 47.4 µm × 73.0 µm MAC cell
+//!
+//! * [`components`] — per-part power table with §5 provenance
+//! * [`model`]      — Eqs. (2)/(4) and E_op
+//! * [`sweep`]      — the Fig. 6 optimiser over bank aspect ratios
+//! * [`area`]       — compute density
+
+pub mod area;
+pub mod components;
+pub mod model;
+pub mod sweep;
+
+pub use components::{ComponentPowers, MrrTuning};
+pub use model::{ArchitectureModel, PowerBreakdown};
+pub use sweep::{optimal_energy_curve, OptimalPoint};

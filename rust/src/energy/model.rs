@@ -1,0 +1,152 @@
+//! Eqs. (2) and (4): throughput and wall-plug power of an M × N bank.
+
+use super::components::{ComponentPowers, MrrTuning};
+use crate::photonics::constants as k;
+use crate::photonics::laser::min_laser_power;
+
+/// Per-term wall-plug power decomposition of Eq. (4).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub laser_w: f64,
+    pub mrr_w: f64,
+    pub dac_w: f64,
+    pub tia_w: f64,
+    pub adc_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.laser_w + self.mrr_w + self.dac_w + self.tia_w + self.adc_w
+    }
+}
+
+/// The analytic architecture model for one weight-bank configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ArchitectureModel {
+    /// Bank rows M (fan-out) and WDM channels N.
+    pub m: usize,
+    pub n: usize,
+    /// Operational rate f_s (Hz); §5 caps it at the 10 GS/s DAC.
+    pub f_s_hz: f64,
+    /// Fixed-point precision N_b of the analog datapath.
+    pub n_bits: u32,
+    pub components: ComponentPowers,
+}
+
+impl ArchitectureModel {
+    /// The §5 headline configuration: 50 × 20 @ 10 GHz, 6 bits.
+    pub fn paper(tuning: MrrTuning) -> ArchitectureModel {
+        ArchitectureModel {
+            m: k::BANK_ROWS,
+            n: k::BANK_COLS,
+            f_s_hz: k::F_S_HZ,
+            n_bits: k::N_BITS,
+            components: ComponentPowers::paper(tuning),
+        }
+    }
+
+    pub fn with_dims(self, m: usize, n: usize) -> ArchitectureModel {
+        ArchitectureModel { m, n, ..self }
+    }
+
+    /// Eq. (2): OPS = 2 · f_s · M · N (a MAC = one multiply + one add).
+    pub fn ops_per_second(&self) -> f64 {
+        2.0 * self.f_s_hz * (self.m * self.n) as f64
+    }
+
+    /// Eq. (4): P_total = N·P_laser + N(M+1)·P_MRR + N·P_DAC + M(P_TIA + P_ADC).
+    ///
+    /// N(M+1) MRRs: the M×N weight bank plus the N input modulators.
+    pub fn power_breakdown(&self) -> PowerBreakdown {
+        let c = &self.components;
+        let p_laser = min_laser_power(self.m, self.n_bits, self.f_s_hz);
+        PowerBreakdown {
+            laser_w: self.n as f64 * p_laser,
+            mrr_w: (self.n * (self.m + 1)) as f64 * c.mrr_tuning.power_per_mrr_w(),
+            dac_w: self.n as f64 * c.dac_w,
+            tia_w: self.m as f64 * c.tia_w(self.f_s_hz),
+            adc_w: self.m as f64 * c.adc_w,
+        }
+    }
+
+    /// E_op = P_total / OPS (J per operation).
+    pub fn energy_per_op(&self) -> f64 {
+        self.power_breakdown().total_w() / self.ops_per_second()
+    }
+
+    /// Energy per MAC (= 2 ops).
+    pub fn energy_per_mac(&self) -> f64 {
+        2.0 * self.energy_per_op()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_headline_20_tops() {
+        let m = ArchitectureModel::paper(MrrTuning::HeaterLocked);
+        assert!((m.ops_per_second() - 20e12).abs() < 1e6, "{}", m.ops_per_second());
+    }
+
+    #[test]
+    fn eq4_headline_1pj_with_heaters() {
+        // §5: "we can achieve ... an energy consumption E_op of 1.0 pJ per
+        // operation using MRRs with thermal heaters"
+        let m = ArchitectureModel::paper(MrrTuning::HeaterLocked);
+        let e_op = m.energy_per_op();
+        assert!(
+            (e_op - 1.0e-12).abs() < 0.05e-12,
+            "E_op = {:.4} pJ, want ~1.0",
+            e_op * 1e12
+        );
+    }
+
+    #[test]
+    fn eq4_headline_028pj_with_trimming() {
+        // §5: "0.28 pJ per operation using post-fabrication trimming"
+        let m = ArchitectureModel::paper(MrrTuning::Trimmed);
+        let e_op = m.energy_per_op();
+        assert!(
+            (e_op - 0.28e-12).abs() < 0.02e-12,
+            "E_op = {:.4} pJ, want ~0.28",
+            e_op * 1e12
+        );
+    }
+
+    #[test]
+    fn heater_power_dominates_locked_config() {
+        let m = ArchitectureModel::paper(MrrTuning::HeaterLocked);
+        let b = m.power_breakdown();
+        assert!(b.mrr_w > 0.7 * b.total_w(), "{b:?}");
+        // and vanishes with trimming
+        let t = ArchitectureModel::paper(MrrTuning::Trimmed);
+        let bt = t.power_breakdown();
+        assert!(bt.mrr_w < 0.05 * b.total_w());
+        // total ~20 W vs ~5.7 W (§5 figures)
+        assert!((b.total_w() - 20.0).abs() < 1.0, "{}", b.total_w());
+        assert!((bt.total_w() - 5.7).abs() < 0.5, "{}", bt.total_w());
+    }
+
+    #[test]
+    fn eop_improves_with_scale_then_saturates() {
+        // Fig. 6 trend: per-op energy falls as the bank grows (fixed costs
+        // amortise) until per-cell costs dominate.
+        let base = ArchitectureModel::paper(MrrTuning::Trimmed);
+        let small = base.with_dims(5, 5).energy_per_op();
+        let mid = base.with_dims(50, 20).energy_per_op();
+        let big = base.with_dims(200, 50).energy_per_op();
+        assert!(small > mid && mid > big, "{small} {mid} {big}");
+    }
+
+    #[test]
+    fn energy_per_mac_is_twice_per_op() {
+        let m = ArchitectureModel::paper(MrrTuning::HeaterLocked);
+        assert!((m.energy_per_mac() - 2.0 * m.energy_per_op()).abs() < 1e-20);
+        // headline claim: "less than one picojoule per MAC" — holds for the
+        // trimmed configuration
+        let t = ArchitectureModel::paper(MrrTuning::Trimmed);
+        assert!(t.energy_per_mac() < 1.0e-12);
+    }
+}

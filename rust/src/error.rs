@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+/// Unified error for every subsystem (runtime, photonics, data, CLI).
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("photonics: {0}")]
+    Photonics(String),
+
+    #[error("calibration: {0}")]
+    Calibration(String),
+
+    #[error("gemm: {0}")]
+    Gemm(String),
+
+    #[error("data: {0}")]
+    Data(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("cli: {0}")]
+    Cli(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

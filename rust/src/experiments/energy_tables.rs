@@ -1,0 +1,139 @@
+//! Energy/speed tables: Fig. 6 and the §5 headline numbers.
+
+use crate::energy::components::MrrTuning;
+use crate::energy::model::ArchitectureModel;
+use crate::energy::sweep::{optimal_energy_curve, OptimalPoint};
+use crate::energy::area::compute_density_tops_per_mm2;
+use crate::photonics::constants as k;
+
+/// One row of the headline summary.
+#[derive(Debug, Clone)]
+pub struct HeadlineRow {
+    pub label: &'static str,
+    pub value: f64,
+    pub unit: &'static str,
+    pub paper: f64,
+}
+
+/// The §5 headline table (measured-by-model vs paper).
+pub fn headline_summary() -> Vec<HeadlineRow> {
+    let heater = ArchitectureModel::paper(MrrTuning::HeaterLocked);
+    let trimmed = ArchitectureModel::paper(MrrTuning::Trimmed);
+    vec![
+        HeadlineRow {
+            label: "throughput (50x20 bank @ 10 GHz)",
+            value: heater.ops_per_second() / 1e12,
+            unit: "TOPS",
+            paper: 20.0,
+        },
+        HeadlineRow {
+            label: "E_op, heater-locked MRRs",
+            value: heater.energy_per_op() * 1e12,
+            unit: "pJ/op",
+            paper: 1.0,
+        },
+        HeadlineRow {
+            label: "E_op, trimmed MRRs",
+            value: trimmed.energy_per_op() * 1e12,
+            unit: "pJ/op",
+            paper: 0.28,
+        },
+        HeadlineRow {
+            label: "wall-plug power, heater-locked",
+            value: heater.power_breakdown().total_w(),
+            unit: "W",
+            paper: 20.0,
+        },
+        HeadlineRow {
+            label: "compute density",
+            value: compute_density_tops_per_mm2(k::F_S_HZ),
+            unit: "TOPS/mm^2",
+            paper: 5.78,
+        },
+        HeadlineRow {
+            label: "E_MAC, trimmed (headline: < 1 pJ/MAC)",
+            value: trimmed.energy_per_mac() * 1e12,
+            unit: "pJ/MAC",
+            paper: 1.0,
+        },
+    ]
+}
+
+/// Fig. 6 rows for both tuning schemes: (cells, E_op heater, E_op trimmed),
+/// each minimised over bank aspect ratio (M, N >= 5).
+pub fn fig6_rows(lo: usize, hi: usize, points: usize) -> Vec<(usize, f64, f64)> {
+    let heater = optimal_energy_curve(MrrTuning::HeaterLocked, lo, hi, points);
+    let trimmed = optimal_energy_curve(MrrTuning::Trimmed, lo, hi, points);
+    heater
+        .iter()
+        .zip(trimmed.iter())
+        .map(|(h, t): (&OptimalPoint, &OptimalPoint)| (h.cells, h.e_op_j, t.e_op_j))
+        .collect()
+}
+
+/// Render the headline table as aligned text (CLI + EXPERIMENTS.md).
+pub fn render_headline() -> String {
+    let mut out = String::from(
+        "metric                                     model      paper     unit\n",
+    );
+    for row in headline_summary() {
+        out.push_str(&format!(
+            "{:<42} {:>8.3}  {:>8.3}   {}\n",
+            row.label, row.value, row.paper, row.unit
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_within_bands() {
+        for row in headline_summary() {
+            if row.label.contains('<') {
+                // the paper states a bound, not a point value
+                assert!(
+                    row.value < row.paper,
+                    "{}: model {} should be < {}",
+                    row.label,
+                    row.value,
+                    row.paper
+                );
+                continue;
+            }
+            let rel = (row.value - row.paper).abs() / row.paper;
+            assert!(
+                rel < 0.10,
+                "{}: model {} vs paper {} ({}% off)",
+                row.label,
+                row.value,
+                row.paper,
+                (rel * 100.0) as u32
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_rows_ordered_and_decreasing() {
+        let rows = fig6_rows(25, 50_000, 14);
+        assert!(rows.len() >= 8);
+        for w in rows.windows(2) {
+            assert!(w[1].0 > w[0].0, "cells must increase");
+        }
+        // heater curve above trimmed at scale
+        for (cells, h, t) in &rows {
+            if *cells >= 500 {
+                assert!(h > t, "heater {h} <= trimmed {t} at {cells}");
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_key_rows() {
+        let text = render_headline();
+        assert!(text.contains("TOPS/mm^2"));
+        assert!(text.contains("E_op, trimmed"));
+    }
+}

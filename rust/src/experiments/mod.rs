@@ -1,0 +1,13 @@
+//! Experiment drivers: one function per paper figure/table.
+//!
+//! Shared by the `pdfa` CLI subcommands, the `examples/` binaries and the
+//! `benches/` harnesses so every surface regenerates identical numbers.
+//! See DESIGN.md §3 for the experiment index.
+
+pub mod characterization;
+pub mod energy_tables;
+pub mod training;
+
+pub use characterization::{fig3b_curve, fig3c_multiply, fig5a_inner_products, MeasuredError};
+pub use energy_tables::{fig6_rows, headline_summary};
+pub use training::{fig5b_run, fig5c_sweep, SweepPoint};

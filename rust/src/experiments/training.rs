@@ -1,0 +1,143 @@
+//! Training experiments: Fig. 5(b) curves and the Fig. 5(c) resolution sweep.
+
+use std::sync::Arc;
+
+use crate::dfa::config::{Algorithm, TrainConfig};
+use crate::dfa::noise_model::NoiseMode;
+use crate::dfa::trainer::{TrainResult, Trainer};
+use crate::runtime::Engine;
+use crate::Result;
+
+/// One Fig. 5(b)-style run: returns the full result (validation curve in
+/// `history`, final test accuracy).
+pub fn fig5b_run(
+    engine: Arc<Engine>,
+    config: &str,
+    noise: NoiseMode,
+    epochs: usize,
+    seed: u64,
+    n_train: usize,
+    n_test: usize,
+    max_steps_per_epoch: Option<usize>,
+    mut on_epoch: impl FnMut(&crate::dfa::trainer::EpochStats),
+) -> Result<TrainResult> {
+    let cfg = TrainConfig {
+        config: config.into(),
+        algorithm: Algorithm::Dfa,
+        noise,
+        epochs,
+        seed,
+        n_train,
+        n_test,
+        max_steps_per_epoch,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let (train, test) = trainer.load_data()?;
+    trainer.train(train, test, &mut on_epoch)
+}
+
+/// One point of the Fig. 5(c) sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub bits: f64,
+    pub sigma: f64,
+    pub test_acc: f64,
+}
+
+/// Fig. 5(c): test accuracy as a function of the effective resolution of
+/// the gradient mat-vec. Each point trains a fresh network with noise
+/// σ = 2 / 2^bits.
+#[allow(clippy::too_many_arguments)]
+pub fn fig5c_sweep(
+    engine: Arc<Engine>,
+    config: &str,
+    bits_list: &[f64],
+    epochs: usize,
+    seed: u64,
+    n_train: usize,
+    n_test: usize,
+    max_steps_per_epoch: Option<usize>,
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(bits_list.len());
+    for &bits in bits_list {
+        let noise = NoiseMode::Resolution { bits };
+        let (sigma, _) = noise.artifact_inputs().expect("resolution mode");
+        let res = fig5b_run(
+            engine.clone(),
+            config,
+            noise,
+            epochs,
+            seed,
+            n_train,
+            n_test,
+            max_steps_per_epoch,
+            |_| {},
+        )?;
+        log::info!(
+            "resolution {bits:.2} bits (sigma {sigma:.4}): test acc {:.4}",
+            res.test_acc
+        );
+        out.push(SweepPoint { bits, sigma: sigma as f64, test_acc: res.test_acc });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Arc::new(Engine::new(dir).unwrap()))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn fig5b_smoke_on_small_config() {
+        // "small" = 784-128-128-10 on real synthetic digits — a true
+        // minified Fig. 5(b) run
+        let Some(engine) = engine() else { return };
+        let res = fig5b_run(
+            engine,
+            "small",
+            NoiseMode::Clean,
+            1,
+            3,
+            512,
+            128,
+            Some(8),
+            |_| {},
+        )
+        .unwrap();
+        assert_eq!(res.history.len(), 1);
+        assert!(res.test_acc > 0.05); // better than random-ish after 8 steps
+        assert!(res.history[0].train_loss.is_finite());
+    }
+
+    #[test]
+    fn fig5c_sweep_orders_accuracy() {
+        let Some(engine) = engine() else { return };
+        // extreme comparison: 1 bit (sigma = 1) vs clean-ish (12 bits)
+        let pts = fig5c_sweep(
+            engine,
+            "small",
+            &[1.0, 12.0],
+            2,
+            5,
+            1024,
+            256,
+            Some(16),
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].sigma > pts[1].sigma);
+        assert!(
+            pts[1].test_acc >= pts[0].test_acc - 0.05,
+            "more bits should not hurt: {pts:?}"
+        );
+    }
+}

@@ -1,0 +1,247 @@
+//! Plan + execute: run a tiled mat-vec against a bank executor.
+//!
+//! [`GemmCompiler`] owns a [`Schedule`] and drives any [`BankExecutor`]:
+//! the device-level photonic bank (validation/"device mode") or the fast
+//! [`NumericExecutor`] (tests, planning). Inputs may be signed — negative
+//! channel values are folded into the inscribed weights by flipping the
+//! sign of the corresponding weight column (§3: "a negative value in the
+//! error vector can be encoded by inverting the sign of the inscribed
+//! weighting values of the corresponding column of MRRs").
+
+use super::schedule::{Order, Schedule};
+use super::tiler::{Tile, Tiling};
+use crate::photonics::WeightBank;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Anything that can execute one bank cycle: inscribe a (rows × cols) tile
+/// and produce per-row outputs for non-negative channel amplitudes.
+pub trait BankExecutor {
+    fn bank_rows(&self) -> usize;
+    fn bank_cols(&self) -> usize;
+
+    /// Inscribe a full-bank weight tile (callers pad ragged tiles with 0).
+    fn inscribe(&mut self, weights: &Tensor) -> Result<()>;
+
+    /// One operational cycle; `x.len() == bank_cols`, entries in [0, 1].
+    /// Returns `bank_rows` outputs in the normalised domain (inner product
+    /// divided by `bank_cols`).
+    fn cycle(&mut self, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl BankExecutor for WeightBank {
+    fn bank_rows(&self) -> usize {
+        self.rows()
+    }
+
+    fn bank_cols(&self) -> usize {
+        self.cols()
+    }
+
+    fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+        WeightBank::inscribe(self, weights)
+    }
+
+    fn cycle(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.matvec(x)
+    }
+}
+
+/// Ideal numerical bank (no noise): reference executor for tests and for
+/// fast schedule exploration.
+pub struct NumericExecutor {
+    rows: usize,
+    cols: usize,
+    weights: Tensor,
+}
+
+impl NumericExecutor {
+    pub fn new(rows: usize, cols: usize) -> NumericExecutor {
+        NumericExecutor { rows, cols, weights: Tensor::zeros(&[rows, cols]) }
+    }
+}
+
+impl BankExecutor for NumericExecutor {
+    fn bank_rows(&self) -> usize {
+        self.rows
+    }
+
+    fn bank_cols(&self) -> usize {
+        self.cols
+    }
+
+    fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+        if weights.shape() != [self.rows, self.cols] {
+            return Err(Error::Shape("bad tile shape".into()));
+        }
+        self.weights = weights.clone();
+        Ok(())
+    }
+
+    fn cycle(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        Ok((0..self.rows)
+            .map(|r| {
+                let row = self.weights.row(r);
+                row.iter().zip(x).map(|(&w, &xi)| w * xi).sum::<f32>() / self.cols as f32
+            })
+            .collect())
+    }
+}
+
+/// The compiler: plans a tiling for (m × k) and executes mat-vecs.
+pub struct GemmCompiler {
+    pub schedule: Schedule,
+}
+
+impl GemmCompiler {
+    /// Plan for an (m × k) matrix on the executor's bank geometry.
+    pub fn plan(m: usize, k: usize, exec: &dyn BankExecutor, order: Order) -> Result<GemmCompiler> {
+        let tiling = Tiling::new(m, k, exec.bank_rows(), exec.bank_cols())?;
+        Ok(GemmCompiler { schedule: Schedule::new(tiling, order) })
+    }
+
+    /// Compute y = B @ e on the bank.
+    ///
+    /// `bmat` is (m × k) with entries in [-1, 1]; `e` is length-k, signed.
+    /// Per-sample normalisation (scale to [-1, 1], fold signs into weights)
+    /// mirrors kernels/ref.py exactly; the returned y is in digital scale.
+    pub fn matvec(&self, exec: &mut dyn BankExecutor, bmat: &Tensor, e: &[f32]) -> Result<Tensor> {
+        let t = &self.schedule.tiling;
+        if bmat.shape() != [t.m, t.k] {
+            return Err(Error::Shape(format!(
+                "matvec expects B of {:?}, got {:?}",
+                [t.m, t.k],
+                bmat.shape()
+            )));
+        }
+        if e.len() != t.k {
+            return Err(Error::Shape(format!(
+                "matvec expects e of length {}, got {}",
+                t.k,
+                e.len()
+            )));
+        }
+        let (br, bc) = (exec.bank_rows(), exec.bank_cols());
+        if (br, bc) != (t.bank_rows, t.bank_cols) {
+            return Err(Error::Gemm("executor geometry != planned geometry".into()));
+        }
+
+        // amplitude-encoding scale (per-call; one "sample")
+        let s = e.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+
+        let mut y = vec![0.0f32; t.m];
+        let mut tile_w = Tensor::zeros(&[br, bc]);
+        let mut x = vec![0.0f32; bc];
+        for &idx in &self.schedule.sequence {
+            let tile: &Tile = &t.tiles[idx];
+            // fold input signs into the inscribed weights; pad ragged edges
+            tile_w.data_mut().fill(0.0);
+            for r in 0..tile.rows() {
+                for c in 0..tile.cols() {
+                    let sign = e[tile.col0 + c].signum();
+                    let w = bmat.at(tile.row0 + r, tile.col0 + c);
+                    tile_w.set(r, c, w * if sign == 0.0 { 1.0 } else { sign });
+                }
+            }
+            x.fill(0.0);
+            for c in 0..tile.cols() {
+                x[c] = (e[tile.col0 + c].abs() / s).min(1.0);
+            }
+            exec.inscribe(&tile_w)?;
+            let out = exec.cycle(&x)?;
+            // bank output is normalised by bank_cols; undo and accumulate
+            for r in 0..tile.rows() {
+                y[tile.row0 + r] += out[r] * bc as f32 * s;
+            }
+        }
+        Tensor::new(&[t.m], y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::schedule::Order;
+    use crate::util::check::{assert_close, check};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn numeric_executor_matches_dense_matmul() {
+        check("gemm-matches-matmul", 25, |rng| {
+            let m = 1 + rng.below(130) as usize;
+            let k = 1 + rng.below(45) as usize;
+            let bmat = Tensor::rand_uniform(&[m, k], -1.0, 1.0, rng);
+            let e: Vec<f32> = (0..k).map(|_| rng.normal(0.0, 0.6) as f32).collect();
+            let mut exec = NumericExecutor::new(50, 20);
+            let plan = GemmCompiler::plan(m, k, &exec, Order::ColMajor).unwrap();
+            let y = plan.matvec(&mut exec, &bmat, &e).unwrap();
+            let want: Vec<f32> = (0..m)
+                .map(|r| bmat.row(r).iter().zip(&e).map(|(&w, &x)| w * x).sum())
+                .collect();
+            assert_close(y.data(), &want, 1e-3 * k as f32)
+        });
+    }
+
+    #[test]
+    fn both_orders_agree() {
+        let mut rng = Pcg64::seed(3);
+        let bmat = Tensor::rand_uniform(&[73, 31], -1.0, 1.0, &mut rng);
+        let e: Vec<f32> = (0..31).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let mut exec = NumericExecutor::new(50, 20);
+        let row = GemmCompiler::plan(73, 31, &exec, Order::RowMajor)
+            .unwrap()
+            .matvec(&mut exec, &bmat, &e)
+            .unwrap();
+        let col = GemmCompiler::plan(73, 31, &exec, Order::ColMajor)
+            .unwrap()
+            .matvec(&mut exec, &bmat, &e)
+            .unwrap();
+        assert_close(row.data(), col.data(), 1e-5).unwrap();
+    }
+
+    #[test]
+    fn negative_inputs_fold_into_weights() {
+        let bmat = Tensor::new(&[2, 2], vec![0.5, -0.5, 0.25, 1.0]).unwrap();
+        let e = [-0.8f32, 0.4];
+        let mut exec = NumericExecutor::new(2, 2);
+        let plan = GemmCompiler::plan(2, 2, &exec, Order::RowMajor).unwrap();
+        let y = plan.matvec(&mut exec, &bmat, &e).unwrap();
+        assert_close(y.data(), &[-0.6, 0.2], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn zero_vector_gives_zero() {
+        let bmat = Tensor::full(&[5, 3], 0.7);
+        let mut exec = NumericExecutor::new(5, 3);
+        let plan = GemmCompiler::plan(5, 3, &exec, Order::RowMajor).unwrap();
+        let y = plan.matvec(&mut exec, &bmat, &[0.0, 0.0, 0.0]).unwrap();
+        assert_close(y.data(), &[0.0; 5], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut exec = NumericExecutor::new(4, 4);
+        let plan = GemmCompiler::plan(8, 4, &exec, Order::RowMajor).unwrap();
+        assert!(plan
+            .matvec(&mut exec, &Tensor::zeros(&[4, 4]), &[0.0; 4])
+            .is_err());
+        assert!(plan
+            .matvec(&mut exec, &Tensor::zeros(&[8, 4]), &[0.0; 3])
+            .is_err());
+        let mut wrong_geom = NumericExecutor::new(2, 2);
+        assert!(plan
+            .matvec(&mut wrong_geom, &Tensor::zeros(&[8, 4]), &[0.0; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn cycles_match_python_kernel_grid() {
+        // pinned against kernels/weight_bank.py::bank_cycles for the
+        // paper's layer shapes (see python/tests/test_kernels.py)
+        let exec = NumericExecutor::new(50, 20);
+        for (m, k, want) in [(800, 10, 16), (128, 10, 3), (50, 20, 1), (51, 21, 4)] {
+            let plan = GemmCompiler::plan(m, k, &exec, Order::RowMajor).unwrap();
+            assert_eq!(plan.schedule.tiling.n_cycles(), want, "({m},{k})");
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! GeMM compiler: tile arbitrary matrix-vector products onto the finite
+//! photonic weight bank.
+//!
+//! §3: "a customized general matrix multiplication (GeMM) compiler can be
+//! used to subdivide the matrix B(k) such that the matrix-vector product is
+//! determined over multiple operational cycles ... the dimensions of the
+//! photonic weight bank do not restrict the size of the neural network."
+//!
+//! * [`tiler`]    — partition an (M, K) matrix into bank-sized tiles
+//! * [`schedule`] — order tiles into operational cycles, roll up latency
+//!   and per-cycle work (the numbers the energy model consumes)
+//! * [`compiler`] — execute a plan against any [`compiler::BankExecutor`]
+//!   (the device-level [`crate::photonics::WeightBank`], or a fast
+//!   numerical executor for testing)
+//!
+//! The L1 Pallas kernel's grid (python/compile/kernels/weight_bank.py)
+//! mirrors this exact tiling; `schedule::Schedule::cycles` must equal the
+//! kernel's `bank_cycles` for the same dims — pinned by unit tests here and
+//! hypothesis tests on the Python side.
+
+pub mod compiler;
+pub mod schedule;
+pub mod tiler;
+
+pub use compiler::{BankExecutor, GemmCompiler, NumericExecutor};
+pub use schedule::{Schedule, ScheduleStats};
+pub use tiler::{Tile, Tiling};

@@ -1,0 +1,155 @@
+//! Cycle scheduling and work accounting for a tiled mat-vec.
+//!
+//! The physical bank re-inscribes its MRRs between tiles that carry
+//! different weights; for DFA the B(k) tiles cycle through a *fixed* set
+//! each step (§5: stored in analog memory, switching cost negligible), so
+//! the schedule distinguishes inscription cycles from compute cycles.
+
+use super::tiler::Tiling;
+
+/// Ordering policy for tile execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Order {
+    /// All column-blocks of one row-block before moving on (output-local:
+    /// each output element finishes in consecutive cycles — minimal
+    /// accumulator state, matches the L1 kernel's grid order).
+    RowMajor,
+    /// All row-blocks of one column-block first (input-local: each input
+    /// chunk is encoded once onto the modulators and fanned across
+    /// row-blocks — minimal DAC re-encodes when M > bank rows).
+    ColMajor,
+}
+
+/// Static work/latency statistics of a schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleStats {
+    pub cycles: usize,
+    /// Useful MACs over all cycles.
+    pub macs: usize,
+    /// Input-vector (re-)encodes: how many times a column-block's channel
+    /// amplitudes must be driven onto the modulators.
+    pub input_encodes: usize,
+    /// Bank re-inscriptions needed when the weight tile changes.
+    pub inscriptions: usize,
+    /// Wall-clock at operational rate f_s (s) for the compute cycles alone.
+    pub compute_time_s: f64,
+}
+
+/// An ordered tile schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub tiling: Tiling,
+    pub order: Order,
+    /// Tile indices in execution order.
+    pub sequence: Vec<usize>,
+}
+
+impl Schedule {
+    pub fn new(tiling: Tiling, order: Order) -> Schedule {
+        let nr = tiling.n_row_blocks();
+        let nc = tiling.n_col_blocks();
+        let mut sequence = Vec::with_capacity(nr * nc);
+        match order {
+            Order::RowMajor => {
+                for r in 0..nr {
+                    for c in 0..nc {
+                        sequence.push(r * nc + c);
+                    }
+                }
+            }
+            Order::ColMajor => {
+                for c in 0..nc {
+                    for r in 0..nr {
+                        sequence.push(r * nc + c);
+                    }
+                }
+            }
+        }
+        Schedule { tiling, order, sequence }
+    }
+
+    /// Work accounting at operational rate `f_s_hz`. `weights_resident`
+    /// marks the DFA case where the tile set is pre-stored in analog memory
+    /// and switching is free (§5) — otherwise each tile change costs an
+    /// inscription.
+    pub fn stats(&self, f_s_hz: f64, weights_resident: bool) -> ScheduleStats {
+        let cycles = self.sequence.len();
+        let macs: usize = self.tiling.tiles.iter().map(|t| t.macs()).sum();
+        // input encodes: consecutive cycles sharing a column block reuse the
+        // encoded channel amplitudes
+        let mut input_encodes = 0;
+        let mut last_col_block = usize::MAX;
+        let nc = self.tiling.n_col_blocks();
+        for &idx in &self.sequence {
+            let col_block = idx % nc;
+            if col_block != last_col_block {
+                input_encodes += 1;
+                last_col_block = col_block;
+            }
+        }
+        let inscriptions = if weights_resident { 0 } else { cycles };
+        ScheduleStats {
+            cycles,
+            macs,
+            input_encodes,
+            inscriptions,
+            compute_time_s: cycles as f64 / f_s_hz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::tiler::Tiling;
+
+    fn tiling() -> Tiling {
+        Tiling::new(120, 50, 50, 20).unwrap() // 3 x 3 blocks
+    }
+
+    #[test]
+    fn row_major_sequence() {
+        let s = Schedule::new(tiling(), Order::RowMajor);
+        assert_eq!(s.sequence, vec![0, 1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn col_major_sequence() {
+        let s = Schedule::new(tiling(), Order::ColMajor);
+        assert_eq!(s.sequence, vec![0, 3, 6, 1, 4, 7, 2, 5, 8]);
+    }
+
+    #[test]
+    fn stats_account_work() {
+        let s = Schedule::new(tiling(), Order::RowMajor);
+        let st = s.stats(10e9, true);
+        assert_eq!(st.cycles, 9);
+        assert_eq!(st.macs, 120 * 50);
+        assert_eq!(st.inscriptions, 0);
+        assert!((st.compute_time_s - 9.0 / 10e9).abs() < 1e-20);
+        // row-major revisits each column block per row block
+        assert_eq!(st.input_encodes, 9);
+        let st2 = s.stats(10e9, false);
+        assert_eq!(st2.inscriptions, 9);
+    }
+
+    #[test]
+    fn col_major_minimises_encodes() {
+        let s = Schedule::new(tiling(), Order::ColMajor);
+        let st = s.stats(10e9, true);
+        // one encode per column block: 3 instead of 9
+        assert_eq!(st.input_encodes, 3);
+    }
+
+    #[test]
+    fn paper_dfa_layer_schedule() {
+        // 800 x 10 feedback matrix on the 50 x 20 bank: 16 cycles at 10 GHz
+        // = 1.6 ns for the whole layer gradient (both layers in parallel).
+        let t = Tiling::new(800, 10, 50, 20).unwrap();
+        let s = Schedule::new(t, Order::ColMajor);
+        let st = s.stats(10e9, true);
+        assert_eq!(st.cycles, 16);
+        assert_eq!(st.input_encodes, 1); // e fits one column block
+        assert!((st.compute_time_s - 1.6e-9).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,37 @@
+//! # photonic-dfa
+//!
+//! Reproduction of *Silicon Photonic Architecture for Training Deep Neural
+//! Networks with Direct Feedback Alignment* (Filipovich et al., Optica 2022)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the digital control system and every analog
+//!   substrate simulated at device level: micro-ring resonator (MRR) physics,
+//!   thermal/carrier tuning and calibration, balanced photodetection, TIAs,
+//!   data converters, the WDM optical link budget, the photonic weight bank,
+//!   a GeMM compiler that tiles arbitrary matrix products onto the finite
+//!   bank, the paper's energy/speed model (Eqs. 2–4, Fig. 6), the dataset
+//!   substrate, and the training coordinator that drives the AOT artifacts.
+//! * **L2** — the MLP forward/backward (DFA, Eq. 1) written in JAX,
+//!   AOT-lowered once to HLO text (`python/compile/`).
+//! * **L1** — Pallas kernels for the weight-bank datapath, embedded in the
+//!   same HLO.
+//!
+//! Python never runs on the training path: the `pdfa` binary loads
+//! `artifacts/*.hlo.txt` through PJRT (the `xla` crate) and is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-figure
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod dfa;
+pub mod energy;
+pub mod error;
+pub mod experiments;
+pub mod gemm;
+pub mod photonics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};

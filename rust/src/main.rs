@@ -1,0 +1,377 @@
+//! `pdfa` — the photonic-DFA coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §3):
+//!
+//! ```text
+//! pdfa train            train a network (Fig. 5(b) conditions)
+//! pdfa sweep-resolution test accuracy vs gradient resolution (Fig. 5(c))
+//! pdfa characterize     MRR profile + single-MRR multiplies (Fig. 3(b,c))
+//! pdfa inner-product    1x4 photonic inner products (Fig. 5(a))
+//! pdfa energy           Eq. 2-4 headline numbers + Fig. 6 table
+//! pdfa gen-data         write the synthetic digit dataset as IDX files
+//! pdfa info             list artifacts and configs in the manifest
+//! ```
+
+use std::sync::Arc;
+
+use photonic_dfa::coordinator::run::RunRecorder;
+use photonic_dfa::data::synth;
+use photonic_dfa::dfa::config::{Algorithm, TrainConfig};
+use photonic_dfa::dfa::noise_model::NoiseMode;
+use photonic_dfa::dfa::trainer::Trainer;
+use photonic_dfa::experiments;
+use photonic_dfa::photonics::BpdMode;
+use photonic_dfa::runtime::Engine;
+use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
+use photonic_dfa::util::json::Value;
+use photonic_dfa::util::logging;
+use photonic_dfa::{Error, Result};
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    let wants_help = rest.iter().any(|a| a == "--help" || a == "-h");
+    match cmd {
+        "train" => run_or_help(cmd, "train a network through the photonic DFA path",
+            &train_specs(), rest, wants_help, cmd_train),
+        "sweep-resolution" => run_or_help(cmd,
+            "Fig. 5(c): accuracy vs gradient effective resolution",
+            &sweep_specs(), rest, wants_help, cmd_sweep),
+        "characterize" => run_or_help(cmd,
+            "Fig. 3(b,c): MRR transmission profile + single-MRR multiplies",
+            &char_specs(), rest, wants_help, cmd_characterize),
+        "inner-product" => run_or_help(cmd,
+            "Fig. 5(a): photonic 1x4 inner-product error statistics",
+            &ip_specs(), rest, wants_help, cmd_inner_product),
+        "energy" => run_or_help(cmd,
+            "Eqs. 2-4 headline numbers and the Fig. 6 sweep",
+            &energy_specs(), rest, wants_help, cmd_energy),
+        "gen-data" => run_or_help(cmd,
+            "generate the synthetic digit dataset as IDX files",
+            &gendata_specs(), rest, wants_help, cmd_gen_data),
+        "info" => run_or_help(cmd, "list manifest artifacts and configs",
+            &info_specs(), rest, wants_help, cmd_info),
+        "help" | "--help" | "-h" => {
+            print_global_help();
+            Ok(())
+        }
+        other => Err(Error::Cli(format!(
+            "unknown command '{other}' (try `pdfa help`)"
+        ))),
+    }
+}
+
+fn run_or_help(
+    cmd: &str,
+    about: &str,
+    specs: &[ArgSpec],
+    rest: &[String],
+    wants_help: bool,
+    f: impl Fn(&Args) -> Result<()>,
+) -> Result<()> {
+    if wants_help {
+        print!("{}", help_text(cmd, about, specs));
+        return Ok(());
+    }
+    let args = Args::parse(specs, rest)?;
+    f(&args)
+}
+
+fn print_global_help() {
+    println!(
+        "pdfa — silicon-photonic DFA training coordinator\n\n\
+         commands:\n\
+         \u{20}  train              train a network (Fig. 5(b) conditions)\n\
+         \u{20}  sweep-resolution   accuracy vs gradient resolution (Fig. 5(c))\n\
+         \u{20}  characterize       MRR profile + multiplies (Fig. 3(b,c))\n\
+         \u{20}  inner-product      1x4 inner-product stats (Fig. 5(a))\n\
+         \u{20}  energy             Eq. 2-4 + Fig. 6 tables\n\
+         \u{20}  gen-data           write synthetic IDX dataset\n\
+         \u{20}  info               inspect the artifact manifest\n\n\
+         run `pdfa <command> --help` for options"
+    );
+}
+
+// ---------------- train ----------------
+
+fn train_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("config", "mnist", "network config: tiny | small | mnist"),
+        ArgSpec::opt("algorithm", "dfa", "dfa | backprop"),
+        ArgSpec::opt(
+            "noise",
+            "clean",
+            "clean | offchip | onchip | gaussian:<s> | resolution:<b> | quantized:<b> | device:<ideal|offchip|onchip>",
+        ),
+        ArgSpec::opt("epochs", "10", "training epochs"),
+        ArgSpec::opt("lr", "0.01", "learning rate (paper: 0.01)"),
+        ArgSpec::opt("momentum", "0.9", "SGD momentum (paper: 0.9)"),
+        ArgSpec::opt("seed", "1", "master seed"),
+        ArgSpec::opt("n-train", "60000", "training examples (synthetic)"),
+        ArgSpec::opt("n-test", "10000", "test examples (synthetic)"),
+        ArgSpec::opt("data-dir", "", "IDX dataset directory (empty = synthesise)"),
+        ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full epoch)"),
+        ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        ArgSpec::opt("out", "runs", "run output directory"),
+        ArgSpec::opt("run-name", "", "run name (default: derived)"),
+    ]
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let noise = NoiseMode::parse(a.str("noise"))
+        .ok_or_else(|| Error::Cli(format!("bad --noise '{}'", a.str("noise"))))?;
+    let algorithm = match a.str("algorithm") {
+        "dfa" => Algorithm::Dfa,
+        "backprop" => Algorithm::Backprop,
+        other => return Err(Error::Cli(format!("bad --algorithm '{other}'"))),
+    };
+    let cfg = TrainConfig {
+        config: a.str("config").into(),
+        algorithm,
+        noise,
+        epochs: a.usize("epochs")?,
+        lr: a.f64("lr")? as f32,
+        momentum: a.f64("momentum")? as f32,
+        seed: a.u64("seed")?,
+        n_train: a.usize("n-train")?,
+        n_test: a.usize("n-test")?,
+        data_dir: (!a.str("data-dir").is_empty()).then(|| a.str("data-dir").into()),
+        eval_every: 1,
+        max_steps_per_epoch: match a.usize("max-steps")? {
+            0 => None,
+            n => Some(n),
+        },
+    };
+    let run_name = if a.str("run-name").is_empty() {
+        format!(
+            "{}_{}_{}_seed{}",
+            a.str("config"),
+            a.str("algorithm"),
+            a.str("noise").replace(':', "-"),
+            cfg.seed
+        )
+    } else {
+        a.str("run-name").into()
+    };
+
+    let engine = Arc::new(Engine::new(a.str("artifacts"))?);
+    let mut recorder = RunRecorder::create(a.str("out"), &run_name)?;
+    recorder.write_config(&cfg.to_json())?;
+    let mut trainer = Trainer::new(engine, cfg)?;
+    log::info!("run '{run_name}' starting: {}", trainer.cfg.noise.describe());
+    let (train, test) = trainer.load_data()?;
+
+    let result = {
+        let recorder_cell = std::cell::RefCell::new(&mut recorder);
+        trainer.train(train, test, |stats| {
+            let _ = recorder_cell.borrow_mut().record_epoch(stats.to_json());
+        })?
+    };
+
+    recorder.write_checkpoint("final.ckpt", &trainer.state.to_bytes())?;
+    recorder.write_report(
+        "result.json",
+        &Value::object(vec![
+            ("test_acc", Value::Number(result.test_acc)),
+            ("total_steps", Value::Number(result.total_steps as f64)),
+            ("wall_s", Value::Number(result.wall_s)),
+            ("photonic_macs", Value::Number(result.photonic_macs as f64)),
+            ("metrics", trainer.metrics.to_json()),
+        ]),
+    )?;
+    println!(
+        "test accuracy: {:.4} ({} steps, {:.1}s, {} photonic MACs)",
+        result.test_acc, result.total_steps, result.wall_s, result.photonic_macs
+    );
+    println!("run artifacts in {}", recorder.dir.display());
+    Ok(())
+}
+
+// ---------------- sweep-resolution ----------------
+
+fn sweep_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("config", "small", "network config"),
+        ArgSpec::opt("bits", "1,2,3,4,5,6,8", "comma-separated bit depths"),
+        ArgSpec::opt("epochs", "3", "epochs per point"),
+        ArgSpec::opt("seed", "1", "master seed"),
+        ArgSpec::opt("n-train", "8192", "training examples per point"),
+        ArgSpec::opt("n-test", "2048", "test examples"),
+        ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full)"),
+        ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+    ]
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let engine = Arc::new(Engine::new(a.str("artifacts"))?);
+    let bits = a.f64_list("bits")?;
+    let pts = experiments::fig5c_sweep(
+        engine,
+        a.str("config"),
+        &bits,
+        a.usize("epochs")?,
+        a.u64("seed")?,
+        a.usize("n-train")?,
+        a.usize("n-test")?,
+        match a.usize("max-steps")? {
+            0 => None,
+            n => Some(n),
+        },
+    )?;
+    println!("bits   sigma     test_acc   (Fig. 5(c))");
+    for p in pts {
+        println!("{:>4.1}  {:.5}   {:.4}", p.bits, p.sigma, p.test_acc);
+    }
+    Ok(())
+}
+
+// ---------------- characterize ----------------
+
+fn char_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("n", "3900", "number of multiply measurements (paper: 3900)"),
+        ArgSpec::opt("seed", "7", "device + measurement seed"),
+        ArgSpec::opt("profile-points", "0", "also print the Fig. 3(b) profile rows"),
+    ]
+}
+
+fn cmd_characterize(a: &Args) -> Result<()> {
+    let pts = a.usize("profile-points")?;
+    if pts > 0 {
+        println!("phase      T_pass     T_drop     weight    (Fig. 3(b))");
+        for (phi, tp, td, w) in experiments::fig3b_curve(pts) {
+            println!("{phi:>8.4}  {tp:>8.5}  {td:>8.5}  {w:>8.5}");
+        }
+    }
+    let m = experiments::fig3c_multiply(a.usize("n")?, a.u64("seed")?)?;
+    println!(
+        "single-MRR multiply (Fig. 3(c)): n={} sigma={:.4} mean={:+.4} -> {:.2} bits \
+         [paper: sigma=0.019, mean=-0.001, 6.72 bits]",
+        m.n, m.sigma, m.mean, m.effective_bits
+    );
+    Ok(())
+}
+
+// ---------------- inner-product ----------------
+
+fn ip_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("n", "5000", "measurements per circuit (paper: 5000)"),
+        ArgSpec::opt("seed", "7", "device + measurement seed"),
+        ArgSpec::opt("mode", "both", "offchip | onchip | both"),
+    ]
+}
+
+fn cmd_inner_product(a: &Args) -> Result<()> {
+    let n = a.usize("n")?;
+    let seed = a.u64("seed")?;
+    let modes: Vec<(&str, BpdMode, f64, f64)> = match a.str("mode") {
+        "offchip" => vec![("off-chip BPD", BpdMode::OffChip, 0.098, 4.35)],
+        "onchip" => vec![("on-chip BPD", BpdMode::OnChip, 0.202, 3.31)],
+        "both" => vec![
+            ("off-chip BPD", BpdMode::OffChip, 0.098, 4.35),
+            ("on-chip BPD", BpdMode::OnChip, 0.202, 3.31),
+        ],
+        other => return Err(Error::Cli(format!("bad --mode '{other}'"))),
+    };
+    println!("circuit        n      sigma    mean      bits   [paper sigma/bits]");
+    for (label, mode, paper_sigma, paper_bits) in modes {
+        let m = experiments::fig5a_inner_products(mode, n, seed)?;
+        println!(
+            "{label:<13} {:>5}  {:.4}  {:+.4}   {:.2}   [{paper_sigma} / {paper_bits}]",
+            m.n, m.sigma, m.mean, m.effective_bits
+        );
+    }
+    Ok(())
+}
+
+// ---------------- energy ----------------
+
+fn energy_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("fig6-points", "14", "points on the Fig. 6 sweep"),
+        ArgSpec::opt("fig6-max-cells", "100000", "largest MAC-cell count"),
+    ]
+}
+
+fn cmd_energy(a: &Args) -> Result<()> {
+    print!("{}", experiments::energy_tables::render_headline());
+    println!("\nFig. 6 — optimal E_op vs MAC cells (both locking schemes):");
+    println!("cells     E_op heater (pJ)   E_op trimmed (pJ)");
+    for (cells, h, t) in
+        experiments::fig6_rows(25, a.usize("fig6-max-cells")?, a.usize("fig6-points")?)
+    {
+        println!("{cells:>7}   {:>12.3}      {:>12.3}", h * 1e12, t * 1e12);
+    }
+    Ok(())
+}
+
+// ---------------- gen-data ----------------
+
+fn gendata_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("out", "data", "output directory"),
+        ArgSpec::opt("n-train", "60000", "training images"),
+        ArgSpec::opt("n-test", "10000", "test images"),
+        ArgSpec::opt("seed", "1", "generation seed"),
+    ]
+}
+
+fn cmd_gen_data(a: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(a.str("out"));
+    std::fs::create_dir_all(&out)?;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let seed = a.u64("seed")?;
+    let (tr_img, tr_lab) =
+        synth::generate_split_parallel(a.usize("n-train")?, seed ^ 0x7a11, threads);
+    tr_img.save(out.join("train-images-idx3-ubyte.gz"))?;
+    tr_lab.save(out.join("train-labels-idx1-ubyte.gz"))?;
+    let (te_img, te_lab) =
+        synth::generate_split_parallel(a.usize("n-test")?, seed ^ 0x7e57, threads);
+    te_img.save(out.join("t10k-images-idx3-ubyte.gz"))?;
+    te_lab.save(out.join("t10k-labels-idx1-ubyte.gz"))?;
+    println!(
+        "wrote {} train + {} test images to {}",
+        tr_img.dims[0],
+        te_img.dims[0],
+        out.display()
+    );
+    Ok(())
+}
+
+// ---------------- info ----------------
+
+fn info_specs() -> Vec<ArgSpec> {
+    vec![ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory")]
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let engine = Engine::new(a.str("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform_name());
+    println!("configs:");
+    for (name, d) in &engine.manifest().configs {
+        println!(
+            "  {name}: {}-{}-{}-{} batch {}",
+            d.d_in, d.d_h1, d.d_h2, d.d_out, d.batch
+        );
+    }
+    println!("artifacts:");
+    for (name, art) in &engine.manifest().artifacts {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            art.inputs.len(),
+            art.outputs.len(),
+            art.path.file_name().unwrap_or_default().to_string_lossy()
+        );
+    }
+    Ok(())
+}

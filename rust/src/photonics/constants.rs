@@ -1,0 +1,95 @@
+//! Physical constants and the paper's component parameter values.
+//!
+//! Every number cited in §2, §4 and §5 of the paper lives here with its
+//! provenance, so the energy model (energy::model) and the device simulator
+//! share one source of truth.
+
+/// Planck constant (J·s).
+pub const H_PLANCK: f64 = 6.626_070_15e-34;
+/// Speed of light (m/s).
+pub const C_LIGHT: f64 = 2.997_924_58e8;
+/// Elementary charge (C).
+pub const E_CHARGE: f64 = 1.602_176_634e-19;
+/// Boltzmann constant (J/K).
+pub const K_BOLTZMANN: f64 = 1.380_649e-23;
+
+/// Operating wavelength (§5): 1550 nm.
+pub const WAVELENGTH_M: f64 = 1550e-9;
+
+/// Photon energy at 1550 nm (J): ħω = h·c/λ ≈ 1.28e-19 J.
+pub fn photon_energy() -> f64 {
+    H_PLANCK * C_LIGHT / WAVELENGTH_M
+}
+
+/// Combined quantum efficiency η of laser + detector + waveguide loss (§5).
+pub const ETA: f64 = 0.2;
+
+/// Photodetector capacitance (§5, ref 44): 2.4 fF.
+pub const PD_CAPACITANCE_F: f64 = 2.4e-15;
+/// Photodetector driving voltage (§5): 1 V.
+pub const PD_DRIVE_V: f64 = 1.0;
+
+/// Maximum operational rate (§5): 10 GHz, limited by the DAC throughput.
+pub const F_S_HZ: f64 = 10e9;
+/// ADC/operational fixed precision assumed in Fig. 6 (§5): 6 bits.
+pub const N_BITS: u32 = 6;
+
+/// DAC power (§5): 180 mW (12-bit, 10 GS/s, Alphacore D12B10G).
+pub const P_DAC_W: f64 = 0.180;
+/// ADC power (§5): 13 mW (6-bit, 12 GS/s, Alphacore A6B12G).
+pub const P_ADC_W: f64 = 0.013;
+/// TIA energy (§5, ref 61): 2.4 pJ/bit at 20 GS/s.
+pub const TIA_PJ_PER_BIT: f64 = 2.4e-12;
+
+/// MRR thermal-lock heater power (§5): ~14.12 mW per MRR.
+pub const P_MRR_HEATER_W: f64 = 14.12e-3;
+/// MRR carrier-depletion tuning power (§5): ~120 µW per MRR
+/// (also the residual per-MRR power after post-fabrication trimming).
+pub const P_MRR_TRIMMED_W: f64 = 120e-6;
+
+/// Photonic MAC cell footprint (§5): 47.4 µm x 73.0 µm.
+pub const MAC_CELL_AREA_M2: f64 = 47.4e-6 * 73.0e-6;
+
+/// Thermally-tuned MRR response time (§5, ref 30): 170 µs — the reason the
+/// *experimental* testbed runs at ~2.0 µJ/MAC while the projected system
+/// uses carrier-depletion tuning at GHz rates.
+pub const THERMAL_TAU_S: f64 = 170e-6;
+
+/// Paper's headline weight-bank geometry (§5): M = 50 rows, N = 20 channels.
+pub const BANK_ROWS: usize = 50;
+pub const BANK_COLS: usize = 20;
+
+/// MRR finesse of the optimised design supporting 108 WDM channels (§3).
+pub const MRR_FINESSE: f64 = 368.0;
+/// Maximum WDM channels a single waveguide supports at that finesse (§3).
+pub const MAX_WDM_CHANNELS: usize = 108;
+
+/// Experimental laser wavelengths of the §4 testbed (nm).
+pub const TESTBED_WAVELENGTHS_NM: [f64; 4] = [1546.558, 1548.675, 1549.595, 1551.480];
+
+/// Measured inner-product error std of the §4 testbed circuits,
+/// scaled to the normalised [-1, 1] output range.
+pub const SIGMA_SINGLE_MRR: f64 = 0.019; // Fig. 3(c), 6.72 bits
+pub const SIGMA_OFFCHIP_BPD: f64 = 0.098; // Fig. 5(a), 4.35 bits
+pub const SIGMA_ONCHIP_BPD: f64 = 0.202; // Fig. 5(a), 3.31 bits
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn photon_energy_at_1550nm() {
+        let e = photon_energy();
+        assert!((e - 1.28e-19).abs() < 0.01e-19, "{e}");
+    }
+
+    #[test]
+    fn shot_vs_capacitance_floor() {
+        // §5: with Nb = 6, C = 2.4 fF, Vd = 1 V the capacitance term
+        // C·Vd/e = 15k photons dominates the shot-noise term 2^(2·6+1) = 8192.
+        let shot = 2f64.powi(2 * N_BITS as i32 + 1);
+        let cap = PD_CAPACITANCE_F * PD_DRIVE_V / E_CHARGE;
+        assert!(cap > shot);
+        assert!((cap - 14_980.0).abs() < 50.0, "{cap}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Data converters: the DAC that drives MRR/input modulators and the ADC
+//! that digitises TIA outputs.
+//!
+//! Both are uniform mid-rise quantisers over a symmetric range, matching
+//! the L1 `quantize` kernel's semantics (kernels/quantize.py). The DAC's
+//! sample rate caps the system's operational rate f_s (§5: the 10 GS/s DAC
+//! limits f_s to 10 GHz even though TIAs run at 20 GS/s).
+
+use crate::{Error, Result};
+
+/// A uniform quantiser over [-range, range].
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub range: f64,
+}
+
+impl Quantizer {
+    pub fn new(bits: u32, range: f64) -> Quantizer {
+        Quantizer { bits, range }
+    }
+
+    /// Quantise; values are clamped into range first (converter saturates).
+    pub fn quantize(&self, x: f64) -> f64 {
+        if self.bits == 0 {
+            return x; // transparent (ideal converter)
+        }
+        let levels = 2f64.powi(self.bits as i32 - 1);
+        let xn = (x / self.range).clamp(-1.0, 1.0);
+        (xn * levels).round() / levels * self.range
+    }
+
+    /// Step size (LSB).
+    pub fn lsb(&self) -> f64 {
+        2.0 * self.range / 2f64.powi(self.bits as i32)
+    }
+}
+
+/// Digital-to-analog converter with a rate limit.
+#[derive(Debug, Clone, Copy)]
+pub struct Dac {
+    pub quant: Quantizer,
+    pub max_rate_hz: f64,
+    pub power_w: f64,
+}
+
+impl Dac {
+    /// The §5 part: Alphacore D12B10G — 12-bit, 10 GS/s, 180 mW.
+    pub fn alphacore_d12b10g() -> Dac {
+        Dac {
+            quant: Quantizer::new(12, 1.0),
+            max_rate_hz: 10e9,
+            power_w: super::constants::P_DAC_W,
+        }
+    }
+
+    pub fn convert(&self, code: f64) -> f64 {
+        self.quant.quantize(code)
+    }
+}
+
+/// Analog-to-digital converter with a rate limit.
+#[derive(Debug, Clone, Copy)]
+pub struct Adc {
+    pub quant: Quantizer,
+    pub max_rate_hz: f64,
+    pub power_w: f64,
+}
+
+impl Adc {
+    /// The §5 part: Alphacore A6B12G — 6-bit, 12 GS/s, 13 mW.
+    pub fn alphacore_a6b12g() -> Adc {
+        Adc {
+            quant: Quantizer::new(6, 1.0),
+            max_rate_hz: 12e9,
+            power_w: super::constants::P_ADC_W,
+        }
+    }
+
+    pub fn sample(&self, v: f64) -> f64 {
+        self.quant.quantize(v)
+    }
+}
+
+/// System operational rate: the slowest converter on the signal path wins
+/// (§5: "the throughput of the DAC limited f_s to 10 GHz").
+pub fn operational_rate(dac: &Dac, adc: &Adc) -> f64 {
+    dac.max_rate_hz.min(adc.max_rate_hz)
+}
+
+/// Validate a requested rate against the converter chain.
+pub fn check_rate(f_s: f64, dac: &Dac, adc: &Adc) -> Result<()> {
+    let max = operational_rate(dac, adc);
+    if f_s > max {
+        return Err(Error::Photonics(format!(
+            "requested f_s {:.2} GHz exceeds converter limit {:.2} GHz",
+            f_s / 1e9,
+            max / 1e9
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizer_basics() {
+        let q = Quantizer::new(2, 1.0); // levels at -1, -0.5, 0, 0.5, 1
+        assert_eq!(q.quantize(0.3), 0.5);
+        assert_eq!(q.quantize(0.2), 0.0);
+        assert_eq!(q.quantize(-0.8), -1.0);
+        assert_eq!(q.quantize(5.0), 1.0); // saturates
+        assert_eq!(q.lsb(), 0.5);
+    }
+
+    #[test]
+    fn zero_bits_is_transparent() {
+        let q = Quantizer::new(0, 1.0);
+        assert_eq!(q.quantize(0.123456), 0.123456);
+    }
+
+    #[test]
+    fn error_bounded_by_half_lsb() {
+        let q = Quantizer::new(6, 1.0);
+        for i in 0..1000 {
+            let x = -1.0 + 2.0 * i as f64 / 999.0;
+            assert!((q.quantize(x) - x).abs() <= q.lsb() / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let q = Quantizer::new(5, 1.0);
+        for i in 0..100 {
+            let x = -1.2 + 2.4 * i as f64 / 99.0;
+            let once = q.quantize(x);
+            assert_eq!(q.quantize(once), once);
+        }
+    }
+
+    #[test]
+    fn paper_rate_limit() {
+        let dac = Dac::alphacore_d12b10g();
+        let adc = Adc::alphacore_a6b12g();
+        assert_eq!(operational_rate(&dac, &adc), 10e9); // DAC-limited
+        assert!(check_rate(10e9, &dac, &adc).is_ok());
+        assert!(check_rate(12e9, &dac, &adc).is_err());
+    }
+
+    #[test]
+    fn paper_parts_match_constants() {
+        assert_eq!(Dac::alphacore_d12b10g().quant.bits, 12);
+        assert_eq!(Adc::alphacore_a6b12g().quant.bits, 6);
+        assert!((Dac::alphacore_d12b10g().power_w - 0.180).abs() < 1e-12);
+        assert!((Adc::alphacore_a6b12g().power_w - 0.013).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,183 @@
+//! MRR tuning actuators: photoconductive thermal heaters and
+//! carrier-depletion phase shifters.
+//!
+//! The §4 testbed tunes MRRs with in-ring N-doped photoconductive heaters
+//! (Jayatilleka 2015/2019): slow (~170 µs time constant) but wide-range.
+//! The §5 projected system uses carrier-depletion PN junctions: ~120 µW,
+//! GHz-rate, but with a narrow tuning range that cannot absorb fabrication
+//! offsets — hence thermal *locking* or post-fabrication trimming.
+//!
+//! The models here give the weight bank its actuator dynamics (settle
+//! times feed the schedule/energy roll-ups) and its current→phase transfer
+//! (the nonlinearity the calibration LUT must learn).
+
+use super::constants::THERMAL_TAU_S;
+
+/// Which actuator technology tunes each MRR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuningKind {
+    /// In-ring photoconductive heater (testbed): slow, wide range, ~mW.
+    Thermal,
+    /// Reverse-biased PN junction (projected system): fast, narrow, ~µW.
+    CarrierDepletion,
+}
+
+/// First-order actuator model: drive → steady-state phase, with an
+/// exponential settling transient.
+#[derive(Debug, Clone)]
+pub struct Actuator {
+    pub kind: TuningKind,
+    /// Phase shift per unit drive² (thermal: φ ∝ I²R; depletion: ≈linear).
+    gain: f64,
+    /// Time constant of the transient (s).
+    tau_s: f64,
+    /// Maximum phase swing the actuator can reach (radians).
+    max_phase: f64,
+    /// Current phase state (radians).
+    phase: f64,
+    /// Target phase being settled toward.
+    target: f64,
+}
+
+impl Actuator {
+    pub fn thermal() -> Actuator {
+        Actuator {
+            kind: TuningKind::Thermal,
+            // heater: P = I²R heats the ring; phase ∝ ΔT ∝ power.
+            gain: 2.0 * std::f64::consts::PI,
+            tau_s: THERMAL_TAU_S,
+            max_phase: 2.0 * std::f64::consts::PI, // full FSR reachable
+            phase: 0.0,
+            target: 0.0,
+        }
+    }
+
+    pub fn carrier_depletion() -> Actuator {
+        Actuator {
+            kind: TuningKind::CarrierDepletion,
+            gain: 0.15, // weak plasma-dispersion effect
+            tau_s: 25e-12, // ~40 GHz electro-optic bandwidth
+            // §3: depletion range is narrow — often smaller than the
+            // fabrication-induced resonance offset.
+            max_phase: 0.15,
+            phase: 0.0,
+            target: 0.0,
+        }
+    }
+
+    /// Steady-state phase for a normalised drive in [0, 1].
+    ///
+    /// Thermal heaters are quadratic in drive current (P = I²R); depletion
+    /// shifters are approximately linear in reverse bias.
+    pub fn steady_state_phase(&self, drive: f64) -> f64 {
+        let d = drive.clamp(0.0, 1.0);
+        let raw = match self.kind {
+            TuningKind::Thermal => self.gain * d * d,
+            TuningKind::CarrierDepletion => self.gain * d,
+        };
+        raw.min(self.max_phase)
+    }
+
+    /// Invert [`steady_state_phase`]: drive needed for a target phase.
+    pub fn drive_for_phase(&self, phase: f64) -> f64 {
+        let p = phase.clamp(0.0, self.max_phase);
+        match self.kind {
+            TuningKind::Thermal => (p / self.gain).sqrt(),
+            TuningKind::CarrierDepletion => (p / self.gain).min(1.0),
+        }
+    }
+
+    /// Command a new drive; the phase settles exponentially.
+    pub fn set_drive(&mut self, drive: f64) {
+        self.target = self.steady_state_phase(drive);
+    }
+
+    /// Advance the transient by `dt` seconds.
+    pub fn step(&mut self, dt: f64) {
+        let alpha = 1.0 - (-dt / self.tau_s).exp();
+        self.phase += alpha * (self.target - self.phase);
+    }
+
+    /// Instantaneous phase (radians).
+    pub fn phase(&self) -> f64 {
+        self.phase
+    }
+
+    /// Jump straight to steady state (used when simulating at time scales
+    /// far beyond τ, e.g. one training step per thermal settle).
+    pub fn settle(&mut self) {
+        self.phase = self.target;
+    }
+
+    /// Time to settle within `frac` of the target (s): τ·ln(1/frac).
+    pub fn settle_time(&self, frac: f64) -> f64 {
+        self.tau_s * (1.0 / frac).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thermal_quadratic_depletion_linear() {
+        let th = Actuator::thermal();
+        let p1 = th.steady_state_phase(0.3);
+        let p2 = th.steady_state_phase(0.6);
+        assert!((p2 / p1 - 4.0).abs() < 1e-9, "thermal should be quadratic");
+
+        let cd = Actuator::carrier_depletion();
+        let q1 = cd.steady_state_phase(0.3);
+        let q2 = cd.steady_state_phase(0.6);
+        assert!((q2 / q1 - 2.0).abs() < 1e-9, "depletion should be linear");
+    }
+
+    #[test]
+    fn drive_phase_roundtrip() {
+        for act in [Actuator::thermal(), Actuator::carrier_depletion()] {
+            for d in [0.05, 0.2, 0.5, 0.9] {
+                let phase = act.steady_state_phase(d);
+                let back = act.drive_for_phase(phase);
+                assert!((back - d).abs() < 1e-9, "{:?} d={d}", act.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn depletion_range_is_narrow() {
+        // the §3 observation that motivates thermal locking
+        let cd = Actuator::carrier_depletion();
+        let th = Actuator::thermal();
+        assert!(cd.steady_state_phase(1.0) < 0.2);
+        assert!(th.steady_state_phase(1.0) > 6.0);
+    }
+
+    #[test]
+    fn settling_dynamics() {
+        let mut act = Actuator::thermal();
+        act.set_drive(1.0);
+        let target = act.steady_state_phase(1.0);
+        // after one tau: ~63% there
+        act.step(THERMAL_TAU_S);
+        assert!((act.phase() / target - 0.632).abs() < 0.01);
+        // after many taus: settled
+        for _ in 0..20 {
+            act.step(THERMAL_TAU_S);
+        }
+        assert!((act.phase() - target).abs() < 1e-6 * target);
+        // settle() short-circuits
+        let mut act2 = Actuator::thermal();
+        act2.set_drive(1.0);
+        act2.settle();
+        assert_eq!(act2.phase(), target);
+    }
+
+    #[test]
+    fn settle_time_is_tau_scaled() {
+        let act = Actuator::thermal();
+        let t99 = act.settle_time(0.01);
+        assert!((t99 / THERMAL_TAU_S - (100.0f64).ln()).abs() < 1e-9);
+        // thermal settle dominates the testbed's 2 µJ/MAC (§5): ~ms scale
+        assert!(t99 > 0.5e-3 && t99 < 1.5e-3);
+    }
+}

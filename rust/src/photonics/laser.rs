@@ -1,0 +1,141 @@
+//! WDM laser source array and the optical power budget.
+//!
+//! N continuous-wave lasers (or comb lines) at distinct wavelengths are
+//! multiplexed onto one waveguide bus (§3). Eq. (3) of the paper sets the
+//! minimum per-laser power so each of the M fan-out copies still delivers
+//! enough photons per symbol to beat both the shot-noise limit for N_b bits
+//! and the photodetector's CV_d/e charging requirement:
+//!
+//! ```text
+//!   P_laser ≥ M · (ħω/η) · f_s · max(2^(2·N_b + 1), C·V_d/e)
+//! ```
+//!
+//! (The paper writes the per-symbol photon count; multiplying by the symbol
+//! rate f_s gives power — confirmed by reproducing the paper's §5 wall-plug
+//! totals, see energy::model tests.)
+
+use super::constants::{self, E_CHARGE};
+
+/// One WDM channel source.
+#[derive(Debug, Clone, Copy)]
+pub struct LaserChannel {
+    pub wavelength_nm: f64,
+    pub power_w: f64,
+}
+
+/// The N-channel WDM source feeding the weight bank.
+#[derive(Debug, Clone)]
+pub struct WdmSource {
+    pub channels: Vec<LaserChannel>,
+    /// Combined quantum efficiency η (laser + detector + waveguide loss).
+    pub eta: f64,
+}
+
+impl WdmSource {
+    /// Evenly spaced channels around 1550 nm, each at `power_w`.
+    pub fn uniform(n: usize, power_w: f64) -> WdmSource {
+        let spacing_nm = 0.8; // 100 GHz ITU grid
+        let start = 1550.0 - spacing_nm * (n as f64 - 1.0) / 2.0;
+        WdmSource {
+            channels: (0..n)
+                .map(|i| LaserChannel {
+                    wavelength_nm: start + spacing_nm * i as f64,
+                    power_w,
+                })
+                .collect(),
+            eta: constants::ETA,
+        }
+    }
+
+    /// The §4 testbed's four external-cavity lasers.
+    pub fn testbed() -> WdmSource {
+        WdmSource {
+            channels: constants::TESTBED_WAVELENGTHS_NM
+                .iter()
+                .map(|&wavelength_nm| LaserChannel { wavelength_nm, power_w: 1e-3 })
+                .collect(),
+            eta: constants::ETA,
+        }
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    pub fn total_power_w(&self) -> f64 {
+        self.channels.iter().map(|c| c.power_w).sum()
+    }
+}
+
+/// Eq. (3): minimum per-laser optical power for a weight bank with M rows,
+/// N_b bits of precision, at symbol rate `f_s`.
+pub fn min_laser_power(m_rows: usize, n_bits: u32, f_s_hz: f64) -> f64 {
+    let photons_shot = 2f64.powi(2 * n_bits as i32 + 1);
+    let photons_cap = constants::PD_CAPACITANCE_F * constants::PD_DRIVE_V / E_CHARGE;
+    let photons = photons_shot.max(photons_cap);
+    m_rows as f64 * (constants::photon_energy() / constants::ETA) * f_s_hz * photons
+}
+
+/// Check the channel count fits a single waveguide bus at the given MRR
+/// finesse (§3: finesse 368 supports up to 108 channels — i.e. a channel
+/// needs ≈ finesse/108 ≈ 3.4 linewidths of spacing).
+pub fn max_channels_for_finesse(finesse: f64) -> usize {
+    let per_channel_linewidths =
+        constants::MRR_FINESSE / constants::MAX_WDM_CHANNELS as f64;
+    (finesse / per_channel_linewidths).floor() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_headline_value() {
+        // §5 bank: M = 50, 6 bits, 10 GHz. CV_d/e ≈ 15k photons dominates;
+        // P ≥ 50 · (1.28e-19/0.2) · 1e10 · 1.5e4 ≈ 4.8 mW per laser.
+        let p = min_laser_power(50, 6, 10e9);
+        assert!(p > 4.0e-3 && p < 5.5e-3, "P_laser = {p}");
+    }
+
+    #[test]
+    fn shot_limit_takes_over_at_high_precision() {
+        // at 8 bits, 2^17 = 131k photons > CV/e = 15k
+        let p6 = min_laser_power(50, 6, 10e9);
+        let p8 = min_laser_power(50, 8, 10e9);
+        assert!(p8 / p6 > 5.0, "shot-noise term should dominate: {p6} {p8}");
+    }
+
+    #[test]
+    fn power_scales_linearly_with_fanout_and_rate() {
+        let base = min_laser_power(10, 6, 1e9);
+        assert!((min_laser_power(20, 6, 1e9) / base - 2.0).abs() < 1e-9);
+        assert!((min_laser_power(10, 6, 2e9) / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_grid_spacing() {
+        let src = WdmSource::uniform(20, 1e-3);
+        assert_eq!(src.n_channels(), 20);
+        let d = src.channels[1].wavelength_nm - src.channels[0].wavelength_nm;
+        assert!((d - 0.8).abs() < 1e-9);
+        assert!((src.total_power_w() - 20e-3).abs() < 1e-12);
+        // centred on 1550
+        let mid = (src.channels[0].wavelength_nm
+            + src.channels[19].wavelength_nm) / 2.0;
+        assert!((mid - 1550.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn testbed_has_four_lasers() {
+        let t = WdmSource::testbed();
+        assert_eq!(t.n_channels(), 4);
+        assert!((t.channels[0].wavelength_nm - 1546.558).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finesse_368_supports_108_channels() {
+        assert_eq!(max_channels_for_finesse(368.0), 108);
+        // lower finesse, fewer channels
+        assert!(max_channels_for_finesse(60.0) < 20);
+    }
+}

@@ -1,0 +1,34 @@
+//! Device-level silicon-photonics substrate.
+//!
+//! The paper's testbed is a fabricated SOI photonic integrated circuit; this
+//! module is its simulated equivalent (DESIGN.md §5 substitutions), built
+//! bottom-up from the component physics so every experiment in §2/§4 runs
+//! against the same code path the real chip would exercise:
+//!
+//! * [`constants`]  — physical constants and the paper's component values
+//! * [`mrr`]        — add-drop micro-ring resonator transmission physics
+//! * [`heater`]     — thermal (photoconductive-heater) and carrier-depletion
+//!   tuning actuators with first-order dynamics
+//! * [`calibration`]— feed-forward current→weight LUT + feedback locking
+//! * [`bpd`]        — balanced photodetector with shot/Johnson noise and the
+//!   mis-biased on-chip mode of §4
+//! * [`tia`]        — transimpedance amplifier with tunable gain (Hadamard)
+//! * [`converters`] — DAC/ADC quantisation and rate limits
+//! * [`laser`]      — WDM source array and the Eq. (3) power floor
+//! * [`crosstalk`]  — inter-channel crosstalk from MRR finesse/spacing
+//! * [`weight_bank`]— the full M×N photonic weight bank (Figs. 3(d), 4(b))
+//! * [`noise`]      — shared noise-source model
+
+pub mod bpd;
+pub mod calibration;
+pub mod constants;
+pub mod converters;
+pub mod crosstalk;
+pub mod heater;
+pub mod laser;
+pub mod mrr;
+pub mod noise;
+pub mod tia;
+pub mod weight_bank;
+
+pub use weight_bank::{BankConfig, BpdMode, WeightBank};

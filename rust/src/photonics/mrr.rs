@@ -1,0 +1,340 @@
+//! Add-drop micro-ring resonator (MRR) transmission physics.
+//!
+//! An MRR in add-drop configuration couples a ring of radius ~8 µm to two
+//! bus waveguides (through + drop ports, Fig. 3(a)). The power transmissions
+//! as a function of round-trip phase φ are Lorentzian-shaped (Bogaerts et
+//! al. 2012, symmetric coupling r₁ = r₂ = r, single-pass amplitude a):
+//!
+//! ```text
+//!   T_p(φ) = (r²a² − 2r²a·cosφ + r²) / (1 − 2r²a·cosφ + r⁴a²)
+//!   T_d(φ) = (1 − r²)² a            / (1 − 2r²a·cosφ + r⁴a²)
+//! ```
+//!
+//! With both ports fed to a balanced photodetector the inscribed weight is
+//! `w = T_d − T_p ∈ (−1, 1]` (Fig. 3(b)). The device simulator inverts this
+//! curve (weight → detuning) to "inscribe" weights, mirroring what the
+//! calibration LUT does against bias current on the real chip.
+//!
+//! This implementation must agree with the L1 Pallas kernel's physics
+//! (python/compile/kernels/mrr.py vs ref.py) — enforced by the
+//! `photonic_matvec` artifact cross-check in tests/device_mode.rs.
+
+use crate::{Error, Result};
+
+/// Static design parameters of one add-drop MRR.
+#[derive(Debug, Clone, Copy)]
+pub struct MrrDesign {
+    /// Self-coupling coefficient r of both couplers (paper Fig. 3(b): 0.95).
+    pub self_coupling: f64,
+    /// Single-pass amplitude transmission a (1.0 = lossless).
+    pub loss_a: f64,
+}
+
+impl Default for MrrDesign {
+    fn default() -> Self {
+        // Fig. 3(b): r = 0.95, negligible attenuation. Finesse ≈ 30: fine
+        // for the 4-channel testbed, not for dense WDM (see high_finesse).
+        MrrDesign { self_coupling: 0.95, loss_a: 0.9995 }
+    }
+}
+
+impl MrrDesign {
+    /// The optimised design of §3 (ref 32): finesse ≈ 368, supporting up to
+    /// 108 WDM channels on one bus. Required for the paper's dense
+    /// 50 × 20 weight bank — low-finesse rings alias neighbouring channels
+    /// onto adjacent resonance orders (the FSR wrap is modeled faithfully
+    /// by the periodic transmission functions below).
+    pub fn high_finesse() -> MrrDesign {
+        MrrDesign { self_coupling: 0.996, loss_a: 0.9998 }
+    }
+}
+
+impl MrrDesign {
+    fn denom(&self, phi: f64) -> f64 {
+        let (r, a) = (self.self_coupling, self.loss_a);
+        let r2a = r * r * a;
+        1.0 - 2.0 * r2a * phi.cos() + r2a * r2a
+    }
+
+    /// Through-port power transmission T_p(φ).
+    pub fn through(&self, phi: f64) -> f64 {
+        let (r, a) = (self.self_coupling, self.loss_a);
+        ((r * a).powi(2) - 2.0 * r * r * a * phi.cos() + r * r) / self.denom(phi)
+    }
+
+    /// Drop-port power transmission T_d(φ).
+    pub fn drop(&self, phi: f64) -> f64 {
+        let (r, a) = (self.self_coupling, self.loss_a);
+        (1.0 - r * r).powi(2) * a / self.denom(phi)
+    }
+
+    /// Inscribed weight w(φ) = T_d − T_p.
+    pub fn weight(&self, phi: f64) -> f64 {
+        self.drop(phi) - self.through(phi)
+    }
+
+    /// Maximum achievable weight (at resonance, φ = 0).
+    pub fn weight_max(&self) -> f64 {
+        self.weight(0.0)
+    }
+
+    /// Minimum achievable weight (fully detuned, φ = π).
+    pub fn weight_min(&self) -> f64 {
+        self.weight(std::f64::consts::PI)
+    }
+
+    /// Invert w(φ) on φ ∈ [0, π]: find the detuning that inscribes `w`.
+    ///
+    /// w(φ) is strictly decreasing on [0, π] (resonance → fully detuned),
+    /// so a bisection converges unconditionally. Weights outside the
+    /// achievable range are clamped (the real control system saturates the
+    /// same way). Returns the detuning in radians.
+    pub fn detuning_for_weight(&self, w: f64) -> f64 {
+        let w = w.clamp(self.weight_min(), self.weight_max());
+        let (mut lo, mut hi) = (0.0f64, std::f64::consts::PI);
+        // 60 bisection steps: |hi-lo| < π·2⁻⁶⁰, far below any noise floor.
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.weight(mid) > w {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Full width at half maximum of the drop-port resonance (radians) —
+    /// sets the finesse and hence the WDM channel limit (crosstalk.rs).
+    pub fn fwhm_phase(&self) -> f64 {
+        let peak = self.drop(0.0);
+        let half = peak / 2.0;
+        // bisection for drop(φ) = half on [0, π]
+        let (mut lo, mut hi) = (0.0f64, std::f64::consts::PI);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.drop(mid) > half {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo + hi // half-width * 2
+    }
+
+    /// Finesse = free spectral range / FWHM = 2π / FWHM(φ).
+    pub fn finesse(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.fwhm_phase()
+    }
+}
+
+/// A tunable MRR instance: design + fabrication-induced resonance offset.
+///
+/// Fabrication variation shifts each ring's natural resonance by a random
+/// phase (§3: "can be greater than the tuning range allowed via carrier
+/// depletion"); the actuator must supply `fab_offset + detuning` to inscribe
+/// a weight, which is exactly what the calibration LUT learns.
+#[derive(Debug, Clone)]
+pub struct Mrr {
+    pub design: MrrDesign,
+    /// Static fabrication-induced phase offset (radians).
+    pub fab_offset: f64,
+}
+
+impl Mrr {
+    pub fn new(design: MrrDesign, fab_offset: f64) -> Mrr {
+        Mrr { design, fab_offset }
+    }
+
+    /// Transmissions at an *applied* actuator phase, accounting for the
+    /// fabrication offset: the physical round-trip phase is
+    /// `applied - fab_offset` (the actuator must cancel the offset first).
+    pub fn weight_at(&self, applied_phase: f64) -> f64 {
+        self.design.weight(applied_phase - self.fab_offset)
+    }
+
+    pub fn through_at(&self, applied_phase: f64) -> f64 {
+        self.design.through(applied_phase - self.fab_offset)
+    }
+
+    pub fn drop_at(&self, applied_phase: f64) -> f64 {
+        self.design.drop(applied_phase - self.fab_offset)
+    }
+
+    /// Ideal applied phase to inscribe weight `w` (what feedback locking
+    /// converges to; feed-forward calibration approximates it with a LUT).
+    pub fn ideal_phase_for(&self, w: f64) -> f64 {
+        self.fab_offset + self.design.detuning_for_weight(w)
+    }
+}
+
+/// All-pass (single-bus) MRR used by the input modulator array (§3): only a
+/// through port, transmission dips to ~0 on resonance. Used to amplitude-
+/// encode the error vector e onto each WDM channel.
+#[derive(Debug, Clone, Copy)]
+pub struct AllPassMrr {
+    pub self_coupling: f64,
+    pub loss_a: f64,
+}
+
+impl Default for AllPassMrr {
+    fn default() -> Self {
+        // Critically coupled (r = a): full extinction on resonance, which
+        // is what an amplitude modulator wants.
+        AllPassMrr { self_coupling: 0.95, loss_a: 0.95 }
+    }
+}
+
+impl AllPassMrr {
+    /// Through-port power transmission of an all-pass ring.
+    pub fn through(&self, phi: f64) -> f64 {
+        let (r, a) = (self.self_coupling, self.loss_a);
+        (a * a - 2.0 * r * a * phi.cos() + r * r)
+            / (1.0 - 2.0 * r * a * phi.cos() + (r * a) * (r * a))
+    }
+
+    /// Detuning that transmits fraction `t` ∈ [t_min, ~1] of the carrier —
+    /// the amplitude-encoding inverse used by the input modulators.
+    pub fn detuning_for_transmission(&self, t: f64) -> f64 {
+        let t_min = self.through(0.0);
+        let t_max = self.through(std::f64::consts::PI);
+        let t = t.clamp(t_min.min(t_max), t_max.max(t_min));
+        let (mut lo, mut hi) = (0.0f64, std::f64::consts::PI);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.through(mid) < t {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+}
+
+/// Convenience: batch-invert weights to detunings for a whole matrix (used
+/// when inscribing B(k) into the weight bank and by the photonic_matvec
+/// artifact path).
+pub fn detunings_for_weights(design: &MrrDesign, weights: &[f32]) -> Vec<f32> {
+    weights
+        .iter()
+        .map(|&w| design.detuning_for_weight(w as f64) as f32)
+        .collect()
+}
+
+/// Check a proposed weight is inside the inscribable range.
+pub fn validate_weight(design: &MrrDesign, w: f64) -> Result<()> {
+    if w > design.weight_max() + 1e-9 || w < design.weight_min() - 1e-9 {
+        return Err(Error::Photonics(format!(
+            "weight {w} outside inscribable range [{:.4}, {:.4}]",
+            design.weight_min(),
+            design.weight_max()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn lossless_energy_conservation() {
+        let d = MrrDesign { self_coupling: 0.95, loss_a: 1.0 };
+        for i in 0..100 {
+            let phi = -std::f64::consts::PI + i as f64 * 0.063;
+            let tot = d.through(phi) + d.drop(phi);
+            assert!((tot - 1.0).abs() < 1e-12, "phi={phi}: {tot}");
+        }
+    }
+
+    #[test]
+    fn fig3b_extremes() {
+        // Fig. 3(b): w = +1 at resonance, ≈ -1 fully detuned (r = 0.95).
+        let d = MrrDesign { self_coupling: 0.95, loss_a: 1.0 };
+        assert!((d.weight_max() - 1.0).abs() < 1e-12);
+        assert!(d.weight_min() < -0.99);
+        // through dips to 0 on resonance for the lossless symmetric ring
+        assert!(d.through(0.0).abs() < 1e-12);
+        assert!((d.drop(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_monotone_on_half_period() {
+        let d = MrrDesign::default();
+        let mut prev = f64::INFINITY;
+        for i in 0..=1000 {
+            let phi = std::f64::consts::PI * i as f64 / 1000.0;
+            let w = d.weight(phi);
+            assert!(w <= prev + 1e-12, "not monotone at {phi}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn detuning_inversion_roundtrip() {
+        check("mrr-weight-inversion", 50, |rng| {
+            let d = MrrDesign {
+                self_coupling: rng.uniform_in(0.85, 0.99),
+                loss_a: rng.uniform_in(0.99, 1.0),
+            };
+            let w = rng.uniform_in(d.weight_min(), d.weight_max());
+            let phi = d.detuning_for_weight(w);
+            let got = d.weight(phi);
+            if (got - w).abs() > 1e-9 {
+                return Err(format!("w={w} -> phi={phi} -> {got}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn out_of_range_weights_clamp() {
+        let d = MrrDesign::default();
+        assert_eq!(d.detuning_for_weight(2.0), d.detuning_for_weight(d.weight_max()));
+        let w_lo = d.weight(d.detuning_for_weight(-5.0));
+        assert!((w_lo - d.weight_min()).abs() < 1e-9);
+        assert!(validate_weight(&d, 0.5).is_ok());
+        assert!(validate_weight(&d, 1.5).is_err());
+    }
+
+    #[test]
+    fn fab_offset_shifts_response() {
+        let mrr = Mrr::new(MrrDesign::default(), 0.4);
+        // applying exactly the offset puts the ring on resonance
+        assert!((mrr.weight_at(0.4) - mrr.design.weight_max()).abs() < 1e-12);
+        let phi = mrr.ideal_phase_for(0.25);
+        assert!((mrr.weight_at(phi) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn finesse_scale_is_physical() {
+        // r = 0.95 gives finesse ~ 60; sharper coupling gives higher finesse.
+        let f95 = MrrDesign { self_coupling: 0.95, loss_a: 1.0 }.finesse();
+        assert!(f95 > 25.0 && f95 < 100.0, "{f95}");
+        let f99 = MrrDesign { self_coupling: 0.99, loss_a: 1.0 }.finesse();
+        assert!(f99 > 2.0 * f95, "f99={f99} f95={f95}");
+    }
+
+    #[test]
+    fn allpass_encoding_inverts() {
+        let ap = AllPassMrr::default();
+        for t in [0.1, 0.3, 0.5, 0.8, 0.95] {
+            let phi = ap.detuning_for_transmission(t);
+            assert!((ap.through(phi) - t).abs() < 1e-9, "t={t}");
+        }
+        // on resonance nearly all power drops out of the bus
+        assert!(ap.through(0.0) < 0.05);
+    }
+
+    #[test]
+    fn batch_inversion_matches_scalar() {
+        let d = MrrDesign::default();
+        let ws = [-0.8f32, -0.2, 0.0, 0.5, 0.9];
+        let phis = detunings_for_weights(&d, &ws);
+        for (&w, &phi) in ws.iter().zip(&phis) {
+            assert!((d.weight(phi as f64) - w as f64).abs() < 1e-6);
+        }
+    }
+}

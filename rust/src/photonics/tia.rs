@@ -1,0 +1,137 @@
+//! Transimpedance amplifier (TIA) with tunable gain.
+//!
+//! Each weight-bank row's BPD feeds a TIA that converts photocurrent to
+//! voltage. The paper's key trick (§3): the Hadamard product with g'(a) is
+//! *free* — the control system sets each TIA's gain to the activation
+//! derivative (0 or 1 for ReLU) before the optical cycle fires, so the
+//! element-wise multiply happens in the electrical domain with no extra
+//! cycle. Gain setting does not limit speed because a(k) is known from the
+//! forward pass.
+
+use crate::{Error, Result};
+
+/// One tunable-gain TIA channel.
+#[derive(Debug, Clone)]
+pub struct Tia {
+    /// Programmable gain (dimensionless here; physically Ω · responsivity).
+    gain: f64,
+    /// Gain control resolution in bits (DAC-set); 0 = continuous.
+    pub gain_bits: u32,
+    /// Output saturation (normalised units).
+    pub v_sat: f64,
+}
+
+impl Default for Tia {
+    fn default() -> Self {
+        Tia { gain: 1.0, gain_bits: 0, v_sat: 4.0 }
+    }
+}
+
+impl Tia {
+    pub fn with_resolution(gain_bits: u32) -> Tia {
+        Tia { gain_bits, ..Tia::default() }
+    }
+
+    /// Program the gain (the g'(a) element for this row). Gains are
+    /// quantised to `gain_bits` if configured, mirroring the control DAC.
+    pub fn set_gain(&mut self, g: f64) -> Result<()> {
+        if !(0.0..=1.0).contains(&g) {
+            return Err(Error::Photonics(format!(
+                "TIA gain {g} outside [0, 1] (activation derivatives only)"
+            )));
+        }
+        self.gain = if self.gain_bits > 0 {
+            let levels = (1u64 << self.gain_bits) as f64 - 1.0;
+            (g * levels).round() / levels
+        } else {
+            g
+        };
+        Ok(())
+    }
+
+    pub fn gain(&self) -> f64 {
+        self.gain
+    }
+
+    /// Amplify one BPD readout, with output saturation.
+    pub fn amplify(&self, i_in: f64) -> f64 {
+        (self.gain * i_in).clamp(-self.v_sat, self.v_sat)
+    }
+}
+
+/// A row of TIAs programmed from a g'(a) vector in one call.
+#[derive(Debug, Clone)]
+pub struct TiaArray {
+    pub tias: Vec<Tia>,
+}
+
+impl TiaArray {
+    pub fn new(rows: usize, gain_bits: u32) -> TiaArray {
+        TiaArray { tias: vec![Tia::with_resolution(gain_bits); rows] }
+    }
+
+    /// Program all gains from the activation-derivative vector.
+    pub fn program(&mut self, gprime: &[f32]) -> Result<()> {
+        if gprime.len() != self.tias.len() {
+            return Err(Error::Photonics(format!(
+                "g' length {} != {} TIA rows",
+                gprime.len(),
+                self.tias.len()
+            )));
+        }
+        for (tia, &g) in self.tias.iter_mut().zip(gprime) {
+            tia.set_gain(g as f64)?;
+        }
+        Ok(())
+    }
+
+    pub fn amplify_row(&self, row: usize, i_in: f64) -> f64 {
+        self.tias[row].amplify(i_in)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_gating() {
+        let mut tia = Tia::default();
+        tia.set_gain(0.0).unwrap();
+        assert_eq!(tia.amplify(0.7), 0.0);
+        tia.set_gain(1.0).unwrap();
+        assert_eq!(tia.amplify(0.7), 0.7);
+    }
+
+    #[test]
+    fn rejects_invalid_gains() {
+        let mut tia = Tia::default();
+        assert!(tia.set_gain(-0.1).is_err());
+        assert!(tia.set_gain(1.5).is_err());
+    }
+
+    #[test]
+    fn gain_quantisation() {
+        let mut tia = Tia::with_resolution(2); // levels: 0, 1/3, 2/3, 1
+        tia.set_gain(0.30).unwrap();
+        assert!((tia.gain() - 1.0 / 3.0).abs() < 1e-12);
+        tia.set_gain(0.95).unwrap();
+        assert!((tia.gain() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let tia = Tia { gain: 1.0, gain_bits: 0, v_sat: 2.0 };
+        assert_eq!(tia.amplify(10.0), 2.0);
+        assert_eq!(tia.amplify(-10.0), -2.0);
+    }
+
+    #[test]
+    fn array_programs_all_rows() {
+        let mut arr = TiaArray::new(3, 0);
+        arr.program(&[1.0, 0.0, 1.0]).unwrap();
+        assert_eq!(arr.amplify_row(0, 0.5), 0.5);
+        assert_eq!(arr.amplify_row(1, 0.5), 0.0);
+        assert!(arr.program(&[1.0]).is_err());
+    }
+}

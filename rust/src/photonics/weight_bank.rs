@@ -1,0 +1,533 @@
+//! The photonic weight bank: M rows × N WDM channels of add-drop MRRs
+//! (Figs. 3(d) and 4(b)) simulated at device level.
+//!
+//! Composition of the whole §2–§3 signal chain:
+//!
+//! 1. WDM carriers (one per column) amplitude-encoded with the input vector
+//!    by all-pass input modulators (+ laser RIN),
+//! 2. a 1×M splitter fanning the bus into every row,
+//! 3. per-row MRR arrays whose rings are *inscribed* with the weight tile
+//!    through calibration LUT + feedback locking (fabrication offsets and
+//!    residual lock error included), with inter-channel crosstalk,
+//! 4. per-row balanced photodetectors (shot/thermal noise; optional
+//!    mis-biased on-chip mode),
+//! 5. per-row TIAs whose gains implement the Hadamard product,
+//! 6. an optional ADC.
+//!
+//! Outputs are in the normalised domain ([-1, 1] for full-scale inputs), as
+//! in Figs. 3(c)/5(a); callers rescale digitally (see kernels/ref.py for
+//! the identical convention on the L1 side).
+
+use super::bpd::Bpd;
+use super::calibration::{CalibrationTable, FeedbackController};
+use super::converters::Quantizer;
+use super::crosstalk::CrosstalkModel;
+use super::heater::Actuator;
+use super::mrr::{Mrr, MrrDesign};
+use super::noise::NoiseModel;
+use super::tia::TiaArray;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Which photodetection circuit reads the rows (§4 experiment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BpdMode {
+    /// Noise-free reference device.
+    Ideal,
+    /// Grating couplers to the off-chip Thorlabs BDX1BA (σ ≈ 0.098).
+    OffChip,
+    /// Integrated germanium PIN pair with the mis-biased control circuit
+    /// (σ ≈ 0.202).
+    OnChip,
+    /// Single-MRR characterisation chain (Fig. 3(c), σ ≈ 0.019).
+    SingleMrr,
+}
+
+/// Static configuration of a bank instance.
+#[derive(Debug, Clone)]
+pub struct BankConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub bpd_mode: BpdMode,
+    /// Ring design (sets finesse and hence how many channels fit the FSR).
+    pub design: MrrDesign,
+    /// WDM grid spacing in MRR linewidths (≈3.4 at the paper's design point).
+    pub spacing_linewidths: f64,
+    /// ADC resolution; 0 = analog readout (the §4 power-meter protocol).
+    pub adc_bits: u32,
+    /// Device seed: fabrication offsets + intrinsic noise stream.
+    pub seed: u64,
+}
+
+impl BankConfig {
+    /// The paper's headline bank geometry (50 × 20), using the §3
+    /// high-finesse ring design (finesse ≈ 368): 20 channels at 3.4
+    /// linewidths occupy ~68 linewidths of a 368-linewidth FSR.
+    pub fn paper(bpd_mode: BpdMode) -> BankConfig {
+        BankConfig {
+            rows: super::constants::BANK_ROWS,
+            cols: super::constants::BANK_COLS,
+            bpd_mode,
+            design: MrrDesign::high_finesse(),
+            spacing_linewidths: 3.4,
+            adc_bits: 0,
+            seed: 42,
+        }
+    }
+
+    /// The §4 testbed: a 1 × 4 array of the Fig. 3(b) rings (finesse ≈ 30).
+    /// Channels at 7 linewidths keep all four inside one FSR.
+    pub fn testbed(bpd_mode: BpdMode) -> BankConfig {
+        BankConfig {
+            rows: 1,
+            cols: 4,
+            bpd_mode,
+            design: MrrDesign::default(),
+            spacing_linewidths: 7.0,
+            adc_bits: 0,
+            seed: 42,
+        }
+    }
+
+    /// Channels must fit within one free spectral range, or neighbouring
+    /// resonance orders alias (weights become unphysical).
+    pub fn validate(&self) -> Result<()> {
+        let span = self.cols as f64 * self.spacing_linewidths;
+        let finesse = self.design.finesse();
+        if span > finesse {
+            return Err(Error::Photonics(format!(
+                "{} channels x {} linewidths = {span:.0} exceeds the ring \
+                 FSR ({finesse:.0} linewidths): raise finesse or shrink grid",
+                self.cols, self.spacing_linewidths
+            )));
+        }
+        Ok(())
+    }
+}
+
+struct Ring {
+    mrr: Mrr,
+    table: CalibrationTable,
+    /// Drive locked in by the last inscribe().
+    drive: f64,
+    /// Physically achieved weight at that drive (incl. residual lock error).
+    w_actual: f64,
+    /// Local slope dw/dφ at the operating point (for fast jitter mapping).
+    slope: f64,
+}
+
+/// A device-level weight bank.
+pub struct WeightBank {
+    pub cfg: BankConfig,
+    /// Device identity (retained for drift modelling / diagnostics).
+    #[allow(dead_code)]
+    design: MrrDesign,
+    actuator: Actuator,
+    rings: Vec<Ring>, // row-major rows × cols
+    bpd: Bpd,
+    noise: NoiseModel,
+    tias: TiaArray,
+    adc: Option<Quantizer>,
+    crosstalk: CrosstalkModel,
+    /// Effective per-ring weights after crosstalk (row-major), refreshed by
+    /// inscribe().
+    w_eff: Vec<f64>,
+    rng: Pcg64,
+    /// Count of bank operational cycles performed (for energy/speed roll-up).
+    pub cycles: u64,
+}
+
+impl WeightBank {
+    pub fn new(cfg: BankConfig) -> Result<WeightBank> {
+        if cfg.rows == 0 || cfg.cols == 0 {
+            return Err(Error::Photonics("bank must have rows, cols >= 1".into()));
+        }
+        cfg.validate()?;
+        let design = cfg.design;
+        let actuator = Actuator::thermal();
+        let mut rng = Pcg64::new(cfg.seed, 0xba9c);
+        let (bpd, noise) = match cfg.bpd_mode {
+            BpdMode::Ideal => (Bpd::ideal(), NoiseModel::ideal()),
+            BpdMode::OffChip => (Bpd::offchip(), NoiseModel::offchip_bpd()),
+            BpdMode::OnChip => (Bpd::onchip(), NoiseModel::onchip_bpd()),
+            BpdMode::SingleMrr => {
+                let mut b = Bpd::offchip();
+                b.noise = NoiseModel::single_mrr();
+                (b, NoiseModel::single_mrr())
+            }
+        };
+
+        // Fabricate + calibrate each ring (feed-forward sweep, 3x averaged,
+        // exactly the §4 protocol).
+        let cal_noise = noise.thermal * 0.5;
+        let mut rings = Vec::with_capacity(cfg.rows * cfg.cols);
+        for _ in 0..cfg.rows * cfg.cols {
+            let fab_offset = rng.uniform_in(0.0, 1.2);
+            let mrr = Mrr::new(design, fab_offset);
+            let table =
+                CalibrationTable::calibrate(&mrr, &actuator, 256, cal_noise, 3, &mut rng)?;
+            rings.push(Ring { mrr, table, drive: 0.0, w_actual: 0.0, slope: 0.0 });
+        }
+
+        let n_total = cfg.rows * cfg.cols;
+        let mut bank = WeightBank {
+            tias: TiaArray::new(cfg.rows, 0),
+            crosstalk: CrosstalkModel::new(design, cfg.spacing_linewidths),
+            adc: (cfg.adc_bits > 0).then(|| Quantizer::new(cfg.adc_bits, 1.0)),
+            w_eff: vec![0.0; n_total],
+            design,
+            actuator,
+            rings,
+            bpd,
+            noise,
+            cfg,
+            rng,
+            cycles: 0,
+        };
+        // start from a neutral inscription
+        let zeros = Tensor::zeros(&[bank.cfg.rows, bank.cfg.cols]);
+        bank.inscribe(&zeros)?;
+        Ok(bank)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cfg.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cfg.cols
+    }
+
+    /// Inscribe a (rows × cols) weight tile into the bank: feedback-lock
+    /// every ring onto its target, then refresh the crosstalk-effective
+    /// weights. Weights outside the achievable range are clamped by the
+    /// lock (as on the real chip).
+    pub fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+        if weights.shape() != [self.cfg.rows, self.cfg.cols] {
+            return Err(Error::Shape(format!(
+                "inscribe expects ({}, {}), got {:?}",
+                self.cfg.rows,
+                self.cfg.cols,
+                weights.shape()
+            )));
+        }
+        let fb = FeedbackController::default();
+        let lock_readout = self.noise.thermal * 0.25;
+        for (idx, ring) in self.rings.iter_mut().enumerate() {
+            let target = weights.data()[idx] as f64;
+            let lock = fb.lock(
+                &ring.mrr,
+                &self.actuator,
+                &ring.table,
+                target,
+                lock_readout,
+                &mut self.rng,
+            );
+            ring.drive = lock.drive;
+            ring.w_actual = lock.achieved_weight;
+            // numerical slope dw/dφ at the operating point
+            let phase = self.actuator.steady_state_phase(lock.drive);
+            let h = 1e-4;
+            ring.slope =
+                (ring.mrr.weight_at(phase + h) - ring.mrr.weight_at(phase - h)) / (2.0 * h);
+        }
+        // crosstalk-effective weights, row by row
+        for r in 0..self.cfg.rows {
+            let row_w: Vec<f32> = (0..self.cfg.cols)
+                .map(|c| self.rings[r * self.cfg.cols + c].w_actual as f32)
+                .collect();
+            let eff = self.crosstalk.effective_weights(&row_w);
+            self.w_eff[r * self.cfg.cols..(r + 1) * self.cfg.cols]
+                .copy_from_slice(&eff);
+        }
+        Ok(())
+    }
+
+    /// Program the per-row TIA gains with g'(a) (Hadamard product, §3).
+    pub fn set_tia_gains(&mut self, gprime: &[f32]) -> Result<()> {
+        self.tias.program(gprime)
+    }
+
+    /// Reset TIA gains to unity (pure mat-vec mode).
+    pub fn clear_tia_gains(&mut self) {
+        let ones = vec![1.0f32; self.cfg.rows];
+        self.tias.program(&ones).expect("unity gains are valid");
+    }
+
+    /// One operational cycle: drive the bus with channel amplitudes
+    /// `x ∈ [0, 1]^cols`, return the normalised per-row outputs.
+    pub fn matvec(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.cfg.cols {
+            return Err(Error::Shape(format!(
+                "matvec expects {} channel amplitudes, got {}",
+                self.cfg.cols,
+                x.len()
+            )));
+        }
+        self.cycles += 1;
+        let n = self.cfg.cols;
+        // amplitude encoding + RIN, shared by all rows (same bus + splitter)
+        let mut amps = [0.0f64; 128];
+        let amps = &mut amps[..n];
+        for (a, &xi) in amps.iter_mut().zip(x) {
+            let xi = xi.clamp(0.0, 1.0) as f64;
+            *a = xi * self.noise.sample_rin(&mut self.rng);
+        }
+        let mut out = Vec::with_capacity(self.cfg.rows);
+        for r in 0..self.cfg.rows {
+            // per-ring instantaneous weight = crosstalk-effective weight +
+            // phase jitter mapped through the local Lorentzian slope
+            let mut diff = 0.0; // Σ x_i (T_d − T_p) = Σ x_i w_i
+            for c in 0..n {
+                let ring = &self.rings[r * n + c];
+                let jitter =
+                    self.noise.sample_phase_jitter(&mut self.rng) * ring.slope;
+                let w_inst = (self.w_eff[r * n + c] + jitter).clamp(-1.0, 1.0);
+                diff += amps[c] * w_inst;
+            }
+            // BPD expects (drop_sum - through_sum) = diff (already the
+            // differential), normalised by channel count inside read()
+            let i_out = self.bpd.read(diff, 0.0, n, &mut self.rng);
+            let v = self.tias.amplify_row(r, i_out);
+            out.push(match &self.adc {
+                Some(q) => q.quantize(v) as f32,
+                None => v as f32,
+            });
+        }
+        Ok(out)
+    }
+
+    /// 1×N inner product (the §4 experiment shape). Uses row 0.
+    pub fn inner_product(&mut self, x: &[f32], w: &[f32]) -> Result<f32> {
+        if w.len() != self.cfg.cols {
+            return Err(Error::Shape("weight length != bank cols".into()));
+        }
+        let mut tile = Tensor::zeros(&[self.cfg.rows, self.cfg.cols]);
+        tile.data_mut()[..w.len()].copy_from_slice(w);
+        self.inscribe(&tile)?;
+        Ok(self.matvec(x)?[0])
+    }
+
+    /// Single-MRR multiplication (Fig. 3(c)): x·w through ring (0, 0) with
+    /// all other channels dark.
+    pub fn multiply(&mut self, x: f32, w: f32) -> Result<f32> {
+        let mut ws = vec![0.0f32; self.cfg.cols];
+        ws[0] = w;
+        let mut xs = vec![0.0f32; self.cfg.cols];
+        xs[0] = x;
+        // normalise against cols: matvec divides by n, multiply is 1-channel
+        let y = self.inner_product(&xs, &ws)?;
+        Ok(y * self.cfg.cols as f32)
+    }
+
+    /// The inscribable weight range of ring (0,0)'s calibration (useful for
+    /// validating targets before inscribing).
+    pub fn weight_range(&self) -> (f64, f64) {
+        self.rings[0].table.weight_range()
+    }
+
+    /// Snapshot the current inscription (drives, achieved weights, slopes,
+    /// crosstalk-effective weights). Models the paper's §5 analog weight
+    /// memory: the fixed B(k) tiles are stored once and switching between
+    /// them costs (near-)nothing, unlike re-locking every ring.
+    pub fn snapshot(&self) -> Inscription {
+        Inscription {
+            rows: self.cfg.rows,
+            cols: self.cfg.cols,
+            ring_state: self
+                .rings
+                .iter()
+                .map(|r| (r.drive, r.w_actual, r.slope))
+                .collect(),
+            w_eff: self.w_eff.clone(),
+        }
+    }
+
+    /// Restore a previously snapshotted inscription (an analog-memory
+    /// weight switch). Does not consume an operational cycle.
+    pub fn restore(&mut self, ins: &Inscription) -> Result<()> {
+        if (ins.rows, ins.cols) != (self.cfg.rows, self.cfg.cols) {
+            return Err(Error::Shape("inscription geometry mismatch".into()));
+        }
+        for (ring, &(drive, w_actual, slope)) in
+            self.rings.iter_mut().zip(&ins.ring_state)
+        {
+            ring.drive = drive;
+            ring.w_actual = w_actual;
+            ring.slope = slope;
+        }
+        self.w_eff.clone_from(&ins.w_eff);
+        Ok(())
+    }
+}
+
+/// A stored weight-bank inscription (see [`WeightBank::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct Inscription {
+    rows: usize,
+    cols: usize,
+    ring_state: Vec<(f64, f64, f64)>,
+    w_eff: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn ideal_bank(rows: usize, cols: usize) -> WeightBank {
+        WeightBank::new(BankConfig {
+            rows,
+            cols,
+            bpd_mode: BpdMode::Ideal,
+            design: MrrDesign::high_finesse(),
+            spacing_linewidths: 8.0, // wide spacing: negligible crosstalk
+            adc_bits: 0,
+            seed: 7,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn ideal_bank_computes_exact_matvec() {
+        let mut bank = ideal_bank(3, 4);
+        let w = Tensor::new(
+            &[3, 4],
+            vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2, 0.0, 0.9, 0.25, -0.75, 0.4, -0.1],
+        )
+        .unwrap();
+        bank.inscribe(&w).unwrap();
+        let x = [1.0f32, 0.5, 0.8, 0.2];
+        let got = bank.matvec(&x).unwrap();
+        for r in 0..3 {
+            let want: f32 = (0..4).map(|c| w.at(r, c) * x[c]).sum::<f32>() / 4.0;
+            assert!(
+                (got[r] - want).abs() < 0.02,
+                "row {r}: got {} want {want}",
+                got[r]
+            );
+        }
+        assert_eq!(bank.cycles, 1);
+    }
+
+    #[test]
+    fn tia_gains_gate_rows() {
+        let mut bank = ideal_bank(2, 3);
+        let w = Tensor::full(&[2, 3], 0.5);
+        bank.inscribe(&w).unwrap();
+        bank.set_tia_gains(&[0.0, 1.0]).unwrap();
+        let out = bank.matvec(&[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(out[0], 0.0);
+        assert!(out[1].abs() > 0.3);
+        bank.clear_tia_gains();
+        let out = bank.matvec(&[1.0, 1.0, 1.0]).unwrap();
+        assert!(out[0].abs() > 0.3);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let mut bank = ideal_bank(2, 3);
+        assert!(bank.inscribe(&Tensor::zeros(&[3, 2])).is_err());
+        assert!(bank.matvec(&[1.0, 1.0]).is_err());
+        assert!(WeightBank::new(BankConfig {
+            rows: 0,
+            cols: 1,
+            bpd_mode: BpdMode::Ideal,
+            design: MrrDesign::default(),
+            spacing_linewidths: 3.4,
+            adc_bits: 0,
+            seed: 1,
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn adc_quantises_output() {
+        let mut bank = WeightBank::new(BankConfig {
+            rows: 1,
+            cols: 2,
+            bpd_mode: BpdMode::Ideal,
+            design: MrrDesign::default(),
+            spacing_linewidths: 8.0,
+            adc_bits: 2,
+            seed: 3,
+        })
+        .unwrap();
+        bank.inscribe(&Tensor::new(&[1, 2], vec![0.6, 0.0]).unwrap()).unwrap();
+        let out = bank.matvec(&[1.0, 0.0]).unwrap()[0];
+        // 2-bit levels: multiples of 0.5
+        assert!((out * 2.0 - (out * 2.0).round()).abs() < 1e-6, "{out}");
+    }
+
+    #[test]
+    fn noisy_modes_have_ordered_error() {
+        // device-level reproduction of the Fig. 5(a) ordering:
+        // σ(on-chip) > σ(off-chip) > σ(ideal) = 0 for 1x4 inner products
+        let mut rng = Pcg64::seed(99);
+        let sigma_of = |mode: BpdMode, rng: &mut Pcg64| {
+            let mut bank = WeightBank::new(BankConfig::testbed(mode)).unwrap();
+            let mut s = Summary::new();
+            for _ in 0..120 {
+                let w: Vec<f32> = (0..4).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+                let x: Vec<f32> = (0..4).map(|_| rng.uniform() as f32).collect();
+                let got = bank.inner_product(&x, &w).unwrap();
+                let want: f32 =
+                    w.iter().zip(&x).map(|(&wi, &xi)| wi * xi).sum::<f32>() / 4.0;
+                s.add((got - want) as f64);
+            }
+            s.std()
+        };
+        let s_ideal = sigma_of(BpdMode::Ideal, &mut rng);
+        let s_off = sigma_of(BpdMode::OffChip, &mut rng);
+        let s_on = sigma_of(BpdMode::OnChip, &mut rng);
+        assert!(s_ideal < 0.02, "ideal σ={s_ideal}");
+        assert!(s_off > s_ideal && s_on > 1.5 * s_off, "{s_ideal} {s_off} {s_on}");
+    }
+
+    #[test]
+    fn multiply_covers_full_quadrants() {
+        let mut bank = WeightBank::new(BankConfig::testbed(BpdMode::Ideal)).unwrap();
+        for (x, w) in [(0.8f32, 0.5f32), (0.9, -0.7), (0.3, 0.3), (1.0, -1.0)] {
+            let got = bank.multiply(x, w).unwrap();
+            assert!((got - x * w).abs() < 0.05, "x={x} w={w} got={got}");
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut bank = ideal_bank(2, 3);
+        let w1 = Tensor::new(&[2, 3], vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2]).unwrap();
+        let w2 = Tensor::full(&[2, 3], -0.4);
+        bank.inscribe(&w1).unwrap();
+        let snap1 = bank.snapshot();
+        let out1 = bank.matvec(&[1.0, 0.5, 0.8]).unwrap();
+        bank.inscribe(&w2).unwrap();
+        let out2 = bank.matvec(&[1.0, 0.5, 0.8]).unwrap();
+        assert_ne!(out1, out2);
+        bank.restore(&snap1).unwrap();
+        let out1b = bank.matvec(&[1.0, 0.5, 0.8]).unwrap();
+        // ideal bank: identical outputs after restore
+        for (a, b) in out1.iter().zip(&out1b) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // geometry mismatch rejected
+        let other = ideal_bank(3, 2).snapshot();
+        assert!(bank.restore(&other).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut bank = WeightBank::new(BankConfig {
+                seed,
+                ..BankConfig::testbed(BpdMode::OffChip)
+            })
+            .unwrap();
+            bank.inner_product(&[0.5, 0.6, 0.7, 0.8], &[0.1, -0.2, 0.3, -0.4])
+                .unwrap()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+}

@@ -1,0 +1,259 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The Rust side is entirely manifest-driven: no artifact shape is
+//! hard-coded here. `aot.py` records, for every artifact, the ordered
+//! input and output names/shapes/dtypes (HLO parameter order == manifest
+//! order), plus the network configurations they were traced for.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+use crate::{Error, Result};
+
+/// One input or output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path to the `.hlo.txt`, resolved relative to the manifest location.
+    pub path: PathBuf,
+    pub config: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| {
+                Error::Manifest(format!("artifact {} has no input '{name}'", self.name))
+            })
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .ok_or_else(|| {
+                Error::Manifest(format!("artifact {} has no output '{name}'", self.name))
+            })
+    }
+}
+
+/// Network configuration an artifact set was traced for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetDims {
+    pub d_in: usize,
+    pub d_h1: usize,
+    pub d_h2: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub configs: BTreeMap<String, NetDims>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Value::parse(text)?;
+        let format = root
+            .get("format")
+            .as_usize()
+            .ok_or_else(|| Error::Manifest("missing 'format'".into()))?;
+        if format != 1 {
+            return Err(Error::Manifest(format!("unsupported format {format}")));
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in root
+            .require("artifacts")?
+            .as_object()
+            .ok_or_else(|| Error::Manifest("'artifacts' not an object".into()))?
+        {
+            let file = art
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("artifact 'file' not a string".into()))?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path: dir.join(file),
+                config: art.get("config").as_str().unwrap_or("").to_string(),
+                inputs: parse_io(art.require("inputs")?)?,
+                outputs: parse_io(art.require("outputs")?)?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = root.get("configs").as_object() {
+            for (name, c) in cfgs {
+                // the special "bank" entry has different keys; skip non-net configs
+                if c.get("d_in").as_usize().is_none() {
+                    continue;
+                }
+                let dim = |k: &str| -> Result<usize> {
+                    c.get(k)
+                        .as_usize()
+                        .ok_or_else(|| Error::Manifest(format!("config {name}: bad '{k}'")))
+                };
+                configs.insert(
+                    name.clone(),
+                    NetDims {
+                        d_in: dim("d_in")?,
+                        d_h1: dim("d_h1")?,
+                        d_h2: dim("d_h2")?,
+                        d_out: dim("d_out")?,
+                        batch: dim("batch")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest { dir, artifacts, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}' in manifest")))
+    }
+
+    pub fn net_dims(&self, config: &str) -> Result<&NetDims> {
+        self.configs
+            .get(config)
+            .ok_or_else(|| Error::Manifest(format!("no config '{config}' in manifest")))
+    }
+}
+
+fn parse_io(v: &Value) -> Result<Vec<IoSpec>> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| Error::Manifest("io list not an array".into()))?;
+    arr.iter()
+        .map(|item| {
+            let name = item
+                .require("name")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("io 'name' not a string".into()))?
+                .to_string();
+            let shape = item
+                .require("shape")?
+                .as_array()
+                .ok_or_else(|| Error::Manifest("io 'shape' not an array".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Manifest("bad shape dim".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = item.get("dtype").as_str().unwrap_or("f32").to_string();
+            if dtype != "f32" {
+                return Err(Error::Manifest(format!(
+                    "io '{name}': only f32 supported, got {dtype}"
+                )));
+            }
+            Ok(IoSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "configs": {
+        "tiny": {"d_in": 16, "d_h1": 32, "d_h2": 32, "d_out": 4, "batch": 8},
+        "bank": {"rows": 50, "cols": 20}
+      },
+      "artifacts": {
+        "fwd_tiny": {
+          "file": "fwd_tiny.hlo.txt",
+          "config": "tiny",
+          "inputs": [
+            {"name": "w1", "shape": [16, 32], "dtype": "f32"},
+            {"name": "x", "shape": [8, 16], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"name": "logits", "shape": [8, 4], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let art = m.artifact("fwd_tiny").unwrap();
+        assert_eq!(art.path, PathBuf::from("/tmp/a/fwd_tiny.hlo.txt"));
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.inputs[0].shape, vec![16, 32]);
+        assert_eq!(art.inputs[0].elem_count(), 512);
+        assert_eq!(art.input_index("x").unwrap(), 1);
+        assert_eq!(art.output_index("logits").unwrap(), 0);
+        assert!(art.input_index("nope").is_err());
+        let dims = m.net_dims("tiny").unwrap();
+        assert_eq!(dims.batch, 8);
+        // "bank" config is skipped (not a network config)
+        assert!(m.net_dims("bank").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(r#"{"format": 2, "artifacts": {}}"#, PathBuf::new()).is_err());
+        let bad_dtype = r#"{"format": 1, "artifacts": {"a": {"file": "a",
+            "inputs": [{"name": "x", "shape": [1], "dtype": "s8"}],
+            "outputs": []}}}"#;
+        assert!(Manifest::parse(bad_dtype, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // integration hook: when `make artifacts` has run, validate for real
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("dfa_step_tiny"));
+            let art = m.artifact("dfa_step_tiny").unwrap();
+            assert_eq!(art.inputs.len(), 22);
+            assert_eq!(art.outputs.len(), 14);
+            assert_eq!(art.inputs.last().unwrap().name, "momentum");
+            assert!(art.path.exists());
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make artifacts`)
+//! lowers every L2 function to **HLO text** plus a JSON manifest describing
+//! each artifact's ordered inputs/outputs. This module is the only place
+//! that touches the `xla` crate:
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` into typed specs
+//! * [`engine`]   — an [`engine::Engine`] owning the PJRT CPU client, a
+//!   compiled-executable cache, and `Tensor` ⇄ `Literal` marshalling
+//!
+//! Interchange is HLO *text*, not a serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedArtifact};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};

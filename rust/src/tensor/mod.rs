@@ -1,0 +1,344 @@
+//! Dense row-major f32 tensors.
+//!
+//! A deliberately small linear-algebra substrate: everything the
+//! coordinator, photonic simulator and reference trainer need — creation,
+//! elementwise ops, matmul (cache-blocked, see [`ops`]), transposition,
+//! row slicing — without pulling in an external BLAS. PJRT executes the
+//! heavy training math; these tensors feed it and post-process results.
+
+pub mod ops;
+
+use crate::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Dense row-major f32 tensor with up to 4 dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---------- construction ----------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {shape:?} wants {n} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    /// I.i.d. standard-normal entries scaled by `std`.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_gaussian_f32(&mut t.data);
+        if std != 1.0 {
+            for x in &mut t.data {
+                *x *= std;
+            }
+        }
+        t
+    }
+
+    /// I.i.d. U[lo, hi) entries.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_uniform_f32(&mut t.data, lo, hi);
+        t
+    }
+
+    // ---------- accessors ----------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar tensor");
+        self.data[0]
+    }
+
+    /// 2-D element access (row, col).
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    // ---------- shape ops ----------
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {shape:?}",
+                self.shape,
+                self.data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Copy rows [start, start+count) into a new (count, cols) tensor.
+    pub fn slice_rows(&self, start: usize, count: usize) -> Tensor {
+        let c = self.cols();
+        let data = self.data[start * c..(start + count) * c].to_vec();
+        Tensor { shape: vec![count, c], data }
+    }
+
+    /// Gather rows by index into a new tensor.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let c = self.cols();
+        let mut data = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor { shape: vec![idx.len(), c], data }
+    }
+
+    // ---------- elementwise ----------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "zip shape mismatch: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// axpy: self += alpha * other (in place, shape-checked).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape("axpy shape mismatch".into()));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    // ---------- reductions ----------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Per-row argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows())
+            .map(|r| {
+                let row = self.row(r);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Matrix product — delegates to the blocked kernel in [`ops`].
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        ops::matmul(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape_checks() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+        assert_eq!(Tensor::zeros(&[3, 3]).sum(), 0.0);
+        assert_eq!(Tensor::scalar(5.0).item(), 5.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.t();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at(2, 1), 6.0);
+        assert_eq!(tt.t(), t);
+    }
+
+    #[test]
+    fn elementwise_and_axpy() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::full(&[2, 2], 2.0);
+        assert_eq!(a.add(&b).unwrap().data(), &[3., 4., 5., 6.]);
+        assert_eq!(a.hadamard(&b).unwrap().data(), &[2., 4., 6., 8.]);
+        assert_eq!(a.sub(&b).unwrap().data(), &[-1., 0., 1., 2.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b).unwrap();
+        assert_eq!(c.data(), &[2., 3., 4., 5.]);
+        assert!(a.add(&Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn slicing_and_gather() {
+        let t = Tensor::new(&[3, 2], vec![0., 1., 10., 11., 20., 21.]).unwrap();
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[10., 11., 20., 21.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(&[2, 3], vec![0., 5., 1., 9., 2., 3.]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn random_tensors_have_right_stats() {
+        let mut rng = Pcg64::seed(0);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean = t.sum() / t.len() as f32;
+        assert!(mean.abs() < 0.02);
+        let var = t.data().iter().map(|x| (x - mean).powi(2)).sum::<f32>()
+            / t.len() as f32;
+        assert!((var.sqrt() - 0.5).abs() < 0.02);
+        let u = Tensor::rand_uniform(&[1000], -1.0, 1.0, &mut rng);
+        assert!(u.data().iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[4, 3]);
+        assert_eq!(t.reshape(&[2, 6]).unwrap().shape(), &[2, 6]);
+        assert!(t.reshape(&[5, 2]).is_err());
+    }
+}

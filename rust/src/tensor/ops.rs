@@ -1,0 +1,259 @@
+//! Matmul kernels and fused linear-algebra helpers.
+//!
+//! The coordinator's hot paths that do NOT go through PJRT are the
+//! pure-Rust reference trainer (dfa::reference) and the device-level
+//! photonic simulation (photonics::weight_bank). Both reduce to GEMM-like
+//! loops, implemented here with the standard CPU tricks: ikj loop order
+//! (stride-1 inner loop), cache blocking, and a multi-threaded row split
+//! for large products. No unsafe, no external BLAS.
+
+use crate::{Error, Result};
+
+use super::Tensor;
+
+/// Cache block edge (fits comfortably in L1 for three f32 blocks).
+const BLOCK: usize = 64;
+/// Below this many f32 multiply-adds a single thread is faster.
+const PAR_THRESHOLD: usize = 1 << 20;
+
+/// C = A @ B for 2-D tensors.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.rank() != 2 || b.rank() != 2 {
+        return Err(Error::Shape("matmul needs 2-D tensors".into()));
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul inner dims: ({m},{k}) @ ({k2},{n})"
+        )));
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n);
+    Ok(out)
+}
+
+/// Raw-slice GEMM: c (m x n) += a (m x k) @ b (k x n); c must be zeroed.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m * n * k >= PAR_THRESHOLD {
+        matmul_parallel(a, b, c, m, k, n);
+    } else {
+        matmul_blocked(a, b, c, m, k, n);
+    }
+}
+
+fn matmul_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let c_row = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = a[i * k + kk];
+                    if aik == 0.0 {
+                        continue; // ReLU-sparse activations are common
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn matmul_parallel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+        .min(m)
+        .max(1);
+    if threads <= 1 {
+        return matmul_blocked(a, b, c, m, k, n);
+    }
+    let rows_per = m.div_ceil(threads);
+    // Split C into disjoint row chunks; each thread owns one.
+    let chunks: Vec<&mut [f32]> = c.chunks_mut(rows_per * n).collect();
+    std::thread::scope(|scope| {
+        for (t, c_chunk) in chunks.into_iter().enumerate() {
+            let i0 = t * rows_per;
+            let rows = c_chunk.len() / n;
+            let a_chunk = &a[i0 * k..(i0 + rows) * k];
+            scope.spawn(move || {
+                matmul_blocked(a_chunk, b, c_chunk, rows, k, n);
+            });
+        }
+    });
+}
+
+/// out = a @ b^T without materializing the transpose (b given row-major
+/// as (n x k)); the photonic reference path uses this for delta products.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul_bt inner dims: ({m},{k}) @ ({n},{k2})^T"
+        )));
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        let a_row = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let b_row = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            od[i * n + j] = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// out = a^T @ b without materializing the transpose: a (k x m), b (k x n).
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!(
+            "matmul_at inner dims: ({k},{m})^T @ ({k2},{n})"
+        )));
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for kk in 0..k {
+        let a_row = &ad[kk * m..(kk + 1) * m];
+        let b_row = &bd[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = a_row[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let o_row = &mut od[i * n..(i + 1) * n];
+            for (ov, bv) in o_row.iter_mut().zip(b_row) {
+                *ov += aik * bv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Column-wise mean of a 2-D tensor -> (cols,) vector.
+pub fn col_mean(t: &Tensor) -> Tensor {
+    let (m, n) = (t.rows(), t.cols());
+    let mut out = Tensor::zeros(&[n]);
+    for i in 0..m {
+        for (o, v) in out.data_mut().iter_mut().zip(t.row(i)) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / m as f32;
+    for o in out.data_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// Row-wise mean of a 2-D tensor -> (rows,) vector.
+pub fn row_mean(t: &Tensor) -> Tensor {
+    let (m, n) = (t.rows(), t.cols());
+    let inv = 1.0 / n as f32;
+    Tensor::from_fn(&[m], |i| t.row(i).iter().sum::<f32>() * inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_close, check};
+    use crate::util::rng::Pcg64;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]).unwrap();
+        assert_eq!(matmul(&a, &b).unwrap().data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul_bt(&a, &Tensor::zeros(&[2, 4])).is_err());
+        assert!(matmul_at(&a, &Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn blocked_matches_naive_property() {
+        check("matmul-vs-naive", 20, |rng| {
+            let m = 1 + rng.below(70) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(70) as usize;
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            assert_close(got.data(), want.data(), 1e-3 * k as f32)
+        });
+    }
+
+    #[test]
+    fn parallel_path_matches_blocked() {
+        let mut rng = Pcg64::seed(42);
+        // big enough to cross PAR_THRESHOLD
+        let a = Tensor::randn(&[256, 128], 1.0, &mut rng);
+        let b = Tensor::randn(&[128, 200], 1.0, &mut rng);
+        let got = matmul(&a, &b).unwrap();
+        let mut want = Tensor::zeros(&[256, 200]);
+        matmul_blocked(a.data(), b.data(), want.data_mut(), 256, 128, 200);
+        assert_close(got.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        check("matmul-transposed-variants", 20, |rng| {
+            let m = 1 + rng.below(40) as usize;
+            let k = 1 + rng.below(40) as usize;
+            let n = 1 + rng.below(40) as usize;
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let want = matmul(&a, &b).unwrap();
+            let got_bt = matmul_bt(&a, &b.t()).unwrap();
+            assert_close(got_bt.data(), want.data(), 1e-3 * k as f32)?;
+            let got_at = matmul_at(&a.t(), &b).unwrap();
+            assert_close(got_at.data(), want.data(), 1e-3 * k as f32)
+        });
+    }
+
+    #[test]
+    fn means() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 5., 6., 7.]).unwrap();
+        assert_eq!(col_mean(&t).data(), &[3., 4., 5.]);
+        assert_eq!(row_mean(&t).data(), &[2., 6.]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Micro-benchmark harness (criterion stand-in).
+//!
+//! Every `benches/*.rs` target (`harness = false`) uses this: warmup,
+//! N timed iterations, robust summary (mean / p50 / p95 / min), optional
+//! throughput units, and machine-readable one-line output so
+//! `cargo bench | tee bench_output.txt` captures the paper-table rows.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// Configuration for a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    /// Stop adding iterations after this much measured time.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+/// Result of a benchmark: per-iteration wall times.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// Work units per iteration (e.g. MACs) for throughput reporting.
+    pub units_per_iter: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-line human+machine readable report.
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "bench {:<40} iters={:<4} mean={:>12} p50={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.samples_ns.len(),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p95_ns()),
+            fmt_ns(self.min_ns()),
+        );
+        if let Some((units, label)) = self.units_per_iter {
+            let per_sec = units / (self.mean_ns() * 1e-9);
+            line.push_str(&format!(" throughput={} {label}/s", fmt_si(per_sec)));
+        }
+        line
+    }
+}
+
+/// Time `f` under `cfg`. The closure's return value is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.min_iters as usize
+        || (start.elapsed() < cfg.max_time && samples.len() < 10_000)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() > cfg.max_time && samples.len() >= cfg.min_iters as usize {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), samples_ns: samples, units_per_iter: None }
+}
+
+/// Like [`bench`] but reports throughput as `units`/second.
+pub fn bench_throughput<T, F: FnMut() -> T>(
+    name: &str,
+    cfg: &BenchConfig,
+    units: f64,
+    label: &'static str,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.units_per_iter = Some((units, label));
+    r
+}
+
+/// Opaque value sink preventing the optimizer from deleting the benchmark.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn fmt_si(x: f64) -> String {
+    let (v, suffix) = if x >= 1e12 {
+        (x / 1e12, "T")
+    } else if x >= 1e9 {
+        (x / 1e9, "G")
+    } else if x >= 1e6 {
+        (x / 1e6, "M")
+    } else if x >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2}{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_time: Duration::from_millis(50),
+        };
+        let r = bench("noop", &cfg, || 1 + 1);
+        assert!(r.samples_ns.len() >= 5);
+        assert!(r.mean_ns() >= 0.0);
+        assert!(r.min_ns() <= r.p50_ns());
+        assert!(r.p50_ns() <= r.p95_ns() + 1.0);
+    }
+
+    #[test]
+    fn report_contains_throughput() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_time: Duration::from_millis(10),
+        };
+        let r = bench_throughput("tp", &cfg, 1000.0, "MAC", || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        let line = r.report();
+        assert!(line.contains("MAC/s"), "{line}");
+        assert!(line.contains("bench tp"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert_eq!(fmt_si(2.0e13), "20.00T");
+        assert_eq!(fmt_si(5.0), "5.00");
+    }
+}

@@ -1,0 +1,115 @@
+//! Lightweight property-based testing harness (proptest stand-in).
+//!
+//! `check(name, cases, |rng| ...)` runs a property against `cases` random
+//! inputs drawn through a seeded [`Pcg64`]; on failure it reports the case
+//! index and the per-case seed so the exact failing input can be replayed
+//! with [`replay`]. Deliberately simple: no shrinking, but deterministic
+//! reproduction, which is what matters for CI.
+
+use super::rng::Pcg64;
+
+/// Outcome of a single property case.
+pub type CaseResult = std::result::Result<(), String>;
+
+/// Run `prop` against `cases` independently-seeded RNGs. Panics with a
+/// replayable seed on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> CaseResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Pcg64::seed(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with util::check::replay(\"{name}\", {case}, prop)): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case of `check` by name + case index.
+pub fn replay<F>(name: &str, case: u64, mut prop: F) -> CaseResult
+where
+    F: FnMut(&mut Pcg64) -> CaseResult,
+{
+    let base = fnv1a(name.as_bytes());
+    let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    prop(&mut Pcg64::seed(seed))
+}
+
+/// Assert two f32 slices agree elementwise within `atol`.
+pub fn assert_close(got: &[f32], want: &[f32], atol: f32) -> CaseResult {
+    if got.len() != want.len() {
+        return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if (g - w).abs() > atol {
+            return Err(format!(
+                "element {i}: got {g}, want {w} (|diff| {} > atol {atol})",
+                (g - w).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("always-true", 32, |rng| {
+            ran += 1;
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(ran, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-false", 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case_input() {
+        let mut first: Vec<u64> = Vec::new();
+        check("record", 4, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        for (case, want) in first.iter().enumerate() {
+            replay("record", case as u64, |rng| {
+                assert_eq!(rng.next_u64(), *want);
+                Ok(())
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Declarative command-line argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, typed accessors with
+//! defaults, required arguments, and auto-generated `--help` text. Each
+//! `pdfa` subcommand declares an [`ArgSpec`] list and gets validation for
+//! free (unknown flags are rejected).
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Declaration of one accepted argument.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(d) => takes a value with default `d`
+    /// (empty default + required=true => must be provided).
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl ArgSpec {
+    pub const fn flag(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: None, required: false }
+    }
+
+    pub const fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: Some(default), required: false }
+    }
+
+    pub const fn req(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: Some(""), required: true }
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    /// Parse `argv` (excluding the command name) against `specs`.
+    pub fn parse(specs: &[ArgSpec], argv: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for s in specs {
+            match s.default {
+                None => {
+                    flags.insert(s.name.to_string(), false);
+                }
+                Some(d) => {
+                    values.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        let mut provided: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let stripped = arg
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Cli(format!("unexpected positional argument '{arg}'")))?;
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| Error::Cli(format!("unknown flag '--{key}'")))?;
+            provided.push(key.clone());
+            match spec.default {
+                None => {
+                    if inline_val.is_some() {
+                        return Err(Error::Cli(format!("flag '--{key}' takes no value")));
+                    }
+                    flags.insert(key, true);
+                }
+                Some(_) => {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Cli(format!("flag '--{key}' expects a value")))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            }
+            i += 1;
+        }
+        for s in specs {
+            if s.required && !provided.iter().any(|p| p == s.name) {
+                return Err(Error::Cli(format!("missing required flag '--{}'", s.name)));
+            }
+        }
+        Ok(Args { values, flags })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("undeclared arg '{name}'"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::Cli(format!("--{name}: expected number, got '{}'", self.str(name))))
+    }
+
+    /// Comma-separated list of floats (sweep specifications).
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::Cli(format!("--{name}: bad list element '{s}'")))
+            })
+            .collect()
+    }
+}
+
+/// Render `--help` text for a subcommand.
+pub fn help_text(cmd: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\nOptions:\n");
+    for s in specs {
+        let meta = match s.default {
+            None => String::new(),
+            Some("") if s.required => " <value> (required)".to_string(),
+            Some(d) => format!(" <value> (default: {d})"),
+        };
+        out.push_str(&format!("  --{}{}\n      {}\n", s.name, meta, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("epochs", "10", "number of epochs"),
+            ArgSpec::opt("sigma", "0.0", "noise std"),
+            ArgSpec::req("config", "network config"),
+            ArgSpec::flag("verbose", "chatty output"),
+        ]
+    }
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::parse(&specs(), &s(&["--config", "tiny"])).unwrap();
+        assert_eq!(a.usize("epochs").unwrap(), 10);
+        assert_eq!(a.f64("sigma").unwrap(), 0.0);
+        assert_eq!(a.str("config"), "tiny");
+        assert!(!a.flag("verbose"));
+
+        let a = Args::parse(
+            &specs(),
+            &s(&["--epochs=3", "--sigma", "0.098", "--config=mnist", "--verbose"]),
+        )
+        .unwrap();
+        assert_eq!(a.usize("epochs").unwrap(), 3);
+        assert_eq!(a.f64("sigma").unwrap(), 0.098);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(Args::parse(&specs(), &s(&["--config", "x", "--nope"])).is_err());
+        assert!(Args::parse(&specs(), &s(&[])).is_err()); // missing required
+        assert!(Args::parse(&specs(), &s(&["--config"])).is_err()); // dangling
+        assert!(Args::parse(&specs(), &s(&["positional"])).is_err());
+        assert!(Args::parse(&specs(), &s(&["--verbose=1", "--config", "x"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let sp = vec![ArgSpec::opt("bits", "1,2,3", "sweep")];
+        let a = Args::parse(&sp, &s(&["--bits", "1.5, 2.5,4"])).unwrap();
+        assert_eq!(a.f64_list("bits").unwrap(), vec![1.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let a = Args::parse(&specs(), &s(&["--config", "x", "--epochs", "abc"])).unwrap();
+        assert!(a.usize("epochs").is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = help_text("train", "train a network", &specs());
+        assert!(h.contains("--epochs"));
+        assert!(h.contains("(required)"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Deterministic pseudo-random numbers: PCG64 + distribution helpers.
+//!
+//! Stands in for the `rand`/`rand_distr` crates. Every stochastic component
+//! in the system — analog read-noise draws, weight initialisation, dataset
+//! synthesis, shuffling — takes an explicit [`Pcg64`] so runs are exactly
+//! reproducible from a single seed (recorded in EXPERIMENTS.md).
+//!
+//! PCG-XSL-RR 128/64 (O'Neill 2014), the same generator `rand_pcg::Pcg64`
+//! implements; constants from the reference implementation.
+
+const MULTIPLIER: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second Box-Muller variate
+    gauss_spare: Option<f64>,
+}
+
+impl Pcg64 {
+    /// Seed with an arbitrary 64-bit seed and stream id. Distinct streams
+    /// are statistically independent (different odd increments).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initstate = (seed as u128) << 64 | splitmix64(seed) as u128;
+        let initseq = (stream as u128) << 64 | splitmix64(stream ^ 0xda3e_39cb_94b9_5bdb) as u128;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (initseq << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u64();
+        rng
+    }
+
+    /// Convenience single-stream constructor.
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child stream (for per-thread / per-purpose RNGs).
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), stream)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULTIPLIER).wrapping_add(self.inc);
+        // XSL-RR output function
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Unbiased (rejection sampling).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with given mean/std.
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Fill a f32 buffer with standard normal draws.
+    pub fn fill_gaussian_f32(&mut self, buf: &mut [f32]) {
+        for x in buf.iter_mut() {
+            *x = self.gaussian() as f32;
+        }
+    }
+
+    /// Fill a f32 buffer with U[lo, hi) draws.
+    pub fn fill_uniform_f32(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for x in buf.iter_mut() {
+            *x = self.uniform_in(lo as f64, hi as f64) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a: Vec<u64> = (0..8).map({ let mut r = Pcg64::seed(1); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = Pcg64::seed(1); move |_| r.next_u64() }).collect();
+        let c: Vec<u64> = (0..8).map({ let mut r = Pcg64::seed(2); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn streams_are_distinct() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg64::seed(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed(4);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        // tails exist but are sane
+        assert!(xs.iter().all(|x| x.abs() < 6.5));
+        assert!(xs.iter().any(|x| x.abs() > 3.0));
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Pcg64::seed(5);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut root = Pcg64::seed(9);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,183 @@
+//! Descriptive statistics used across the experiment harnesses.
+//!
+//! Includes the paper's *effective resolution* metric (§4): an analog
+//! operation whose output spans a range R with additive noise of std σ
+//! resolves `log2(R / σ)` bits — e.g. σ = 0.019 on the [-1, 1] multiply
+//! output is "6.72 bits", σ = 0.098 is "4.35 bits", σ = 0.202 is "3.31 bits".
+
+/// Running summary of a sample (Welford's algorithm: single pass, stable).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.add(x);
+        }
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        (self.m2 / self.n as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Effective resolution in bits of a noisy analog value spanning `range`
+/// with error std `sigma` (paper §4).
+pub fn effective_bits(range: f64, sigma: f64) -> f64 {
+    (range / sigma).log2()
+}
+
+/// Inverse of [`effective_bits`]: the noise std corresponding to a given
+/// effective resolution over `range` — used for the Fig. 5(c) sweep.
+pub fn sigma_for_bits(range: f64, bits: f64) -> f64 {
+    range / 2f64.powf(bits)
+}
+
+/// Percentile by linear interpolation on a sorted copy. `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Pearson correlation of two equal-length samples.
+pub fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Least-squares line fit `y = a + b x`; returns (a, b).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let s = Summary::from_slice(&xs);
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0_f64).powi(2)).sum::<f64>() / 5.0;
+        assert!((s.std() - var.sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn paper_effective_resolutions() {
+        // §4: the three measured noise levels and their quoted bit-widths.
+        assert!((effective_bits(2.0, 0.019) - 6.72).abs() < 0.02);
+        assert!((effective_bits(2.0, 0.098) - 4.35).abs() < 0.02);
+        assert!((effective_bits(2.0, 0.202) - 3.31).abs() < 0.02);
+    }
+
+    #[test]
+    fn bits_sigma_roundtrip() {
+        for bits in [1.0, 3.31, 4.35, 6.72, 8.0] {
+            let sigma = sigma_for_bits(2.0, bits);
+            assert!((effective_bits(2.0, sigma) - bits).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&[1.0, 2.0], 50.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_extremes() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((correlation(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((correlation(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration: exercise the `pdfa` binary end-to-end.
+
+use std::process::Command;
+
+fn pdfa() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pdfa"))
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = pdfa().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["train", "energy", "characterize", "inner-product", "gen-data"] {
+        assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let out = pdfa().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn energy_reports_paper_numbers() {
+    let out = pdfa().args(["energy", "--fig6-points", "6"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("TOPS/mm^2"));
+    assert!(text.contains("Fig. 6"));
+    // headline throughput row
+    assert!(text.contains("20.000"), "{text}");
+}
+
+#[test]
+fn characterize_runs_small_sample() {
+    let out = pdfa()
+        .args(["characterize", "--n", "200", "--seed", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("single-MRR multiply"));
+    assert!(text.contains("bits"));
+}
+
+#[test]
+fn gen_data_writes_idx_files() {
+    let dir = std::env::temp_dir().join("pdfa_cli_gendata");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = pdfa()
+        .args([
+            "gen-data",
+            "--out",
+            dir.to_str().unwrap(),
+            "--n-train",
+            "64",
+            "--n-test",
+            "32",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for f in [
+        "train-images-idx3-ubyte.gz",
+        "train-labels-idx1-ubyte.gz",
+        "t10k-images-idx3-ubyte.gz",
+        "t10k-labels-idx1-ubyte.gz",
+    ] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+    // and the files round-trip through the loader
+    let ds = photonic_dfa::data::Dataset::load_split(&dir, true).unwrap();
+    assert_eq!(ds.len(), 64);
+}
+
+#[test]
+fn train_small_run_produces_artifacts() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let out_dir = std::env::temp_dir().join("pdfa_cli_train");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = pdfa()
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args([
+            "train",
+            "--config", "small",
+            "--noise", "offchip",
+            "--epochs", "1",
+            "--n-train", "256",
+            "--n-test", "128",
+            "--max-steps", "4",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "cli_test",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let run = out_dir.join("cli_test");
+    for f in ["config.json", "history.json", "final.ckpt", "result.json"] {
+        assert!(run.join(f).exists(), "missing {f}");
+    }
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("test accuracy"));
+}
+
+#[test]
+fn bad_flags_rejected() {
+    let out = pdfa().args(["train", "--nonsense", "1"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = pdfa().args(["train", "--noise", "bogus:xyz"]).output().unwrap();
+    assert!(!out.status.success());
+}

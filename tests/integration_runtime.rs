@@ -1,0 +1,93 @@
+//! Integration: every artifact in the manifest loads, compiles and executes.
+
+use photonic_dfa::runtime::Engine;
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::rng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then(|| Engine::new(dir).unwrap())
+}
+
+#[test]
+fn every_artifact_compiles_and_executes() {
+    let Some(engine) = engine() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let names: Vec<String> = engine.manifest().artifacts.keys().cloned().collect();
+    assert!(names.len() >= 13, "expected full artifact set, got {names:?}");
+    let mut rng = Pcg64::seed(0);
+    for name in names {
+        let art = engine.load(&name).unwrap();
+        let inputs: Vec<Tensor> = art
+            .spec
+            .inputs
+            .iter()
+            .map(|s| match s.name.as_str() {
+                // keep runtime scalars in sane ranges
+                "sigma" | "bits" => Tensor::scalar(0.0),
+                "lr" => Tensor::scalar(0.01),
+                "momentum" => Tensor::scalar(0.9),
+                "r" => Tensor::scalar(0.95),
+                "a" => Tensor::scalar(0.999),
+                _ => Tensor::randn(&s.shape, 0.1, &mut rng),
+            })
+            .collect();
+        let outputs = art.execute(&inputs).unwrap();
+        assert_eq!(outputs.len(), art.spec.outputs.len(), "artifact {name}");
+        for (out, spec) in outputs.iter().zip(&art.spec.outputs) {
+            assert_eq!(out.shape(), spec.shape.as_slice(), "artifact {name}");
+            assert!(
+                out.data().iter().all(|v| v.is_finite()),
+                "artifact {name} produced non-finite values"
+            );
+        }
+    }
+}
+
+#[test]
+fn photonic_matvec_artifact_matches_rust_device_physics() {
+    // The L1 Pallas MRR kernel and the L3 photonics::mrr module implement
+    // the same Lorentzian physics; pin them against each other.
+    let Some(engine) = engine() else { return };
+    let art = engine.load("photonic_matvec").unwrap();
+    let mut rng = Pcg64::seed(5);
+    let k = art.spec.inputs[0].shape[0];
+    let m = art.spec.inputs[1].shape[0];
+    let x = Tensor::rand_uniform(&[k], 0.0, 1.0, &mut rng);
+    let phi = Tensor::rand_uniform(&[m, k], -0.5, 0.5, &mut rng);
+    let (r, a) = (0.95f32, 0.999f32);
+    let out = art
+        .execute(&[x.clone(), phi.clone(), Tensor::scalar(r), Tensor::scalar(a)])
+        .unwrap();
+
+    use photonic_dfa::photonics::mrr::MrrDesign;
+    let design = MrrDesign { self_coupling: r as f64, loss_a: a as f64 };
+    for row in 0..m {
+        let want: f64 = (0..k)
+            .map(|c| x.data()[c] as f64 * design.weight(phi.at(row, c) as f64))
+            .sum();
+        let got = out[0].data()[row] as f64;
+        assert!(
+            (got - want).abs() < 1e-4 * k as f64,
+            "row {row}: rust {want} vs artifact {got}"
+        );
+    }
+}
+
+#[test]
+fn fwd_artifact_deterministic_across_executions() {
+    let Some(engine) = engine() else { return };
+    let fwd = engine.load("fwd_small").unwrap();
+    let mut rng = Pcg64::seed(9);
+    let inputs: Vec<Tensor> = fwd
+        .spec
+        .inputs
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 0.2, &mut rng))
+        .collect();
+    let a = fwd.execute(&inputs).unwrap();
+    let b = fwd.execute(&inputs).unwrap();
+    assert_eq!(a, b);
+}

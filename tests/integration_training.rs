@@ -1,0 +1,121 @@
+//! Integration: end-to-end training across backends and noise modes on the
+//! `small` (784-128-128-10) config with real synthetic digits.
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::config::{Algorithm, TrainConfig};
+use photonic_dfa::dfa::noise_model::NoiseMode;
+use photonic_dfa::dfa::trainer::Trainer;
+use photonic_dfa::photonics::BpdMode;
+use photonic_dfa::runtime::Engine;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Arc::new(Engine::new(dir).unwrap()))
+}
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        config: "small".into(),
+        epochs: 2,
+        n_train: 1024,
+        n_test: 512,
+        seed: 7,
+        max_steps_per_epoch: Some(12),
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn dfa_clean_learns_digits() {
+    let Some(engine) = engine() else { return };
+    let mut t = Trainer::new(engine, base_cfg()).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    assert!(
+        res.history.last().unwrap().train_loss < res.history[0].train_loss,
+        "{:?}",
+        res.history.iter().map(|h| h.train_loss).collect::<Vec<_>>()
+    );
+    assert!(res.test_acc > 0.25, "better than chance: {}", res.test_acc);
+}
+
+#[test]
+fn noise_modes_all_train() {
+    let Some(engine) = engine() else { return };
+    for noise in [
+        NoiseMode::offchip(),
+        NoiseMode::onchip(),
+        NoiseMode::Resolution { bits: 4.0 },
+        NoiseMode::Quantized { bits: 6.0 },
+    ] {
+        let cfg = TrainConfig { noise, ..base_cfg() };
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        let (train, test) = t.load_data().unwrap();
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert!(
+            res.history.last().unwrap().train_loss.is_finite(),
+            "{noise:?} diverged"
+        );
+    }
+}
+
+#[test]
+fn backprop_beats_chance_too() {
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig { algorithm: Algorithm::Backprop, ..base_cfg() };
+    let mut t = Trainer::new(engine, cfg).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    assert!(res.test_acc > 0.25, "{}", res.test_acc);
+}
+
+#[test]
+fn device_mode_end_to_end() {
+    // the full stack: fwd artifact -> photonic bank gradient -> apply_grads
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig {
+        noise: NoiseMode::Device { bpd: BpdMode::OffChip },
+        epochs: 1,
+        max_steps_per_epoch: Some(4),
+        n_train: 512,
+        n_test: 256,
+        ..base_cfg()
+    };
+    let mut t = Trainer::new(engine, cfg).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    assert_eq!(res.history.len(), 1);
+    assert!(res.history[0].train_loss.is_finite());
+}
+
+#[test]
+fn device_mode_rejects_backprop() {
+    let Some(engine) = engine() else { return };
+    let cfg = TrainConfig {
+        algorithm: Algorithm::Backprop,
+        noise: NoiseMode::Device { bpd: BpdMode::Ideal },
+        ..base_cfg()
+    };
+    assert!(Trainer::new(engine, cfg).is_err());
+}
+
+#[test]
+fn training_is_reproducible_per_seed() {
+    let Some(engine) = engine() else { return };
+    let run = |seed: u64| {
+        let cfg = TrainConfig {
+            seed,
+            epochs: 1,
+            noise: NoiseMode::offchip(),
+            ..base_cfg()
+        };
+        let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+        let (train, test) = t.load_data().unwrap();
+        t.train(train, test, |_| {}).unwrap().test_acc
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+}
