@@ -4,20 +4,19 @@
 //! Reports per-step latency and MAC throughput for the DFA step (with and
 //! without noise) and the backprop baseline, per network config.
 
-use std::sync::Arc;
-
 use photonic_dfa::dfa::params::NetState;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 use photonic_dfa::tensor::Tensor;
 use photonic_dfa::util::benchx::{bench_throughput, BenchConfig};
 use photonic_dfa::util::rng::Pcg64;
 
 fn main() {
-    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let engine = runtime::open("artifacts", Backend::Auto).expect("open step engine");
     let bench_cfg = BenchConfig::default();
+    println!("backend: {}", engine.platform_name());
 
     for config in ["tiny", "small", "mnist"] {
-        let dims = engine.manifest().net_dims(config).unwrap().clone();
+        let dims = engine.net_dims(config).unwrap();
         let mut rng = Pcg64::seed(1);
         let state = NetState::init(&dims, &mut rng);
         let (b1, b2) = NetState::init_feedback(&dims, &mut rng);

@@ -2,20 +2,19 @@
 //! runtime noise/quantisation scalars do not change step latency (a single
 //! artifact serves every sweep point) and reports short-sweep accuracies.
 
-use std::sync::Arc;
-
 use photonic_dfa::dfa::params::NetState;
 use photonic_dfa::experiments::fig5c_sweep;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 use photonic_dfa::tensor::Tensor;
 use photonic_dfa::util::benchx::{bench, BenchConfig};
 use photonic_dfa::util::rng::Pcg64;
 
 fn main() {
-    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let engine = runtime::open("artifacts", Backend::Auto).expect("open step engine");
     let bench_cfg = BenchConfig::default();
     let config = "small";
-    let dims = engine.manifest().net_dims(config).unwrap().clone();
+    println!("backend: {}", engine.platform_name());
+    let dims = engine.net_dims(config).unwrap();
     let mut rng = Pcg64::seed(1);
     let state = NetState::init(&dims, &mut rng);
     let (b1, b2) = NetState::init_feedback(&dims, &mut rng);

@@ -1,24 +1,24 @@
-//! Runtime bench: PJRT dispatch + marshalling overhead per artifact.
+//! Runtime bench: per-dispatch overhead of the active step engine.
 //!
-//! Separates (a) Tensor -> Literal conversion, (b) execute, and (c) output
-//! decomposition, to keep the coordinator's overhead honest (perf target:
-//! marshalling < 10% of step latency on the mnist config).
-
-use std::sync::Arc;
+//! Times the `fwd` artifact execution per config on whichever backend is
+//! active. With `--features pjrt` it additionally separates Tensor ->
+//! Literal marshalling and one-off artifact compile cost, to keep the
+//! coordinator's overhead honest (perf target: marshalling < 10% of step
+//! latency on the mnist config).
 
 use photonic_dfa::dfa::params::NetState;
-use photonic_dfa::runtime::engine::tensor_to_literal;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 use photonic_dfa::tensor::Tensor;
 use photonic_dfa::util::benchx::{bench, BenchConfig};
 use photonic_dfa::util::rng::Pcg64;
 
 fn main() {
-    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts`"));
+    let engine = runtime::open("artifacts", Backend::Auto).expect("open step engine");
     let cfg = BenchConfig::default();
+    println!("backend: {}", engine.platform_name());
 
     for config in ["small", "mnist"] {
-        let dims = engine.manifest().net_dims(config).unwrap().clone();
+        let dims = engine.net_dims(config).unwrap();
         let mut rng = Pcg64::seed(1);
         let state = NetState::init(&dims, &mut rng);
         let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
@@ -26,13 +26,17 @@ fn main() {
         let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
         inputs.push(x);
 
-        let r = bench(&format!("runtime/marshal_inputs_{config}"), &cfg, || {
-            inputs
-                .iter()
-                .map(|t| tensor_to_literal(t).unwrap())
-                .collect::<Vec<_>>()
-        });
-        println!("{}", r.report());
+        #[cfg(feature = "pjrt")]
+        {
+            use photonic_dfa::runtime::engine::tensor_to_literal;
+            let r = bench(&format!("runtime/marshal_inputs_{config}"), &cfg, || {
+                inputs
+                    .iter()
+                    .map(|t| tensor_to_literal(t).unwrap())
+                    .collect::<Vec<_>>()
+            });
+            println!("{}", r.report());
+        }
 
         let r = bench(&format!("runtime/fwd_execute_{config}"), &cfg, || {
             fwd.execute(&inputs).unwrap()
@@ -40,12 +44,13 @@ fn main() {
         println!("{}", r.report());
     }
 
-    // artifact compile cost (amortised once per process by the cache)
+    // artifact load cost (for PJRT: HLO compile, amortised once per
+    // process by the executable cache)
     let t0 = std::time::Instant::now();
-    let fresh = Engine::new("artifacts").unwrap();
+    let fresh = runtime::open("artifacts", Backend::Auto).unwrap();
     fresh.load("dfa_step_small").unwrap();
     println!(
-        "runtime/compile_dfa_step_small once: {:.2?} (cached afterwards)",
+        "runtime/load_dfa_step_small once: {:.2?} (cached afterwards)",
         t0.elapsed()
     );
 }

@@ -13,19 +13,17 @@
 //! (B·e = B·e⁺ − B·e⁻). The run also rolls the consumed bank cycles into
 //! the paper's Eq. (2)/(4) energy model.
 
-use std::sync::Arc;
-
 use photonic_dfa::dfa::config::TrainConfig;
 use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::energy::components::MrrTuning;
 use photonic_dfa::energy::model::ArchitectureModel;
 use photonic_dfa::photonics::BpdMode;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 
 fn main() -> photonic_dfa::Result<()> {
     photonic_dfa::util::logging::init();
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = runtime::open("artifacts", Backend::Auto)?;
 
     let steps = std::env::var("PDFA_STEPS")
         .ok()

@@ -1,26 +1,27 @@
 //! Quickstart: train a small MLP through the photonic DFA path.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Loads the AOT-compiled `dfa_step_small` artifact (784-128-128-10),
-//! synthesises a small digit dataset, and trains for two epochs with the
-//! off-chip-BPD noise level of the paper's Fig. 5 — all from Rust, with
-//! Python nowhere on the path.
-
-use std::sync::Arc;
+//! Resolves the `dfa_step_small` artifact (784-128-128-10) on the default
+//! backend (native reference math; PJRT over the AOT artifacts when built
+//! with `--features pjrt` after vendoring the `xla` crate — see
+//! `Cargo.toml` — and running `make artifacts`), synthesises a small
+//! digit dataset, and trains for two epochs with the off-chip-BPD noise
+//! level of the paper's Fig. 5 — all from Rust, with Python nowhere on
+//! the path.
 
 use photonic_dfa::dfa::config::TrainConfig;
 use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 
 fn main() -> photonic_dfa::Result<()> {
     photonic_dfa::util::logging::init();
 
-    // 1. PJRT engine over the AOT artifacts
-    let engine = Arc::new(Engine::new("artifacts")?);
+    // 1. a step engine (native by default; PJRT with --features pjrt)
+    let engine = runtime::open("artifacts", Backend::Auto)?;
 
     // 2. a Fig. 5(b)-style configuration, shrunk to run in seconds
     let cfg = TrainConfig {

@@ -10,10 +10,8 @@
 //! Each sweep point trains a fresh network with gradient noise
 //! σ = 2 / 2^bits, the paper's effective-resolution equivalence.
 
-use std::sync::Arc;
-
 use photonic_dfa::experiments::fig5c_sweep;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 
 fn main() -> photonic_dfa::Result<()> {
     photonic_dfa::util::logging::init();
@@ -27,7 +25,7 @@ fn main() -> photonic_dfa::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(16_384);
 
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = runtime::open("artifacts", Backend::Auto)?;
     let bits = [1.0, 2.0, 3.0, 3.31, 4.0, 4.35, 5.0, 6.0, 8.0];
     let pts = fig5c_sweep(engine, &config, &bits, epochs, 1, n_train, 4096, None)?;
 

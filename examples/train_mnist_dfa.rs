@@ -3,25 +3,23 @@
 //! and log the loss/accuracy curves.
 //!
 //! ```bash
-//! make artifacts
 //! cargo run --release --example train_mnist_dfa                # full run
 //! PDFA_EPOCHS=3 PDFA_NTRAIN=12000 cargo run --release --example train_mnist_dfa
 //! PDFA_DATA_DIR=/path/to/mnist cargo run --release --example train_mnist_dfa
 //! ```
 //!
 //! This exercises every layer of the stack on a real workload: the Rust
-//! coordinator streams mini-batches and samples read noise (L3), each step
-//! is one PJRT dispatch of the fused AOT train-step (L2) whose gradient
-//! mat-vec runs through the weight-bank-tiled Pallas kernel (L1).
-//! Results land in runs/fig5b_* and EXPERIMENTS.md.
-
-use std::sync::Arc;
+//! coordinator streams mini-batches and samples read noise (L3), and each
+//! step is one dispatch of the fused train-step artifact — native
+//! reference math by default, or the AOT-compiled L2/L1 HLO through PJRT
+//! with `--features pjrt` after `make artifacts`. Results land in
+//! runs/fig5b_*.
 
 use photonic_dfa::coordinator::run::RunRecorder;
 use photonic_dfa::dfa::config::TrainConfig;
 use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend};
 use photonic_dfa::util::json::Value;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -35,7 +33,7 @@ fn main() -> photonic_dfa::Result<()> {
     let n_test = env_usize("PDFA_NTEST", 10_000);
     let data_dir = std::env::var("PDFA_DATA_DIR").ok();
 
-    let engine = Arc::new(Engine::new("artifacts")?);
+    let engine = runtime::open("artifacts", Backend::Auto)?;
     let conditions: [(&str, NoiseMode); 3] = [
         ("clean", NoiseMode::Clean),
         ("offchip", NoiseMode::offchip()),

@@ -8,7 +8,7 @@
 //!   inputs (mini-batch gather + one-hot + analog-noise draws) while PJRT
 //!   executes the current step — the SRAM-fetch/compute overlap
 //! * [`metrics`]  — counters and timers (steps, MACs, wall time, per-phase
-//!   latency) feeding the throughput numbers in EXPERIMENTS.md
+//!   latency) feeding the throughput numbers in the run reports
 //! * [`run`]      — run directory management: config + history JSON,
 //!   parameter checkpoints
 

@@ -1,10 +1,12 @@
-//! Input pipeline: overlap batch assembly with PJRT execution.
+//! Input pipeline: overlap batch assembly with step execution.
 //!
 //! A single producer thread gathers the next mini-batch, one-hot encodes
 //! the labels and samples the analog read-noise tensors while the consumer
-//! (the trainer) executes the current step — the role the SRAM + DMA
-//! engine plays in the paper's control system. A bounded channel provides
-//! backpressure. Single-threaded production keeps runs bit-deterministic.
+//! (the trainer) executes the current step on whichever
+//! [`crate::runtime::StepEngine`] backend is active — the role the SRAM +
+//! DMA engine plays in the paper's control system. A bounded channel
+//! provides backpressure. Single-threaded production keeps runs
+//! bit-deterministic across backends.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -1,7 +1,7 @@
 //! Run recording: config, per-epoch history and checkpoints on disk.
 //!
 //! Layout: `<out_dir>/<run_name>/{config.json, history.json, final.ckpt}`.
-//! History is plain JSON so EXPERIMENTS.md tables can be regenerated from
+//! History is plain JSON so result tables can be regenerated from
 //! recorded runs without re-training.
 
 use std::path::{Path, PathBuf};

@@ -1,11 +1,12 @@
-//! IDX file format (the MNIST container): read/write, transparent gzip.
+//! IDX file format (the MNIST container): read/write, transparent gzip
+//! (via the self-contained [`crate::util::gzip`] codec).
 //!
 //! Format: big-endian magic `[0, 0, dtype, ndims]`, then ndims u32 dims,
 //! then row-major payload. Only dtype 0x08 (u8) is needed for MNIST.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::util::gzip;
 use crate::{Error, Result};
 
 const DTYPE_U8: u8 = 0x08;
@@ -76,9 +77,7 @@ impl IdxArray {
     pub fn load(path: impl AsRef<Path>) -> Result<IdxArray> {
         let raw = std::fs::read(path.as_ref())?;
         let bytes = if raw.len() >= 2 && raw[0] == 0x1f && raw[1] == 0x8b {
-            let mut out = Vec::new();
-            flate2::read::GzDecoder::new(&raw[..]).read_to_end(&mut out)?;
-            out
+            gzip::decompress(&raw)?
         } else {
             raw
         };
@@ -90,10 +89,7 @@ impl IdxArray {
         let path = path.as_ref();
         let bytes = self.to_bytes();
         if path.extension().is_some_and(|e| e == "gz") {
-            let f = std::fs::File::create(path)?;
-            let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
-            enc.write_all(&bytes)?;
-            enc.finish()?;
+            std::fs::write(path, gzip::compress(&bytes))?;
         } else {
             std::fs::write(path, bytes)?;
         }
@@ -140,5 +136,31 @@ mod tests {
         assert!(IdxArray::parse(&[0, 0, 0x0d, 1, 0, 0, 0, 0]).is_err()); // dtype
         assert!(IdxArray::parse(&[0, 0, 8, 1, 0, 0, 0, 5, 1, 2]).is_err()); // short
         assert!(IdxArray::new(vec![2, 2], vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_headers() {
+        // header promises 2 dims but only carries one
+        assert!(IdxArray::parse(&[0, 0, 8, 2, 0, 0, 0, 1]).is_err());
+        // header alone, zero payload for a 1-element dim
+        assert!(IdxArray::parse(&[0, 0, 8, 1, 0, 0, 0, 1]).is_err());
+        // payload longer than the dims promise
+        assert!(IdxArray::parse(&[0, 0, 8, 1, 0, 0, 0, 1, 7, 7]).is_err());
+        // magic half-right
+        assert!(IdxArray::parse(&[0, 1, 8, 1, 0, 0, 0, 0]).is_err());
+        // zero-dim scalars: ndims = 0 means a 1-element payload
+        let scalar = IdxArray::parse(&[0, 0, 8, 0, 42]).unwrap();
+        assert_eq!(scalar.dims, Vec::<usize>::new());
+        assert_eq!(scalar.data, vec![42]);
+    }
+
+    #[test]
+    fn corrupt_gzip_file_errors_cleanly() {
+        let dir = std::env::temp_dir().join("pdfa_idx_badgz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.idx.gz");
+        // gzip magic followed by garbage must error, not panic
+        std::fs::write(&p, [0x1f, 0x8b, 0x08, 0x00, 1, 2, 3, 4]).unwrap();
+        assert!(IdxArray::load(&p).is_err());
     }
 }

@@ -5,7 +5,7 @@
 //! ([`synth`]) with the same geometry (28×28 grayscale, 10 classes,
 //! 60k/10k split) and comparable MLP difficulty. Real MNIST IDX files
 //! (optionally gzipped) load through [`idx`] with zero code changes —
-//! point `--data-dir` at them. See DESIGN.md §5 (substitutions).
+//! point `--data-dir` at them. The substrate substitutes for real MNIST files.
 //!
 //! * [`idx`]     — IDX file format reader/writer (+ gzip)
 //! * [`synth`]   — procedural stroke-based digit renderer

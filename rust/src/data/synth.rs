@@ -1,7 +1,7 @@
 //! Procedural digit dataset ("synth-MNIST").
 //!
 //! Deterministic stand-in for MNIST (no network access in this sandbox —
-//! DESIGN.md §5): each class has a handwritten-style stroke skeleton
+//! README.md data notes): each class has a handwritten-style stroke skeleton
 //! (polylines + arcs on the unit square) rendered at 28×28 through a
 //! random affine jitter (rotation, scale, shear, translation), random
 //! stroke thickness, soft-edge rasterisation, and pixel noise. Same

@@ -1,10 +1,13 @@
 //! The training loop — the end-to-end system driver.
 //!
-//! Simulation mode (the paper's §4 protocol): one PJRT dispatch per step
-//! executes the fused `dfa_step` artifact (forward + analog backward
-//! through the L1 weight-bank kernel + SGD update), with the coordinator
+//! Simulation mode (the paper's §4 protocol): one backend dispatch per
+//! step executes the fused `dfa_step` artifact (forward + analog backward
+//! through the weight-bank math + SGD update), with the coordinator
 //! sampling read-noise draws and streaming mini-batches through the
-//! [`crate::coordinator::pipeline`]. Python is never on this path.
+//! [`crate::coordinator::pipeline`]. The trainer is backend-agnostic: it
+//! drives any [`StepEngine`] — the pure-Rust [`crate::runtime::NativeEngine`]
+//! by default, or the PJRT engine over the AOT artifacts with
+//! `--features pjrt`. Python is never on this path.
 //!
 //! Device mode: the gradient mat-vecs route through the device-level
 //! photonic simulator ([`super::device_backend`]); forward and update use
@@ -22,7 +25,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pipeline::BatchFeeder;
 use crate::data::Dataset;
 use crate::runtime::manifest::NetDims;
-use crate::runtime::{Engine, LoadedArtifact};
+use crate::runtime::{Artifact, StepEngine};
 use crate::tensor::Tensor;
 use crate::util::json::Value;
 use crate::util::rng::Pcg64;
@@ -71,10 +74,10 @@ pub struct TrainResult {
 pub struct Trainer {
     pub cfg: TrainConfig,
     dims: NetDims,
-    engine: Arc<Engine>,
-    step_art: Arc<LoadedArtifact>,
-    fwd_art: Arc<LoadedArtifact>,
-    apply_art: Arc<LoadedArtifact>,
+    engine: Arc<dyn StepEngine>,
+    step_art: Arc<dyn Artifact>,
+    fwd_art: Arc<dyn Artifact>,
+    apply_art: Arc<dyn Artifact>,
     pub state: NetState,
     bmat1: Tensor,
     bmat2: Tensor,
@@ -84,9 +87,9 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(engine: Arc<Engine>, cfg: TrainConfig) -> Result<Trainer> {
+    pub fn new(engine: Arc<dyn StepEngine>, cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
-        let dims = engine.manifest().net_dims(&cfg.config)?.clone();
+        let dims = engine.net_dims(&cfg.config)?;
         let mut rng = Pcg64::seed(cfg.seed);
         let state = NetState::init(&dims, &mut rng);
         let (bmat1, bmat2) = NetState::init_feedback(&dims, &mut rng);
@@ -106,7 +109,7 @@ impl Trainer {
                         "device mode requires the DFA algorithm".into(),
                     ));
                 }
-                log::info!("building photonic device backend ({bpd:?})...");
+                crate::log_info!("building photonic device backend ({bpd:?})...");
                 let mut be = DeviceBackend::new(bpd, cfg.seed ^ 0xdeu64)?;
                 let fb1 = be.compile_feedback(&bmat1)?;
                 let fb2 = be.compile_feedback(&bmat2)?;
@@ -135,7 +138,7 @@ impl Trainer {
         &self.dims
     }
 
-    pub fn engine(&self) -> &Arc<Engine> {
+    pub fn engine(&self) -> &Arc<dyn StepEngine> {
         &self.engine
     }
 
@@ -331,7 +334,7 @@ impl Trainer {
                 wall_s: e0.elapsed().as_secs_f64(),
                 steps,
             };
-            log::info!(
+            crate::log_info!(
                 "epoch {epoch:3}: loss {:.4} train_acc {:.4} val_acc {} ({:.1}s, {} steps)",
                 stats.train_loss,
                 stats.train_acc,
@@ -359,14 +362,12 @@ impl Trainer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::NativeEngine;
 
-    fn engine() -> Option<Arc<Engine>> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if dir.join("manifest.json").exists() {
-            Some(Arc::new(Engine::new(dir).unwrap()))
-        } else {
-            None
-        }
+    // The trainer is backend-agnostic; the native engine makes every test
+    // below hermetic (no `make artifacts` required).
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(NativeEngine::new())
     }
 
     fn tiny_cfg() -> TrainConfig {
@@ -408,7 +409,7 @@ mod tests {
 
     #[test]
     fn dfa_trains_tiny_network_via_artifacts() {
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let mut t = Trainer::new(engine, tiny_cfg()).unwrap();
         let train = Arc::new(tiny_data(256, 1));
         let test = Arc::new(tiny_data(64, 2));
@@ -426,7 +427,7 @@ mod tests {
 
     #[test]
     fn backprop_baseline_trains() {
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let mut cfg = tiny_cfg();
         cfg.algorithm = Algorithm::Backprop;
         let mut t = Trainer::new(engine, cfg).unwrap();
@@ -438,7 +439,7 @@ mod tests {
 
     #[test]
     fn noisy_training_still_learns() {
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let mut cfg = tiny_cfg();
         cfg.noise = NoiseMode::offchip();
         let mut t = Trainer::new(engine, cfg).unwrap();
@@ -451,7 +452,7 @@ mod tests {
     #[test]
     fn artifact_step_matches_pure_rust_reference() {
         // the end-to-end L1/L2-vs-L3 numerics cross-check
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let mut cfg = tiny_cfg();
         cfg.noise = NoiseMode::Gaussian { sigma: 0.1 };
         let mut t = Trainer::new(engine, cfg).unwrap();
@@ -483,7 +484,7 @@ mod tests {
 
     #[test]
     fn eval_is_deterministic() {
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let mut t = Trainer::new(engine, tiny_cfg()).unwrap();
         let test = tiny_data(64, 2);
         let a = t.evaluate(&test).unwrap();

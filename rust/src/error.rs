@@ -1,43 +1,74 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror` in the offline
+//! vendor set). The `Xla` variant exists only under the `pjrt` feature so
+//! the default build carries no XLA dependency.
+
+use std::fmt;
 
 /// Unified error for every subsystem (runtime, photonics, data, CLI).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json parse error at byte {offset}: {msg}")]
+    /// PJRT/XLA runtime failure (only with `--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
+    Io(std::io::Error),
     Json { offset: usize, msg: String },
-
-    #[error("manifest: {0}")]
     Manifest(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("photonics: {0}")]
     Photonics(String),
-
-    #[error("calibration: {0}")]
     Calibration(String),
-
-    #[error("gemm: {0}")]
     Gemm(String),
-
-    #[error("data: {0}")]
     Data(String),
-
-    #[error("config: {0}")]
     Config(String),
-
-    #[error("cli: {0}")]
     Cli(String),
-
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Photonics(m) => write!(f, "photonics: {m}"),
+            Error::Calibration(m) => write!(f, "calibration: {m}"),
+            Error::Gemm(m) => write!(f, "gemm: {m}"),
+            Error::Data(m) => write!(f, "data: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Cli(m) => write!(f, "cli: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
 }
 
 impl Error {
@@ -47,3 +78,26 @@ impl Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_subsystem_prefixes() {
+        assert_eq!(Error::Shape("2x3 vs 3x2".into()).to_string(), "shape mismatch: 2x3 vs 3x2");
+        assert_eq!(Error::Manifest("no artifact".into()).to_string(), "manifest: no artifact");
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+        let e = Error::Json { offset: 7, msg: "bad token".into() };
+        assert_eq!(e.to_string(), "json parse error at byte 7: bad token");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io:"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(std::error::Error::source(&Error::msg("x")).is_none());
+    }
+}

@@ -71,7 +71,7 @@ pub fn fig6_rows(lo: usize, hi: usize, points: usize) -> Vec<(usize, f64, f64)> 
         .collect()
 }
 
-/// Render the headline table as aligned text (CLI + EXPERIMENTS.md).
+/// Render the headline table as aligned text (CLI + run reports).
 pub fn render_headline() -> String {
     let mut out = String::from(
         "metric                                     model      paper     unit\n",

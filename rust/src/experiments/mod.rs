@@ -2,7 +2,7 @@
 //!
 //! Shared by the `pdfa` CLI subcommands, the `examples/` binaries and the
 //! `benches/` harnesses so every surface regenerates identical numbers.
-//! See DESIGN.md §3 for the experiment index.
+//! See README.md for the experiment index.
 
 pub mod characterization;
 pub mod energy_tables;

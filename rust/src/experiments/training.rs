@@ -5,13 +5,13 @@ use std::sync::Arc;
 use crate::dfa::config::{Algorithm, TrainConfig};
 use crate::dfa::noise_model::NoiseMode;
 use crate::dfa::trainer::{TrainResult, Trainer};
-use crate::runtime::Engine;
+use crate::runtime::StepEngine;
 use crate::Result;
 
 /// One Fig. 5(b)-style run: returns the full result (validation curve in
 /// `history`, final test accuracy).
 pub fn fig5b_run(
-    engine: Arc<Engine>,
+    engine: Arc<dyn StepEngine>,
     config: &str,
     noise: NoiseMode,
     epochs: usize,
@@ -50,7 +50,7 @@ pub struct SweepPoint {
 /// σ = 2 / 2^bits.
 #[allow(clippy::too_many_arguments)]
 pub fn fig5c_sweep(
-    engine: Arc<Engine>,
+    engine: Arc<dyn StepEngine>,
     config: &str,
     bits_list: &[f64],
     epochs: usize,
@@ -74,7 +74,7 @@ pub fn fig5c_sweep(
             max_steps_per_epoch,
             |_| {},
         )?;
-        log::info!(
+        crate::log_info!(
             "resolution {bits:.2} bits (sigma {sigma:.4}): test acc {:.4}",
             res.test_acc
         );
@@ -87,20 +87,15 @@ pub fn fig5c_sweep(
 mod tests {
     use super::*;
 
-    fn engine() -> Option<Arc<Engine>> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if dir.join("manifest.json").exists() {
-            Some(Arc::new(Engine::new(dir).unwrap()))
-        } else {
-            None
-        }
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(crate::runtime::NativeEngine::new())
     }
 
     #[test]
     fn fig5b_smoke_on_small_config() {
         // "small" = 784-128-128-10 on real synthetic digits — a true
         // minified Fig. 5(b) run
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         let res = fig5b_run(
             engine,
             "small",
@@ -120,7 +115,7 @@ mod tests {
 
     #[test]
     fn fig5c_sweep_orders_accuracy() {
-        let Some(engine) = engine() else { return };
+        let engine = engine();
         // extreme comparison: 1 bit (sigma = 1) vs clean-ish (12 bits)
         let pts = fig5c_sweep(
             engine,

@@ -183,6 +183,40 @@ mod tests {
     }
 
     #[test]
+    fn signed_inputs_match_plain_matvec_across_tile_orders() {
+        // Property: for random signed e (mixed positive/negative/zero
+        // entries) and random bank geometries, the sign-folding executor
+        // path equals a plain f32 mat-vec in both tile orders.
+        check("gemm-signed-fold-both-orders", 30, |rng| {
+            let m = 1 + rng.below(120) as usize;
+            let k = 1 + rng.below(40) as usize;
+            let br = 1 + rng.below(60) as usize;
+            let bc = 1 + rng.below(25) as usize;
+            let bmat = Tensor::rand_uniform(&[m, k], -1.0, 1.0, rng);
+            let e: Vec<f32> = (0..k)
+                .map(|_| match rng.below(4) {
+                    0 => 0.0, // exercise the signum()==0 fold branch
+                    1 => -(rng.uniform() as f32),
+                    _ => rng.normal(0.0, 0.8) as f32,
+                })
+                .collect();
+            let want: Vec<f32> = (0..m)
+                .map(|r| bmat.row(r).iter().zip(&e).map(|(&w, &x)| w * x).sum())
+                .collect();
+            for order in [Order::RowMajor, Order::ColMajor] {
+                let mut exec = NumericExecutor::new(br, bc);
+                let plan = GemmCompiler::plan(m, k, &exec, order).unwrap();
+                let y = plan
+                    .matvec(&mut exec, &bmat, &e)
+                    .map_err(|err| format!("{order:?}: {err}"))?;
+                assert_close(y.data(), &want, 2e-3 * k as f32)
+                    .map_err(|err| format!("{order:?} ({m}x{k} on {br}x{bc}): {err}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn both_orders_agree() {
         let mut rng = Pcg64::seed(3);
         let bmat = Tensor::rand_uniform(&[73, 31], -1.0, 1.0, &mut rng);

@@ -124,6 +124,49 @@ mod tests {
     }
 
     #[test]
+    fn ragged_tiling_roundtrips_matrix_through_padded_tiles() {
+        // Scatter an (m x k) matrix into zero-padded bank-sized tiles (the
+        // inscription path) and gather it back: every ragged shape must
+        // reconstruct exactly, with padding confined to the ragged edges.
+        use crate::tensor::Tensor;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seed(12);
+        for (m, k, bm, bk) in [
+            (60, 25, 50, 20),  // ragged both ways
+            (50, 21, 50, 20),  // one extra column
+            (51, 20, 50, 20),  // one extra row
+            (7, 3, 50, 20),    // smaller than one tile
+            (101, 41, 50, 20), // ragged multi-block
+        ] {
+            let src = Tensor::rand_uniform(&[m, k], -1.0, 1.0, &mut rng);
+            let t = Tiling::new(m, k, bm, bk).unwrap();
+            let mut back = Tensor::full(&[m, k], f32::NAN);
+            let mut pad_cells = 0usize;
+            for tile in &t.tiles {
+                // inscribe: copy into a zero-padded (bm x bk) tile
+                let mut buf = Tensor::zeros(&[bm, bk]);
+                for r in 0..tile.rows() {
+                    for c in 0..tile.cols() {
+                        buf.set(r, c, src.at(tile.row0 + r, tile.col0 + c));
+                    }
+                }
+                pad_cells += bm * bk - tile.macs();
+                // gather: read the live region back out
+                for r in 0..tile.rows() {
+                    for c in 0..tile.cols() {
+                        back.set(tile.row0 + r, tile.col0 + c, buf.at(r, c));
+                    }
+                }
+            }
+            assert_eq!(back, src, "({m},{k}) on ({bm},{bk})");
+            // padding accounting must agree with the utilisation figure
+            let total = t.n_cycles() * bm * bk;
+            let util = (total - pad_cells) as f64 / total as f64;
+            assert!((util - t.utilisation()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn partition_properties() {
         // tiles exactly cover the matrix, no overlap, and agree with the
         // L1 kernel's grid arithmetic: cycles = ceil(m/bm) * ceil(k/bk)

@@ -16,11 +16,18 @@
 //! * **L1** — Pallas kernels for the weight-bank datapath, embedded in the
 //!   same HLO.
 //!
-//! Python never runs on the training path: the `pdfa` binary loads
-//! `artifacts/*.hlo.txt` through PJRT (the `xla` crate) and is self-contained.
+//! Python never runs on the training path. The runtime layer is
+//! backend-abstracted behind [`runtime::StepEngine`]: the default build is
+//! fully hermetic and executes every training-step artifact with the
+//! pure-Rust [`runtime::NativeEngine`] (no XLA toolchain anywhere), while
+//! `--features pjrt` compiles `artifacts/*.hlo.txt` through PJRT for the
+//! compile-once/execute-many L2/L1 path. The `pjrt` feature additionally
+//! requires vendoring the `xla` crate by hand — see the note in
+//! `Cargo.toml` — since it is not part of the offline dependency set.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-figure
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the workspace layout, test/bench entry points and
+//! the `pjrt` feature flag, and `ROADMAP.md` for the project north star
+//! and open items.
 
 pub mod coordinator;
 pub mod data;

@@ -1,6 +1,6 @@
 //! `pdfa` — the photonic-DFA coordinator CLI.
 //!
-//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §3):
+//! Subcommands map one-to-one onto the paper's experiments:
 //!
 //! ```text
 //! pdfa train            train a network (Fig. 5(b) conditions)
@@ -21,7 +21,7 @@ use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::experiments;
 use photonic_dfa::photonics::BpdMode;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend, StepEngine};
 use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
 use photonic_dfa::util::json::Value;
 use photonic_dfa::util::logging;
@@ -101,6 +101,19 @@ fn print_global_help() {
     );
 }
 
+/// Shared `--backend`/`--artifacts` resolution for engine-driving commands.
+fn open_engine(a: &Args) -> Result<Arc<dyn StepEngine>> {
+    let backend = Backend::parse(a.str("backend"))
+        .ok_or_else(|| Error::Cli(format!("bad --backend '{}'", a.str("backend"))))?;
+    runtime::open(a.str("artifacts"), backend)
+}
+
+const BACKEND_SPEC: ArgSpec = ArgSpec::opt(
+    "backend",
+    "auto",
+    "step engine: auto | native | pjrt (pjrt needs a build with --features pjrt and a vendored xla crate — see Cargo.toml — plus AOT artifacts)",
+);
+
 // ---------------- train ----------------
 
 fn train_specs() -> Vec<ArgSpec> {
@@ -121,6 +134,7 @@ fn train_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("data-dir", "", "IDX dataset directory (empty = synthesise)"),
         ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full epoch)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        BACKEND_SPEC,
         ArgSpec::opt("out", "runs", "run output directory"),
         ArgSpec::opt("run-name", "", "run name (default: derived)"),
     ]
@@ -163,11 +177,15 @@ fn cmd_train(a: &Args) -> Result<()> {
         a.str("run-name").into()
     };
 
-    let engine = Arc::new(Engine::new(a.str("artifacts"))?);
+    let engine = open_engine(a)?;
     let mut recorder = RunRecorder::create(a.str("out"), &run_name)?;
     recorder.write_config(&cfg.to_json())?;
     let mut trainer = Trainer::new(engine, cfg)?;
-    log::info!("run '{run_name}' starting: {}", trainer.cfg.noise.describe());
+    photonic_dfa::log_info!(
+        "run '{run_name}' starting ({}): {}",
+        trainer.engine().platform_name(),
+        trainer.cfg.noise.describe()
+    );
     let (train, test) = trainer.load_data()?;
 
     let result = {
@@ -208,11 +226,12 @@ fn sweep_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("n-test", "2048", "test examples"),
         ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        BACKEND_SPEC,
     ]
 }
 
 fn cmd_sweep(a: &Args) -> Result<()> {
-    let engine = Arc::new(Engine::new(a.str("artifacts"))?);
+    let engine = open_engine(a)?;
     let bits = a.f64_list("bits")?;
     let pts = experiments::fig5c_sweep(
         engine,
@@ -351,23 +370,27 @@ fn cmd_gen_data(a: &Args) -> Result<()> {
 // ---------------- info ----------------
 
 fn info_specs() -> Vec<ArgSpec> {
-    vec![ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory")]
+    vec![
+        ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        BACKEND_SPEC,
+    ]
 }
 
 fn cmd_info(a: &Args) -> Result<()> {
-    let engine = Engine::new(a.str("artifacts"))?;
-    println!("PJRT platform: {}", engine.platform_name());
+    let engine = open_engine(a)?;
+    println!("backend: {}", engine.platform_name());
     println!("configs:");
-    for (name, d) in &engine.manifest().configs {
+    for (name, d) in engine.configs() {
         println!(
             "  {name}: {}-{}-{}-{} batch {}",
             d.d_in, d.d_h1, d.d_h2, d.d_out, d.batch
         );
     }
     println!("artifacts:");
-    for (name, art) in &engine.manifest().artifacts {
+    for art in engine.artifact_specs() {
         println!(
-            "  {name}: {} inputs, {} outputs ({})",
+            "  {}: {} inputs, {} outputs ({})",
+            art.name,
             art.inputs.len(),
             art.outputs.len(),
             art.path.file_name().unwrap_or_default().to_string_lossy()

@@ -1,7 +1,7 @@
 //! Device-level silicon-photonics substrate.
 //!
 //! The paper's testbed is a fabricated SOI photonic integrated circuit; this
-//! module is its simulated equivalent (DESIGN.md §5 substitutions), built
+//! module is its simulated equivalent (simulated substitutions for the paper's hardware), built
 //! bottom-up from the component physics so every experiment in §2/§4 runs
 //! against the same code path the real chip would exercise:
 //!

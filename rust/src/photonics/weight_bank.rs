@@ -486,6 +486,51 @@ mod tests {
     }
 
     #[test]
+    fn matvec_tracks_ideal_inner_product_in_every_bpd_mode() {
+        // The full signal chain must stay within each circuit's noise
+        // budget of the ideal normalised inner product w·x / n. Noise σ
+        // per mode follows Fig. 5(a): ideal ≈ 0, single-MRR 0.019,
+        // off-chip 0.098, on-chip 0.202 — allow ~5σ (+ lock/crosstalk
+        // margin) per sample.
+        let mut rng = Pcg64::seed(31);
+        for (mode, tol) in [
+            (BpdMode::Ideal, 0.06),
+            (BpdMode::SingleMrr, 0.15),
+            (BpdMode::OffChip, 0.60),
+            (BpdMode::OnChip, 1.20),
+        ] {
+            let mut bank = WeightBank::new(BankConfig {
+                seed: 17,
+                ..BankConfig::testbed(mode)
+            })
+            .unwrap();
+            let mut worst = 0.0f32;
+            let mut s = Summary::new();
+            for _ in 0..60 {
+                let w: Vec<f32> =
+                    (0..4).map(|_| rng.uniform_in(-0.9, 0.9) as f32).collect();
+                let x: Vec<f32> = (0..4).map(|_| rng.uniform() as f32).collect();
+                let got = bank.inner_product(&x, &w).unwrap();
+                let want: f32 =
+                    w.iter().zip(&x).map(|(&wi, &xi)| wi * xi).sum::<f32>() / 4.0;
+                let e = got - want;
+                worst = worst.max(e.abs());
+                s.add(e as f64);
+            }
+            assert!(
+                worst < tol,
+                "{mode:?}: worst-case error {worst} exceeds tolerance {tol}"
+            );
+            // the error must be noise, not bias (bound scales with mode σ)
+            assert!(
+                s.mean().abs() < (tol / 3.0) as f64,
+                "{mode:?}: biased by {}",
+                s.mean()
+            );
+        }
+    }
+
+    #[test]
     fn multiply_covers_full_quadrants() {
         let mut bank = WeightBank::new(BankConfig::testbed(BpdMode::Ideal)).unwrap();
         for (x, w) in [(0.8f32, 0.5f32), (0.9, -0.7), (0.3, 0.3), (1.0, -1.0)] {

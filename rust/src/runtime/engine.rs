@@ -1,15 +1,17 @@
-//! PJRT execution engine: compile-once, execute-many.
+//! PJRT execution engine: compile-once, execute-many (`--features pjrt`).
 //!
 //! Owns the PJRT CPU client and a cache of compiled executables keyed by
 //! artifact name. Marshals [`Tensor`]s to XLA `Literal`s (validated against
 //! the manifest's shapes) and decomposes the tuple result back into
 //! `Tensor`s. One `execute` call == one training step == one PJRT dispatch;
-//! Python is never involved.
+//! Python is never involved. Implements [`StepEngine`]/[`Artifact`] so the
+//! trainer is oblivious to which backend runs the step.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, NetDims};
+use crate::runtime::step_engine::{Artifact, StepEngine};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -22,14 +24,7 @@ pub struct LoadedArtifact {
 impl LoadedArtifact {
     /// Execute with positional inputs; returns outputs in manifest order.
     pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(Error::Shape(format!(
-                "artifact {}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            )));
-        }
+        self.spec.validate_inputs(inputs)?;
         // Upload inputs as PjRtBuffers we own and execute via execute_b:
         // the crate's literal-based `execute` leaks the input device
         // buffers it creates internally (xla_rs.cc releases without
@@ -37,16 +32,7 @@ impl LoadedArtifact {
         // here are freed on drop.
         let client = self.exe.client();
         let mut buffers = Vec::with_capacity(inputs.len());
-        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
-            if t.shape() != spec.shape.as_slice() {
-                return Err(Error::Shape(format!(
-                    "artifact {}: input '{}' expects shape {:?}, got {:?}",
-                    self.spec.name,
-                    spec.name,
-                    spec.shape,
-                    t.shape()
-                )));
-            }
+        for t in inputs {
             buffers.push(client.buffer_from_host_buffer::<f32>(
                 t.data(),
                 t.shape(),
@@ -76,28 +62,15 @@ impl LoadedArtifact {
             .collect()
     }
 
-    /// Execute with named inputs (order-independent, manifest resolves).
-    pub fn execute_named(&self, named: &[(&str, &Tensor)]) -> Result<Vec<Tensor>> {
-        let mut slots: Vec<Option<&Tensor>> = vec![None; self.spec.inputs.len()];
-        for (name, t) in named {
-            let idx = self.spec.input_index(name)?;
-            if slots[idx].replace(t).is_some() {
-                return Err(Error::Shape(format!("duplicate input '{name}'")));
-            }
-        }
-        let inputs: Result<Vec<Tensor>> = slots
-            .iter()
-            .enumerate()
-            .map(|(i, s)| {
-                s.cloned().ok_or_else(|| {
-                    Error::Shape(format!(
-                        "missing input '{}' for artifact {}",
-                        self.spec.inputs[i].name, self.spec.name
-                    ))
-                })
-            })
-            .collect();
-        self.execute(&inputs?)
+}
+
+impl Artifact for LoadedArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        LoadedArtifact::execute(self, inputs)
     }
 }
 
@@ -137,7 +110,7 @@ impl Engine {
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        log::info!(
+        crate::log_info!(
             "PJRT client: platform={} devices={}",
             client.platform_name(),
             client.device_count()
@@ -167,13 +140,39 @@ impl Engine {
         )?;
         let computation = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&computation)?;
-        log::info!("compiled artifact '{name}' in {:.2?}", t0.elapsed());
+        crate::log_info!("compiled artifact '{name}' in {:.2?}", t0.elapsed());
         let loaded = std::sync::Arc::new(LoadedArtifact { spec, exe });
         self.cache
             .lock()
             .unwrap()
             .insert(name.to_string(), loaded.clone());
         Ok(loaded)
+    }
+}
+
+impl StepEngine for Engine {
+    fn platform_name(&self) -> String {
+        Engine::platform_name(self)
+    }
+
+    fn net_dims(&self, config: &str) -> Result<NetDims> {
+        self.manifest.net_dims(config).cloned()
+    }
+
+    fn configs(&self) -> Vec<(String, NetDims)> {
+        self.manifest
+            .configs
+            .iter()
+            .map(|(n, d)| (n.clone(), d.clone()))
+            .collect()
+    }
+
+    fn artifact_specs(&self) -> Vec<ArtifactSpec> {
+        self.manifest.artifacts.values().cloned().collect()
+    }
+
+    fn load(&self, name: &str) -> Result<std::sync::Arc<dyn Artifact>> {
+        Ok(Engine::load(self, name)?)
     }
 }
 
@@ -259,6 +258,7 @@ mod tests {
 
     #[test]
     fn named_execution_resolves_order() {
+        use crate::runtime::step_engine::Artifact as _;
         let Some(engine) = engine() else { return };
         let fwd = engine.load("fwd_tiny").unwrap();
         let mut rng = Pcg64::seed(9);

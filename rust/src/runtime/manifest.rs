@@ -54,6 +54,31 @@ impl ArtifactSpec {
                 Error::Manifest(format!("artifact {} has no output '{name}'", self.name))
             })
     }
+
+    /// Check positional inputs against the spec (count + shapes) — the
+    /// shared front door of every backend's `execute`.
+    pub fn validate_inputs(&self, inputs: &[crate::tensor::Tensor]) -> Result<()> {
+        if inputs.len() != self.inputs.len() {
+            return Err(Error::Shape(format!(
+                "artifact {}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&self.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(Error::Shape(format!(
+                    "artifact {}: input '{}' expects shape {:?}, got {:?}",
+                    self.name,
+                    spec.name,
+                    spec.shape,
+                    t.shape()
+                )));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Network configuration an artifact set was traced for.

@@ -1,20 +1,31 @@
-//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//! Runtime: load and execute training-step artifacts, behind a backend
+//! abstraction.
 //!
-//! The compile path (`python/compile/aot.py`, run once by `make artifacts`)
-//! lowers every L2 function to **HLO text** plus a JSON manifest describing
-//! each artifact's ordered inputs/outputs. This module is the only place
-//! that touches the `xla` crate:
+//! * [`step_engine`] — the [`StepEngine`] / [`Artifact`] traits every
+//!   caller programs against, plus the [`open`] factory and [`Backend`]
+//!   selection policy
+//! * [`native`]    — [`native::NativeEngine`]: pure-Rust execution of the
+//!   artifact contract via `dfa::reference` (default build; hermetic)
+//! * [`manifest`]  — parse `artifacts/manifest.json` into typed specs
+//! * [`engine`]    — `--features pjrt` only: an [`engine::Engine`] owning
+//!   the PJRT CPU client, a compiled-executable cache, and
+//!   `Tensor` ⇄ `Literal` marshalling over the AOT HLO artifacts
 //!
-//! * [`manifest`] — parse `artifacts/manifest.json` into typed specs
-//! * [`engine`]   — an [`engine::Engine`] owning the PJRT CPU client, a
-//!   compiled-executable cache, and `Tensor` ⇄ `Literal` marshalling
-//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers every L2 function to **HLO text** plus a JSON
+//! manifest describing each artifact's ordered inputs/outputs.
 //! Interchange is HLO *text*, not a serialized `HloModuleProto`: jax ≥ 0.5
 //! emits protos with 64-bit instruction ids which xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! rejects; the text parser reassigns ids.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
+pub mod step_engine;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedArtifact};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use native::NativeEngine;
+pub use step_engine::{open, Artifact, Backend, StepEngine};

@@ -1,0 +1,495 @@
+//! Pure-Rust execution of the training-step artifact contract.
+//!
+//! [`NativeEngine`] serves the same artifact vocabulary the AOT manifest
+//! describes — `fwd_<cfg>`, `dfa_step_<cfg>`, `bp_step_<cfg>`,
+//! `apply_grads_<cfg>` and `photonic_matvec` — but executes each one with
+//! [`crate::dfa::reference`] (the op-for-op twin of `python/compile/model.py`)
+//! and the L3 MRR physics instead of PJRT. No XLA toolchain, no HLO files:
+//! the default build trains end-to-end with this backend alone.
+//!
+//! Specs are synthesised from the same `NetDims` the AOT pipeline traces
+//! (`python/compile/model.py::CONFIGS`), so input/output names, shapes and
+//! ordering are bit-identical to the manifest's; when an artifact directory
+//! with a `manifest.json` is present its configs are merged in, letting a
+//! native build drive networks traced at non-default dimensions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::dfa::reference;
+use crate::photonics::constants::{BANK_COLS, BANK_ROWS};
+use crate::photonics::mrr::MrrDesign;
+use crate::runtime::manifest::{ArtifactSpec, IoSpec, Manifest, NetDims};
+use crate::runtime::step_engine::{Artifact, StepEngine};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Which reference routine an artifact name maps onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Fwd,
+    DfaStep,
+    BpStep,
+    ApplyGrads,
+    PhotonicMatvec,
+}
+
+/// The network configs the AOT pipeline traces (model.py::CONFIGS).
+pub fn builtin_configs() -> BTreeMap<String, NetDims> {
+    let mut m = BTreeMap::new();
+    let mut put = |name: &str, d_in, d_h1, d_h2, d_out, batch| {
+        m.insert(name.to_string(), NetDims { d_in, d_h1, d_h2, d_out, batch });
+    };
+    put("tiny", 16, 32, 32, 4, 8);
+    put("small", 784, 128, 128, 10, 64);
+    put("mnist", 784, 800, 800, 10, 64);
+    m
+}
+
+fn io(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+/// `[w1, b1, w2, b2, w3, b3, vw1, vb1, vw2, vb2, vw3, vb3]` — the state
+/// layout of `aot.py::_state_io`.
+fn state_io(d: &NetDims) -> Vec<IoSpec> {
+    let params = [
+        ("w1", vec![d.d_in, d.d_h1]),
+        ("b1", vec![d.d_h1]),
+        ("w2", vec![d.d_h1, d.d_h2]),
+        ("b2", vec![d.d_h2]),
+        ("w3", vec![d.d_h2, d.d_out]),
+        ("b3", vec![d.d_out]),
+    ];
+    let mut out: Vec<IoSpec> = params.iter().map(|(n, s)| io(n, s)).collect();
+    out.extend(params.iter().map(|(n, s)| io(&format!("v{n}"), s)));
+    out
+}
+
+fn config_specs(config: &str, d: &NetDims, dir: &Path) -> Vec<(ArtifactSpec, Kind)> {
+    let path = |name: &str| dir.join(format!("{name}.hlo.txt"));
+    let x = io("x", &[d.batch, d.d_in]);
+    let y = io("y", &[d.batch, d.d_out]);
+    let step_outputs: Vec<IoSpec> = state_io(d)
+        .into_iter()
+        .chain([io("loss", &[]), io("ncorrect", &[])])
+        .collect();
+
+    let fwd_name = format!("fwd_{config}");
+    let fwd = ArtifactSpec {
+        name: fwd_name.clone(),
+        path: path(&fwd_name),
+        config: config.into(),
+        inputs: state_io(d)[..6].iter().cloned().chain([x.clone()]).collect(),
+        outputs: vec![
+            io("logits", &[d.batch, d.d_out]),
+            io("a1", &[d.batch, d.d_h1]),
+            io("a2", &[d.batch, d.d_h2]),
+            io("h1", &[d.batch, d.d_h1]),
+            io("h2", &[d.batch, d.d_h2]),
+        ],
+    };
+
+    let dfa_name = format!("dfa_step_{config}");
+    let dfa = ArtifactSpec {
+        name: dfa_name.clone(),
+        path: path(&dfa_name),
+        config: config.into(),
+        inputs: state_io(d)
+            .into_iter()
+            .chain([
+                io("bmat1", &[d.d_h1, d.d_out]),
+                io("bmat2", &[d.d_h2, d.d_out]),
+                x.clone(),
+                y.clone(),
+                io("noise1", &[d.d_h1, d.batch]),
+                io("noise2", &[d.d_h2, d.batch]),
+                io("sigma", &[]),
+                io("bits", &[]),
+                io("lr", &[]),
+                io("momentum", &[]),
+            ])
+            .collect(),
+        outputs: step_outputs.clone(),
+    };
+
+    let bp_name = format!("bp_step_{config}");
+    let bp = ArtifactSpec {
+        name: bp_name.clone(),
+        path: path(&bp_name),
+        config: config.into(),
+        inputs: state_io(d)
+            .into_iter()
+            .chain([x.clone(), y.clone(), io("lr", &[]), io("momentum", &[])])
+            .collect(),
+        outputs: step_outputs,
+    };
+
+    let apply_name = format!("apply_grads_{config}");
+    let apply = ArtifactSpec {
+        name: apply_name.clone(),
+        path: path(&apply_name),
+        config: config.into(),
+        inputs: state_io(d)
+            .into_iter()
+            .chain([
+                x,
+                io("h1", &[d.batch, d.d_h1]),
+                io("h2", &[d.batch, d.d_h2]),
+                io("e", &[d.batch, d.d_out]),
+                io("d1t", &[d.d_h1, d.batch]),
+                io("d2t", &[d.d_h2, d.batch]),
+                io("lr", &[]),
+                io("momentum", &[]),
+            ])
+            .collect(),
+        outputs: state_io(d),
+    };
+
+    vec![
+        (fwd, Kind::Fwd),
+        (dfa, Kind::DfaStep),
+        (bp, Kind::BpStep),
+        (apply, Kind::ApplyGrads),
+    ]
+}
+
+fn photonic_matvec_spec(dir: &Path) -> ArtifactSpec {
+    ArtifactSpec {
+        name: "photonic_matvec".into(),
+        path: dir.join("photonic_matvec.hlo.txt"),
+        config: "bank".into(),
+        inputs: vec![
+            io("x", &[BANK_COLS]),
+            io("phi", &[BANK_ROWS, BANK_COLS]),
+            io("r", &[]),
+            io("a", &[]),
+        ],
+        outputs: vec![io("out", &[BANK_ROWS])],
+    }
+}
+
+/// The pure-Rust step engine.
+pub struct NativeEngine {
+    configs: BTreeMap<String, NetDims>,
+    artifacts: BTreeMap<String, (ArtifactSpec, Kind)>,
+}
+
+impl NativeEngine {
+    /// Engine over the built-in (model.py) configs only.
+    pub fn new() -> NativeEngine {
+        Self::with_configs(builtin_configs(), Path::new("artifacts"))
+    }
+
+    /// Engine over `artifacts_dir`: built-in configs, plus any extra
+    /// configs a `manifest.json` there declares. The directory (and the
+    /// manifest) may be absent — native execution needs neither.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<NativeEngine> {
+        let dir = artifacts_dir.as_ref();
+        let mut configs = builtin_configs();
+        if dir.join("manifest.json").exists() {
+            let manifest = Manifest::load(dir)?;
+            for (name, dims) in manifest.configs {
+                configs.insert(name, dims);
+            }
+        }
+        Ok(Self::with_configs(configs, dir))
+    }
+
+    /// Engine over an explicit config table (tests, custom networks).
+    pub fn with_configs(
+        configs: BTreeMap<String, NetDims>,
+        dir: impl AsRef<Path>,
+    ) -> NativeEngine {
+        let dir = dir.as_ref();
+        let mut artifacts = BTreeMap::new();
+        for (name, dims) in &configs {
+            for (spec, kind) in config_specs(name, dims, dir) {
+                artifacts.insert(spec.name.clone(), (spec, kind));
+            }
+        }
+        let pm = photonic_matvec_spec(dir);
+        artifacts.insert(pm.name.clone(), (pm, Kind::PhotonicMatvec));
+        NativeEngine { configs, artifacts }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StepEngine for NativeEngine {
+    fn platform_name(&self) -> String {
+        "native".into()
+    }
+
+    fn net_dims(&self, config: &str) -> Result<NetDims> {
+        self.configs
+            .get(config)
+            .cloned()
+            .ok_or_else(|| Error::Manifest(format!("no config '{config}'")))
+    }
+
+    fn configs(&self) -> Vec<(String, NetDims)> {
+        self.configs
+            .iter()
+            .map(|(n, d)| (n.clone(), d.clone()))
+            .collect()
+    }
+
+    fn artifact_specs(&self) -> Vec<ArtifactSpec> {
+        self.artifacts.values().map(|(s, _)| s.clone()).collect()
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<dyn Artifact>> {
+        let (spec, kind) = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))?;
+        Ok(Arc::new(NativeArtifact { spec: spec.clone(), kind: *kind }))
+    }
+}
+
+/// One loaded native artifact.
+pub struct NativeArtifact {
+    spec: ArtifactSpec,
+    kind: Kind,
+}
+
+impl Artifact for NativeArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.spec.validate_inputs(inputs)?;
+        match self.kind {
+            Kind::Fwd => {
+                let f = reference::forward(&inputs[..6], &inputs[6]);
+                Ok(vec![f.logits, f.a1, f.a2, f.h1, f.h2])
+            }
+            Kind::DfaStep => {
+                let mut state: Vec<Tensor> = inputs[..12].to_vec();
+                let (loss, correct) = reference::dfa_step(
+                    &mut state,
+                    &inputs[12],
+                    &inputs[13],
+                    &inputs[14],
+                    &inputs[15],
+                    &inputs[16],
+                    &inputs[17],
+                    inputs[18].item(),
+                    inputs[19].item(),
+                    inputs[20].item(),
+                    inputs[21].item(),
+                );
+                state.push(Tensor::scalar(loss));
+                state.push(Tensor::scalar(correct as f32));
+                Ok(state)
+            }
+            Kind::BpStep => {
+                let mut state: Vec<Tensor> = inputs[..12].to_vec();
+                let (loss, correct) = reference::bp_step(
+                    &mut state,
+                    &inputs[12],
+                    &inputs[13],
+                    inputs[14].item(),
+                    inputs[15].item(),
+                );
+                state.push(Tensor::scalar(loss));
+                state.push(Tensor::scalar(correct as f32));
+                Ok(state)
+            }
+            Kind::ApplyGrads => {
+                let mut state: Vec<Tensor> = inputs[..12].to_vec();
+                let grads = reference::grads_from_deltas(
+                    &inputs[12],
+                    &inputs[13],
+                    &inputs[14],
+                    &inputs[15],
+                    &inputs[16],
+                    &inputs[17],
+                );
+                reference::sgd_momentum(
+                    &mut state,
+                    &grads,
+                    inputs[18].item(),
+                    inputs[19].item(),
+                );
+                Ok(state)
+            }
+            Kind::PhotonicMatvec => {
+                let (x, phi) = (&inputs[0], &inputs[1]);
+                let design = MrrDesign {
+                    self_coupling: inputs[2].item() as f64,
+                    loss_a: inputs[3].item() as f64,
+                };
+                let (m, k) = (phi.rows(), phi.cols());
+                let out: Vec<f32> = (0..m)
+                    .map(|r| {
+                        (0..k)
+                            .map(|c| {
+                                x.data()[c] as f64 * design.weight(phi.at(r, c) as f64)
+                            })
+                            .sum::<f64>() as f32
+                    })
+                    .collect();
+                Ok(vec![Tensor::new(&[m], out)?])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfa::params::NetState;
+    use crate::util::rng::Pcg64;
+
+    fn engine() -> NativeEngine {
+        NativeEngine::new()
+    }
+
+    #[test]
+    fn serves_full_artifact_vocabulary() {
+        let e = engine();
+        let names: Vec<String> =
+            e.artifact_specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 13); // 4 per config x 3 configs + photonic_matvec
+        for cfg in ["tiny", "small", "mnist"] {
+            for prefix in ["fwd", "dfa_step", "bp_step", "apply_grads"] {
+                assert!(names.iter().any(|n| n == &format!("{prefix}_{cfg}")));
+            }
+        }
+        assert!(names.iter().any(|n| n == "photonic_matvec"));
+        assert!(e.load("nonexistent").is_err());
+        assert!(e.net_dims("nonexistent").is_err());
+    }
+
+    #[test]
+    fn dfa_step_spec_matches_manifest_contract() {
+        let e = engine();
+        let art = e.load("dfa_step_tiny").unwrap();
+        assert_eq!(art.spec().inputs.len(), 22);
+        assert_eq!(art.spec().outputs.len(), 14);
+        assert_eq!(art.spec().inputs.last().unwrap().name, "momentum");
+        assert_eq!(art.spec().inputs[0].name, "w1");
+        assert_eq!(art.spec().inputs[6].name, "vw1");
+        assert_eq!(art.spec().input_index("x").unwrap(), 14);
+    }
+
+    #[test]
+    fn dfa_step_executes_reference_math() {
+        let e = engine();
+        let dims = e.net_dims("tiny").unwrap();
+        let art = e.load("dfa_step_tiny").unwrap();
+        let mut rng = Pcg64::seed(3);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let n1 = Tensor::zeros(&[dims.d_h1, dims.batch]);
+        let n2 = Tensor::zeros(&[dims.d_h2, dims.batch]);
+
+        let mut inputs = state.tensors.clone();
+        inputs.extend([
+            b1.clone(), b2.clone(), x.clone(), y.clone(), n1.clone(), n2.clone(),
+            Tensor::scalar(0.0), Tensor::scalar(0.0),
+            Tensor::scalar(0.05), Tensor::scalar(0.9),
+        ]);
+        let out = art.execute(&inputs).unwrap();
+        assert_eq!(out.len(), 14);
+
+        // twin through the reference directly
+        let mut ref_state = state.tensors.clone();
+        let (ref_loss, ref_correct) = reference::dfa_step(
+            &mut ref_state, &b1, &b2, &x, &y, &n1, &n2, 0.0, 0.0, 0.05, 0.9,
+        );
+        assert_eq!(out[12].item(), ref_loss);
+        assert_eq!(out[13].item(), ref_correct as f32);
+        for (got, want) in out[..12].iter().zip(&ref_state) {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_wrong_inputs() {
+        let e = engine();
+        let fwd = e.load("fwd_tiny").unwrap();
+        let bad: Vec<Tensor> = fwd
+            .spec()
+            .inputs
+            .iter()
+            .map(|_| Tensor::zeros(&[1, 1]))
+            .collect();
+        assert!(fwd.execute(&bad).is_err());
+        assert!(fwd.execute(&[Tensor::zeros(&[8, 16])]).is_err());
+    }
+
+    #[test]
+    fn fwd_and_apply_grads_compose_into_a_step() {
+        // fwd -> reference loss/error -> apply_grads must reduce the loss
+        let e = engine();
+        let dims = e.net_dims("tiny").unwrap();
+        let fwd = e.load("fwd_tiny").unwrap();
+        let apply = e.load("apply_grads_tiny").unwrap();
+        let mut rng = Pcg64::seed(11);
+        let mut state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let zeros1 = Tensor::zeros(&[dims.d_h1, dims.batch]);
+        let zeros2 = Tensor::zeros(&[dims.d_h2, dims.batch]);
+
+        let mut first_loss = None;
+        let mut last_loss = 0.0;
+        for _ in 0..20 {
+            let mut inputs = state.tensors[..6].to_vec();
+            inputs.push(x.clone());
+            let f = fwd.execute(&inputs).unwrap();
+            let (loss, err, _) = reference::loss_and_error(&f[0], &y);
+            let d1t = reference::dfa_gradient(&b1, &err, &zeros1, &f[1], 0.0, 0.0);
+            let d2t = reference::dfa_gradient(&b2, &err, &zeros2, &f[2], 0.0, 0.0);
+            let mut ai = state.tensors.clone();
+            ai.extend([
+                x.clone(), f[3].clone(), f[4].clone(), err, d1t, d2t,
+                Tensor::scalar(0.05), Tensor::scalar(0.9),
+            ]);
+            let mut out = apply.execute(&ai).unwrap();
+            state.update_from(&mut out).unwrap();
+            first_loss.get_or_insert(loss);
+            last_loss = loss;
+        }
+        let first = first_loss.unwrap();
+        assert!(last_loss < 0.5 * first, "{first} -> {last_loss}");
+    }
+
+    #[test]
+    fn photonic_matvec_matches_mrr_physics() {
+        let e = engine();
+        let art = e.load("photonic_matvec").unwrap();
+        let mut rng = Pcg64::seed(5);
+        let x = Tensor::rand_uniform(&[BANK_COLS], 0.0, 1.0, &mut rng);
+        let phi = Tensor::rand_uniform(&[BANK_ROWS, BANK_COLS], -0.5, 0.5, &mut rng);
+        let out = art
+            .execute(&[x.clone(), phi.clone(), Tensor::scalar(0.95), Tensor::scalar(0.999)])
+            .unwrap();
+        assert_eq!(out[0].shape(), &[BANK_ROWS]);
+        let design = MrrDesign { self_coupling: 0.95, loss_a: 0.999 };
+        for row in 0..BANK_ROWS {
+            let want: f64 = (0..BANK_COLS)
+                .map(|c| x.data()[c] as f64 * design.weight(phi.at(row, c) as f64))
+                .sum();
+            assert!((out[0].data()[row] as f64 - want).abs() < 1e-4 * BANK_COLS as f64);
+        }
+    }
+}

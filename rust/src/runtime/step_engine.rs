@@ -1,0 +1,195 @@
+//! Backend abstraction for training-step execution.
+//!
+//! The trainer, experiments and CLI only ever talk to [`StepEngine`] /
+//! [`Artifact`]; *which* substrate runs the math is a deployment choice:
+//!
+//! * [`crate::runtime::native::NativeEngine`] — pure Rust, always
+//!   available, executes the manifest's training-step contract through
+//!   [`crate::dfa::reference`] (the op-for-op twin of the JAX model).
+//! * [`crate::runtime::engine::Engine`] (`--features pjrt`) — the
+//!   compile-once/execute-many PJRT path over the AOT HLO artifacts.
+//!
+//! Both backends speak the same artifact vocabulary (`fwd_<cfg>`,
+//! `dfa_step_<cfg>`, `bp_step_<cfg>`, `apply_grads_<cfg>`,
+//! `photonic_matvec`) with identical input/output names, shapes and
+//! ordering, so every caller — and every test — is backend-agnostic.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::manifest::{ArtifactSpec, NetDims};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// An executable training-step artifact (one PJRT dispatch or one native
+/// reference-math call per `execute`).
+pub trait Artifact: Send + Sync {
+    /// The manifest contract this artifact satisfies.
+    fn spec(&self) -> &ArtifactSpec;
+
+    /// Execute with positional inputs; returns outputs in manifest order.
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute with named inputs (order-independent, spec resolves).
+    fn execute_named(&self, named: &[(&str, &Tensor)]) -> Result<Vec<Tensor>> {
+        let spec = self.spec();
+        let mut slots: Vec<Option<&Tensor>> = vec![None; spec.inputs.len()];
+        for (name, t) in named {
+            let idx = spec.input_index(name)?;
+            if slots[idx].replace(t).is_some() {
+                return Err(Error::Shape(format!("duplicate input '{name}'")));
+            }
+        }
+        let inputs: Result<Vec<Tensor>> = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.cloned().ok_or_else(|| {
+                    Error::Shape(format!(
+                        "missing input '{}' for artifact {}",
+                        spec.inputs[i].name, spec.name
+                    ))
+                })
+            })
+            .collect();
+        self.execute(&inputs?)
+    }
+}
+
+/// A backend that can resolve network configs and load artifacts.
+pub trait StepEngine: Send + Sync {
+    /// Human-readable backend identity ("native", "cpu" for PJRT, ...).
+    fn platform_name(&self) -> String;
+
+    /// Dimensions of a named network config.
+    fn net_dims(&self, config: &str) -> Result<NetDims>;
+
+    /// All known network configs, sorted by name.
+    fn configs(&self) -> Vec<(String, NetDims)>;
+
+    /// Specs of every artifact this backend can load (cheap; does not
+    /// compile anything).
+    fn artifact_specs(&self) -> Vec<ArtifactSpec>;
+
+    /// Load (and for PJRT, compile) an artifact by name.
+    fn load(&self, name: &str) -> Result<Arc<dyn Artifact>>;
+}
+
+/// Which backend [`open`] should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT when built with `--features pjrt` *and* the artifact directory
+    /// holds a manifest; the native engine otherwise.
+    Auto,
+    /// Force the pure-Rust engine (never touches the artifact directory's
+    /// HLO files; uses its manifest only for extra config dims).
+    Native,
+    /// Force PJRT; errors without `--features pjrt` or a manifest.
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse "auto" | "native" | "pjrt" (the `--backend` CLI values).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "auto" => Some(Backend::Auto),
+            "native" => Some(Backend::Native),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Construct a [`StepEngine`] over `artifacts_dir` per the backend policy.
+///
+/// The directory may not exist at all for [`Backend::Native`] /
+/// [`Backend::Auto`]: the native engine then serves its built-in configs.
+pub fn open(artifacts_dir: impl AsRef<Path>, backend: Backend) -> Result<Arc<dyn StepEngine>> {
+    let dir = artifacts_dir.as_ref();
+    let has_manifest = dir.join("manifest.json").exists();
+    match backend {
+        Backend::Native => Ok(Arc::new(super::native::NativeEngine::open(dir)?)),
+        Backend::Pjrt => open_pjrt(dir, has_manifest),
+        Backend::Auto => {
+            if cfg!(feature = "pjrt") && has_manifest {
+                open_pjrt(dir, true)
+            } else {
+                Ok(Arc::new(super::native::NativeEngine::open(dir)?))
+            }
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(dir: &Path, has_manifest: bool) -> Result<Arc<dyn StepEngine>> {
+    if !has_manifest {
+        return Err(Error::Manifest(format!(
+            "backend pjrt needs {}/manifest.json (run `make artifacts`)",
+            dir.display()
+        )));
+    }
+    Ok(Arc::new(super::engine::Engine::new(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_dir: &Path, _has_manifest: bool) -> Result<Arc<dyn StepEngine>> {
+    Err(Error::Config(
+        "backend pjrt requires building with `--features pjrt`".into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parses_cli_values() {
+        assert_eq!(Backend::parse("auto"), Some(Backend::Auto));
+        assert_eq!(Backend::parse("native"), Some(Backend::Native));
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("xla"), None);
+    }
+
+    #[test]
+    fn auto_without_manifest_is_native() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let engine = open(&dir, Backend::Auto).unwrap();
+        assert_eq!(engine.platform_name(), "native");
+        assert!(engine.net_dims("small").is_ok());
+    }
+
+    #[test]
+    fn pjrt_backend_errors_without_feature_or_manifest() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        assert!(open(&dir, Backend::Pjrt).is_err());
+    }
+
+    #[test]
+    fn named_execution_resolves_order_on_native() {
+        let engine = open("artifacts", Backend::Native).unwrap();
+        let fwd = engine.load("fwd_tiny").unwrap();
+        let mut rng = crate::util::rng::Pcg64::seed(9);
+        let tensors: Vec<(String, Tensor)> = fwd
+            .spec()
+            .inputs
+            .iter()
+            .map(|s| (s.name.clone(), Tensor::randn(&s.shape, 0.3, &mut rng)))
+            .collect();
+        let positional: Vec<Tensor> = tensors.iter().map(|(_, t)| t.clone()).collect();
+        let want = fwd.execute(&positional).unwrap();
+        let mut named: Vec<(&str, &Tensor)> = tensors
+            .iter()
+            .map(|(n, t)| (n.as_str(), t))
+            .collect();
+        named.reverse();
+        let got = fwd.execute_named(&named).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g, w);
+        }
+        // missing and duplicate inputs rejected
+        assert!(fwd.execute_named(&named[1..]).is_err());
+        let mut dup = named.clone();
+        dup[0] = dup[1];
+        assert!(fwd.execute_named(&dup).is_err());
+    }
+}

@@ -176,7 +176,57 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500 ns");
         assert!(fmt_ns(1500.0).contains("µs"));
         assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.2e9).contains(" s"));
         assert_eq!(fmt_si(2.0e13), "20.00T");
+        assert_eq!(fmt_si(2.5e9), "2.50G");
+        assert_eq!(fmt_si(3.0e6), "3.00M");
+        assert_eq!(fmt_si(1.5e3), "1.50k");
         assert_eq!(fmt_si(5.0), "5.00");
+    }
+
+    fn result_with(samples: &[f64]) -> BenchResult {
+        BenchResult {
+            name: "synthetic".into(),
+            samples_ns: samples.to_vec(),
+            units_per_iter: None,
+        }
+    }
+
+    #[test]
+    fn summary_math_on_known_samples() {
+        // 1..=100 ns: mean 50.5, p50 = 50/51 midpoint-ish, min 1
+        let samples: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let r = result_with(&samples);
+        assert!((r.mean_ns() - 50.5).abs() < 1e-9);
+        assert!((r.p50_ns() - 50.5).abs() <= 1.0, "{}", r.p50_ns());
+        assert!((r.p95_ns() - 95.0).abs() <= 1.0, "{}", r.p95_ns());
+        assert_eq!(r.min_ns(), 1.0);
+        // order independence of the percentile summary
+        let mut rev = samples.clone();
+        rev.reverse();
+        let rr = result_with(&rev);
+        assert_eq!(r.p50_ns(), rr.p50_ns());
+        assert_eq!(r.p95_ns(), rr.p95_ns());
+    }
+
+    #[test]
+    fn summary_math_degenerate_cases() {
+        let one = result_with(&[42.0]);
+        assert_eq!(one.mean_ns(), 42.0);
+        assert_eq!(one.p50_ns(), 42.0);
+        assert_eq!(one.p95_ns(), 42.0);
+        assert_eq!(one.min_ns(), 42.0);
+        let flat = result_with(&[7.0; 16]);
+        assert_eq!(flat.mean_ns(), 7.0);
+        assert_eq!(flat.p50_ns(), 7.0);
+    }
+
+    #[test]
+    fn throughput_uses_mean() {
+        // 1000 units at a steady 1 µs/iter -> 1e9 units/s -> "1.00G"
+        let mut r = result_with(&[1000.0; 8]);
+        r.units_per_iter = Some((1000.0, "MAC"));
+        let line = r.report();
+        assert!(line.contains("throughput=1.00G MAC/s"), "{line}");
     }
 }

@@ -1,0 +1,471 @@
+//! Self-contained gzip (RFC 1952) + DEFLATE (RFC 1951) codec.
+//!
+//! Stands in for `flate2` (unavailable offline). The decoder implements
+//! full inflate — stored, fixed-Huffman and dynamic-Huffman blocks — so
+//! real gzipped MNIST files load; the encoder emits stored (uncompressed)
+//! deflate blocks, which every standard tool decompresses. Both ends
+//! carry the CRC-32 / ISIZE trailer.
+
+use crate::{Error, Result};
+
+const MAX_BITS: usize = 15;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::Data(format!("gzip: {}", msg.into()))
+}
+
+// ---------------- CRC-32 (IEEE, reflected) ----------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+};
+
+/// CRC-32 of `data` (the gzip trailer checksum).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+// ---------------- compression (stored blocks) ----------------
+
+/// Wrap `data` in a valid gzip stream using stored deflate blocks.
+///
+/// No compression is attempted — IDX payloads are consumed locally and
+/// the format only needs to round-trip — but the output is standard gzip
+/// that `gunzip`/`flate2`/`zlib` all accept.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() + 64);
+    // header: magic, CM=deflate, no flags, mtime 0, XFL 0, OS unknown
+    out.extend_from_slice(&[0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0x00, 0xff]);
+    let mut chunks = data.chunks(0xffff).peekable();
+    if data.is_empty() {
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xff, 0xff]); // final empty block
+    }
+    while let Some(chunk) = chunks.next() {
+        let bfinal = if chunks.peek().is_none() { 1u8 } else { 0 };
+        out.push(bfinal); // BTYPE=00 (stored), byte-aligned
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&crc32(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+// ---------------- decompression ----------------
+
+/// LSB-first bit reader over the deflate payload.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    acc: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn bits(&mut self, n: u32) -> Result<u32> {
+        while self.nbits < n {
+            let byte = *self
+                .data
+                .get(self.pos)
+                .ok_or_else(|| err("truncated deflate stream"))?;
+            self.acc |= (byte as u32) << self.nbits;
+            self.nbits += 8;
+            self.pos += 1;
+        }
+        let v = self.acc & ((1u32 << n) - 1);
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Discard buffered bits so the cursor is byte-aligned (stored blocks).
+    fn align(&mut self) {
+        self.acc = 0;
+        self.nbits = 0;
+    }
+}
+
+/// A canonical Huffman decoding table: symbol counts and the symbols
+/// sorted by (code length, symbol) — the puff.c representation.
+struct Huffman {
+    count: [u16; MAX_BITS + 1],
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    /// Build from per-symbol code lengths (0 = unused).
+    fn new(lengths: &[u8]) -> Result<Huffman> {
+        let mut count = [0u16; MAX_BITS + 1];
+        for &l in lengths {
+            if l as usize > MAX_BITS {
+                return Err(err("code length exceeds 15"));
+            }
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        // over-subscribed codes are invalid
+        let mut left = 1i32;
+        for l in 1..=MAX_BITS {
+            left = (left << 1) - count[l] as i32;
+            if left < 0 {
+                return Err(err("over-subscribed Huffman code"));
+            }
+        }
+        let mut offsets = [0u16; MAX_BITS + 2];
+        for l in 1..=MAX_BITS {
+            offsets[l + 1] = offsets[l] + count[l];
+        }
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l != 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbols[offsets[l as usize] as usize] = sym as u16;
+                offsets[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbols })
+    }
+
+    fn decode(&self, r: &mut BitReader) -> Result<u16> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..=MAX_BITS {
+            code |= r.bits(1)? as i32;
+            let cnt = self.count[len] as i32;
+            if code - first < cnt {
+                return Ok(self.symbols[(index + (code - first)) as usize]);
+            }
+            index += cnt;
+            first = (first + cnt) << 1;
+            code <<= 1;
+        }
+        Err(err("invalid Huffman code"))
+    }
+}
+
+const LENGTH_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59,
+    67, 83, 99, 115, 131, 163, 195, 227, 258,
+];
+const LENGTH_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4,
+    5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513,
+    769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10,
+    11, 11, 12, 12, 13, 13,
+];
+
+/// Decode one Huffman-coded block body into `out`.
+fn inflate_block(
+    r: &mut BitReader,
+    litlen: &Huffman,
+    dist: &Huffman,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    loop {
+        let sym = litlen.decode(r)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let i = (sym - 257) as usize;
+                let len =
+                    LENGTH_BASE[i] as usize + r.bits(LENGTH_EXTRA[i] as u32)? as usize;
+                let dsym = dist.decode(r)? as usize;
+                if dsym >= 30 {
+                    return Err(err("invalid distance symbol"));
+                }
+                let d = DIST_BASE[dsym] as usize + r.bits(DIST_EXTRA[dsym] as u32)? as usize;
+                if d > out.len() {
+                    return Err(err("distance beyond output start"));
+                }
+                let start = out.len() - d;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b); // byte-wise: distances may overlap the copy
+                }
+            }
+            _ => return Err(err("invalid literal/length symbol")),
+        }
+    }
+}
+
+fn fixed_tables() -> (Huffman, Huffman) {
+    let mut litlen = [0u8; 288];
+    litlen[..144].fill(8);
+    litlen[144..256].fill(9);
+    litlen[256..280].fill(7);
+    litlen[280..].fill(8);
+    let dist = [5u8; 30];
+    (
+        Huffman::new(&litlen).expect("fixed litlen table is valid"),
+        Huffman::new(&dist).expect("fixed dist table is valid"),
+    )
+}
+
+/// Order in which the code-length code's lengths are transmitted.
+const CLC_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+fn dynamic_tables(r: &mut BitReader) -> Result<(Huffman, Huffman)> {
+    let hlit = r.bits(5)? as usize + 257;
+    let hdist = r.bits(5)? as usize + 1;
+    let hclen = r.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(err("bad dynamic table counts"));
+    }
+    let mut clc_lengths = [0u8; 19];
+    for &slot in CLC_ORDER.iter().take(hclen) {
+        clc_lengths[slot] = r.bits(3)? as u8;
+    }
+    let clc = Huffman::new(&clc_lengths)?;
+
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0;
+    while i < lengths.len() {
+        let sym = clc.decode(r)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err(err("repeat with no previous length"));
+                }
+                let prev = lengths[i - 1];
+                let n = 3 + r.bits(2)? as usize;
+                for _ in 0..n {
+                    if i >= lengths.len() {
+                        return Err(err("length repeat overflows table"));
+                    }
+                    lengths[i] = prev;
+                    i += 1;
+                }
+            }
+            17 | 18 => {
+                let n = if sym == 17 {
+                    3 + r.bits(3)? as usize
+                } else {
+                    11 + r.bits(7)? as usize
+                };
+                if i + n > lengths.len() {
+                    return Err(err("zero-run overflows table"));
+                }
+                i += n; // already zero-initialised
+            }
+            _ => return Err(err("invalid code-length symbol")),
+        }
+    }
+    if lengths[256] == 0 {
+        return Err(err("dynamic table has no end-of-block code"));
+    }
+    Ok((
+        Huffman::new(&lengths[..hlit])?,
+        Huffman::new(&lengths[hlit..])?,
+    ))
+}
+
+/// Raw DEFLATE decode (no gzip framing).
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>> {
+    let mut r = BitReader::new(data);
+    let mut out = Vec::with_capacity(data.len() * 3);
+    loop {
+        let bfinal = r.bits(1)?;
+        match r.bits(2)? {
+            0 => {
+                r.align();
+                let need = |p: usize| -> Result<u8> {
+                    data.get(p).copied().ok_or_else(|| err("truncated stored block"))
+                };
+                let len =
+                    u16::from_le_bytes([need(r.pos)?, need(r.pos + 1)?]) as usize;
+                let nlen =
+                    u16::from_le_bytes([need(r.pos + 2)?, need(r.pos + 3)?]) as usize;
+                if len != (!nlen & 0xffff) {
+                    return Err(err("stored block LEN/NLEN mismatch"));
+                }
+                let start = r.pos + 4;
+                if start + len > data.len() {
+                    return Err(err("truncated stored block payload"));
+                }
+                out.extend_from_slice(&data[start..start + len]);
+                r.pos = start + len;
+            }
+            1 => {
+                let (litlen, dist) = fixed_tables();
+                inflate_block(&mut r, &litlen, &dist, &mut out)?;
+            }
+            2 => {
+                let (litlen, dist) = dynamic_tables(&mut r)?;
+                inflate_block(&mut r, &litlen, &dist, &mut out)?;
+            }
+            _ => return Err(err("reserved block type")),
+        }
+        if bfinal != 0 {
+            return Ok(out);
+        }
+    }
+}
+
+/// Decompress a full gzip stream, verifying the CRC-32/ISIZE trailer.
+pub fn decompress(gz: &[u8]) -> Result<Vec<u8>> {
+    if gz.len() < 18 {
+        return Err(err("stream shorter than header + trailer"));
+    }
+    if gz[0] != 0x1f || gz[1] != 0x8b {
+        return Err(err("bad magic bytes"));
+    }
+    if gz[2] != 0x08 {
+        return Err(err(format!("unsupported compression method {}", gz[2])));
+    }
+    let flg = gz[3];
+    if flg & 0xe0 != 0 {
+        return Err(err("reserved header flags set"));
+    }
+    let mut pos = 10usize;
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        if pos + 2 > gz.len() {
+            return Err(err("truncated FEXTRA"));
+        }
+        let xlen = u16::from_le_bytes([gz[pos], gz[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: zero-terminated
+        if flg & flag != 0 {
+            let end = gz[pos.min(gz.len())..]
+                .iter()
+                .position(|&b| b == 0)
+                .ok_or_else(|| err("unterminated header string"))?;
+            pos += end + 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if pos + 8 > gz.len() {
+        return Err(err("truncated after header"));
+    }
+    let payload = &gz[pos..gz.len() - 8];
+    let out = inflate(payload)?;
+    let trailer = &gz[gz.len() - 8..];
+    let want_crc = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let want_len = u32::from_le_bytes([trailer[4], trailer[5], trailer[6], trailer[7]]);
+    if crc32(&out) != want_crc {
+        return Err(err("CRC-32 mismatch"));
+    }
+    if out.len() as u32 != want_len {
+        return Err(err("ISIZE mismatch"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b"photonic"), 0xc553_5688);
+    }
+
+    #[test]
+    fn stored_roundtrip() {
+        for n in [0usize, 1, 100, 0xffff, 0xffff + 1, 200_000] {
+            let mut rng = Pcg64::seed(n as u64);
+            let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let gz = compress(&data);
+            assert_eq!(decompress(&gz).unwrap(), data, "n={n}");
+        }
+    }
+
+    #[test]
+    fn decodes_zlib_fixed_huffman_stream() {
+        // python3: gzip.compress(b"photonic", mtime=0)
+        let gz: &[u8] = &[
+            31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 43, 200, 200, 47, 201, 207,
+            203, 76, 6, 0, 136, 86, 83, 197, 8, 0, 0, 0,
+        ];
+        assert_eq!(decompress(gz).unwrap(), b"photonic");
+    }
+
+    #[test]
+    fn decodes_zlib_compressed_stream_with_back_references() {
+        // python3: gzip.compress(b"direct feedback alignment " * 12,
+        //          compresslevel=9, mtime=0) — 312 bytes -> 51
+        let gz: &[u8] = &[
+            31, 139, 8, 0, 0, 0, 0, 0, 2, 255, 75, 201, 44, 74, 77, 46, 81,
+            72, 75, 77, 77, 73, 74, 76, 206, 86, 72, 204, 201, 76, 207, 203,
+            77, 205, 43, 81, 72, 25, 149, 193, 35, 3, 0, 26, 103, 76, 99, 56,
+            1, 0, 0,
+        ];
+        let want: Vec<u8> = b"direct feedback alignment ".repeat(12);
+        assert_eq!(decompress(gz).unwrap(), want);
+    }
+
+    #[test]
+    fn rejects_malformed_streams() {
+        let good = compress(b"payload");
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = 0x1e;
+        assert!(decompress(&bad).is_err());
+        // bad method
+        let mut bad = good.clone();
+        bad[2] = 0x07;
+        assert!(decompress(&bad).is_err());
+        // corrupted payload -> CRC mismatch
+        let mut bad = good.clone();
+        let mid = bad.len() - 10;
+        bad[mid] ^= 0xff;
+        assert!(decompress(&bad).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in 0..good.len() {
+            assert!(decompress(&good[..cut]).is_err(), "cut={cut}");
+        }
+        assert!(inflate(&[]).is_err());
+    }
+
+    #[test]
+    fn compressed_output_is_framed_gzip() {
+        let gz = compress(b"abc");
+        assert_eq!(&gz[..3], &[0x1f, 0x8b, 0x08]);
+        // stored block: BFINAL=1/BTYPE=00, LEN=3, NLEN=~3
+        assert_eq!(gz[10], 0x01);
+        assert_eq!(&gz[11..15], &[3, 0, 0xfc, 0xff]);
+        assert_eq!(&gz[15..18], b"abc");
+    }
+}

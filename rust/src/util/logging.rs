@@ -1,62 +1,135 @@
-//! Leveled stderr logger wired into the `log` facade.
+//! Leveled stderr logger, self-contained (the offline vendor set lacks the
+//! `log` facade, so the crate carries its own).
 //!
 //! `PDFA_LOG=debug pdfa train ...` controls verbosity; default is `info`.
+//! Call sites use the [`crate::log_info!`], [`crate::log_warn!`] and
+//! [`crate::log_debug!`] macros, which route through [`log`] and print
+//! nothing when the record's level is filtered out.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static INSTALLED: AtomicBool = AtomicBool::new(false);
-
-struct StderrLogger {
-    max_level: log::LevelFilter,
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.max_level
-    }
-
-    fn log(&self, record: &log::Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
-        let t = START.elapsed().as_secs_f64();
-        eprintln!(
-            "[{t:9.3}s {:5} {}] {}",
-            record.level(),
-            record.target().split("::").last().unwrap_or(""),
-            record.args()
-        );
     }
-
-    fn flush(&self) {}
 }
 
-/// Install the logger once; level from `PDFA_LOG` (error|warn|info|debug|trace).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Install the logger; level from `PDFA_LOG` (error|warn|info|debug|trace).
+/// Safe to call repeatedly; the relative-time clock starts at first call.
 pub fn init() {
-    if INSTALLED.swap(true, Ordering::SeqCst) {
+    let level = match std::env::var("PDFA_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    set_level(level);
+}
+
+/// Set the maximum emitted level directly (tests, embedding).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    let _ = START.get_or_init(Instant::now);
+}
+
+/// Whether a record at `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Back end of the `log_*!` macros; prefer those at call sites.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
         return;
     }
-    let level = match std::env::var("PDFA_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!(
+        "[{t:9.3}s {:5} {}] {args}",
+        level.label(),
+        target.rsplit("::").next().unwrap_or(""),
+    );
+}
+
+/// Log at info level to stderr, timestamped; filtered by `PDFA_LOG`.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
-    let _ = log::set_boxed_logger(Box::new(StderrLogger { max_level: level }));
-    log::set_max_level(level);
+}
+
+/// Log at warn level to stderr, timestamped; filtered by `PDFA_LOG`.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at debug level to stderr, timestamped; filtered by `PDFA_LOG`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // One combined test: MAX_LEVEL is process-global state, and two
+    // #[test]s mutating it race under the parallel test runner.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+    fn init_macros_and_level_filtering() {
+        init();
+        init();
+        crate::log_info!("logging smoke test {}", 42);
+        crate::log_warn!("warn smoke test");
+        crate::log_debug!("filtered at default level");
+
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        // restore the default so other tests' stderr stays quiet
+        set_level(Level::Info);
     }
 }

@@ -1,8 +1,9 @@
 //! Hand-rolled infrastructure substrates.
 //!
-//! The offline vendor set lacks `serde_json`, `rand`, `clap`, `criterion`
-//! and `proptest` (DESIGN.md §6), so this module provides the pieces the
-//! rest of the crate needs, each small, documented and unit-tested:
+//! The offline vendor set lacks `serde_json`, `rand`, `clap`, `criterion`,
+//! `proptest`, `flate2` and the `log` facade, so this module provides the
+//! pieces the rest of the crate needs, each small, documented and
+//! unit-tested:
 //!
 //! * [`json`]   — JSON parser/serializer (artifact manifest, run configs)
 //! * [`rng`]    — PCG64 RNG + Gaussian/uniform draws (noise sampling, init)
@@ -10,11 +11,13 @@
 //! * [`cli`]    — declarative argument parser for the `pdfa` binary
 //! * [`check`]  — lightweight property-testing harness (proptest stand-in)
 //! * [`benchx`] — micro-benchmark harness (criterion stand-in)
-//! * [`logging`]— leveled stderr logger
+//! * [`gzip`]   — gzip/DEFLATE codec for the IDX dataset files
+//! * [`logging`]— leveled stderr logger behind the `log_*!` macros
 
 pub mod benchx;
 pub mod check;
 pub mod cli;
+pub mod gzip;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -3,7 +3,7 @@
 //! Stands in for the `rand`/`rand_distr` crates. Every stochastic component
 //! in the system — analog read-noise draws, weight initialisation, dataset
 //! synthesis, shuffling — takes an explicit [`Pcg64`] so runs are exactly
-//! reproducible from a single seed (recorded in EXPERIMENTS.md).
+//! reproducible from a single seed (recorded in each run's config.json).
 //!
 //! PCG-XSL-RR 128/64 (O'Neill 2014), the same generator `rand_pcg::Pcg64`
 //! implements; constants from the reference implementation.

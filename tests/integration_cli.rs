@@ -6,12 +6,6 @@ fn pdfa() -> Command {
     Command::new(env!("CARGO_BIN_EXE_pdfa"))
 }
 
-fn artifacts_present() -> bool {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts/manifest.json")
-        .exists()
-}
-
 #[test]
 fn help_lists_commands() {
     let out = pdfa().arg("help").output().unwrap();
@@ -84,10 +78,7 @@ fn gen_data_writes_idx_files() {
 
 #[test]
 fn train_small_run_produces_artifacts() {
-    if !artifacts_present() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+    // runs on the native backend when no AOT artifacts are present
     let out_dir = std::env::temp_dir().join("pdfa_cli_train");
     let _ = std::fs::remove_dir_all(&out_dir);
     let out = pdfa()
@@ -120,4 +111,20 @@ fn bad_flags_rejected() {
     assert!(!out.status.success());
     let out = pdfa().args(["train", "--noise", "bogus:xyz"]).output().unwrap();
     assert!(!out.status.success());
+    let out = pdfa().args(["train", "--backend", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn info_lists_native_artifacts_without_manifest() {
+    let out = pdfa()
+        .args(["info", "--backend", "native"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backend: native"), "{text}");
+    for needle in ["small: 784-128-128-10 batch 64", "dfa_step_mnist", "photonic_matvec"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
 }

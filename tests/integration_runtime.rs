@@ -1,27 +1,32 @@
-//! Integration: every artifact in the manifest loads, compiles and executes.
+//! Integration: every artifact the active step engine serves loads and
+//! executes.
+//!
+//! Backend selection is `Backend::Auto`: the PJRT engine over
+//! `artifacts/` when built with `--features pjrt` and `make artifacts`
+//! has run, the pure-Rust [`NativeEngine`] otherwise — so this suite
+//! always executes real artifacts instead of silently skipping.
 
-use photonic_dfa::runtime::Engine;
+use std::sync::Arc;
+
+use photonic_dfa::runtime::{self, Backend, StepEngine};
 use photonic_dfa::tensor::Tensor;
 use photonic_dfa::util::rng::Pcg64;
 
-fn engine() -> Option<Engine> {
+fn engine() -> Arc<dyn StepEngine> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then(|| Engine::new(dir).unwrap())
+    runtime::open(dir, Backend::Auto).unwrap()
 }
 
 #[test]
-fn every_artifact_compiles_and_executes() {
-    let Some(engine) = engine() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
-    let names: Vec<String> = engine.manifest().artifacts.keys().cloned().collect();
-    assert!(names.len() >= 13, "expected full artifact set, got {names:?}");
+fn every_artifact_loads_and_executes() {
+    let engine = engine();
+    let specs = engine.artifact_specs();
+    assert!(specs.len() >= 13, "expected full artifact set, got {specs:?}");
     let mut rng = Pcg64::seed(0);
-    for name in names {
-        let art = engine.load(&name).unwrap();
+    for spec in specs {
+        let art = engine.load(&spec.name).unwrap();
         let inputs: Vec<Tensor> = art
-            .spec
+            .spec()
             .inputs
             .iter()
             .map(|s| match s.name.as_str() {
@@ -35,12 +40,13 @@ fn every_artifact_compiles_and_executes() {
             })
             .collect();
         let outputs = art.execute(&inputs).unwrap();
-        assert_eq!(outputs.len(), art.spec.outputs.len(), "artifact {name}");
-        for (out, spec) in outputs.iter().zip(&art.spec.outputs) {
-            assert_eq!(out.shape(), spec.shape.as_slice(), "artifact {name}");
+        assert_eq!(outputs.len(), art.spec().outputs.len(), "artifact {}", spec.name);
+        for (out, ospec) in outputs.iter().zip(&art.spec().outputs) {
+            assert_eq!(out.shape(), ospec.shape.as_slice(), "artifact {}", spec.name);
             assert!(
                 out.data().iter().all(|v| v.is_finite()),
-                "artifact {name} produced non-finite values"
+                "artifact {} produced non-finite values",
+                spec.name
             );
         }
     }
@@ -48,13 +54,14 @@ fn every_artifact_compiles_and_executes() {
 
 #[test]
 fn photonic_matvec_artifact_matches_rust_device_physics() {
-    // The L1 Pallas MRR kernel and the L3 photonics::mrr module implement
-    // the same Lorentzian physics; pin them against each other.
-    let Some(engine) = engine() else { return };
+    // The weight-bank matvec artifact and the L3 photonics::mrr module
+    // implement the same Lorentzian physics; pin them against each other
+    // (under PJRT this cross-checks the L1 Pallas kernel's HLO).
+    let engine = engine();
     let art = engine.load("photonic_matvec").unwrap();
     let mut rng = Pcg64::seed(5);
-    let k = art.spec.inputs[0].shape[0];
-    let m = art.spec.inputs[1].shape[0];
+    let k = art.spec().inputs[0].shape[0];
+    let m = art.spec().inputs[1].shape[0];
     let x = Tensor::rand_uniform(&[k], 0.0, 1.0, &mut rng);
     let phi = Tensor::rand_uniform(&[m, k], -0.5, 0.5, &mut rng);
     let (r, a) = (0.95f32, 0.999f32);
@@ -78,11 +85,11 @@ fn photonic_matvec_artifact_matches_rust_device_physics() {
 
 #[test]
 fn fwd_artifact_deterministic_across_executions() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let fwd = engine.load("fwd_small").unwrap();
     let mut rng = Pcg64::seed(9);
     let inputs: Vec<Tensor> = fwd
-        .spec
+        .spec()
         .inputs
         .iter()
         .map(|s| Tensor::randn(&s.shape, 0.2, &mut rng))
@@ -90,4 +97,16 @@ fn fwd_artifact_deterministic_across_executions() {
     let a = fwd.execute(&inputs).unwrap();
     let b = fwd.execute(&inputs).unwrap();
     assert_eq!(a, b);
+}
+
+#[test]
+fn backend_selection_is_explicit() {
+    // native always opens, even with no artifact directory at all
+    let nowhere = std::env::temp_dir().join("pdfa_missing_artifacts");
+    let native = runtime::open(&nowhere, Backend::Native).unwrap();
+    assert_eq!(native.platform_name(), "native");
+    // pjrt demands both the feature and a manifest
+    if !cfg!(feature = "pjrt") {
+        assert!(runtime::open(&nowhere, Backend::Pjrt).is_err());
+    }
 }

@@ -1,5 +1,10 @@
 //! Integration: end-to-end training across backends and noise modes on the
 //! `small` (784-128-128-10) config with real synthetic digits.
+//!
+//! Runs on whichever backend `Backend::Auto` resolves — the pure-Rust
+//! native engine on a clean machine, PJRT when built with
+//! `--features pjrt` over compiled artifacts — so tier-1 always drives
+//! real training steps.
 
 use std::sync::Arc;
 
@@ -7,13 +12,11 @@ use photonic_dfa::dfa::config::{Algorithm, TrainConfig};
 use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::photonics::BpdMode;
-use photonic_dfa::runtime::Engine;
+use photonic_dfa::runtime::{self, Backend, StepEngine};
 
-fn engine() -> Option<Arc<Engine>> {
+fn engine() -> Arc<dyn StepEngine> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json")
-        .exists()
-        .then(|| Arc::new(Engine::new(dir).unwrap()))
+    runtime::open(dir, Backend::Auto).unwrap()
 }
 
 fn base_cfg() -> TrainConfig {
@@ -30,8 +33,7 @@ fn base_cfg() -> TrainConfig {
 
 #[test]
 fn dfa_clean_learns_digits() {
-    let Some(engine) = engine() else { return };
-    let mut t = Trainer::new(engine, base_cfg()).unwrap();
+    let mut t = Trainer::new(engine(), base_cfg()).unwrap();
     let (train, test) = t.load_data().unwrap();
     let res = t.train(train, test, |_| {}).unwrap();
     assert!(
@@ -43,8 +45,28 @@ fn dfa_clean_learns_digits() {
 }
 
 #[test]
+fn dfa_full_epoch_on_default_backend() {
+    // the acceptance path: a whole epoch (no step cap) of the small config
+    // on synthetic digits, through whichever engine the default build has
+    let cfg = TrainConfig {
+        epochs: 1,
+        n_train: 512,
+        n_test: 256,
+        max_steps_per_epoch: None,
+        ..base_cfg()
+    };
+    let mut t = Trainer::new(engine(), cfg).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    assert_eq!(res.history.len(), 1);
+    assert_eq!(res.history[0].steps, 512 / t.dims().batch);
+    assert!(res.history[0].train_loss.is_finite());
+    assert!(res.photonic_macs > 0);
+}
+
+#[test]
 fn noise_modes_all_train() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     for noise in [
         NoiseMode::offchip(),
         NoiseMode::onchip(),
@@ -64,9 +86,8 @@ fn noise_modes_all_train() {
 
 #[test]
 fn backprop_beats_chance_too() {
-    let Some(engine) = engine() else { return };
     let cfg = TrainConfig { algorithm: Algorithm::Backprop, ..base_cfg() };
-    let mut t = Trainer::new(engine, cfg).unwrap();
+    let mut t = Trainer::new(engine(), cfg).unwrap();
     let (train, test) = t.load_data().unwrap();
     let res = t.train(train, test, |_| {}).unwrap();
     assert!(res.test_acc > 0.25, "{}", res.test_acc);
@@ -75,7 +96,6 @@ fn backprop_beats_chance_too() {
 #[test]
 fn device_mode_end_to_end() {
     // the full stack: fwd artifact -> photonic bank gradient -> apply_grads
-    let Some(engine) = engine() else { return };
     let cfg = TrainConfig {
         noise: NoiseMode::Device { bpd: BpdMode::OffChip },
         epochs: 1,
@@ -84,7 +104,7 @@ fn device_mode_end_to_end() {
         n_test: 256,
         ..base_cfg()
     };
-    let mut t = Trainer::new(engine, cfg).unwrap();
+    let mut t = Trainer::new(engine(), cfg).unwrap();
     let (train, test) = t.load_data().unwrap();
     let res = t.train(train, test, |_| {}).unwrap();
     assert_eq!(res.history.len(), 1);
@@ -93,18 +113,17 @@ fn device_mode_end_to_end() {
 
 #[test]
 fn device_mode_rejects_backprop() {
-    let Some(engine) = engine() else { return };
     let cfg = TrainConfig {
         algorithm: Algorithm::Backprop,
         noise: NoiseMode::Device { bpd: BpdMode::Ideal },
         ..base_cfg()
     };
-    assert!(Trainer::new(engine, cfg).is_err());
+    assert!(Trainer::new(engine(), cfg).is_err());
 }
 
 #[test]
 fn training_is_reproducible_per_seed() {
-    let Some(engine) = engine() else { return };
+    let engine = engine();
     let run = |seed: u64| {
         let cfg = TrainConfig {
             seed,
@@ -118,4 +137,48 @@ fn training_is_reproducible_per_seed() {
     };
     assert_eq!(run(3), run(3));
     assert_ne!(run(3), run(4));
+}
+
+#[test]
+fn native_trainer_is_bit_identical_to_a_pure_reference_loop() {
+    // The strongest end-to-end pin: drive the full Trainer (coordinator
+    // pipeline, native engine, state plumbing) and independently re-run
+    // the identical protocol with nothing but `dfa::reference` math and
+    // the documented RNG discipline (seed -> init -> feedback -> one
+    // fork per epoch). The final parameter state must agree bit-for-bit;
+    // any divergence between NativeEngine and the reference, or any
+    // silent reordering in the batch pipeline, trips this.
+    use photonic_dfa::data::Batcher;
+    use photonic_dfa::dfa::params::NetState;
+    use photonic_dfa::dfa::reference;
+    use photonic_dfa::tensor::Tensor;
+    use photonic_dfa::util::rng::Pcg64;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let native = runtime::open(&dir, Backend::Native).unwrap();
+    let cfg = base_cfg(); // NoiseMode::Clean: no noise draws on either side
+    let mut t = Trainer::new(native, cfg.clone()).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    t.train(train.clone(), test, |_| {}).unwrap();
+
+    let dims = t.dims().clone();
+    let mut rng = Pcg64::seed(cfg.seed);
+    let mut state = NetState::init(&dims, &mut rng);
+    let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+    let zeros1 = Tensor::zeros(&[dims.d_h1, dims.batch]);
+    let zeros2 = Tensor::zeros(&[dims.d_h2, dims.batch]);
+    for epoch in 1..=cfg.epochs {
+        let mut erng = rng.fork(epoch as u64);
+        for (step, idx) in Batcher::new(train.len(), dims.batch, &mut erng).enumerate() {
+            if step >= cfg.max_steps_per_epoch.unwrap() {
+                break;
+            }
+            let (x, y) = train.batch(&idx);
+            reference::dfa_step(
+                &mut state.tensors, &b1, &b2, &x, &y, &zeros1, &zeros2,
+                0.0, 0.0, cfg.lr, cfg.momentum,
+            );
+        }
+    }
+    assert_eq!(t.state.to_bytes(), state.to_bytes());
 }
