@@ -1,0 +1,84 @@
+//! Serving-stack throughput: burst-submit batches of single-sample
+//! requests through the dynamic batcher + worker pool and measure
+//! end-to-end request throughput, vs the raw forward-artifact floor.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::runtime::{NativeEngine, StepEngine};
+use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench_throughput, black_box, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+const BURST: usize = 64;
+
+fn requests(d_in: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seed(seed);
+    (0..BURST)
+        .map(|_| (0..d_in).map(|_| rng.uniform() as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let cfg = BenchConfig { warmup_iters: 2, min_iters: 10, max_time: Duration::from_secs(2) };
+    let engine: Arc<dyn StepEngine> = Arc::new(NativeEngine::new());
+
+    for config in ["tiny", "small"] {
+        let dims = engine.net_dims(config).unwrap();
+        let mut rng = Pcg64::seed(7);
+        let state = NetState::init(&dims, &mut rng);
+
+        // floor: the raw fwd artifact at its traced batch size
+        let fwd = engine.load(&format!("fwd_{config}")).unwrap();
+        let mut inputs: Vec<Tensor> = state.params().to_vec();
+        inputs.push(Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng));
+        let r = bench_throughput(
+            &format!("fwd_artifact_{config}"),
+            &cfg,
+            dims.batch as f64,
+            "req",
+            || black_box(fwd.execute(&inputs).unwrap()),
+        );
+        println!("{}", r.report());
+
+        // the serving stack, a few pool/batch shapes
+        for (workers, max_batch) in [(1, dims.batch), (2, dims.batch), (4, 2 * dims.batch)] {
+            let server = Server::start(
+                &engine,
+                config,
+                state.params(),
+                ServeConfig {
+                    workers,
+                    policy: BatchPolicy {
+                        max_batch,
+                        max_wait: Duration::from_millis(1),
+                        queue_cap: 4 * BURST,
+                    },
+                },
+            )
+            .unwrap();
+            let reqs = requests(dims.d_in, 42);
+            let r = bench_throughput(
+                &format!("serve_{config}_w{workers}_b{max_batch}"),
+                &cfg,
+                BURST as f64,
+                "req",
+                || {
+                    let tickets: Vec<_> = reqs
+                        .iter()
+                        .map(|x| server.submit(x.clone()).unwrap())
+                        .collect();
+                    for t in tickets {
+                        black_box(t.wait().unwrap());
+                    }
+                },
+            );
+            println!("{}", r.report());
+            println!("{}", server.shutdown().report());
+        }
+    }
+}

@@ -97,7 +97,8 @@ fn main() -> photonic_dfa::Result<()> {
     if finals.len() == 3 {
         let (c, off, on) = (finals[0].1, finals[1].1, finals[2].1);
         println!(
-            "degradation clean->offchip: {:.2}pp [paper 0.69pp], clean->onchip: {:.2}pp [paper 1.77pp]",
+            "degradation clean->offchip: {:.2}pp [paper 0.69pp], \
+             clean->onchip: {:.2}pp [paper 1.77pp]",
             (c - off) * 100.0,
             (c - on) * 100.0
         );

@@ -1,8 +1,10 @@
-//! Run recording: config, per-epoch history and checkpoints on disk.
+//! Run recording: config and per-epoch history on disk.
 //!
-//! Layout: `<out_dir>/<run_name>/{config.json, history.json, final.ckpt}`.
-//! History is plain JSON so result tables can be regenerated from
-//! recorded runs without re-training.
+//! Layout: `<out_dir>/<run_name>/{config.json, history.json, result.json}`;
+//! the trainer writes `final.ckpt` (and the `--save-every` checkpoint)
+//! into the same directory through [`crate::dfa::checkpoint`]. History is
+//! plain JSON so result tables can be regenerated from recorded runs
+//! without re-training.
 
 use std::path::{Path, PathBuf};
 
@@ -37,11 +39,6 @@ impl RunRecorder {
         Ok(())
     }
 
-    pub fn write_checkpoint(&self, name: &str, bytes: &[u8]) -> Result<()> {
-        std::fs::write(self.dir.join(name), bytes)?;
-        Ok(())
-    }
-
     pub fn write_report(&self, name: &str, report: &Value) -> Result<()> {
         std::fs::write(self.dir.join(name), report.to_string_pretty())?;
         Ok(())
@@ -72,7 +69,8 @@ mod tests {
             ("val_acc", Value::Number(0.93)),
         ]))
         .unwrap();
-        rec.write_checkpoint("final.ckpt", &[1, 2, 3]).unwrap();
+        rec.write_report("result.json", &Value::object(vec![("ok", Value::Bool(true))]))
+            .unwrap();
 
         let hist =
             Value::parse(&std::fs::read_to_string(rec.dir.join("history.json")).unwrap())
@@ -82,6 +80,6 @@ mod tests {
             hist.as_array().unwrap()[1].get("val_acc").as_f64(),
             Some(0.93)
         );
-        assert_eq!(std::fs::read(rec.dir.join("final.ckpt")).unwrap(), vec![1, 2, 3]);
+        assert!(rec.dir.join("result.json").exists());
     }
 }

@@ -72,6 +72,34 @@ impl Dataset {
         Dataset::from_idx(&img, &lab, synth::N_CLASSES).expect("synth arrays are consistent")
     }
 
+    /// Generate a separable random split at arbitrary feature dimension:
+    /// each class lights up one contiguous block of features (plus noise).
+    /// The 784-dim digit generator stays the default for MNIST-shaped
+    /// configs; this covers every other `NetDims` (e.g. `tiny`, 16-dim).
+    pub fn synthetic_features(n: usize, d: usize, n_classes: usize, seed: u64) -> Dataset {
+        assert!(d > 0 && n_classes > 0);
+        // more classes than features degenerates to block = 0 (pure-noise
+        // rows); callers that need learnable data validate upstream
+        // (`Trainer::load_data` rejects such configs with Error::Data)
+        let block = d / n_classes;
+        let mut rng = Pcg64::seed(seed);
+        let mut data = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(n_classes as u64) as usize;
+            for j in 0..d {
+                let base = if block > 0 && j / block == c { 0.8 } else { 0.12 };
+                data.push((base + rng.normal(0.0, 0.1)).clamp(0.0, 1.0) as f32);
+            }
+            y.push(c as u8);
+        }
+        Dataset {
+            x: Tensor::new(&[n, d], data).expect("consistent by construction"),
+            y,
+            n_classes,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.y.len()
     }
@@ -158,6 +186,27 @@ mod tests {
             assert_eq!(oh.row(r).iter().sum::<f32>(), 1.0);
             assert_eq!(oh.at(r, d.y[[0, 5, 9][r]] as usize), 1.0);
         }
+    }
+
+    #[test]
+    fn synthetic_features_shaped_and_separable() {
+        let d = Dataset::synthetic_features(128, 16, 4, 9);
+        assert_eq!(d.len(), 128);
+        assert_eq!(d.dim(), 16);
+        assert_eq!(d.n_classes, 4);
+        assert!(d.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // the class block is brighter than the rest of the row
+        for i in 0..d.len() {
+            let c = d.y[i] as usize;
+            let row = d.x.row(i);
+            let on: f32 = row[c * 4..(c + 1) * 4].iter().sum::<f32>() / 4.0;
+            let off: f32 = (row.iter().sum::<f32>() - on * 4.0) / 12.0;
+            assert!(on > off, "row {i}: on {on} off {off}");
+        }
+        // deterministic per seed
+        let twin = Dataset::synthetic_features(128, 16, 4, 9);
+        assert_eq!(d.x.data(), twin.x.data());
+        assert_eq!(d.y, twin.y);
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Versioned on-disk checkpoints: trained parameters + resume metadata.
+//!
+//! A checkpoint makes a trained network outlive its process — `pdfa infer`
+//! and `pdfa serve` load one to run the forward-only inference plane, and
+//! `pdfa train --resume` continues a long run bit-exactly where it
+//! stopped. The container is a gzip stream (the crate's own
+//! [`crate::util::gzip`] writer) holding a little-endian payload:
+//!
+//! | field        | bytes | contents                                        |
+//! |--------------|-------|-------------------------------------------------|
+//! | magic        | 8     | `PDFACKPT`                                      |
+//! | version      | 4     | u32, currently [`VERSION`]                      |
+//! | config       | 4 + n | u32 length + UTF-8 config name ("tiny", ...)    |
+//! | dims         | 20    | 5 × u32: d_in, d_h1, d_h2, d_out, batch         |
+//! | epoch        | 8     | u64 epochs fully completed                      |
+//! | total_steps  | 8     | u64 optimizer steps taken                       |
+//! | seed         | 8     | u64 master seed of the run                      |
+//! | protocol     | 4 + n | u32 length + the run's trajectory-determining   |
+//! |              |       | hyperparameters ([`protocol_string`])           |
+//! | rng          | 41    | [`Pcg64`] snapshot (state, inc, Gaussian spare) |
+//! | state        | 8 + n | u64 byte length + [`NetState::to_bytes`] layout |
+//!
+//! The state layout is the artifact-manifest order
+//! `[w1, b1, w2, b2, w3, b3, vw1, vb1, vw2, vb2, vw3, vb3]`, each tensor a
+//! flat little-endian f32 blob. The protocol string
+//! ([`crate::dfa::config::TrainConfig::protocol_string`]) pins every
+//! hyperparameter that shapes the trajectory (lr, momentum, algorithm,
+//! noise mode, dataset recipe, step cap); `--resume` rejects a mismatch
+//! instead of silently diverging. Versioning rule: any layout change bumps
+//! [`VERSION`]; readers reject unknown versions with [`Error::Format`]
+//! rather than guessing. Serialisation is deterministic, so
+//! save → load → save is byte-identical (pinned by tests).
+
+use std::path::Path;
+
+use super::params::NetState;
+use crate::runtime::manifest::NetDims;
+use crate::util::gzip;
+use crate::util::rng::{self, Pcg64};
+use crate::{Error, Result};
+
+/// File magic (first 8 bytes of the decompressed payload).
+pub const MAGIC: [u8; 8] = *b"PDFACKPT";
+/// Current payload version.
+pub const VERSION: u32 = 1;
+
+/// Everything needed to serve a trained network or resume its run.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Network config name ("tiny" | "small" | "mnist" | manifest extras).
+    pub config: String,
+    pub dims: NetDims,
+    /// Epochs fully completed when the snapshot was taken.
+    pub epoch: u64,
+    /// Optimizer steps taken across the whole run (including pre-resume).
+    pub total_steps: u64,
+    /// Master seed of the run (re-derives the DFA feedback matrices).
+    pub seed: u64,
+    /// [`crate::dfa::config::TrainConfig::protocol_string`] of the run:
+    /// the trajectory-determining hyperparameters, validated on resume.
+    pub protocol: String,
+    /// Run RNG, snapshotted mid-stream for exact-trajectory resumption.
+    pub rng: Pcg64,
+    /// Parameter + momentum state in manifest order.
+    pub state: NetState,
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::Format(format!("checkpoint: {}", msg.into()))
+}
+
+/// Bounds-checked little-endian reader over the decompressed payload.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.data.len() - self.pos < n {
+            return Err(bad(format!(
+                "truncated: wanted {n} bytes for {what}, {} left",
+                self.data.len() - self.pos
+            )));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+impl Checkpoint {
+    /// Serialise to the gzip container (deterministic).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let state = self.state.to_bytes();
+        let mut p = Vec::with_capacity(state.len() + 128);
+        p.extend_from_slice(&MAGIC);
+        p.extend_from_slice(&VERSION.to_le_bytes());
+        p.extend_from_slice(&(self.config.len() as u32).to_le_bytes());
+        p.extend_from_slice(self.config.as_bytes());
+        for d in [
+            self.dims.d_in,
+            self.dims.d_h1,
+            self.dims.d_h2,
+            self.dims.d_out,
+            self.dims.batch,
+        ] {
+            p.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        p.extend_from_slice(&self.epoch.to_le_bytes());
+        p.extend_from_slice(&self.total_steps.to_le_bytes());
+        p.extend_from_slice(&self.seed.to_le_bytes());
+        p.extend_from_slice(&(self.protocol.len() as u32).to_le_bytes());
+        p.extend_from_slice(self.protocol.as_bytes());
+        p.extend_from_slice(&self.rng.to_state_bytes());
+        p.extend_from_slice(&(state.len() as u64).to_le_bytes());
+        p.extend_from_slice(&state);
+        gzip::compress(&p)
+    }
+
+    /// Parse a serialised checkpoint; every malformation (bad container,
+    /// magic, version, truncation, dim/state mismatch, trailing bytes)
+    /// is a clean [`Error::Format`].
+    pub fn from_bytes(raw: &[u8]) -> Result<Checkpoint> {
+        let payload =
+            gzip::decompress(raw).map_err(|e| bad(format!("bad container ({e})")))?;
+        let mut c = Cursor { data: &payload, pos: 0 };
+        if c.take(8, "magic")? != MAGIC {
+            return Err(bad("bad magic (not a pdfa checkpoint)"));
+        }
+        let version = c.u32("version")?;
+        if version != VERSION {
+            return Err(bad(format!(
+                "unsupported version {version} (this build reads {VERSION})"
+            )));
+        }
+        let name_len = c.u32("config length")? as usize;
+        if name_len > 256 {
+            return Err(bad(format!("implausible config name length {name_len}")));
+        }
+        let config = std::str::from_utf8(c.take(name_len, "config name")?)
+            .map_err(|_| bad("config name is not UTF-8"))?
+            .to_string();
+        let mut dim = |what| -> Result<usize> {
+            let v = c.u32(what)? as usize;
+            if v == 0 {
+                return Err(bad(format!("{what} is zero")));
+            }
+            Ok(v)
+        };
+        let dims = NetDims {
+            d_in: dim("d_in")?,
+            d_h1: dim("d_h1")?,
+            d_h2: dim("d_h2")?,
+            d_out: dim("d_out")?,
+            batch: dim("batch")?,
+        };
+        let epoch = c.u64("epoch")?;
+        let total_steps = c.u64("total_steps")?;
+        let seed = c.u64("seed")?;
+        let proto_len = c.u32("protocol length")? as usize;
+        if proto_len > 4096 {
+            return Err(bad(format!("implausible protocol length {proto_len}")));
+        }
+        let protocol = std::str::from_utf8(c.take(proto_len, "protocol")?)
+            .map_err(|_| bad("protocol string is not UTF-8"))?
+            .to_string();
+        let rng_bytes: [u8; rng::STATE_BYTES] =
+            c.take(rng::STATE_BYTES, "rng state")?.try_into().unwrap();
+        let rng = Pcg64::from_state_bytes(&rng_bytes)
+            .ok_or_else(|| bad("invalid rng snapshot"))?;
+        let state_len = c.u64("state length")? as usize;
+        let state_bytes = c.take(state_len, "parameter state")?;
+        let state = NetState::from_bytes(&dims, state_bytes)
+            .map_err(|e| bad(format!("state does not match dims ({e})")))?;
+        if c.pos != payload.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after state",
+                payload.len() - c.pos
+            )));
+        }
+        Ok(Checkpoint { config, dims, epoch, total_steps, seed, protocol, rng, state })
+    }
+
+    /// Write to `path` atomically: the bytes land in a sibling `.tmp`
+    /// file first and are renamed over the target, so a crash mid-save
+    /// can never destroy the previous good checkpoint (fs errors surface
+    /// as [`Error::Io`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read from `path`: [`Error::Io`] for fs failures, [`Error::Format`]
+    /// for anything malformed past that.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> NetDims {
+        NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 }
+    }
+
+    fn sample() -> Checkpoint {
+        let mut rng = Pcg64::seed(7);
+        let state = NetState::init(&dims(), &mut rng);
+        Checkpoint {
+            config: "tiny".into(),
+            dims: dims(),
+            epoch: 3,
+            total_steps: 96,
+            seed: 7,
+            protocol: "lr=0.05;momentum=0.9".into(),
+            rng,
+            state,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let ckpt = sample();
+        let bytes = ckpt.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.config, "tiny");
+        assert_eq!(back.dims, dims());
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.total_steps, 96);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.protocol, "lr=0.05;momentum=0.9");
+        assert_eq!(back.state.to_bytes(), ckpt.state.to_bytes());
+        // save -> load -> save pins determinism end to end
+        assert_eq!(back.to_bytes(), bytes);
+        // and the restored rng continues the same stream
+        let mut a = ckpt.rng.clone();
+        let mut b = back.rng.clone();
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn file_roundtrip_and_io_error() {
+        let dir = std::env::temp_dir().join("pdfa_ckpt_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let ckpt = sample();
+        ckpt.save(&path).unwrap();
+        // atomic write: the staging file never lingers
+        assert!(!dir.join("a.ckpt.tmp").exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.to_bytes(), ckpt.to_bytes());
+        match Checkpoint::load(dir.join("missing.ckpt")) {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    fn expect_format(r: Result<Checkpoint>) {
+        match r {
+            Err(Error::Format(_)) => {}
+            Err(e) => panic!("expected Format error, got {e:?}"),
+            Ok(_) => panic!("malformed checkpoint accepted"),
+        }
+    }
+
+    #[test]
+    fn malformations_are_clean_format_errors() {
+        let good = sample().to_bytes();
+        // not gzip at all
+        expect_format(Checkpoint::from_bytes(b"definitely not gzip"));
+        // truncated container
+        expect_format(Checkpoint::from_bytes(&good[..good.len() / 2]));
+        // valid gzip, wrong magic
+        expect_format(Checkpoint::from_bytes(&gzip::compress(b"XXXXXXXXrest")));
+        // valid gzip, truncated payload
+        let payload = gzip::decompress(&good).unwrap();
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&payload[..40])));
+        // future version
+        let mut v2 = payload.clone();
+        v2[8] = 2;
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&v2)));
+        // trailing garbage
+        let mut long = payload.clone();
+        long.extend_from_slice(&[0u8; 4]);
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&long)));
+        // state shorter than dims demand
+        let mut short = payload;
+        let cut = short.len() - 8;
+        short.truncate(cut);
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&short)));
+    }
+}

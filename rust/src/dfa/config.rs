@@ -37,6 +37,11 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Optional cap on steps per epoch (quick smoke runs).
     pub max_steps_per_epoch: Option<usize>,
+    /// Checkpoint path; when set the trainer writes a checkpoint there
+    /// every [`Self::save_every`] epochs and at the end of the run.
+    pub save_path: Option<String>,
+    /// Checkpoint cadence in epochs (0 = only the final checkpoint).
+    pub save_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +59,8 @@ impl Default for TrainConfig {
             data_dir: None,
             eval_every: 1,
             max_steps_per_epoch: None,
+            save_path: None,
+            save_every: 0,
         }
     }
 }
@@ -78,6 +85,27 @@ impl TrainConfig {
             ("n_train", Value::Number(self.n_train as f64)),
             ("n_test", Value::Number(self.n_test as f64)),
         ])
+    }
+
+    /// Canonical string of every trajectory-determining hyperparameter
+    /// (everything except epoch count and checkpoint cadence). Stored in
+    /// checkpoints and compared on `--resume`, so a resumed run cannot
+    /// silently diverge from the uninterrupted one through a changed lr,
+    /// algorithm, noise mode or dataset recipe. f32s print in Rust's
+    /// shortest round-trip form, so string equality is value equality.
+    pub fn protocol_string(&self) -> String {
+        format!(
+            "lr={};momentum={};algorithm={:?};noise={};n_train={};n_test={};\
+             max_steps={:?};data_dir={}",
+            self.lr,
+            self.momentum,
+            self.algorithm,
+            self.noise.describe(),
+            self.n_train,
+            self.n_test,
+            self.max_steps_per_epoch,
+            self.data_dir.as_deref().unwrap_or("")
+        )
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -122,6 +150,29 @@ mod tests {
         let mut c = TrainConfig::default();
         c.momentum = 1.5;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn protocol_string_tracks_trajectory_knobs() {
+        let base = TrainConfig::default();
+        assert_eq!(base.protocol_string(), TrainConfig::default().protocol_string());
+        // epochs and checkpoint cadence are NOT part of the protocol
+        let c = TrainConfig { epochs: 99, save_every: 3, ..TrainConfig::default() };
+        assert_eq!(c.protocol_string(), base.protocol_string());
+        // every trajectory-determining knob changes it
+        for mutate in [
+            (|c: &mut TrainConfig| c.lr = 0.1) as fn(&mut TrainConfig),
+            |c| c.momentum = 0.5,
+            |c| c.algorithm = Algorithm::Backprop,
+            |c| c.noise = NoiseMode::Gaussian { sigma: 0.2 },
+            |c| c.n_train = 7,
+            |c| c.max_steps_per_epoch = Some(3),
+            |c| c.data_dir = Some("elsewhere".into()),
+        ] {
+            let mut c = TrainConfig::default();
+            mutate(&mut c);
+            assert_ne!(c.protocol_string(), base.protocol_string());
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! update with the `apply_grads` artifact.
 //!
 //! * [`config`]        — training configuration (paper §4 defaults)
+//! * [`checkpoint`]    — versioned on-disk snapshots (params + resume
+//!   metadata) feeding `--resume` and the `serve`/`infer` inference plane
 //! * [`params`]        — parameter/momentum state management + init
 //! * [`noise_model`]   — the Fig. 5(b)/(c) noise modes
 //! * [`reference`]     — pure-Rust forward/backward oracle (cross-checks
@@ -14,6 +16,7 @@
 //! * [`trainer`]       — the training loop (simulation + device modes)
 //! * [`device_backend`]— photonic-bank gradient computation (device mode)
 
+pub mod checkpoint;
 pub mod config;
 pub mod device_backend;
 pub mod noise_model;
@@ -21,6 +24,7 @@ pub mod params;
 pub mod reference;
 pub mod trainer;
 
+pub use checkpoint::Checkpoint;
 pub use config::TrainConfig;
 pub use noise_model::NoiseMode;
 pub use trainer::{EpochStats, TrainResult, Trainer};

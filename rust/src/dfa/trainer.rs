@@ -16,6 +16,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::checkpoint::Checkpoint;
 use super::config::{Algorithm, TrainConfig};
 use super::device_backend::{CompiledFeedback, DeviceBackend};
 use super::noise_model::NoiseMode;
@@ -64,6 +65,8 @@ impl EpochStats {
 pub struct TrainResult {
     pub history: Vec<EpochStats>,
     pub test_acc: f64,
+    /// Optimizer steps across the whole run — after a `--resume`, this
+    /// includes the pre-resume epochs, matching the checkpoint's count.
     pub total_steps: usize,
     pub wall_s: f64,
     /// Gradient-matvec MACs performed on the (simulated) photonic path.
@@ -84,6 +87,10 @@ pub struct Trainer {
     rng: Pcg64,
     device: Option<(DeviceBackend, CompiledFeedback, CompiledFeedback)>,
     pub metrics: Metrics,
+    /// Epochs fully completed (nonzero after a `restore`).
+    epochs_done: usize,
+    /// Optimizer steps across the whole run, including pre-resume epochs.
+    steps_done: u64,
 }
 
 impl Trainer {
@@ -131,6 +138,8 @@ impl Trainer {
             rng,
             device,
             metrics: Metrics::new(),
+            epochs_done: 0,
+            steps_done: 0,
         })
     }
 
@@ -142,6 +151,93 @@ impl Trainer {
         &self.engine
     }
 
+    /// Epochs fully completed so far (nonzero after [`Self::restore`]).
+    pub fn epochs_done(&self) -> usize {
+        self.epochs_done
+    }
+
+    /// The protocol string recorded in checkpoints: the backend identity
+    /// plus every trajectory-determining hyperparameter. Backends round
+    /// floats differently (XLA vs the native kernels), so a cross-backend
+    /// resume is a trajectory change and gets rejected like any other
+    /// protocol mismatch.
+    fn run_protocol(&self) -> String {
+        format!(
+            "backend={};{}",
+            self.engine.platform_name(),
+            self.cfg.protocol_string()
+        )
+    }
+
+    /// Snapshot the run for [`Checkpoint::save`]. Taken between epochs the
+    /// snapshot is exact: restoring reproduces the uninterrupted loss
+    /// trajectory bit-for-bit in simulation mode (the run RNG is the only
+    /// stochastic state; device mode re-seeds its photonic bank instead).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            config: self.cfg.config.clone(),
+            dims: self.dims.clone(),
+            epoch: self.epochs_done as u64,
+            total_steps: self.steps_done,
+            seed: self.cfg.seed,
+            protocol: self.run_protocol(),
+            rng: self.rng.clone(),
+            state: self.state.clone(),
+        }
+    }
+
+    /// Write [`Self::checkpoint`] to `path`.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.checkpoint().save(path)
+    }
+
+    /// Resume from a checkpoint taken by a run with the same config, dims
+    /// and seed (the seed re-derives the fixed DFA feedback matrices, so a
+    /// mismatch would silently change the trajectory — it is rejected
+    /// instead). The next [`Self::train`] call continues at epoch
+    /// `ckpt.epoch + 1`.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        if ckpt.config != self.cfg.config {
+            return Err(Error::Config(format!(
+                "checkpoint is for config '{}', trainer runs '{}'",
+                ckpt.config, self.cfg.config
+            )));
+        }
+        if ckpt.dims != self.dims {
+            return Err(Error::Config(format!(
+                "checkpoint dims {:?} != engine dims {:?}",
+                ckpt.dims, self.dims
+            )));
+        }
+        if ckpt.seed != self.cfg.seed {
+            return Err(Error::Config(format!(
+                "checkpoint seed {} != configured seed {} (feedback matrices \
+                 would differ)",
+                ckpt.seed, self.cfg.seed
+            )));
+        }
+        let protocol = self.run_protocol();
+        if ckpt.protocol != protocol {
+            return Err(Error::Config(format!(
+                "checkpoint protocol mismatch: saved run used\n  {}\nthis run \
+                 is configured as\n  {protocol}\n(resuming would silently \
+                 change the trajectory)",
+                ckpt.protocol
+            )));
+        }
+        if self.device.is_some() {
+            crate::log_warn!(
+                "resuming in device mode: photonic-bank noise streams restart \
+                 from their seed, so the trajectory is not bit-exact"
+            );
+        }
+        self.state = ckpt.state.clone();
+        self.rng = ckpt.rng.clone();
+        self.epochs_done = ckpt.epoch as usize;
+        self.steps_done = ckpt.total_steps;
+        Ok(())
+    }
+
     /// Load (or synthesise) the train/test datasets per the config.
     pub fn load_data(&self) -> Result<(Arc<Dataset>, Arc<Dataset>)> {
         let (train, test) = match &self.cfg.data_dir {
@@ -150,9 +246,32 @@ impl Trainer {
                 let te = Dataset::load_split(dir, false)?;
                 (tr, te)
             }
-            None => (
+            None if self.dims.d_in == 784 => (
                 Dataset::synthetic(self.cfg.n_train, self.cfg.seed ^ 0x7a11),
                 Dataset::synthetic(self.cfg.n_test, self.cfg.seed ^ 0x7e57),
+            ),
+            // non-MNIST-shaped configs (e.g. `tiny`) get the generic
+            // separable generator at the network's own input width
+            None if self.dims.d_out > self.dims.d_in => {
+                return Err(Error::Data(format!(
+                    "cannot synthesise separable data for config '{}' \
+                     (d_out {} > d_in {}); provide --data-dir",
+                    self.cfg.config, self.dims.d_out, self.dims.d_in
+                )))
+            }
+            None => (
+                Dataset::synthetic_features(
+                    self.cfg.n_train,
+                    self.dims.d_in,
+                    self.dims.d_out,
+                    self.cfg.seed ^ 0x7a11,
+                ),
+                Dataset::synthetic_features(
+                    self.cfg.n_test,
+                    self.dims.d_in,
+                    self.dims.d_out,
+                    self.cfg.seed ^ 0x7e57,
+                ),
             ),
         };
         if train.dim() != self.dims.d_in {
@@ -278,9 +397,12 @@ impl Trainer {
         let gradient_macs_per_step =
             (self.dims.d_h1 + self.dims.d_h2) * self.dims.d_out * batch;
 
+        let save_every = self.cfg.save_every;
+        let save_path = self.cfg.save_path.clone();
+        let mut last_saved_epoch: Option<usize> = None;
         let mut history = Vec::new();
-        let mut total_steps = 0usize;
-        for epoch in 1..=self.cfg.epochs {
+        let first_epoch = self.epochs_done + 1;
+        for epoch in first_epoch..=self.cfg.epochs {
             let e0 = Instant::now();
             let feeder = BatchFeeder::start(
                 train.clone(),
@@ -312,7 +434,8 @@ impl Trainer {
                 correct += ncorrect;
                 steps += 1;
             }
-            total_steps += steps;
+            self.epochs_done = epoch;
+            self.steps_done += steps as u64;
             self.metrics.add("steps", steps as u64);
             self.metrics
                 .add("photonic_macs", (steps * gradient_macs_per_step) as u64);
@@ -346,13 +469,26 @@ impl Trainer {
             );
             on_epoch(&stats);
             history.push(stats);
+            if let Some(path) = &save_path {
+                if save_every > 0 && epoch % save_every == 0 {
+                    self.save_checkpoint(path)?;
+                    last_saved_epoch = Some(epoch);
+                    crate::log_info!("checkpoint saved to {path} (epoch {epoch})");
+                }
+            }
+        }
+        if let Some(path) = &save_path {
+            // final snapshot, unless the last in-loop save already wrote it
+            if last_saved_epoch != Some(self.epochs_done) {
+                self.save_checkpoint(path)?;
+            }
         }
 
         let test_acc = self.evaluate(&test)?;
         Ok(TrainResult {
             history,
             test_acc,
-            total_steps,
+            total_steps: self.steps_done as usize,
             wall_s: t0.elapsed().as_secs_f64(),
             photonic_macs: self.metrics.count("photonic_macs"),
         })
@@ -480,6 +616,54 @@ mod tests {
             crate::util::check::assert_close(a.data(), b.data(), 2e-4)
                 .unwrap_or_else(|e| panic!("state tensor {i}: {e}"));
         }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_runs() {
+        let engine = engine();
+        let mut t = Trainer::new(engine.clone(), tiny_cfg()).unwrap();
+        let train = Arc::new(tiny_data(64, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 1;
+        let mut donor = Trainer::new(engine.clone(), cfg).unwrap();
+        donor.train(train, test, |_| {}).unwrap();
+        let mut ckpt = donor.checkpoint();
+        assert_eq!(ckpt.epoch, 1);
+        assert!(ckpt.total_steps > 0);
+
+        ckpt.seed = 999;
+        assert!(t.restore(&ckpt).is_err());
+        ckpt.seed = tiny_cfg().seed;
+        ckpt.config = "small".into();
+        assert!(t.restore(&ckpt).is_err());
+        ckpt.config = "tiny".into();
+        // a changed hyperparameter (lr) is a protocol mismatch
+        let hot = TrainConfig { lr: 0.5, ..tiny_cfg() };
+        let mut other = Trainer::new(engine.clone(), hot).unwrap();
+        assert!(other.restore(&ckpt).is_err());
+        t.restore(&ckpt).unwrap();
+        assert_eq!(t.epochs_done(), 1);
+        assert_eq!(t.state.to_bytes(), donor.state.to_bytes());
+    }
+
+    #[test]
+    fn save_every_writes_checkpoints_during_training() {
+        let dir = std::env::temp_dir().join("pdfa_trainer_save");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let _ = std::fs::remove_file(&path);
+        let mut cfg = tiny_cfg();
+        cfg.epochs = 2;
+        cfg.save_path = Some(path.to_str().unwrap().into());
+        cfg.save_every = 1;
+        let mut t = Trainer::new(engine(), cfg).unwrap();
+        let train = Arc::new(tiny_data(64, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        t.train(train, test, |_| {}).unwrap();
+        let ckpt = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt.epoch, 2);
+        assert_eq!(ckpt.state.to_bytes(), t.state.to_bytes());
     }
 
     #[test]

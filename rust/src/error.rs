@@ -13,6 +13,9 @@ pub enum Error {
     #[cfg(feature = "pjrt")]
     Xla(xla::Error),
     Io(std::io::Error),
+    /// Malformed serialised data (checkpoints, wire formats): bad magic,
+    /// unsupported version, truncation, corrupted payload.
+    Format(String),
     Json { offset: usize, msg: String },
     Manifest(String),
     Shape(String),
@@ -31,6 +34,7 @@ impl fmt::Display for Error {
             #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla: {e}"),
             Error::Io(e) => write!(f, "io: {e}"),
+            Error::Format(m) => write!(f, "format: {m}"),
             Error::Json { offset, msg } => {
                 write!(f, "json parse error at byte {offset}: {msg}")
             }
@@ -88,6 +92,10 @@ mod tests {
         assert_eq!(Error::Shape("2x3 vs 3x2".into()).to_string(), "shape mismatch: 2x3 vs 3x2");
         assert_eq!(Error::Manifest("no artifact".into()).to_string(), "manifest: no artifact");
         assert_eq!(Error::msg("plain").to_string(), "plain");
+        assert_eq!(
+            Error::Format("bad magic".into()).to_string(),
+            "format: bad magic"
+        );
         let e = Error::Json { offset: 7, msg: "bad token".into() };
         assert_eq!(e.to_string(), "json parse error at byte 7: bad token");
     }

@@ -38,6 +38,7 @@ pub mod experiments;
 pub mod gemm;
 pub mod photonics;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

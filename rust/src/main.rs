@@ -4,6 +4,8 @@
 //!
 //! ```text
 //! pdfa train            train a network (Fig. 5(b) conditions)
+//! pdfa infer            batched inference over a saved checkpoint
+//! pdfa serve            dynamic-batching inference server (stdin/loopback)
 //! pdfa sweep-resolution test accuracy vs gradient resolution (Fig. 5(c))
 //! pdfa characterize     MRR profile + single-MRR multiplies (Fig. 3(b,c))
 //! pdfa inner-product    1x4 photonic inner products (Fig. 5(a))
@@ -12,19 +14,24 @@
 //! pdfa info             list artifacts and configs in the manifest
 //! ```
 
+use std::io::BufRead;
 use std::sync::Arc;
+use std::time::Duration;
 
 use photonic_dfa::coordinator::run::RunRecorder;
-use photonic_dfa::data::synth;
+use photonic_dfa::data::{synth, Dataset};
+use photonic_dfa::dfa::checkpoint::Checkpoint;
 use photonic_dfa::dfa::config::{Algorithm, TrainConfig};
 use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::experiments;
 use photonic_dfa::photonics::BpdMode;
 use photonic_dfa::runtime::{self, Backend, StepEngine};
+use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
 use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
 use photonic_dfa::util::json::Value;
 use photonic_dfa::util::logging;
+use photonic_dfa::util::rng::Pcg64;
 use photonic_dfa::{Error, Result};
 
 fn main() {
@@ -43,6 +50,12 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => run_or_help(cmd, "train a network through the photonic DFA path",
             &train_specs(), rest, wants_help, cmd_train),
+        "infer" => run_or_help(cmd,
+            "batched inference over a checkpoint (bit-identical to the reference forward)",
+            &infer_specs(), rest, wants_help, cmd_infer),
+        "serve" => run_or_help(cmd,
+            "dynamic-batching inference server over a checkpoint",
+            &serve_specs(), rest, wants_help, cmd_serve),
         "sweep-resolution" => run_or_help(cmd,
             "Fig. 5(c): accuracy vs gradient effective resolution",
             &sweep_specs(), rest, wants_help, cmd_sweep),
@@ -91,6 +104,8 @@ fn print_global_help() {
         "pdfa — silicon-photonic DFA training coordinator\n\n\
          commands:\n\
          \u{20}  train              train a network (Fig. 5(b) conditions)\n\
+         \u{20}  infer              batched inference over a saved checkpoint\n\
+         \u{20}  serve              dynamic-batching inference server\n\
          \u{20}  sweep-resolution   accuracy vs gradient resolution (Fig. 5(c))\n\
          \u{20}  characterize       MRR profile + multiplies (Fig. 3(b,c))\n\
          \u{20}  inner-product      1x4 inner-product stats (Fig. 5(a))\n\
@@ -137,6 +152,13 @@ fn train_specs() -> Vec<ArgSpec> {
         BACKEND_SPEC,
         ArgSpec::opt("out", "runs", "run output directory"),
         ArgSpec::opt("run-name", "", "run name (default: derived)"),
+        ArgSpec::opt(
+            "save",
+            "",
+            "checkpoint path (default <out>/<run>/ckpt.gz when --save-every is set)",
+        ),
+        ArgSpec::opt("save-every", "0", "checkpoint every N epochs (0 = final only)"),
+        ArgSpec::opt("resume", "", "resume from a checkpoint of the same run"),
     ]
 }
 
@@ -148,7 +170,7 @@ fn cmd_train(a: &Args) -> Result<()> {
         "backprop" => Algorithm::Backprop,
         other => return Err(Error::Cli(format!("bad --algorithm '{other}'"))),
     };
-    let cfg = TrainConfig {
+    let mut cfg = TrainConfig {
         config: a.str("config").into(),
         algorithm,
         noise,
@@ -164,6 +186,7 @@ fn cmd_train(a: &Args) -> Result<()> {
             0 => None,
             n => Some(n),
         },
+        ..TrainConfig::default()
     };
     let run_name = if a.str("run-name").is_empty() {
         format!(
@@ -179,8 +202,26 @@ fn cmd_train(a: &Args) -> Result<()> {
 
     let engine = open_engine(a)?;
     let mut recorder = RunRecorder::create(a.str("out"), &run_name)?;
+    cfg.save_every = a.usize("save-every")?;
+    cfg.save_path = if !a.str("save").is_empty() {
+        Some(a.str("save").to_string())
+    } else if cfg.save_every > 0 {
+        Some(recorder.dir.join("ckpt.gz").to_string_lossy().into_owned())
+    } else {
+        None
+    };
     recorder.write_config(&cfg.to_json())?;
     let mut trainer = Trainer::new(engine, cfg)?;
+    if !a.str("resume").is_empty() {
+        let ckpt = Checkpoint::load(a.str("resume"))?;
+        trainer.restore(&ckpt)?;
+        photonic_dfa::log_info!(
+            "resumed from {} (epoch {}, {} steps)",
+            a.str("resume"),
+            ckpt.epoch,
+            ckpt.total_steps
+        );
+    }
     photonic_dfa::log_info!(
         "run '{run_name}' starting ({}): {}",
         trainer.engine().platform_name(),
@@ -195,7 +236,9 @@ fn cmd_train(a: &Args) -> Result<()> {
         })?
     };
 
-    recorder.write_checkpoint("final.ckpt", &trainer.state.to_bytes())?;
+    // serialisation is deterministic and save() stages through tmp+rename,
+    // so this is safe and byte-identical even when --save points here too
+    trainer.save_checkpoint(recorder.dir.join("final.ckpt"))?;
     recorder.write_report(
         "result.json",
         &Value::object(vec![
@@ -211,6 +254,221 @@ fn cmd_train(a: &Args) -> Result<()> {
         result.test_acc, result.total_steps, result.wall_s, result.photonic_macs
     );
     println!("run artifacts in {}", recorder.dir.display());
+    if let Some(path) = &trainer.cfg.save_path {
+        println!("checkpoint: {path}");
+    }
+    println!("checkpoint: {}", recorder.dir.join("final.ckpt").display());
+    Ok(())
+}
+
+// ---------------- infer / serve ----------------
+
+/// Shared `--workers`/`--max-batch`/`--max-wait-ms`/`--queue-cap` specs.
+fn serving_knob_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::req("checkpoint", "checkpoint file (written by `pdfa train`)"),
+        ArgSpec::opt("workers", "2", "forward-artifact replicas in the worker pool"),
+        ArgSpec::opt(
+            "max-batch",
+            "0",
+            "flush a micro-batch at this many requests (0 = the network's batch dim)",
+        ),
+        ArgSpec::opt("max-wait-ms", "2", "flush a partial micro-batch after this wait"),
+        ArgSpec::opt("queue-cap", "256", "bounded request-queue depth (backpressure)"),
+        ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        BACKEND_SPEC,
+    ]
+}
+
+/// Open the engine, load the checkpoint and start the worker pool.
+fn start_server(a: &Args) -> Result<(Server, Checkpoint)> {
+    let engine = open_engine(a)?;
+    let ckpt = Checkpoint::load(a.str("checkpoint"))?;
+    let policy = BatchPolicy {
+        max_batch: match a.usize("max-batch")? {
+            0 => ckpt.dims.batch,
+            n => n,
+        },
+        max_wait: Duration::from_millis(a.u64("max-wait-ms")?),
+        queue_cap: a.usize("queue-cap")?.max(1),
+    };
+    let cfg = ServeConfig { workers: a.usize("workers")?.max(1), policy };
+    photonic_dfa::log_info!(
+        "serving '{}' ({}-{}-{}-{}) from {}: {} workers, max_batch {}, max_wait {:?}",
+        ckpt.config,
+        ckpt.dims.d_in,
+        ckpt.dims.d_h1,
+        ckpt.dims.d_h2,
+        ckpt.dims.d_out,
+        a.str("checkpoint"),
+        cfg.workers,
+        cfg.policy.max_batch,
+        cfg.policy.max_wait
+    );
+    let server = Server::from_checkpoint(&engine, &ckpt, cfg)?;
+    Ok((server, ckpt))
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn infer_specs() -> Vec<ArgSpec> {
+    let mut specs = serving_knob_specs();
+    specs.extend([
+        ArgSpec::opt("n", "8", "number of samples to run"),
+        ArgSpec::opt("data-dir", "", "IDX dataset directory (test split; empty = synthetic)"),
+        ArgSpec::opt("seed", "1", "synthetic request seed"),
+        ArgSpec::opt("dump-logits", "", "also write raw little-endian f32 logits here"),
+    ]);
+    specs
+}
+
+fn cmd_infer(a: &Args) -> Result<()> {
+    let (server, ckpt) = start_server(a)?;
+    let d_in = ckpt.dims.d_in;
+    let inputs: Vec<Vec<f32>> = if !a.str("data-dir").is_empty() {
+        let ds = Dataset::load_split(a.str("data-dir"), false)?;
+        if ds.dim() != d_in {
+            return Err(Error::Data(format!(
+                "dataset dim {} != checkpoint d_in {d_in}",
+                ds.dim()
+            )));
+        }
+        let n = a.usize("n")?.min(ds.len());
+        (0..n).map(|i| ds.x.row(i).to_vec()).collect()
+    } else {
+        let mut rng = Pcg64::seed(a.u64("seed")?);
+        (0..a.usize("n")?)
+            .map(|_| (0..d_in).map(|_| rng.uniform() as f32).collect())
+            .collect()
+    };
+
+    // burst-submit everything (exercises dynamic batching), then collect
+    // replies in submission order
+    let tickets: Result<Vec<_>> =
+        inputs.iter().map(|x| server.submit(x.clone())).collect();
+    let mut raw = Vec::new();
+    for (i, ticket) in tickets?.into_iter().enumerate() {
+        let logits = ticket.wait()?;
+        println!("sample {i:>4}: pred {}  logits {logits:?}", argmax(&logits));
+        for v in &logits {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    if !a.str("dump-logits").is_empty() {
+        std::fs::write(a.str("dump-logits"), &raw)?;
+    }
+    println!("{}", server.shutdown().report());
+    Ok(())
+}
+
+fn serve_specs() -> Vec<ArgSpec> {
+    let mut specs = serving_knob_specs();
+    specs.extend([
+        ArgSpec::opt("source", "stdin", "stdin | synthetic (loopback load generator)"),
+        ArgSpec::opt(
+            "max-requests",
+            "0",
+            "stop after N requests (0 = until EOF; synthetic default 64)",
+        ),
+        ArgSpec::opt("seed", "1", "synthetic request seed"),
+        ArgSpec::opt(
+            "pipeline",
+            "1",
+            "max in-flight stdin requests (1 = reply before reading the next \
+             line; raise for piped batch input so micro-batching engages)",
+        ),
+    ]);
+    specs
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let (server, ckpt) = start_server(a)?;
+    let d_in = ckpt.dims.d_in;
+    let max_requests = a.usize("max-requests")?;
+    match a.str("source") {
+        "synthetic" => {
+            let n = if max_requests == 0 { 64 } else { max_requests };
+            let mut rng = Pcg64::seed(a.u64("seed")?);
+            let inputs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d_in).map(|_| rng.uniform() as f32).collect())
+                .collect();
+            let tickets: Result<Vec<_>> =
+                inputs.into_iter().map(|x| server.submit(x)).collect();
+            let mut preds = vec![0usize; server.d_out()];
+            for ticket in tickets? {
+                preds[argmax(&ticket.wait()?)] += 1;
+            }
+            println!("served {n} synthetic requests; predictions per class: {preds:?}");
+        }
+        "stdin" => {
+            // in-order replies with up to --pipeline requests in flight:
+            // depth 1 is the interactive reply-per-line loop, larger
+            // depths let piped batch input actually fill micro-batches
+            let depth = a.usize("pipeline")?.max(1);
+            let mut pending: std::collections::VecDeque<photonic_dfa::serve::Ticket> =
+                std::collections::VecDeque::new();
+            let print_reply = |reply: Result<Vec<f32>>| match reply {
+                Ok(logits) => println!("pred {}  logits {logits:?}", argmax(&logits)),
+                Err(e) => println!("error: {e}"),
+            };
+            let stdin = std::io::stdin();
+            let mut served = 0usize;
+            for line in stdin.lock().lines() {
+                let line = line?;
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let parsed: std::result::Result<Vec<f32>, _> = line
+                    .split(|c: char| c == ',' || c.is_whitespace())
+                    .filter(|s| !s.is_empty())
+                    .map(str::parse::<f32>)
+                    .collect();
+                let x = match parsed {
+                    Ok(x) if x.len() == d_in => x,
+                    Ok(x) => {
+                        println!("error: got {} features, want {d_in}", x.len());
+                        continue;
+                    }
+                    Err(e) => {
+                        println!("error: bad request line ({e})");
+                        continue;
+                    }
+                };
+                match server.submit(x) {
+                    Ok(ticket) => pending.push_back(ticket),
+                    Err(e) => println!("error: {e}"),
+                }
+                // drain replies that are already done (poll consumes the
+                // reply, so print it directly), then enforce the depth cap
+                while let Some(reply) = pending.front().and_then(|t| t.poll()) {
+                    pending.pop_front();
+                    print_reply(reply);
+                }
+                while pending.len() >= depth {
+                    let ticket = pending.pop_front().expect("len checked");
+                    print_reply(ticket.wait());
+                }
+                served += 1;
+                if max_requests > 0 && served >= max_requests {
+                    break;
+                }
+            }
+            for ticket in pending {
+                print_reply(ticket.wait());
+            }
+        }
+        other => return Err(Error::Cli(format!("bad --source '{other}'"))),
+    }
+    println!("{}", server.shutdown().report());
     Ok(())
 }
 

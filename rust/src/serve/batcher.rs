@@ -1,0 +1,277 @@
+//! Bounded request queue with dynamic micro-batching.
+//!
+//! Producers push single-sample requests; consumers (the
+//! [`crate::serve::server`] workers) block on [`Queue::next_batch`], which
+//! hands out micro-batches under the two classic flush triggers:
+//!
+//! * **full** — `max_batch` requests are queued, or
+//! * **timeout** — the oldest queued request has waited `max_wait`.
+//!
+//! The queue is bounded at `queue_cap`: `push` blocks until space frees
+//! up (backpressure), so a burst of clients cannot grow memory without
+//! limit. Shutdown drains: workers keep receiving batches until the queue
+//! is empty, so no accepted request is ever dropped.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// Flush policy of the dynamic batcher.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued. A flush goes to
+    /// ONE worker, which executes it in artifact-batch-sized chunks; for
+    /// burst traffic, keeping this at (or near) the network's traced
+    /// batch dim lets multiple workers absorb a burst in parallel, while
+    /// larger values trade pool parallelism for fewer flushes.
+    pub max_batch: usize,
+    /// Flush a partial batch once its oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Bounded queue depth; [`Queue::push`] blocks when full.
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Why a micro-batch was flushed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushCause {
+    /// `max_batch` requests were queued.
+    Full,
+    /// The oldest request aged past `max_wait`.
+    Timeout,
+    /// Shutdown drain of the remaining queue.
+    Drain,
+}
+
+/// Response payload: logits, or a stringified server-side error.
+pub type Reply = std::result::Result<Vec<f32>, String>;
+
+/// One queued inference request.
+pub struct Request {
+    /// Input features, length `d_in`.
+    pub x: Vec<f32>,
+    /// Oneshot reply channel back to the submitting client.
+    pub tx: mpsc::Sender<Reply>,
+    /// Enqueue time (latency accounting + the `max_wait` trigger).
+    pub enqueued: Instant,
+}
+
+/// Flush counters, split by cause.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    pub flush_full: u64,
+    pub flush_timeout: u64,
+    pub flush_drain: u64,
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    shutdown: bool,
+    stats: QueueStats,
+}
+
+/// The shared queue (one per [`crate::serve::Server`]).
+pub struct Queue {
+    policy: BatchPolicy,
+    inner: Mutex<Inner>,
+    /// Signals consumers: work arrived or shutdown.
+    work: Condvar,
+    /// Signals producers: space freed up or shutdown.
+    space: Condvar,
+}
+
+impl Queue {
+    pub fn new(policy: BatchPolicy) -> Queue {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        assert!(policy.queue_cap >= 1, "queue_cap must be >= 1");
+        Queue {
+            policy,
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                shutdown: false,
+                stats: QueueStats::default(),
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request, blocking while the queue is at capacity.
+    /// Errors once the queue has been shut down.
+    pub fn push(&self, req: Request) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        while !g.shutdown && g.q.len() >= self.policy.queue_cap {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.shutdown {
+            return Err(Error::msg("serve: queue is shut down"));
+        }
+        g.q.push_back(req);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Block until a micro-batch is ready under the flush policy. Returns
+    /// `None` only after [`Self::shutdown`] once the queue is drained.
+    pub fn next_batch(&self) -> Option<(Vec<Request>, FlushCause)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.q.len() >= self.policy.max_batch {
+                g.stats.flush_full += 1;
+                return Some((self.drain(&mut g), FlushCause::Full));
+            }
+            if g.shutdown {
+                if g.q.is_empty() {
+                    return None;
+                }
+                g.stats.flush_drain += 1;
+                return Some((self.drain(&mut g), FlushCause::Drain));
+            }
+            match g.q.front() {
+                Some(front) => {
+                    let age = front.enqueued.elapsed();
+                    if age >= self.policy.max_wait {
+                        g.stats.flush_timeout += 1;
+                        return Some((self.drain(&mut g), FlushCause::Timeout));
+                    }
+                    let (g2, _) =
+                        self.work.wait_timeout(g, self.policy.max_wait - age).unwrap();
+                    g = g2;
+                }
+                None => g = self.work.wait(g).unwrap(),
+            }
+        }
+    }
+
+    fn drain(&self, g: &mut Inner) -> Vec<Request> {
+        let take = g.q.len().min(self.policy.max_batch);
+        let out: Vec<Request> = g.q.drain(..take).collect();
+        self.space.notify_all();
+        out
+    }
+
+    /// Stop accepting requests and wake everyone; queued requests still
+    /// drain through [`Self::next_batch`].
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(v: f32) -> (Request, mpsc::Receiver<Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { x: vec![v], tx, enqueued: Instant::now() }, rx)
+    }
+
+    fn policy(max_batch: usize, max_wait_ms: u64, cap: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn full_flush_takes_exactly_max_batch() {
+        let q = Queue::new(policy(3, 10_000, 16));
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i as f32);
+            q.push(r).unwrap();
+            rxs.push(rx);
+        }
+        let (batch, cause) = q.next_batch().unwrap();
+        assert_eq!(cause, FlushCause::Full);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].x, vec![0.0]); // FIFO order
+        assert_eq!(q.len(), 2);
+        q.shutdown();
+        let (rest, cause) = q.next_batch().unwrap();
+        assert_eq!(cause, FlushCause::Drain);
+        assert_eq!(rest.len(), 2);
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let q = Queue::new(policy(64, 5, 16));
+        let (r, _rx) = req(1.0);
+        let enqueued = r.enqueued;
+        q.push(r).unwrap();
+        let (batch, cause) = q.next_batch().unwrap();
+        assert_eq!(cause, FlushCause::Timeout);
+        assert_eq!(batch.len(), 1);
+        // measured from the request's own enqueue stamp, so scheduler
+        // delays between req() and push() can't fake an early flush
+        assert!(
+            enqueued.elapsed() >= Duration::from_millis(5),
+            "{:?}",
+            enqueued.elapsed()
+        );
+        assert_eq!(q.stats().flush_timeout, 1);
+    }
+
+    #[test]
+    fn push_blocks_on_full_queue_until_drained() {
+        let q = Arc::new(Queue::new(policy(2, 10_000, 2)));
+        for i in 0..2 {
+            let (r, _rx) = req(i as f32);
+            q.push(r).unwrap();
+        }
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || {
+            let (r, _rx) = req(9.0);
+            q2.push(r).unwrap(); // must block until a batch is taken
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "third push should still be blocked");
+        let (batch, _) = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        pusher.join().unwrap();
+        assert_eq!(q.len(), 1);
+        q.shutdown();
+    }
+
+    #[test]
+    fn push_after_shutdown_errors() {
+        let q = Queue::new(policy(2, 1, 4));
+        q.shutdown();
+        let (r, _rx) = req(1.0);
+        assert!(q.push(r).is_err());
+        assert!(q.next_batch().is_none());
+    }
+}

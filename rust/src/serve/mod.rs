@@ -1,0 +1,29 @@
+//! Batched inference serving — the photonic deployment's inference plane.
+//!
+//! The paper's headline case for photonics is massively parallel
+//! *inference*: once trained, the MRR weight bank computes matrix-vector
+//! products at line rate, so the economical way to serve traffic is to
+//! coalesce many concurrent single-sample requests into the fixed-shape
+//! batches the `fwd_<cfg>` artifact was traced for. This module is that
+//! front end, digital-twin style:
+//!
+//! * [`batcher`] — a bounded request queue with dynamic micro-batching:
+//!   flush on `max_batch` queued requests or when the oldest request has
+//!   waited `max_wait` (the classic dynamic-batching policy), with
+//!   backpressure on the submit side.
+//! * [`server`]  — a worker pool; each worker owns a forward artifact
+//!   loaded from the shared [`crate::runtime::StepEngine`] and executes
+//!   micro-batches in `dims.batch`-sized chunks (zero-padded tail — row
+//!   results are independent, so padding never changes a client's
+//!   logits), then routes each row back to its requester and records
+//!   per-request latency for the [`server::ServeStats`] report.
+//!
+//! The CLI front ends are `pdfa serve` (stdin / synthetic loopback
+//! request loop) and `pdfa infer` (batch inference over a checkpoint);
+//! `benches/serve_throughput.rs` measures the stack end to end.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchPolicy, FlushCause};
+pub use server::{ServeConfig, ServeStats, Server, Ticket};

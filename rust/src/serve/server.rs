@@ -1,0 +1,514 @@
+//! Worker pool executing micro-batches over forward artifacts.
+//!
+//! [`Server::start`] loads one `fwd_<cfg>` artifact per worker from the
+//! shared [`StepEngine`] and pins the trained parameters into each
+//! worker's reusable input slots, so a dispatch only writes the batch of
+//! request rows and executes — no per-call parameter cloning. Micro-
+//! batches larger than the artifact's traced batch dimension are split
+//! into `dims.batch`-sized chunks; the ragged tail is zero-padded. Row
+//! results of the forward pass are independent (GEMM + bias + ReLU act
+//! row-wise), so padding and batch composition never change a client's
+//! logits — `pdfa infer` output is bit-identical to
+//! [`crate::dfa::reference::forward`] on the same parameters.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{BatchPolicy, Queue, Reply, Request};
+use crate::dfa::checkpoint::Checkpoint;
+use crate::dfa::params::NetState;
+use crate::runtime::{Artifact, StepEngine};
+use crate::tensor::Tensor;
+use crate::util::benchx::{fmt_ns, fmt_si, BenchResult};
+use crate::{Error, Result};
+
+/// Server sizing: worker count + the batcher's flush policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Forward-artifact replicas executing micro-batches concurrently.
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, policy: BatchPolicy::default() }
+    }
+}
+
+/// Latency samples kept for the percentile report. Beyond this the
+/// recorder switches to reservoir sampling (Algorithm R), so a
+/// long-lived server's memory stays bounded while percentiles remain
+/// an unbiased estimate over the whole run.
+const LATENCY_RESERVOIR: usize = 65_536;
+
+#[derive(Default)]
+struct StatsInner {
+    latencies_ns: Vec<f64>,
+    /// Total latency observations (>= latencies_ns.len() once sampling).
+    lat_seen: u64,
+    /// LCG state driving the reservoir's replacement draws.
+    lat_lcg: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    fill_sum: u64,
+    executes: u64,
+}
+
+impl StatsInner {
+    fn record_latency(&mut self, ns: f64) {
+        self.lat_seen += 1;
+        if self.latencies_ns.len() < LATENCY_RESERVOIR {
+            self.latencies_ns.push(ns);
+            return;
+        }
+        // Algorithm R: keep with probability reservoir/seen
+        self.lat_lcg = self
+            .lat_lcg
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let slot = (self.lat_lcg >> 33) % self.lat_seen;
+        if (slot as usize) < LATENCY_RESERVOIR {
+            self.latencies_ns[slot as usize] = ns;
+        }
+    }
+}
+
+/// Aggregate serving statistics (see [`ServeStats::report`]).
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests answered with logits.
+    pub completed: u64,
+    /// Requests answered with an execution error.
+    pub failed: u64,
+    /// Micro-batches flushed from the queue.
+    pub batches: u64,
+    /// Forward-artifact executions (>= batches: chunking).
+    pub executes: u64,
+    /// Mean requests per micro-batch.
+    pub mean_fill: f64,
+    pub flush_full: u64,
+    pub flush_timeout: u64,
+    pub flush_drain: u64,
+    /// Seconds since the server started.
+    pub wall_s: f64,
+    /// Per-request latency samples (enqueue -> logits), benchx summary.
+    /// Bounded at [`LATENCY_RESERVOIR`] samples via reservoir sampling,
+    /// so long-lived servers report unbiased percentiles at fixed memory.
+    pub latency: BenchResult,
+}
+
+impl ServeStats {
+    /// Two-line human/machine-readable summary.
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "serve: {} ok / {} failed in {:.3}s ({} req/s) | {} micro-batches \
+             (mean fill {:.2}), {} executes | flushes full/timeout/drain \
+             {}/{}/{}",
+            self.completed,
+            self.failed,
+            self.wall_s,
+            fmt_si(self.completed as f64 / self.wall_s.max(1e-9)),
+            self.batches,
+            self.mean_fill,
+            self.executes,
+            self.flush_full,
+            self.flush_timeout,
+            self.flush_drain,
+        );
+        if !self.latency.samples_ns.is_empty() {
+            line.push_str(&format!(
+                "\nlatency: mean={} p50={} p95={} min={}",
+                fmt_ns(self.latency.mean_ns()),
+                fmt_ns(self.latency.p50_ns()),
+                fmt_ns(self.latency.p95_ns()),
+                fmt_ns(self.latency.min_ns()),
+            ));
+        }
+        line
+    }
+}
+
+/// A submitted request's reply handle.
+pub struct Ticket {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl Ticket {
+    /// Block until the request's logits (or the server's error) arrive.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(msg)) => Err(Error::msg(format!("serve: {msg}"))),
+            Err(_) => Err(Error::msg("serve: worker dropped the request")),
+        }
+    }
+
+    /// Non-blocking probe: `Some` once the reply has arrived (pipelined
+    /// clients drain ready tickets between submissions). The reply is
+    /// delivered exactly once — a `Some` here consumes it, and a later
+    /// [`Self::wait`] would report the request as dropped.
+    pub fn poll(&self) -> Option<Result<Vec<f32>>> {
+        match self.rx.try_recv() {
+            Ok(Ok(logits)) => Some(Ok(logits)),
+            Ok(Err(msg)) => Some(Err(Error::msg(format!("serve: {msg}")))),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(Error::msg("serve: worker dropped the request")))
+            }
+        }
+    }
+}
+
+/// The batched inference server.
+pub struct Server {
+    queue: Arc<Queue>,
+    stats: Arc<Mutex<StatsInner>>,
+    workers: Vec<JoinHandle<()>>,
+    d_in: usize,
+    d_out: usize,
+    started: Instant,
+}
+
+impl Server {
+    /// Start a worker pool serving `params` (the 6 leading tensors
+    /// `[w1, b1, w2, b2, w3, b3]`; momentum slots are ignored if present)
+    /// through `engine`'s `fwd_<config>` artifact.
+    pub fn start(
+        engine: &Arc<dyn StepEngine>,
+        config: &str,
+        params: &[Tensor],
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let dims = engine.net_dims(config)?;
+        let shapes = NetState::param_shapes(&dims);
+        if params.len() < shapes.len() {
+            return Err(Error::Shape(format!(
+                "serve: need {} parameter tensors, got {}",
+                shapes.len(),
+                params.len()
+            )));
+        }
+        for (i, (t, s)) in params.iter().zip(&shapes).enumerate() {
+            if t.shape() != s.as_slice() {
+                return Err(Error::Shape(format!(
+                    "serve: parameter {i} has shape {:?}, config '{config}' \
+                     wants {s:?}",
+                    t.shape()
+                )));
+            }
+        }
+        // load every artifact replica before spawning anything, so a load
+        // failure can't strand already-running workers
+        let replicas: Result<Vec<_>> = (0..cfg.workers.max(1))
+            .map(|_| engine.load(&format!("fwd_{config}")))
+            .collect();
+        let replicas = replicas?;
+        let queue = Arc::new(Queue::new(cfg.policy.clone()));
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let mut workers = Vec::new();
+        for (w, fwd) in replicas.into_iter().enumerate() {
+            let worker = WorkerCtx {
+                fwd,
+                params: params[..shapes.len()].to_vec(),
+                batch: dims.batch,
+                d_in: dims.d_in,
+                queue: queue.clone(),
+                stats: stats.clone(),
+            };
+            let spawned = std::thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
+                .spawn(move || worker.run());
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // unblock and reap the workers that did start
+                    queue.shutdown();
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        Ok(Server {
+            queue,
+            stats,
+            workers,
+            d_in: dims.d_in,
+            d_out: dims.d_out,
+            started: Instant::now(),
+        })
+    }
+
+    /// [`Self::start`] from a loaded checkpoint, cross-checking that the
+    /// engine's view of the config matches the checkpoint's dims.
+    pub fn from_checkpoint(
+        engine: &Arc<dyn StepEngine>,
+        ckpt: &Checkpoint,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let dims = engine.net_dims(&ckpt.config)?;
+        if dims != ckpt.dims {
+            return Err(Error::Config(format!(
+                "checkpoint dims {:?} != engine's '{}' dims {dims:?}",
+                ckpt.dims, ckpt.config
+            )));
+        }
+        Self::start(engine, &ckpt.config, ckpt.state.params(), cfg)
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Enqueue one sample (length `d_in`); blocks only on queue
+    /// backpressure. The [`Ticket`] resolves to this sample's logits.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Ticket> {
+        if x.len() != self.d_in {
+            return Err(Error::Shape(format!(
+                "serve: request has {} features, network wants {}",
+                x.len(),
+                self.d_in
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.queue.push(Request { x, tx, enqueued: Instant::now() })?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit and wait: one-call inference for sequential clients.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)?.wait()
+    }
+
+    /// Snapshot the serving statistics so far.
+    pub fn stats(&self) -> ServeStats {
+        let s = self.stats.lock().unwrap();
+        let q = self.queue.stats();
+        ServeStats {
+            completed: s.completed,
+            failed: s.failed,
+            batches: s.batches,
+            executes: s.executes,
+            mean_fill: if s.batches > 0 {
+                s.fill_sum as f64 / s.batches as f64
+            } else {
+                0.0
+            },
+            flush_full: q.flush_full,
+            flush_timeout: q.flush_timeout,
+            flush_drain: q.flush_drain,
+            wall_s: self.started.elapsed().as_secs_f64(),
+            latency: BenchResult {
+                name: "serve_latency".into(),
+                samples_ns: s.latencies_ns.clone(),
+                units_per_iter: None,
+            },
+        }
+    }
+
+    /// Drain the queue, stop the workers and return the final stats.
+    /// Every request accepted before shutdown still gets its reply.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.queue.shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() {
+            self.queue.shutdown();
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Per-worker state: one artifact replica + reusable input slots.
+struct WorkerCtx {
+    fwd: Arc<dyn Artifact>,
+    params: Vec<Tensor>,
+    batch: usize,
+    d_in: usize,
+    queue: Arc<Queue>,
+    stats: Arc<Mutex<StatsInner>>,
+}
+
+impl WorkerCtx {
+    fn run(self) {
+        // input layout of fwd_<cfg>: [w1, b1, w2, b2, w3, b3, x]; the x
+        // slot is rewritten per chunk, parameters stay in place.
+        let mut inputs = self.params.clone();
+        inputs.push(Tensor::zeros(&[self.batch, self.d_in]));
+        while let Some((reqs, _cause)) = self.queue.next_batch() {
+            let mut executes = 0u64;
+            for chunk in reqs.chunks(self.batch) {
+                let x = inputs.last_mut().expect("x slot");
+                for (i, r) in chunk.iter().enumerate() {
+                    x.row_mut(i).copy_from_slice(&r.x);
+                }
+                // zero only the ragged tail: full chunks overwrite every
+                // row, and row results are independent anyway
+                for i in chunk.len()..self.batch {
+                    x.row_mut(i).fill(0.0);
+                }
+                match self.fwd.execute(&inputs) {
+                    Ok(out) => {
+                        executes += 1;
+                        let done = Instant::now();
+                        let logits = &out[0];
+                        let mut s = self.stats.lock().unwrap();
+                        for (i, r) in chunk.iter().enumerate() {
+                            let _ = r.tx.send(Ok(logits.row(i).to_vec()));
+                            s.record_latency((done - r.enqueued).as_nanos() as f64);
+                            s.completed += 1;
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        let mut s = self.stats.lock().unwrap();
+                        for r in chunk {
+                            let _ = r.tx.send(Err(msg.clone()));
+                            s.failed += 1;
+                        }
+                    }
+                }
+            }
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.fill_sum += reqs.len() as u64;
+            s.executes += executes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfa::reference;
+    use crate::runtime::manifest::NetDims;
+    use crate::runtime::NativeEngine;
+    use crate::util::rng::Pcg64;
+    use std::time::Duration;
+
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(NativeEngine::new())
+    }
+
+    fn tiny_params(seed: u64) -> (NetDims, NetState) {
+        let dims = NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 };
+        let mut rng = Pcg64::seed(seed);
+        let state = NetState::init(&dims, &mut rng);
+        (dims, state)
+    }
+
+    fn cfg(max_batch: usize, max_wait_ms: u64) -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                queue_cap: 64,
+            },
+        }
+    }
+
+    #[test]
+    fn single_request_matches_reference_forward() {
+        let engine = engine();
+        let (dims, state) = tiny_params(3);
+        let server = Server::start(&engine, "tiny", state.params(), cfg(4, 1)).unwrap();
+        let mut rng = Pcg64::seed(9);
+        let x: Vec<f32> = (0..dims.d_in).map(|_| rng.uniform() as f32).collect();
+        let got = server.infer(x.clone()).unwrap();
+
+        let xt = Tensor::new(&[1, dims.d_in], x).unwrap();
+        let want = reference::forward(state.params(), &xt);
+        assert_eq!(got, want.logits.row(0));
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.latency.samples_ns.len(), 1);
+    }
+
+    #[test]
+    fn oversized_micro_batch_chunks_and_stays_exact() {
+        let engine = engine();
+        let (dims, state) = tiny_params(5);
+        // max_batch 20 > dims.batch 8 forces 3 chunks (8 + 8 + 4)
+        let server =
+            Server::start(&engine, "tiny", state.params(), cfg(20, 10_000)).unwrap();
+        let mut rng = Pcg64::seed(11);
+        let xs: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..dims.d_in).map(|_| rng.uniform() as f32).collect())
+            .collect();
+        let tickets: Vec<Ticket> =
+            xs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+        for (x, t) in xs.iter().zip(tickets) {
+            let got = t.wait().unwrap();
+            let xt = Tensor::new(&[1, dims.d_in], x.clone()).unwrap();
+            let want = reference::forward(state.params(), &xt);
+            assert_eq!(got, want.logits.row(0));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 20);
+        assert!(stats.executes >= 3, "{}", stats.executes);
+        assert!(stats.report().contains("serve:"));
+    }
+
+    #[test]
+    fn rejects_bad_requests_and_params() {
+        let engine = engine();
+        let (_, state) = tiny_params(7);
+        // wrong parameter shapes
+        assert!(Server::start(&engine, "small", state.params(), cfg(4, 1)).is_err());
+        // too few tensors
+        assert!(Server::start(&engine, "tiny", &state.tensors[..3], cfg(4, 1)).is_err());
+        // unknown config
+        assert!(Server::start(&engine, "nope", state.params(), cfg(4, 1)).is_err());
+
+        let server = Server::start(&engine, "tiny", state.params(), cfg(4, 1)).unwrap();
+        assert!(server.submit(vec![0.0; 3]).is_err()); // wrong width
+        assert_eq!(server.d_in(), 16);
+        assert_eq!(server.d_out(), 4);
+        drop(server); // Drop shuts down cleanly with requests never sent
+    }
+
+    #[test]
+    fn from_checkpoint_round_trips_params() {
+        let engine = engine();
+        let (dims, state) = tiny_params(13);
+        let ckpt = Checkpoint {
+            config: "tiny".into(),
+            dims: dims.clone(),
+            epoch: 0,
+            total_steps: 0,
+            seed: 13,
+            protocol: String::new(), // inference never checks the protocol
+            rng: Pcg64::seed(13),
+            state: state.clone(),
+        };
+        let server = Server::from_checkpoint(&engine, &ckpt, cfg(4, 1)).unwrap();
+        let x = vec![0.5f32; dims.d_in];
+        let got = server.infer(x.clone()).unwrap();
+        let xt = Tensor::new(&[1, dims.d_in], x).unwrap();
+        assert_eq!(got, reference::forward(state.params(), &xt).logits.row(0));
+
+        // dims mismatch rejected
+        let mut bad = ckpt;
+        bad.dims.d_h1 = 64;
+        assert!(Server::from_checkpoint(&engine, &bad, cfg(4, 1)).is_err());
+    }
+}

@@ -68,31 +68,48 @@ fn matmul_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
 }
 
 fn matmul_parallel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    split_rows_parallel(a, c, m, k, n, |a_chunk, c_chunk| {
+        matmul_blocked(a_chunk, b, c_chunk, c_chunk.len() / n, k, n)
+    });
+}
+
+/// Shared thread scaffolding of the parallel kernels: split C (m x n,
+/// with A's rows aligned to it) into disjoint per-thread row chunks and
+/// run `kernel(a_chunk, c_chunk)` on each. Caller guarantees n > 0;
+/// falls back to one inline kernel call on single-CPU machines.
+fn split_rows_parallel(
+    a: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kernel: impl Fn(&[f32], &mut [f32]) + Copy + Send,
+) {
     let threads = std::thread::available_parallelism()
         .map(|t| t.get())
         .unwrap_or(1)
         .min(m)
         .max(1);
     if threads <= 1 {
-        return matmul_blocked(a, b, c, m, k, n);
+        return kernel(a, c);
     }
     let rows_per = m.div_ceil(threads);
-    // Split C into disjoint row chunks; each thread owns one.
     let chunks: Vec<&mut [f32]> = c.chunks_mut(rows_per * n).collect();
     std::thread::scope(|scope| {
         for (t, c_chunk) in chunks.into_iter().enumerate() {
             let i0 = t * rows_per;
             let rows = c_chunk.len() / n;
             let a_chunk = &a[i0 * k..(i0 + rows) * k];
-            scope.spawn(move || {
-                matmul_blocked(a_chunk, b, c_chunk, rows, k, n);
-            });
+            scope.spawn(move || kernel(a_chunk, c_chunk));
         }
     });
 }
 
 /// out = a @ b^T without materializing the transpose (b given row-major
 /// as (n x k)); the photonic reference path uses this for delta products.
+/// Large products split the output rows across threads like
+/// [`matmul_into`]; the per-row kernel is already stride-1 in both
+/// operands, so no extra blocking is needed.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (n, k2) = (b.shape()[0], b.shape()[1]);
@@ -104,21 +121,37 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let mut out = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
     let od = out.data_mut();
-    for i in 0..m {
-        let a_row = &ad[i * k..(i + 1) * k];
-        for j in 0..n {
-            let b_row = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (x, y) in a_row.iter().zip(b_row) {
-                acc += x * y;
-            }
-            od[i * n + j] = acc;
-        }
+    if n == 0 {
+        return Ok(out); // nothing to compute; avoid chunks_mut(0) below
+    }
+    if m * n * k < PAR_THRESHOLD {
+        matmul_bt_rows(ad, bd, od, k, n);
+    } else {
+        split_rows_parallel(ad, od, m, k, n, |a_chunk, o_chunk| {
+            matmul_bt_rows(a_chunk, bd, o_chunk, k, n)
+        });
     }
     Ok(out)
 }
 
-/// out = a^T @ b without materializing the transpose: a (k x m), b (k x n).
+/// Row-dot-row kernel of [`matmul_bt`]: c (rows x n) = a (rows x k) @ b^T.
+fn matmul_bt_rows(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize) {
+    for (a_row, c_row) in a.chunks(k.max(1)).zip(c.chunks_mut(n)) {
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// out = a^T @ b: a (k x m), b (k x n). Small products run a fused
+/// single-pass kernel; large ones materialize aᵀ once and route through
+/// [`matmul_into`] so they get its cache blocking and thread split (the
+/// O(km) transpose buffer is noise next to the O(kmn) product).
 pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (k, m) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
@@ -130,6 +163,16 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let mut out = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
     let od = out.data_mut();
+    if m * n * k >= PAR_THRESHOLD {
+        let mut at = vec![0.0f32; k * m];
+        for kk in 0..k {
+            for i in 0..m {
+                at[i * k + kk] = ad[kk * m + i];
+            }
+        }
+        matmul_into(&at, bd, od, m, k, n);
+        return Ok(out);
+    }
     for kk in 0..k {
         let a_row = &ad[kk * m..(kk + 1) * m];
         let b_row = &bd[kk * n..(kk + 1) * n];
@@ -147,10 +190,15 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(out)
 }
 
-/// Column-wise mean of a 2-D tensor -> (cols,) vector.
+/// Column-wise mean of a 2-D tensor -> (cols,) vector. The mean over
+/// zero rows is defined as zero (not NaN), so empty mini-batches and
+/// zero-sized tensors stay poison-free.
 pub fn col_mean(t: &Tensor) -> Tensor {
     let (m, n) = (t.rows(), t.cols());
     let mut out = Tensor::zeros(&[n]);
+    if m == 0 {
+        return out;
+    }
     for i in 0..m {
         for (o, v) in out.data_mut().iter_mut().zip(t.row(i)) {
             *o += v;
@@ -163,9 +211,13 @@ pub fn col_mean(t: &Tensor) -> Tensor {
     out
 }
 
-/// Row-wise mean of a 2-D tensor -> (rows,) vector.
+/// Row-wise mean of a 2-D tensor -> (rows,) vector; the mean over zero
+/// columns is zero, mirroring [`col_mean`].
 pub fn row_mean(t: &Tensor) -> Tensor {
     let (m, n) = (t.rows(), t.cols());
+    if n == 0 {
+        return Tensor::zeros(&[m]);
+    }
     let inv = 1.0 / n as f32;
     Tensor::from_fn(&[m], |i| t.row(i).iter().sum::<f32>() * inv)
 }
@@ -251,9 +303,58 @@ mod tests {
     }
 
     #[test]
+    fn transposed_variants_cross_parallel_threshold() {
+        // 160 * 120 * 80 = 1.54M multiply-adds > PAR_THRESHOLD, so the
+        // bt row-split and the at transpose-then-matmul_into routes run.
+        let (m, k, n) = (160, 80, 120);
+        assert!(m * k * n >= super::PAR_THRESHOLD);
+        let mut rng = Pcg64::seed(17);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let want = naive(&a, &b);
+        let got_bt = matmul_bt(&a, &b.t()).unwrap();
+        assert_close(got_bt.data(), want.data(), 1e-3 * k as f32).unwrap();
+        let got_at = matmul_at(&a.t(), &b).unwrap();
+        assert_close(got_at.data(), want.data(), 1e-3 * k as f32).unwrap();
+    }
+
+    #[test]
+    fn zero_dim_products_are_empty_not_poisoned() {
+        // every degenerate (0-extent) shape must produce finite zeros,
+        // not NaNs or panics, on all four kernels
+        for (m, k, n) in [(0, 3, 4), (3, 0, 4), (3, 4, 0), (0, 0, 0)] {
+            let a = Tensor::zeros(&[m, k]);
+            let b = Tensor::zeros(&[k, n]);
+            let c = matmul(&a, &b).unwrap();
+            assert_eq!(c.shape(), &[m, n]);
+            let c = matmul_bt(&a, &Tensor::zeros(&[n, k])).unwrap();
+            assert_eq!(c.shape(), &[m, n]);
+            assert!(c.data().iter().all(|v| v.is_finite()));
+            let c = matmul_at(&Tensor::zeros(&[k, m]), &b).unwrap();
+            assert_eq!(c.shape(), &[m, n]);
+            assert!(c.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
     fn means() {
         let t = Tensor::new(&[2, 3], vec![1., 2., 3., 5., 6., 7.]).unwrap();
         assert_eq!(col_mean(&t).data(), &[3., 4., 5.]);
         assert_eq!(row_mean(&t).data(), &[2., 6.]);
+    }
+
+    #[test]
+    fn means_of_zero_extent_tensors_are_zero() {
+        // previously 0/0 -> NaN; the mean over an empty axis is pinned to 0
+        let rows0 = Tensor::zeros(&[0, 5]);
+        let cm = col_mean(&rows0);
+        assert_eq!(cm.shape(), &[5]);
+        assert!(cm.data().iter().all(|&v| v == 0.0));
+        let cols0 = Tensor::zeros(&[4, 0]);
+        let rm = row_mean(&cols0);
+        assert_eq!(rm.shape(), &[4]);
+        assert!(rm.data().iter().all(|&v| v == 0.0));
+        assert!(col_mean(&cols0).data().is_empty());
+        assert!(row_mean(&rows0).data().is_empty());
     }
 }

@@ -84,9 +84,9 @@ impl Args {
                         Some(v) => v,
                         None => {
                             i += 1;
-                            argv.get(i)
-                                .cloned()
-                                .ok_or_else(|| Error::Cli(format!("flag '--{key}' expects a value")))?
+                            argv.get(i).cloned().ok_or_else(|| {
+                                Error::Cli(format!("flag '--{key}' expects a value"))
+                            })?
                         }
                     };
                     values.insert(key, val);
@@ -113,15 +113,15 @@ impl Args {
     }
 
     pub fn usize(&self, name: &str) -> Result<usize> {
-        self.str(name)
-            .parse()
-            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+        self.str(name).parse().map_err(|_| {
+            Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name)))
+        })
     }
 
     pub fn u64(&self, name: &str) -> Result<u64> {
-        self.str(name)
-            .parse()
-            .map_err(|_| Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name))))
+        self.str(name).parse().map_err(|_| {
+            Error::Cli(format!("--{name}: expected integer, got '{}'", self.str(name)))
+        })
     }
 
     pub fn f64(&self, name: &str) -> Result<f64> {

@@ -106,6 +106,195 @@ fn train_small_run_produces_artifacts() {
 }
 
 #[test]
+fn train_save_every_then_infer_is_bit_identical_to_reference() {
+    use photonic_dfa::dfa::checkpoint::Checkpoint;
+    use photonic_dfa::dfa::reference;
+    use photonic_dfa::tensor::Tensor;
+    use photonic_dfa::util::rng::Pcg64;
+
+    let out_dir = std::env::temp_dir().join("pdfa_cli_ckpt_infer");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--epochs", "2",
+            "--lr", "0.05",
+            "--n-train", "128",
+            "--n-test", "64",
+            "--save-every", "1",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "ckpt_test",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ckpt_path = out_dir.join("ckpt_test").join("ckpt.gz");
+    assert!(ckpt_path.exists(), "default --save path not written");
+
+    let logits_path = out_dir.join("logits.f32");
+    let out = pdfa()
+        .args([
+            "infer",
+            "--checkpoint", ckpt_path.to_str().unwrap(),
+            "--n", "6",
+            "--seed", "21",
+            "--dump-logits", logits_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sample"), "{text}");
+    assert!(text.contains("serve:"), "missing stats report: {text}");
+
+    // the acceptance pin: served logits == reference::forward on the
+    // loaded checkpoint params, bit for bit
+    let ckpt = Checkpoint::load(&ckpt_path).unwrap();
+    let mut rng = Pcg64::seed(21); // mirrors `pdfa infer --seed 21`
+    let d_in = ckpt.dims.d_in;
+    let mut want = Vec::new();
+    for _ in 0..6 {
+        let x: Vec<f32> = (0..d_in).map(|_| rng.uniform() as f32).collect();
+        let xt = Tensor::new(&[1, d_in], x).unwrap();
+        let fwd = reference::forward(ckpt.state.params(), &xt);
+        for &v in fwd.logits.row(0) {
+            want.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let got = std::fs::read(&logits_path).unwrap();
+    assert_eq!(got, want, "CLI logits differ from reference::forward");
+}
+
+#[test]
+fn serve_synthetic_smoke_run() {
+    let out_dir = std::env::temp_dir().join("pdfa_cli_serve");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--epochs", "1",
+            "--max-steps", "2",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "serve_test",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ckpt = out_dir.join("serve_test").join("final.ckpt");
+
+    let out = pdfa()
+        .args([
+            "serve",
+            "--checkpoint", ckpt.to_str().unwrap(),
+            "--source", "synthetic",
+            "--max-requests", "16",
+            "--workers", "2",
+            "--max-batch", "4",
+            "--max-wait-ms", "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("served 16 synthetic requests"), "{text}");
+    assert!(text.contains("serve: 16 ok / 0 failed"), "{text}");
+}
+
+#[test]
+fn malformed_checkpoints_rejected_cleanly() {
+    let dir = std::env::temp_dir().join("pdfa_cli_badckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // garbage bytes: Error::Format, not a panic
+    let garbage = dir.join("garbage.ckpt");
+    std::fs::write(&garbage, b"these are not the bytes you are looking for").unwrap();
+    let out = pdfa()
+        .args(["infer", "--checkpoint", garbage.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("format:"), "want a clean format error, got: {err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    // a truncated but genuine checkpoint: also Error::Format
+    let real = {
+        use photonic_dfa::dfa::config::TrainConfig;
+        use photonic_dfa::dfa::trainer::Trainer;
+        use photonic_dfa::runtime::NativeEngine;
+        use std::sync::Arc;
+        let engine: Arc<dyn photonic_dfa::runtime::StepEngine> =
+            Arc::new(NativeEngine::new());
+        let cfg = TrainConfig {
+            config: "tiny".into(),
+            n_train: 64,
+            n_test: 32,
+            ..TrainConfig::default()
+        };
+        Trainer::new(engine, cfg).unwrap().checkpoint().to_bytes()
+    };
+    let truncated = dir.join("truncated.ckpt");
+    std::fs::write(&truncated, &real[..real.len() / 3]).unwrap();
+    let out = pdfa()
+        .args(["serve", "--checkpoint", truncated.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("format:"), "{err}");
+
+    // a missing file: Error::Io
+    let out = pdfa()
+        .args(["infer", "--checkpoint", dir.join("nope.ckpt").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("io:"), "{err}");
+}
+
+#[test]
+fn train_resume_matches_uninterrupted_run() {
+    let out_dir = std::env::temp_dir().join("pdfa_cli_resume");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let base = |extra: &[&str], run: &str| {
+        let mut args = vec![
+            "train",
+            "--config", "tiny",
+            "--lr", "0.05",
+            "--n-train", "128",
+            "--n-test", "64",
+            "--seed", "9",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", run,
+        ];
+        args.extend_from_slice(extra);
+        let out = pdfa().args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    // straight 2-epoch run vs 1 epoch + resume for the second
+    let straight = base(&["--epochs", "2"], "straight");
+    base(&["--epochs", "1"], "head");
+    let head_ckpt = out_dir.join("head").join("final.ckpt");
+    let resumed = base(
+        &["--epochs", "2", "--resume", head_ckpt.to_str().unwrap()],
+        "tail",
+    );
+    let acc = |s: &str| {
+        s.lines()
+            .find(|l| l.starts_with("test accuracy:"))
+            .map(|l| l.split_whitespace().nth(2).unwrap().to_string())
+            .unwrap()
+    };
+    assert_eq!(acc(&straight), acc(&resumed), "\n{straight}\nvs\n{resumed}");
+}
+
+#[test]
 fn bad_flags_rejected() {
     let out = pdfa().args(["train", "--nonsense", "1"]).output().unwrap();
     assert!(!out.status.success());

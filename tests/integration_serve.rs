@@ -1,0 +1,191 @@
+//! Integration: the batched inference serving subsystem under concurrent
+//! load. The core invariant: no request is lost, duplicated, or answered
+//! with another request's logits — each producer embeds a unique payload
+//! and checks its reply against an independently computed
+//! `dfa::reference::forward`, under both dynamic-batcher flush paths.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::dfa::reference;
+use photonic_dfa::runtime::manifest::NetDims;
+use photonic_dfa::runtime::{NativeEngine, StepEngine};
+use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::rng::Pcg64;
+
+const PRODUCERS: usize = 4;
+const REQUESTS_PER_PRODUCER: usize = 64;
+
+fn engine() -> Arc<dyn StepEngine> {
+    Arc::new(NativeEngine::new())
+}
+
+fn tiny_state(seed: u64) -> (NetDims, NetState) {
+    let dims = NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 };
+    let mut rng = Pcg64::seed(seed);
+    (dims.clone(), NetState::init(&dims, &mut rng))
+}
+
+/// A payload unique to (producer, sequence): distinguishable logits for
+/// every request, so cross-wired responses cannot go unnoticed.
+fn payload(d_in: usize, producer: usize, seq: usize) -> Vec<f32> {
+    (0..d_in)
+        .map(|j| {
+            let tag = (producer * REQUESTS_PER_PRODUCER + seq) as f32;
+            ((j as f32 + 1.0) * 0.013 + tag * 0.001) % 1.0
+        })
+        .collect()
+}
+
+/// M producers x K burst-submitted requests each; every reply must equal
+/// the reference forward of that producer's own payload.
+fn stress(policy: BatchPolicy, workers: usize) -> photonic_dfa::serve::ServeStats {
+    let engine = engine();
+    let (dims, state) = tiny_state(33);
+    let server = Arc::new(
+        Server::start(&engine, "tiny", state.params(), ServeConfig { workers, policy })
+            .unwrap(),
+    );
+    let params = Arc::new(state.params().to_vec());
+
+    std::thread::scope(|scope| {
+        for p in 0..PRODUCERS {
+            let server = server.clone();
+            let params = params.clone();
+            let d_in = dims.d_in;
+            scope.spawn(move || {
+                // burst-submit the whole load, then verify every reply
+                let xs: Vec<Vec<f32>> =
+                    (0..REQUESTS_PER_PRODUCER).map(|s| payload(d_in, p, s)).collect();
+                let tickets: Vec<_> = xs
+                    .iter()
+                    .map(|x| server.submit(x.clone()).unwrap())
+                    .collect();
+                for (x, ticket) in xs.iter().zip(tickets) {
+                    let got = ticket.wait().unwrap();
+                    let xt = Tensor::new(&[1, d_in], x.clone()).unwrap();
+                    let want = reference::forward(&params, &xt);
+                    assert_eq!(
+                        got,
+                        want.logits.row(0),
+                        "producer {p} got someone else's logits"
+                    );
+                }
+            });
+        }
+    });
+
+    let stats = Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("producers done, server uniquely owned"))
+        .shutdown();
+    assert_eq!(
+        stats.completed,
+        (PRODUCERS * REQUESTS_PER_PRODUCER) as u64,
+        "every request answered exactly once"
+    );
+    assert_eq!(stats.failed, 0);
+    stats
+}
+
+#[test]
+fn stress_max_batch_flush_path() {
+    // long max_wait: the only way requests move is the max_batch trigger
+    // (plus the shutdown drain, which producers' waits already preclude)
+    let stats = stress(
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(30),
+            queue_cap: 512,
+        },
+        3,
+    );
+    assert_eq!(stats.flush_timeout, 0, "nothing should age out: {stats:?}");
+    assert_eq!(stats.batches, (PRODUCERS * REQUESTS_PER_PRODUCER / 8) as u64);
+}
+
+#[test]
+fn stress_max_wait_flush_path() {
+    // max_batch above the total load: every flush is an age-out (or the
+    // final drain); the full trigger must never fire
+    let stats = stress(
+        BatchPolicy {
+            max_batch: 4096,
+            max_wait: Duration::from_millis(3),
+            queue_cap: 512,
+        },
+        3,
+    );
+    assert_eq!(stats.flush_full, 0, "batcher must flush on age: {stats:?}");
+    assert!(stats.batches >= 1);
+}
+
+#[test]
+fn stress_tiny_batches_many_workers() {
+    // max_batch 1 degenerates to per-request dispatch across 4 workers —
+    // maximal interleaving, same correctness invariant
+    let stats = stress(
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        },
+        4,
+    );
+    assert_eq!(stats.batches, (PRODUCERS * REQUESTS_PER_PRODUCER) as u64);
+}
+
+#[test]
+fn serve_results_match_training_evaluate() {
+    // end-to-end: train a few epochs, serve the trained checkpoint, and
+    // check served argmax predictions agree with the evaluation path
+    use photonic_dfa::dfa::config::TrainConfig;
+    use photonic_dfa::dfa::trainer::Trainer;
+    use photonic_dfa::data::Dataset;
+
+    let engine = engine();
+    let cfg = TrainConfig {
+        config: "tiny".into(),
+        epochs: 2,
+        lr: 0.05,
+        n_train: 256,
+        n_test: 64,
+        seed: 5,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(engine.clone(), cfg).unwrap();
+    let train = Arc::new(Dataset::synthetic_features(256, 16, 4, 50));
+    let test = Arc::new(Dataset::synthetic_features(64, 16, 4, 51));
+    t.train(train, test.clone(), |_| {}).unwrap();
+    let ckpt = t.checkpoint();
+
+    let server = Server::from_checkpoint(
+        &engine,
+        &ckpt,
+        ServeConfig {
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        },
+    )
+    .unwrap();
+    let mut correct = 0usize;
+    for i in 0..test.len() {
+        let logits = server.infer(test.x.row(i).to_vec()).unwrap();
+        let pred = logits
+            .iter()
+            .enumerate()
+            .fold(0, |best, (j, &v)| if v > logits[best] { j } else { best });
+        if pred == test.y[i] as usize {
+            correct += 1;
+        }
+    }
+    let served_acc = correct as f64 / test.len() as f64;
+    let eval_acc = t.evaluate(&test).unwrap();
+    assert_eq!(served_acc, eval_acc, "serving and evaluate disagree");
+    server.shutdown();
+}

@@ -140,6 +140,53 @@ fn training_is_reproducible_per_seed() {
 }
 
 #[test]
+fn checkpoint_roundtrip_and_resume_reproduce_the_trajectory() {
+    use photonic_dfa::dfa::checkpoint::Checkpoint;
+
+    // A: uninterrupted 4-epoch run, recording the loss trajectory
+    let engine = engine();
+    let four_epochs = TrainConfig { epochs: 4, ..base_cfg() };
+    let mut full = Trainer::new(engine.clone(), four_epochs.clone()).unwrap();
+    let (train, test) = full.load_data().unwrap();
+    let full_res = full.train(train.clone(), test.clone(), |_| {}).unwrap();
+    assert_eq!(full_res.history.len(), 4);
+
+    // B: same run stopped after 2 epochs, checkpointed through disk
+    let dir = std::env::temp_dir().join("pdfa_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("epoch2.ckpt");
+    let mut head =
+        Trainer::new(engine.clone(), TrainConfig { epochs: 2, ..base_cfg() }).unwrap();
+    head.train(train.clone(), test.clone(), |_| {}).unwrap();
+    head.save_checkpoint(&path).unwrap();
+
+    // save -> load -> save is byte-identical
+    let bytes = std::fs::read(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.to_bytes(), bytes);
+    assert_eq!(loaded.epoch, 2);
+    assert_eq!(loaded.state.to_bytes(), head.state.to_bytes());
+
+    // C: resume B from disk and finish epochs 3..4
+    let mut tail = Trainer::new(engine, four_epochs).unwrap();
+    tail.restore(&loaded).unwrap();
+    let tail_res = tail.train(train, test, |_| {}).unwrap();
+    assert_eq!(tail_res.history.len(), 2);
+    for (resumed, original) in tail_res.history.iter().zip(&full_res.history[2..]) {
+        assert_eq!(resumed.epoch, original.epoch);
+        assert_eq!(
+            resumed.train_loss, original.train_loss,
+            "epoch {} loss diverged after resume",
+            resumed.epoch
+        );
+        assert_eq!(resumed.train_acc, original.train_acc);
+    }
+    // and the final parameter state is bit-identical to the straight run
+    assert_eq!(tail.state.to_bytes(), full.state.to_bytes());
+    assert_eq!(tail_res.test_acc, full_res.test_acc);
+}
+
+#[test]
 fn native_trainer_is_bit_identical_to_a_pure_reference_loop() {
     // The strongest end-to-end pin: drive the full Trainer (coordinator
     // pipeline, native engine, state plumbing) and independently re-run
