@@ -1,0 +1,77 @@
+//! Photonic-backend bench: cost of one in-situ training dispatch.
+//!
+//! Times the `fwd` and `dfa_step` artifacts of the tiny config on the
+//! [`PhotonicEngine`] under (a) the ideal preset (exact inscription — the
+//! per-cycle optical chain dominates) and (b) the paper preset with
+//! feedback-locked inscription (the §4 lock protocol dominates), plus the
+//! one-off bank build (fabrication + calibration) cost. MAC throughput is
+//! reported against the gradient-path MACs the dispatch performs.
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::runtime::{PhotonicEngine, PhysicsConfig, StepEngine};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, bench_throughput, BenchConfig};
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_time: std::time::Duration::from_secs(2),
+    };
+
+    for (label, physics) in [
+        ("ideal", PhysicsConfig::ideal()),
+        ("paper", PhysicsConfig::paper()),
+    ] {
+        let t0 = std::time::Instant::now();
+        let engine = PhotonicEngine::open("artifacts", physics).unwrap();
+        let fwd = engine.load("fwd_tiny").unwrap();
+        let step = engine.load("dfa_step_tiny").unwrap();
+        println!(
+            "photonic/bank_build_{label} (fabricate + calibrate, once per \
+             artifact): {:.2?}",
+            t0.elapsed()
+        );
+
+        let dims = engine.net_dims("tiny").unwrap();
+        let mut rng = Pcg64::seed(1);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+
+        let mut fwd_inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        fwd_inputs.push(x.clone());
+        let r = bench(&format!("photonic/fwd_tiny_{label}"), &cfg, || {
+            fwd.execute(&fwd_inputs).unwrap()
+        });
+        println!("{}", r.report());
+
+        let mut step_inputs = state.tensors.clone();
+        step_inputs.extend([
+            b1.clone(),
+            b2.clone(),
+            x.clone(),
+            y.clone(),
+            Tensor::zeros(&[dims.d_h1, dims.batch]),
+            Tensor::zeros(&[dims.d_h2, dims.batch]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.05),
+            Tensor::scalar(0.9),
+        ]);
+        let gradient_macs = ((dims.d_h1 + dims.d_h2) * dims.d_out * dims.batch) as f64;
+        let r = bench_throughput(
+            &format!("photonic/dfa_step_tiny_{label}"),
+            &cfg,
+            gradient_macs,
+            "MAC",
+            || step.execute(&step_inputs).unwrap(),
+        );
+        println!("{}", r.report());
+    }
+}

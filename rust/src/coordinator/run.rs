@@ -28,6 +28,20 @@ impl RunRecorder {
         Ok(())
     }
 
+    /// Write `config.json` for an engine-driven run: the training config
+    /// plus the backend identity that executed it. A recorded run is not
+    /// reproducible without the engine — the same `TrainConfig` lands on
+    /// different trajectories on `native` vs `photonic` (device physics)
+    /// — so the backend is part of the run record, mirroring its role in
+    /// the checkpoint protocol string.
+    pub fn write_engine_config(&self, backend: &str, config: &Value) -> Result<()> {
+        let doc = Value::object(vec![
+            ("backend", Value::str(backend)),
+            ("train", config.clone()),
+        ]);
+        self.write_config(&doc)
+    }
+
     /// Append one epoch record and rewrite history.json (crash-safe-ish:
     /// the file is always a complete valid document).
     pub fn record_epoch(&mut self, record: Value) -> Result<()> {
@@ -81,5 +95,21 @@ mod tests {
             Some(0.93)
         );
         assert!(rec.dir.join("result.json").exists());
+    }
+
+    #[test]
+    fn engine_config_records_backend_identity() {
+        let base = std::env::temp_dir().join("pdfa_run_test_engine");
+        let rec = RunRecorder::create(&base, "unit").unwrap();
+        rec.write_engine_config(
+            "photonic",
+            &Value::object(vec![("lr", Value::Number(0.01))]),
+        )
+        .unwrap();
+        let doc =
+            Value::parse(&std::fs::read_to_string(rec.dir.join("config.json")).unwrap())
+                .unwrap();
+        assert_eq!(doc.get("backend").as_str(), Some("photonic"));
+        assert_eq!(doc.get("train").get("lr").as_f64(), Some(0.01));
     }
 }

@@ -4,6 +4,7 @@
 //! rate 0.01, mini-batch 64, cross-entropy loss, ReLU hidden layers.
 
 use super::noise_model::NoiseMode;
+use crate::runtime::photonic::PhysicsConfig;
 use crate::util::json::Value;
 use crate::{Error, Result};
 
@@ -42,6 +43,11 @@ pub struct TrainConfig {
     pub save_path: Option<String>,
     /// Checkpoint cadence in epochs (0 = only the final checkpoint).
     pub save_every: usize,
+    /// Device physics of the photonic backend (`--backend photonic`):
+    /// bank geometry, DAC/ADC bits, read-noise sigma, crosstalk/lock
+    /// fidelity. `None` for the digital backends. Part of the protocol
+    /// string — a resume under different physics is a trajectory change.
+    pub physics: Option<PhysicsConfig>,
 }
 
 impl Default for TrainConfig {
@@ -61,6 +67,7 @@ impl Default for TrainConfig {
             max_steps_per_epoch: None,
             save_path: None,
             save_every: 0,
+            physics: None,
         }
     }
 }
@@ -84,6 +91,11 @@ impl TrainConfig {
             ("seed", Value::Number(self.seed as f64)),
             ("n_train", Value::Number(self.n_train as f64)),
             ("n_test", Value::Number(self.n_test as f64)),
+            (
+                "physics",
+                self.physics
+                    .map_or(Value::Null, |p| Value::str(&p.describe())),
+            ),
         ])
     }
 
@@ -96,7 +108,7 @@ impl TrainConfig {
     pub fn protocol_string(&self) -> String {
         format!(
             "lr={};momentum={};algorithm={:?};noise={};n_train={};n_test={};\
-             max_steps={:?};data_dir={}",
+             max_steps={:?};data_dir={};physics={}",
             self.lr,
             self.momentum,
             self.algorithm,
@@ -104,7 +116,9 @@ impl TrainConfig {
             self.n_train,
             self.n_test,
             self.max_steps_per_epoch,
-            self.data_dir.as_deref().unwrap_or("")
+            self.data_dir.as_deref().unwrap_or(""),
+            self.physics
+                .map_or_else(|| "none".to_string(), |p| p.describe()),
         )
     }
 
@@ -120,6 +134,9 @@ impl TrainConfig {
         }
         if self.n_train == 0 || self.n_test == 0 {
             return Err(Error::Config("dataset sizes must be positive".into()));
+        }
+        if let Some(physics) = &self.physics {
+            physics.validate()?;
         }
         Ok(())
     }
@@ -150,6 +167,9 @@ mod tests {
         let mut c = TrainConfig::default();
         c.momentum = 1.5;
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.physics = Some(PhysicsConfig { bank_rows: 0, ..PhysicsConfig::ideal() });
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -168,11 +188,44 @@ mod tests {
             |c| c.n_train = 7,
             |c| c.max_steps_per_epoch = Some(3),
             |c| c.data_dir = Some("elsewhere".into()),
+            |c| c.physics = Some(PhysicsConfig::ideal()),
         ] {
             let mut c = TrainConfig::default();
             mutate(&mut c);
             assert_ne!(c.protocol_string(), base.protocol_string());
         }
+    }
+
+    #[test]
+    fn physics_hyperparameters_are_protocol_determining() {
+        // every physics knob must flip the protocol string, so --resume
+        // rejects a checkpoint trained under different device physics
+        // instead of silently diverging
+        let base = TrainConfig { physics: Some(PhysicsConfig::ideal()), ..TrainConfig::default() };
+        assert_eq!(base.protocol_string(), base.clone().protocol_string());
+        for mutate in [
+            (|p: &mut PhysicsConfig| p.bank_rows = 25) as fn(&mut PhysicsConfig),
+            |p| p.bank_cols = 10,
+            |p| p.dac_bits = 8,
+            |p| p.adc_bits = 4,
+            |p| p.sigma = 0.2,
+            |p| p.crosstalk = true,
+            |p| p.lock = true,
+            |p| p.seed = 99,
+        ] {
+            let mut physics = PhysicsConfig::ideal();
+            mutate(&mut physics);
+            let c = TrainConfig { physics: Some(physics), ..TrainConfig::default() };
+            assert_ne!(
+                c.protocol_string(),
+                base.protocol_string(),
+                "physics change must change the protocol: {}",
+                physics.describe()
+            );
+        }
+        // and turning the physics off entirely is a protocol change too
+        let off = TrainConfig::default();
+        assert_ne!(off.protocol_string(), base.protocol_string());
     }
 
     #[test]

@@ -97,6 +97,34 @@ impl Trainer {
     pub fn new(engine: Arc<dyn StepEngine>, cfg: TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
         let dims = engine.net_dims(&cfg.config)?;
+
+        // the photonic backend supplies its own noise physics: neither the
+        // Gaussian noise model nor the legacy device-mode path can compose
+        // with it, and both should fail here — before any bank is built
+        // (artifact loads below calibrate the device) — rather than at the
+        // first dfa_step dispatch
+        if engine.platform_name() == "photonic" {
+            match cfg.noise {
+                NoiseMode::Clean => {}
+                NoiseMode::Device { .. } => {
+                    return Err(Error::Config(
+                        "--noise device:* is the legacy device-mode path; the \
+                         photonic backend already computes gradients on the \
+                         bank — configure it with --physics instead"
+                            .into(),
+                    ));
+                }
+                _ => {
+                    return Err(Error::Config(format!(
+                        "--noise {} cannot run on the photonic backend: noise \
+                         is modeled at device level — train with --noise clean \
+                         and configure --physics instead",
+                        cfg.noise.describe()
+                    )));
+                }
+            }
+        }
+
         let mut rng = Pcg64::seed(cfg.seed);
         let state = NetState::init(&dims, &mut rng);
         let (bmat1, bmat2) = NetState::init_feedback(&dims, &mut rng);
@@ -225,10 +253,11 @@ impl Trainer {
                 ckpt.protocol
             )));
         }
-        if self.device.is_some() {
+        if self.device.is_some() || self.engine.platform_name() == "photonic" {
             crate::log_warn!(
-                "resuming in device mode: photonic-bank noise streams restart \
-                 from their seed, so the trajectory is not bit-exact"
+                "resuming with device-level physics in the loop: photonic-bank \
+                 noise streams restart from their seed, so the trajectory is \
+                 statistical, not bit-exact"
             );
         }
         self.state = ckpt.state.clone();

@@ -6,8 +6,10 @@
 
 pub mod characterization;
 pub mod energy_tables;
+pub mod physics_sweep;
 pub mod training;
 
 pub use characterization::{fig3b_curve, fig3c_multiply, fig5a_inner_products, MeasuredError};
 pub use energy_tables::{fig6_rows, headline_summary};
+pub use physics_sweep::{physics_sweep, render_table, PhysicsPoint, SweepSettings};
 pub use training::{fig5b_run, fig5c_sweep, SweepPoint};

@@ -7,6 +7,7 @@
 //! pdfa infer            batched inference over a saved checkpoint
 //! pdfa serve            dynamic-batching inference server (stdin/loopback)
 //! pdfa sweep-resolution test accuracy vs gradient resolution (Fig. 5(c))
+//! pdfa sweep-physics    in-situ accuracy vs DAC/ADC bits x read noise
 //! pdfa characterize     MRR profile + single-MRR multiplies (Fig. 3(b,c))
 //! pdfa inner-product    1x4 photonic inner products (Fig. 5(a))
 //! pdfa energy           Eq. 2-4 headline numbers + Fig. 6 table
@@ -26,7 +27,7 @@ use photonic_dfa::dfa::noise_model::NoiseMode;
 use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::experiments;
 use photonic_dfa::photonics::BpdMode;
-use photonic_dfa::runtime::{self, Backend, StepEngine};
+use photonic_dfa::runtime::{self, Backend, PhysicsConfig, StepEngine};
 use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
 use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
 use photonic_dfa::util::json::Value;
@@ -59,6 +60,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "sweep-resolution" => run_or_help(cmd,
             "Fig. 5(c): accuracy vs gradient effective resolution",
             &sweep_specs(), rest, wants_help, cmd_sweep),
+        "sweep-physics" => run_or_help(cmd,
+            "in-situ photonic training accuracy vs DAC/ADC bits x read-noise sigma",
+            &sweep_physics_specs(), rest, wants_help, cmd_sweep_physics),
         "characterize" => run_or_help(cmd,
             "Fig. 3(b,c): MRR transmission profile + single-MRR multiplies",
             &char_specs(), rest, wants_help, cmd_characterize),
@@ -107,6 +111,7 @@ fn print_global_help() {
          \u{20}  infer              batched inference over a saved checkpoint\n\
          \u{20}  serve              dynamic-batching inference server\n\
          \u{20}  sweep-resolution   accuracy vs gradient resolution (Fig. 5(c))\n\
+         \u{20}  sweep-physics      in-situ accuracy vs DAC/ADC bits x noise sigma\n\
          \u{20}  characterize       MRR profile + multiplies (Fig. 3(b,c))\n\
          \u{20}  inner-product      1x4 inner-product stats (Fig. 5(a))\n\
          \u{20}  energy             Eq. 2-4 + Fig. 6 tables\n\
@@ -116,17 +121,32 @@ fn print_global_help() {
     );
 }
 
-/// Shared `--backend`/`--artifacts` resolution for engine-driving commands.
-fn open_engine(a: &Args) -> Result<Arc<dyn StepEngine>> {
-    let backend = Backend::parse(a.str("backend"))
-        .ok_or_else(|| Error::Cli(format!("bad --backend '{}'", a.str("backend"))))?;
-    runtime::open(a.str("artifacts"), backend)
+/// Shared `--backend`/`--physics`/`--artifacts` resolution for
+/// engine-driving commands. Returns the engine plus the physics config
+/// when the photonic backend was selected (for the train protocol).
+fn open_engine(a: &Args) -> Result<(Arc<dyn StepEngine>, Option<PhysicsConfig>)> {
+    let backend = match Backend::parse(a.str("backend"))? {
+        // the --physics argument replaces the default carried by parse()
+        Backend::Photonic(_) => Backend::Photonic(PhysicsConfig::parse(a.str("physics"))?),
+        other => other,
+    };
+    let physics = match backend {
+        Backend::Photonic(p) => Some(p),
+        _ => None,
+    };
+    Ok((runtime::open(a.str("artifacts"), backend)?, physics))
 }
 
 const BACKEND_SPEC: ArgSpec = ArgSpec::opt(
     "backend",
     "auto",
-    "step engine: auto | native | pjrt (pjrt needs a build with --features pjrt and a vendored xla crate — see Cargo.toml — plus AOT artifacts)",
+    "step engine: auto | native | photonic | pjrt (photonic routes every training matvec through the device-level MRR weight bank — see --physics; pjrt needs a build with --features pjrt and a vendored xla crate — see Cargo.toml — plus AOT artifacts)",
+);
+
+const PHYSICS_SPEC: ArgSpec = ArgSpec::opt(
+    "physics",
+    "paper",
+    "photonic-backend device physics: ideal | paper, with optional key=value overrides bank=RxC, dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N (e.g. 'ideal,dac=6,sigma=0.05'); ignored by the other backends",
 );
 
 // ---------------- train ----------------
@@ -150,6 +170,7 @@ fn train_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full epoch)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
+        PHYSICS_SPEC,
         ArgSpec::opt("out", "runs", "run output directory"),
         ArgSpec::opt("run-name", "", "run name (default: derived)"),
         ArgSpec::opt(
@@ -200,7 +221,8 @@ fn cmd_train(a: &Args) -> Result<()> {
         a.str("run-name").into()
     };
 
-    let engine = open_engine(a)?;
+    let (engine, physics) = open_engine(a)?;
+    cfg.physics = physics;
     let mut recorder = RunRecorder::create(a.str("out"), &run_name)?;
     cfg.save_every = a.usize("save-every")?;
     cfg.save_path = if !a.str("save").is_empty() {
@@ -210,7 +232,7 @@ fn cmd_train(a: &Args) -> Result<()> {
     } else {
         None
     };
-    recorder.write_config(&cfg.to_json())?;
+    recorder.write_engine_config(&engine.platform_name(), &cfg.to_json())?;
     let mut trainer = Trainer::new(engine, cfg)?;
     if !a.str("resume").is_empty() {
         let ckpt = Checkpoint::load(a.str("resume"))?;
@@ -277,12 +299,13 @@ fn serving_knob_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("queue-cap", "256", "bounded request-queue depth (backpressure)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
+        PHYSICS_SPEC,
     ]
 }
 
 /// Open the engine, load the checkpoint and start the worker pool.
 fn start_server(a: &Args) -> Result<(Server, Checkpoint)> {
-    let engine = open_engine(a)?;
+    let (engine, _physics) = open_engine(a)?;
     let ckpt = Checkpoint::load(a.str("checkpoint"))?;
     let policy = BatchPolicy {
         max_batch: match a.usize("max-batch")? {
@@ -485,11 +508,12 @@ fn sweep_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
+        PHYSICS_SPEC,
     ]
 }
 
 fn cmd_sweep(a: &Args) -> Result<()> {
-    let engine = open_engine(a)?;
+    let (engine, _physics) = open_engine(a)?;
     let bits = a.f64_list("bits")?;
     let pts = experiments::fig5c_sweep(
         engine,
@@ -508,6 +532,70 @@ fn cmd_sweep(a: &Args) -> Result<()> {
     for p in pts {
         println!("{:>4.1}  {:.5}   {:.4}", p.bits, p.sigma, p.test_acc);
     }
+    Ok(())
+}
+
+// ---------------- sweep-physics ----------------
+
+fn sweep_physics_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("config", "tiny", "network config: tiny | small | mnist"),
+        ArgSpec::opt(
+            "bits",
+            "0,2,4,6,8",
+            "comma-separated DAC/ADC bit depths (0 = ideal converters)",
+        ),
+        ArgSpec::opt(
+            "sigmas",
+            "0,0.05,0.1,0.2",
+            "comma-separated read-noise sigmas (normalised domain)",
+        ),
+        ArgSpec::opt("epochs", "2", "epochs per grid point"),
+        ArgSpec::opt("seed", "1", "master seed"),
+        ArgSpec::opt("n-train", "512", "training examples per point"),
+        ArgSpec::opt("n-test", "128", "test examples"),
+        ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full)"),
+        ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
+        PHYSICS_SPEC,
+    ]
+}
+
+fn cmd_sweep_physics(a: &Args) -> Result<()> {
+    let base = PhysicsConfig::parse(a.str("physics"))?;
+    let mut bits = Vec::new();
+    for b in a.f64_list("bits")? {
+        bits.push(
+            PhysicsConfig::check_bits(b).map_err(|e| Error::Cli(format!("--bits: {e}")))?,
+        );
+    }
+    let sigmas = a.f64_list("sigmas")?;
+    for s in &sigmas {
+        if !(*s >= 0.0 && s.is_finite()) {
+            return Err(Error::Cli(format!(
+                "--sigmas: expected finite non-negative noise stds, got '{s}'"
+            )));
+        }
+    }
+    let settings = experiments::SweepSettings {
+        artifacts_dir: a.str("artifacts").into(),
+        config: a.str("config").into(),
+        base,
+        epochs: a.usize("epochs")?,
+        seed: a.u64("seed")?,
+        n_train: a.usize("n-train")?,
+        n_test: a.usize("n-test")?,
+        max_steps_per_epoch: match a.usize("max-steps")? {
+            0 => None,
+            n => Some(n),
+        },
+    };
+    let pts = experiments::physics_sweep(&settings, &bits, &sigmas)?;
+    println!(
+        "in-situ photonic DFA on '{}' (base physics {}):",
+        settings.config,
+        base.describe()
+    );
+    print!("{}", experiments::render_table(&pts));
     Ok(())
 }
 
@@ -631,12 +719,16 @@ fn info_specs() -> Vec<ArgSpec> {
     vec![
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
+        PHYSICS_SPEC,
     ]
 }
 
 fn cmd_info(a: &Args) -> Result<()> {
-    let engine = open_engine(a)?;
+    let (engine, physics) = open_engine(a)?;
     println!("backend: {}", engine.platform_name());
+    if let Some(p) = physics {
+        println!("physics: {}", p.describe());
+    }
     println!("configs:");
     for (name, d) in engine.configs() {
         println!(

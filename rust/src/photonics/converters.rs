@@ -16,12 +16,24 @@ pub struct Quantizer {
 }
 
 impl Quantizer {
+    /// A zero or negative (or non-finite) range would make [`Self::quantize`]
+    /// emit inf/NaN for every input, so it is rejected at construction.
     pub fn new(bits: u32, range: f64) -> Quantizer {
+        assert!(
+            range > 0.0 && range.is_finite(),
+            "quantizer range must be positive and finite, got {range}"
+        );
         Quantizer { bits, range }
     }
 
     /// Quantise; values are clamped into range first (converter saturates).
+    /// NaN inputs saturate to 0.0 (mid-scale): `f64::clamp` propagates NaN,
+    /// and one NaN code on the converter would otherwise poison every
+    /// downstream analog readout.
     pub fn quantize(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return 0.0;
+        }
         if self.bits == 0 {
             return x; // transparent (ideal converter)
         }
@@ -119,6 +131,32 @@ mod tests {
     fn zero_bits_is_transparent() {
         let q = Quantizer::new(0, 1.0);
         assert_eq!(q.quantize(0.123456), 0.123456);
+    }
+
+    #[test]
+    fn nan_saturates_to_midscale() {
+        // regression: `(x / range).clamp(-1, 1)` propagates NaN, which used
+        // to poison the whole analog path through one bad sample
+        for bits in [0, 1, 6, 12] {
+            let q = Quantizer::new(bits, 1.0);
+            assert_eq!(q.quantize(f64::NAN), 0.0, "bits={bits}");
+        }
+        // infinities keep saturating to full scale
+        let q = Quantizer::new(6, 1.0);
+        assert_eq!(q.quantize(f64::INFINITY), 1.0);
+        assert_eq!(q.quantize(f64::NEG_INFINITY), -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "quantizer range")]
+    fn zero_range_rejected() {
+        let _ = Quantizer::new(6, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "quantizer range")]
+    fn negative_range_rejected() {
+        let _ = Quantizer::new(6, -1.0);
     }
 
     #[test]

@@ -199,11 +199,7 @@ impl WeightBank {
         self.cfg.cols
     }
 
-    /// Inscribe a (rows × cols) weight tile into the bank: feedback-lock
-    /// every ring onto its target, then refresh the crosstalk-effective
-    /// weights. Weights outside the achievable range are clamped by the
-    /// lock (as on the real chip).
-    pub fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+    fn check_tile_shape(&self, weights: &Tensor) -> Result<()> {
         if weights.shape() != [self.cfg.rows, self.cfg.cols] {
             return Err(Error::Shape(format!(
                 "inscribe expects ({}, {}), got {:?}",
@@ -212,6 +208,28 @@ impl WeightBank {
                 weights.shape()
             )));
         }
+        Ok(())
+    }
+
+    /// Refresh the crosstalk-effective weights from the per-ring achieved
+    /// weights, row by row.
+    fn refresh_effective(&mut self) {
+        for r in 0..self.cfg.rows {
+            let row_w: Vec<f32> = (0..self.cfg.cols)
+                .map(|c| self.rings[r * self.cfg.cols + c].w_actual as f32)
+                .collect();
+            let eff = self.crosstalk.effective_weights(&row_w);
+            self.w_eff[r * self.cfg.cols..(r + 1) * self.cfg.cols]
+                .copy_from_slice(&eff);
+        }
+    }
+
+    /// Inscribe a (rows × cols) weight tile into the bank: feedback-lock
+    /// every ring onto its target, then refresh the crosstalk-effective
+    /// weights. Weights outside the achievable range are clamped by the
+    /// lock (as on the real chip).
+    pub fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+        self.check_tile_shape(weights)?;
         let fb = FeedbackController::default();
         let lock_readout = self.noise.thermal * 0.25;
         for (idx, ring) in self.rings.iter_mut().enumerate() {
@@ -232,14 +250,33 @@ impl WeightBank {
             ring.slope =
                 (ring.mrr.weight_at(phase + h) - ring.mrr.weight_at(phase - h)) / (2.0 * h);
         }
-        // crosstalk-effective weights, row by row
-        for r in 0..self.cfg.rows {
-            let row_w: Vec<f32> = (0..self.cfg.cols)
-                .map(|c| self.rings[r * self.cfg.cols + c].w_actual as f32)
-                .collect();
-            let eff = self.crosstalk.effective_weights(&row_w);
-            self.w_eff[r * self.cfg.cols..(r + 1) * self.cfg.cols]
-                .copy_from_slice(&eff);
+        self.refresh_effective();
+        Ok(())
+    }
+
+    /// Inscribe a weight tile in the *perfect-calibration limit*: every ring
+    /// achieves its (clamped) target exactly, with zero residual lock error
+    /// and zero phase-jitter sensitivity. With `with_crosstalk` the spectral
+    /// crosstalk of the shared bus still applies (it is a physical effect,
+    /// not a calibration error); without it the effective weights equal the
+    /// targets bit for bit. This is the `PhysicsConfig::ideal` inscription
+    /// path of the photonic runtime backend — and it is orders of magnitude
+    /// cheaper than [`Self::inscribe`], since no feedback lock runs.
+    pub fn inscribe_exact(&mut self, weights: &Tensor, with_crosstalk: bool) -> Result<()> {
+        self.check_tile_shape(weights)?;
+        for (idx, ring) in self.rings.iter_mut().enumerate() {
+            // NaN targets park the ring at zero (clamp would keep the NaN)
+            let t = weights.data()[idx] as f64;
+            ring.drive = 0.0;
+            ring.w_actual = if t.is_nan() { 0.0 } else { t.clamp(-1.0, 1.0) };
+            ring.slope = 0.0;
+        }
+        if with_crosstalk {
+            self.refresh_effective();
+        } else {
+            for (w, ring) in self.w_eff.iter_mut().zip(&self.rings) {
+                *w = ring.w_actual;
+            }
         }
         Ok(())
     }
@@ -266,36 +303,79 @@ impl WeightBank {
             )));
         }
         self.cycles += 1;
-        let n = self.cfg.cols;
-        // amplitude encoding + RIN, shared by all rows (same bus + splitter)
-        let mut amps = [0.0f64; 128];
-        let amps = &mut amps[..n];
-        for (a, &xi) in amps.iter_mut().zip(x) {
-            let xi = xi.clamp(0.0, 1.0) as f64;
-            *a = xi * self.noise.sample_rin(&mut self.rng);
+        // disjoint field borrows: the ring table is read-only while the
+        // intrinsic noise stream advances
+        let rings = &self.rings;
+        Ok(run_chain(
+            &self.noise,
+            &self.bpd,
+            &self.tias,
+            self.adc.as_ref(),
+            self.cfg.rows,
+            self.cfg.cols,
+            &self.w_eff,
+            |i| rings[i].slope,
+            x,
+            None,
+            &mut self.rng,
+        ))
+    }
+
+    /// Read-only evaluation of one operational cycle against a *stored*
+    /// inscription, without touching the bank's own state.
+    ///
+    /// This is the sharing-safe half of the matvec split: [`Self::matvec`]
+    /// needs `&mut self` (it advances the device's intrinsic noise stream
+    /// and cycle counter), which forces every serve/trainer replica to own
+    /// a full bank clone. `eval` instead borrows the bank immutably and
+    /// threads the stochastic state (`rng`) through the caller, so one
+    /// `Arc<WeightBank>` can be shared across a worker pool — each worker
+    /// holding its own snapshot + RNG — under the same `Send + Sync`
+    /// contract the runtime's [`crate::runtime::Artifact`]s require.
+    ///
+    /// `gains` optionally overrides the programmed TIA gains for this cycle
+    /// (the per-sample g′(a) Hadamard mask) without reprogramming the
+    /// array; `None` uses the gains set by [`Self::set_tia_gains`].
+    /// Cycle accounting is the caller's responsibility.
+    pub fn eval(
+        &self,
+        ins: &Inscription,
+        x: &[f32],
+        gains: Option<&[f32]>,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<f32>> {
+        if (ins.rows, ins.cols) != (self.cfg.rows, self.cfg.cols) {
+            return Err(Error::Shape("inscription geometry mismatch".into()));
         }
-        let mut out = Vec::with_capacity(self.cfg.rows);
-        for r in 0..self.cfg.rows {
-            // per-ring instantaneous weight = crosstalk-effective weight +
-            // phase jitter mapped through the local Lorentzian slope
-            let mut diff = 0.0; // Σ x_i (T_d − T_p) = Σ x_i w_i
-            for c in 0..n {
-                let ring = &self.rings[r * n + c];
-                let jitter =
-                    self.noise.sample_phase_jitter(&mut self.rng) * ring.slope;
-                let w_inst = (self.w_eff[r * n + c] + jitter).clamp(-1.0, 1.0);
-                diff += amps[c] * w_inst;
+        if x.len() != self.cfg.cols {
+            return Err(Error::Shape(format!(
+                "eval expects {} channel amplitudes, got {}",
+                self.cfg.cols,
+                x.len()
+            )));
+        }
+        if let Some(g) = gains {
+            if g.len() != self.cfg.rows {
+                return Err(Error::Shape(format!(
+                    "eval expects {} TIA gains, got {}",
+                    self.cfg.rows,
+                    g.len()
+                )));
             }
-            // BPD expects (drop_sum - through_sum) = diff (already the
-            // differential), normalised by channel count inside read()
-            let i_out = self.bpd.read(diff, 0.0, n, &mut self.rng);
-            let v = self.tias.amplify_row(r, i_out);
-            out.push(match &self.adc {
-                Some(q) => q.quantize(v) as f32,
-                None => v as f32,
-            });
         }
-        Ok(out)
+        Ok(run_chain(
+            &self.noise,
+            &self.bpd,
+            &self.tias,
+            self.adc.as_ref(),
+            self.cfg.rows,
+            self.cfg.cols,
+            &ins.w_eff,
+            |i| ins.ring_state[i].2,
+            x,
+            gains,
+            rng,
+        ))
     }
 
     /// 1×N inner product (the §4 experiment shape). Uses row 0.
@@ -360,6 +440,73 @@ impl WeightBank {
         self.w_eff.clone_from(&ins.w_eff);
         Ok(())
     }
+}
+
+/// The full §2–§3 signal chain for one operational cycle, shared by the
+/// mutating [`WeightBank::matvec`] and the read-only [`WeightBank::eval`]:
+/// amplitude encoding + RIN, per-ring Lorentzian-slope phase jitter on the
+/// effective weights, balanced photodetection, TIA gain (programmed or
+/// overridden per cycle), optional ADC.
+#[allow(clippy::too_many_arguments)]
+fn run_chain(
+    noise: &NoiseModel,
+    bpd: &Bpd,
+    tias: &TiaArray,
+    adc: Option<&Quantizer>,
+    rows: usize,
+    cols: usize,
+    w_eff: &[f64],
+    slope_at: impl Fn(usize) -> f64,
+    x: &[f32],
+    gain_override: Option<&[f32]>,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let n = cols;
+    // amplitude encoding + RIN, shared by all rows (same bus + splitter);
+    // stack scratch for every realistic channel count (the §3 design tops
+    // out at 108 WDM channels), heap only beyond it — this runs once per
+    // optical cycle on the simulator's hottest path
+    let mut amps_stack = [0.0f64; 128];
+    let mut amps_heap;
+    let amps: &mut [f64] = if n <= 128 {
+        &mut amps_stack[..n]
+    } else {
+        amps_heap = vec![0.0f64; n];
+        &mut amps_heap
+    };
+    for (a, &xi) in amps.iter_mut().zip(x) {
+        // f64::clamp propagates NaN: a NaN sample darks its channel instead
+        let xi = (xi as f64).clamp(0.0, 1.0);
+        let xi = if xi.is_nan() { 0.0 } else { xi };
+        *a = xi * noise.sample_rin(rng);
+    }
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        // per-ring instantaneous weight = crosstalk-effective weight +
+        // phase jitter mapped through the local Lorentzian slope
+        let mut diff = 0.0; // Σ x_i (T_d − T_p) = Σ x_i w_i
+        for c in 0..n {
+            let jitter = noise.sample_phase_jitter(rng) * slope_at(r * n + c);
+            let w_inst = (w_eff[r * n + c] + jitter).clamp(-1.0, 1.0);
+            diff += amps[c] * w_inst;
+        }
+        // BPD expects (drop_sum - through_sum) = diff (already the
+        // differential), normalised by channel count inside read()
+        let i_out = bpd.read(diff, 0.0, n, rng);
+        let v = match gain_override {
+            Some(g) => {
+                let tia = &tias.tias[r];
+                ((g[r] as f64).clamp(0.0, 1.0) * i_out)
+                    .clamp(-tia.v_sat, tia.v_sat)
+            }
+            None => tias.amplify_row(r, i_out),
+        };
+        out.push(match adc {
+            Some(q) => q.quantize(v) as f32,
+            None => v as f32,
+        });
+    }
+    out
 }
 
 /// A stored weight-bank inscription (see [`WeightBank::snapshot`]).
@@ -559,6 +706,116 @@ mod tests {
         // geometry mismatch rejected
         let other = ideal_bank(3, 2).snapshot();
         assert!(bank.restore(&other).is_err());
+    }
+
+    #[test]
+    fn eval_matches_matvec_on_ideal_bank() {
+        // the read-only split must compute the identical signal chain
+        let mut bank = ideal_bank(3, 4);
+        let w = Tensor::new(
+            &[3, 4],
+            vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2, 0.0, 0.9, 0.25, -0.75, 0.4, -0.1],
+        )
+        .unwrap();
+        bank.inscribe(&w).unwrap();
+        let ins = bank.snapshot();
+        let x = [1.0f32, 0.5, 0.8, 0.2];
+        let want = bank.matvec(&x).unwrap();
+        let mut rng = Pcg64::seed(123); // independent stream: ideal noise is 0
+        let got = bank.eval(&ins, &x, None, &mut rng).unwrap();
+        assert_eq!(got, want);
+        // eval consumed no bank cycles and left the bank state untouched
+        assert_eq!(bank.cycles, 1);
+        assert_eq!(bank.matvec(&x).unwrap(), want);
+    }
+
+    #[test]
+    fn eval_gain_override_gates_rows() {
+        let mut bank = ideal_bank(2, 3);
+        bank.inscribe(&Tensor::full(&[2, 3], 0.5)).unwrap();
+        let ins = bank.snapshot();
+        let mut rng = Pcg64::seed(5);
+        let x = [1.0f32, 1.0, 1.0];
+        let out = bank.eval(&ins, &x, Some(&[0.0, 1.0]), &mut rng).unwrap();
+        assert_eq!(out[0], 0.0);
+        assert!(out[1].abs() > 0.3);
+        // the override is per cycle: programmed gains stay untouched
+        let out = bank.eval(&ins, &x, None, &mut rng).unwrap();
+        assert!(out[0].abs() > 0.3);
+        // and validated
+        assert!(bank.eval(&ins, &x, Some(&[1.0]), &mut rng).is_err());
+    }
+
+    #[test]
+    fn eval_rejects_geometry_mismatch() {
+        let mut bank = ideal_bank(2, 3);
+        bank.inscribe(&Tensor::zeros(&[2, 3])).unwrap();
+        let other = ideal_bank(3, 2).snapshot();
+        let mut rng = Pcg64::seed(1);
+        assert!(bank.eval(&other, &[1.0, 1.0, 1.0], None, &mut rng).is_err());
+        let ins = bank.snapshot();
+        assert!(bank.eval(&ins, &[1.0, 1.0], None, &mut rng).is_err());
+    }
+
+    #[test]
+    fn shared_bank_eval_from_threads() {
+        // the Send + Sync contract the runtime artifacts need: one bank,
+        // many readers, each with its own inscription snapshot + RNG
+        let mut bank = ideal_bank(2, 3);
+        let w = Tensor::new(&[2, 3], vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2]).unwrap();
+        bank.inscribe(&w).unwrap();
+        let ins = bank.snapshot();
+        let x = [1.0f32, 0.5, 0.8];
+        let mut rng = Pcg64::seed(77);
+        let want = bank.eval(&ins, &x, None, &mut rng).unwrap();
+        let bank = std::sync::Arc::new(bank);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let bank = bank.clone();
+                let ins = ins.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Pcg64::seed(77);
+                    bank.eval(&ins, &[1.0, 0.5, 0.8], None, &mut rng).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn inscribe_exact_is_exact() {
+        let mut bank = ideal_bank(2, 3);
+        let w = Tensor::new(&[2, 3], vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2]).unwrap();
+        bank.inscribe_exact(&w, false).unwrap();
+        let x = [1.0f32, 0.5, 0.8];
+        let got = bank.matvec(&x).unwrap();
+        for r in 0..2 {
+            let want: f32 = (0..3).map(|c| w.at(r, c) * x[c]).sum::<f32>() / 3.0;
+            assert!((got[r] - want).abs() < 1e-6, "row {r}: {} vs {want}", got[r]);
+        }
+        // out-of-range targets clamp, shape mismatch rejected
+        bank.inscribe_exact(&Tensor::full(&[2, 3], 5.0), false).unwrap();
+        assert!(bank.matvec(&[1.0, 0.0, 0.0]).unwrap()[0] <= 1.0);
+        assert!(bank.inscribe_exact(&Tensor::zeros(&[3, 2]), false).is_err());
+        // with_crosstalk folds the spectral model back in
+        let mut crowded = WeightBank::new(BankConfig {
+            rows: 1,
+            cols: 4,
+            bpd_mode: BpdMode::Ideal,
+            design: MrrDesign::default(),
+            spacing_linewidths: 1.0, // heavy crosstalk
+            adc_bits: 0,
+            seed: 9,
+        })
+        .unwrap();
+        let w = Tensor::new(&[1, 4], vec![0.8, -0.6, 0.4, -0.2]).unwrap();
+        crowded.inscribe_exact(&w, false).unwrap();
+        let clean = crowded.matvec(&[1.0, 1.0, 1.0, 1.0]).unwrap()[0];
+        crowded.inscribe_exact(&w, true).unwrap();
+        let xtalk = crowded.matvec(&[1.0, 1.0, 1.0, 1.0]).unwrap()[0];
+        assert!((clean - xtalk).abs() > 1e-4, "{clean} vs {xtalk}");
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!   selection policy
 //! * [`native`]    — [`native::NativeEngine`]: pure-Rust execution of the
 //!   artifact contract via `dfa::reference` (default build; hermetic)
+//! * [`photonic`]  — [`photonic::PhotonicEngine`]: the same contract with
+//!   every matvec routed through the device-level MRR weight bank
+//!   (`--backend photonic`, noise-aware in-situ DFA)
 //! * [`manifest`]  — parse `artifacts/manifest.json` into typed specs
 //! * [`engine`]    — `--features pjrt` only: an [`engine::Engine`] owning
 //!   the PJRT CPU client, a compiled-executable cache, and
@@ -22,10 +25,12 @@
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod photonic;
 pub mod step_engine;
 
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedArtifact};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use native::NativeEngine;
+pub use photonic::{PhotonicEngine, PhysicsConfig};
 pub use step_engine::{open, Artifact, Backend, StepEngine};

@@ -1,0 +1,957 @@
+//! The photonic step engine: in-situ training on the device-level MRR
+//! weight bank.
+//!
+//! [`PhotonicEngine`] is the third [`crate::runtime::StepEngine`] backend
+//! (`--backend photonic`). It serves the same artifact vocabulary as the
+//! native and PJRT engines, but routes every matvec/GEMM of the training
+//! step through the simulated silicon-photonic substrate, the way the
+//! paper's architecture executes them in hardware:
+//!
+//! * [`crate::gemm::tiler::Tiling`] partitions each weight matrix onto
+//!   bank-sized tiles;
+//! * every tile is inscribed into a [`WeightBank`] once per dispatch and
+//!   snapshotted, so the inscription cost is amortised across all batch
+//!   rows (the §5 analog weight memory — [`WeightBank::snapshot`] /
+//!   [`WeightBank::eval`]);
+//! * channel amplitudes pass through the DAC quantiser; signed values use
+//!   differential e⁺/e⁻ encoding (two optical cycles);
+//! * row outputs return through the BPD + TIA chain and are digitised by
+//!   the ADC quantiser before the digital rescale; the configured read
+//!   noise σ additionally degrades the *gradient* readouts (see
+//!   [`PhysicsConfig::sigma`] for why the forward pass is exempt).
+//!
+//! Artifact routing: `fwd_<cfg>` runs all three layer GEMMs on the bank;
+//! `dfa_step_<cfg>` additionally computes the feedback projections
+//! `B(k) · e` on the bank with the per-sample g′(a) mask applied as TIA
+//! gains (Eq. 1 end-to-end in analog), while loss and the SGD update stay
+//! digital, exactly as in the paper. `apply_grads_<cfg>` (pure digital
+//! update) and `photonic_matvec` (already the raw MRR kernel) delegate to
+//! the native engine; `bp_step_<cfg>` is refused — the photonic
+//! architecture trains with DFA.
+//!
+//! Sharing contract: each [`StepEngine::load`] call builds an artifact
+//! with its *own* bank + RNG behind a `Mutex`, so worker-pool replicas
+//! (one `load` per worker, as the serve pool does) never contend, and the
+//! artifacts satisfy the same `Send + Sync` bound as the native ones.
+//! Hardware-in-the-loop precedent: Launay et al., arXiv:2006.01475; Pai
+//! et al., arXiv:2205.08501.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::dfa::reference;
+use crate::gemm::tiler::Tiling;
+use crate::photonics::converters::Quantizer;
+use crate::photonics::mrr::MrrDesign;
+use crate::photonics::weight_bank::{BankConfig, BpdMode, Inscription, WeightBank};
+use crate::runtime::manifest::{ArtifactSpec, NetDims};
+use crate::runtime::native::NativeEngine;
+use crate::runtime::step_engine::{Artifact, StepEngine};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Physical configuration of the simulated photonic substrate.
+///
+/// Threaded from the CLI (`--physics`) through
+/// [`crate::dfa::config::TrainConfig`] (where it joins the checkpoint
+/// protocol string) into the engine. `Copy` on purpose: it rides inside
+/// [`crate::runtime::Backend::Photonic`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhysicsConfig {
+    /// Weight-bank geometry (paper headline: 50 × 20).
+    pub bank_rows: usize,
+    pub bank_cols: usize,
+    /// Input DAC resolution in bits; 0 = transparent (ideal source).
+    pub dac_bits: u32,
+    /// Readout ADC resolution in bits; 0 = analog readout.
+    pub adc_bits: u32,
+    /// Additive read noise std in the normalised output domain, applied
+    /// per optical cycle on the *gradient* readouts `B(k) · e` — the
+    /// lumped σ of Fig. 5, injected exactly where the Gaussian reference
+    /// model injects it: at the balanced photodetector, before the TIA,
+    /// so the g′(a) gain mask gates it (a dead-ReLU row reads exactly
+    /// zero, as in `reference::dfa_gradient`) and before the ADC. Forward
+    /// inference readouts carry the converter quantisation but not this
+    /// σ: the paper's training experiments degrade Eq. (1)'s analog
+    /// product, and DFA's robustness to that noise is the claim under
+    /// test.
+    pub sigma: f64,
+    /// Model inter-channel WDM crosstalk (3.4-linewidth grid) or space the
+    /// channels wide enough that leakage is negligible.
+    pub crosstalk: bool,
+    /// `true`: inscribe tiles through calibration LUT + feedback locking
+    /// (residual lock error, phase-jitter sensitivity). `false`: the
+    /// perfect-calibration limit ([`WeightBank::inscribe_exact`]).
+    pub lock: bool,
+    /// Device seed: fabrication offsets + intrinsic noise streams.
+    pub seed: u64,
+}
+
+impl Default for PhysicsConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl PhysicsConfig {
+    /// The ideal preset: perfectly calibrated bank, transparent
+    /// converters, zero noise, no crosstalk. Must reproduce
+    /// [`NativeEngine`] logits within [`IDEAL_LOGIT_TOL`] (the residual is
+    /// pure f32⇄f64 accumulation-order rounding of the tiled analog path).
+    pub fn ideal() -> PhysicsConfig {
+        PhysicsConfig {
+            bank_rows: crate::photonics::constants::BANK_ROWS,
+            bank_cols: crate::photonics::constants::BANK_COLS,
+            dac_bits: 0,
+            adc_bits: 0,
+            sigma: 0.0,
+            crosstalk: false,
+            lock: false,
+            seed: 7,
+        }
+    }
+
+    /// The paper's §4/§5 operating point: 50 × 20 bank, 12-bit DAC
+    /// (Alphacore D12B10G), 6-bit ADC (A6B12G), the off-chip-BPD lumped
+    /// read noise σ ≈ 0.098, dense 3.4-linewidth WDM grid, feedback-locked
+    /// inscription.
+    pub fn paper() -> PhysicsConfig {
+        PhysicsConfig {
+            bank_rows: crate::photonics::constants::BANK_ROWS,
+            bank_cols: crate::photonics::constants::BANK_COLS,
+            dac_bits: 12,
+            adc_bits: 6,
+            sigma: crate::photonics::constants::SIGMA_OFFCHIP_BPD,
+            crosstalk: true,
+            lock: true,
+            seed: 7,
+        }
+    }
+
+    /// Canonical string form: stable, value-complete, used both for
+    /// display and inside [`crate::dfa::config::TrainConfig::protocol_string`]
+    /// (f64 prints in shortest round-trip form, so string equality is
+    /// value equality).
+    pub fn describe(&self) -> String {
+        format!(
+            "bank={}x{};dac={};adc={};sigma={};xtalk={};lock={};seed={}",
+            self.bank_rows,
+            self.bank_cols,
+            self.dac_bits,
+            self.adc_bits,
+            self.sigma,
+            if self.crosstalk { "on" } else { "off" },
+            if self.lock { "on" } else { "off" },
+            self.seed,
+        )
+    }
+
+    /// Parse the `--physics` CLI value: a preset name (`ideal` | `paper`)
+    /// optionally followed by comma-separated `key=value` overrides, e.g.
+    /// `ideal,dac=6,adc=6,sigma=0.05,bank=50x20,xtalk=on,lock=off,seed=9`.
+    pub fn parse(s: &str) -> Result<PhysicsConfig> {
+        let mut parts = s.split(',');
+        let head = parts.next().unwrap_or("").trim();
+        let mut cfg = match head {
+            "ideal" => Self::ideal(),
+            "paper" | "" => Self::paper(),
+            other => {
+                return Err(Error::Cli(format!(
+                    "unknown physics preset '{other}' (valid: ideal | paper, \
+                     optionally followed by key=value overrides: bank=RxC, \
+                     dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N)"
+                )))
+            }
+        };
+        let on_off = |key: &str, v: &str| match v {
+            "on" | "true" => Ok(true),
+            "off" | "false" => Ok(false),
+            _ => Err(Error::Cli(format!("physics {key}: expected on|off, got '{v}'"))),
+        };
+        for kv in parts {
+            let kv = kv.trim();
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                Error::Cli(format!("physics override '{kv}' is not key=value"))
+            })?;
+            let num = |what: &str| -> Result<f64> {
+                v.parse::<f64>().map_err(|_| {
+                    Error::Cli(format!("physics {k}: expected {what}, got '{v}'"))
+                })
+            };
+            // strict parses — a silent `as u32` coercion would turn
+            // dac=-3 into dac=0 (ideal converters), the opposite of what
+            // was asked for, and a seed routed through f64 would round
+            // above 2^53
+            let bits = || -> Result<u32> {
+                Self::check_bits(num("a bit depth")?)
+                    .map_err(|e| Error::Cli(format!("physics {k}: {e}")))
+            };
+            match k {
+                "bank" => {
+                    let (r, c) = v.split_once('x').ok_or_else(|| {
+                        Error::Cli(format!("physics bank: expected RxC, got '{v}'"))
+                    })?;
+                    cfg.bank_rows = r.parse().map_err(|_| {
+                        Error::Cli(format!("physics bank rows: '{r}'"))
+                    })?;
+                    cfg.bank_cols = c.parse().map_err(|_| {
+                        Error::Cli(format!("physics bank cols: '{c}'"))
+                    })?;
+                }
+                "dac" => cfg.dac_bits = bits()?,
+                "adc" => cfg.adc_bits = bits()?,
+                "sigma" => cfg.sigma = num("a noise std")?,
+                "xtalk" => cfg.crosstalk = on_off(k, v)?,
+                "lock" => cfg.lock = on_off(k, v)?,
+                "seed" => {
+                    cfg.seed = v.parse::<u64>().map_err(|_| {
+                        Error::Cli(format!(
+                            "physics {k}: expected an unsigned integer seed, got '{v}'"
+                        ))
+                    })?
+                }
+                other => {
+                    return Err(Error::Cli(format!(
+                        "unknown physics key '{other}' (valid: bank, dac, adc, \
+                         sigma, xtalk, lock, seed)"
+                    )))
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The one converter-bit-depth rule, shared by `--physics dac=/adc=`
+    /// and `pdfa sweep-physics --bits`: whole, 0..=24, 0 = transparent.
+    /// Plain-`String` error so callers can prefix their own context.
+    pub fn check_bits(b: f64) -> std::result::Result<u32, String> {
+        if (0.0..=24.0).contains(&b) && b.fract() == 0.0 {
+            Ok(b as u32)
+        } else {
+            Err(format!(
+                "expected a whole converter bit depth in 0..=24 (0 = ideal \
+                 converters), got '{b}'"
+            ))
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.bank_rows == 0 || self.bank_cols == 0 {
+            return Err(Error::Config("physics: bank dims must be >= 1".into()));
+        }
+        if self.bank_cols > 108 {
+            return Err(Error::Config(format!(
+                "physics: {} WDM channels exceed the §3 ring design's FSR \
+                 budget (max 108)",
+                self.bank_cols
+            )));
+        }
+        if !(self.sigma >= 0.0 && self.sigma.is_finite()) {
+            return Err(Error::Config(format!(
+                "physics: sigma must be finite and >= 0, got {}",
+                self.sigma
+            )));
+        }
+        Ok(())
+    }
+
+    /// The bank this physics describes. Read noise is injected at the
+    /// engine level (per optical cycle, before the ADC), so the bank
+    /// itself runs the ideal BPD chain; crosstalk off maps to a channel
+    /// grid spaced wide enough that leakage is negligible.
+    fn bank_config(&self) -> BankConfig {
+        let design = MrrDesign::high_finesse();
+        let spacing = if self.crosstalk {
+            3.4
+        } else {
+            (design.finesse() / self.bank_cols as f64).min(12.0)
+        };
+        BankConfig {
+            rows: self.bank_rows,
+            cols: self.bank_cols,
+            bpd_mode: BpdMode::Ideal,
+            design,
+            spacing_linewidths: spacing,
+            adc_bits: 0,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Documented tolerance of the `ideal` preset against the native engine:
+/// per-logit absolute deviation caused only by the tiled f64 analog
+/// accumulation vs the dense f32 reference GEMM.
+pub const IDEAL_LOGIT_TOL: f32 = 2e-3;
+
+/// The mutable device state of one loaded artifact: the bank, the
+/// converter pair and the engine-level stochastic state.
+struct BankState {
+    bank: WeightBank,
+    dac: Quantizer,
+    adc: Quantizer,
+    rng: Pcg64,
+    /// Optical cycles fired through this artifact (throughput accounting).
+    cycles: u64,
+}
+
+impl BankState {
+    fn new(physics: &PhysicsConfig) -> Result<BankState> {
+        Ok(BankState {
+            bank: WeightBank::new(physics.bank_config())?,
+            dac: Quantizer::new(physics.dac_bits, 1.0),
+            adc: Quantizer::new(physics.adc_bits, 1.0),
+            rng: Pcg64::new(physics.seed, 0x9107),
+            cycles: 0,
+        })
+    }
+
+    /// Receiver path of one row readout: normalised chain output + read
+    /// noise (gradient path only — callers pass `sigma = 0` for forward
+    /// inference), then the ADC.
+    fn readout(&mut self, sigma: f64, v: f32) -> f32 {
+        let mut v = v as f64;
+        if sigma > 0.0 {
+            v += self.rng.normal(0.0, sigma);
+        }
+        self.adc.quantize(v) as f32
+    }
+
+    /// Inscribe one bank-sized tile per the configured fidelity.
+    fn inscribe(&mut self, physics: &PhysicsConfig, tile_w: &Tensor) -> Result<()> {
+        if physics.lock {
+            self.bank.inscribe(tile_w)
+        } else {
+            self.bank.inscribe_exact(tile_w, physics.crosstalk)
+        }
+    }
+
+    /// Fire one (or, with negative values, two differential) optical
+    /// cycles driving the currently-snapshotted tile with the signed
+    /// channel values `vals`, and accumulate the digitally rescaled result
+    /// into `out[..n_rows]`.
+    #[allow(clippy::too_many_arguments)]
+    fn drive_tile(
+        &mut self,
+        sigma: f64,
+        ins: &Inscription,
+        n_rows: usize,
+        vals: &[f32],
+        gains: Option<&[f32]>,
+        amp: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let bc = self.bank.cols();
+        // per-sample full scale: the DAC drives |v|/s onto the channels
+        let mut s = 0.0f32;
+        for &v in vals {
+            if v.is_finite() {
+                s = s.max(v.abs());
+            }
+        }
+        if s <= 0.0 {
+            return Ok(()); // all channels dark (zero or non-finite input)
+        }
+        // stack scratch: validate() caps the bank at 108 WDM channels, and
+        // this runs per (tile × batch row) — the training hot loop
+        let mut x_pos = [0.0f32; 128];
+        let mut x_neg = [0.0f32; 128];
+        let (x_pos, x_neg) = (&mut x_pos[..bc], &mut x_neg[..bc]);
+        let mut any_neg = false;
+        for (c, &v) in vals.iter().enumerate() {
+            // NaN saturates to a dark channel inside the DAC quantiser
+            let q = (self.dac.quantize((v / s).abs() as f64) as f32).min(1.0);
+            if v >= 0.0 {
+                x_pos[c] = q;
+            } else {
+                x_neg[c] = q;
+                any_neg |= q > 0.0;
+            }
+        }
+        // undo the bank's 1/cols normalisation, the per-sample full scale
+        // and the inscription amplification
+        let gain = bc as f32 * s * amp;
+        // read noise enters at the BPD (pre-TIA): a row's gain mask scales
+        // it, so a g'(a)=0 row reads exactly zero, like the reference model
+        let row_sigma =
+            |r: usize| gains.map_or(sigma, |g| sigma * (g[r] as f64).clamp(0.0, 1.0));
+        let pos = self.bank.eval(ins, &x_pos, gains, &mut self.rng)?;
+        self.cycles += 1;
+        for (r, (o, &p)) in out[..n_rows].iter_mut().zip(&pos).enumerate() {
+            *o += self.readout(row_sigma(r), p) * gain;
+        }
+        if any_neg {
+            let neg = self.bank.eval(ins, &x_neg, gains, &mut self.rng)?;
+            self.cycles += 1;
+            for (r, (o, &p)) in out[..n_rows].iter_mut().zip(&neg).enumerate() {
+                *o -= self.readout(row_sigma(r), p) * gain;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Inscription amplification for a matrix: weights are scaled to fill the
+/// bank's inscribable range and the inverse gain is applied digitally
+/// after readout (small inscribed weights would drown in receiver noise).
+fn inscription_amp(physics: &PhysicsConfig, bank: &WeightBank, w: &Tensor) -> f32 {
+    let w_cap = if physics.lock {
+        bank.weight_range().1.min(0.95) as f32
+    } else {
+        1.0 // the exact path inscribes the full [-1, 1] range
+    };
+    (w.max_abs() / w_cap).max(1e-12)
+}
+
+/// `y = x @ w [+ b]` with every MAC on the bank: `wᵀ` is tiled onto the
+/// array, inscribed once per tile, and each batch row is driven through
+/// the optical chain (Fig. 4(b) operation).
+fn bank_linear(
+    st: &mut BankState,
+    physics: &PhysicsConfig,
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+) -> Result<Tensor> {
+    let (batch, k) = (x.rows(), x.cols());
+    let m = w.cols();
+    if w.rows() != k {
+        return Err(Error::Shape(format!(
+            "bank_linear: x is (_, {k}) but w is ({}, {m})",
+            w.rows()
+        )));
+    }
+    let tiling = Tiling::new(m, k, st.bank.rows(), st.bank.cols())?;
+    let amp = inscription_amp(physics, &st.bank, w);
+    let mut y = Tensor::zeros(&[batch, m]);
+    if let Some(b) = b {
+        for r in 0..batch {
+            y.row_mut(r).copy_from_slice(&b.data()[..m]);
+        }
+    }
+    let (br, bc) = (st.bank.rows(), st.bank.cols());
+    let mut tile_w = Tensor::zeros(&[br, bc]);
+    let mut acc = vec![0.0f32; br];
+    for tile in &tiling.tiles {
+        tile_w.data_mut().fill(0.0);
+        for r in 0..tile.rows() {
+            for c in 0..tile.cols() {
+                // the bank computes wᵀ · x_row
+                tile_w.set(r, c, w.at(tile.col0 + c, tile.row0 + r) / amp);
+            }
+        }
+        st.inscribe(physics, &tile_w)?;
+        let ins = st.bank.snapshot();
+        for smp in 0..batch {
+            let vals = &x.row(smp)[tile.col0..tile.col1];
+            acc[..tile.rows()].fill(0.0);
+            // forward inference: converters yes, gradient read-noise no
+            st.drive_tile(0.0, &ins, tile.rows(), vals, None, amp, &mut acc)?;
+            for r in 0..tile.rows() {
+                let cur = y.at(smp, tile.row0 + r);
+                y.set(smp, tile.row0 + r, cur + acc[r]);
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Eq. (1) on the bank: `delta(k)ᵀ (m, batch)` for feedback matrix
+/// `bmat (m, k)`, error rows `e (batch, k)` and pre-activations
+/// `a (batch, m)`. The g′(a) ReLU mask rides on the TIA gains, so the
+/// Hadamard product costs no extra optical cycle (§3).
+fn bank_dfa_gradient(
+    st: &mut BankState,
+    physics: &PhysicsConfig,
+    bmat: &Tensor,
+    e: &Tensor,
+    a: &Tensor,
+) -> Result<Tensor> {
+    let (batch, k) = (e.rows(), e.cols());
+    let m = bmat.rows();
+    if bmat.cols() != k || a.rows() != batch || a.cols() != m {
+        return Err(Error::Shape(format!(
+            "bank_dfa_gradient: bmat {:?}, e {:?}, a {:?}",
+            bmat.shape(),
+            e.shape(),
+            a.shape()
+        )));
+    }
+    let tiling = Tiling::new(m, k, st.bank.rows(), st.bank.cols())?;
+    let amp = inscription_amp(physics, &st.bank, bmat);
+    let mut out = Tensor::zeros(&[m, batch]);
+    let (br, bc) = (st.bank.rows(), st.bank.cols());
+    let mut tile_w = Tensor::zeros(&[br, bc]);
+    let mut gains = vec![0.0f32; br];
+    let mut acc = vec![0.0f32; br];
+    for tile in &tiling.tiles {
+        tile_w.data_mut().fill(0.0);
+        for r in 0..tile.rows() {
+            for c in 0..tile.cols() {
+                tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
+            }
+        }
+        st.inscribe(physics, &tile_w)?;
+        let ins = st.bank.snapshot();
+        for smp in 0..batch {
+            // TIA gains: g'(a) for live rows, padding rows gated off
+            gains.fill(0.0);
+            for r in 0..tile.rows() {
+                gains[r] = if a.at(smp, tile.row0 + r) > 0.0 { 1.0 } else { 0.0 };
+            }
+            let vals = &e.row(smp)[tile.col0..tile.col1];
+            acc[..tile.rows()].fill(0.0);
+            st.drive_tile(physics.sigma, &ins, tile.rows(), vals, Some(&gains), amp, &mut acc)?;
+            for r in 0..tile.rows() {
+                let cur = out.at(tile.row0 + r, smp);
+                out.set(tile.row0 + r, smp, cur + acc[r]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Which physical routine an artifact name maps onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Fwd,
+    DfaStep,
+}
+
+/// One loaded photonic artifact: spec-identical to its native twin, but
+/// every GEMM runs on the owned device state.
+pub struct PhotonicArtifact {
+    spec: ArtifactSpec,
+    kind: Kind,
+    physics: PhysicsConfig,
+    state: Mutex<BankState>,
+}
+
+impl PhotonicArtifact {
+    /// Optical cycles fired through this artifact so far (differential
+    /// encoding counts both the e⁺ and e⁻ passes, like the real chip).
+    pub fn cycles(&self) -> u64 {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).cycles
+    }
+
+    fn forward(
+        &self,
+        st: &mut BankState,
+        params: &[Tensor],
+        x: &Tensor,
+    ) -> Result<reference::Forward> {
+        let a1 = bank_linear(st, &self.physics, x, &params[0], Some(&params[1]))?;
+        let h1 = a1.map(|v| v.max(0.0));
+        let a2 = bank_linear(st, &self.physics, &h1, &params[2], Some(&params[3]))?;
+        let h2 = a2.map(|v| v.max(0.0));
+        let logits = bank_linear(st, &self.physics, &h2, &params[4], Some(&params[5]))?;
+        Ok(reference::Forward { a1, h1, a2, h2, logits })
+    }
+}
+
+impl Artifact for PhotonicArtifact {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.spec.validate_inputs(inputs)?;
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        match self.kind {
+            Kind::Fwd => {
+                let f = self.forward(&mut st, &inputs[..6], &inputs[6])?;
+                Ok(vec![f.logits, f.a1, f.a2, f.h1, f.h2])
+            }
+            Kind::DfaStep => {
+                // contract twin of reference::dfa_step, with the Gaussian
+                // noise model replaced by the device physics: the injected
+                // noise/sigma/bits inputs must be silent
+                let sigma = inputs[18].item();
+                let bits = inputs[19].item();
+                if sigma != 0.0 || bits != 0.0 {
+                    return Err(Error::Config(format!(
+                        "the photonic backend models noise at device level \
+                         (--physics), so the Gaussian noise-model inputs must \
+                         be zero; got sigma={sigma}, bits={bits} — train with \
+                         --noise clean or switch to --backend native"
+                    )));
+                }
+                let (lr, momentum) = (inputs[20].item(), inputs[21].item());
+                let mut state: Vec<Tensor> = inputs[..12].to_vec();
+                let (bmat1, bmat2) = (&inputs[12], &inputs[13]);
+                let (x, y) = (&inputs[14], &inputs[15]);
+                let f = self.forward(&mut st, &state[..6], x)?;
+                let (loss, e, correct) = reference::loss_and_error(&f.logits, y);
+                let d1t = bank_dfa_gradient(&mut st, &self.physics, bmat1, &e, &f.a1)?;
+                let d2t = bank_dfa_gradient(&mut st, &self.physics, bmat2, &e, &f.a2)?;
+                let grads = reference::grads_from_deltas(x, &f.h1, &f.h2, &e, &d1t, &d2t);
+                reference::sgd_momentum(&mut state, &grads, lr, momentum);
+                state.push(Tensor::scalar(loss));
+                state.push(Tensor::scalar(correct as f32));
+                Ok(state)
+            }
+        }
+    }
+}
+
+/// The in-situ photonic step engine.
+pub struct PhotonicEngine {
+    native: NativeEngine,
+    physics: PhysicsConfig,
+}
+
+impl PhotonicEngine {
+    /// Engine over `artifacts_dir` (same config resolution as the native
+    /// engine: built-ins plus any manifest extras) with the given physics.
+    pub fn open(artifacts_dir: impl AsRef<Path>, physics: PhysicsConfig) -> Result<Self> {
+        physics.validate()?;
+        Ok(PhotonicEngine { native: NativeEngine::open(artifacts_dir)?, physics })
+    }
+
+    pub fn physics(&self) -> &PhysicsConfig {
+        &self.physics
+    }
+}
+
+impl StepEngine for PhotonicEngine {
+    fn platform_name(&self) -> String {
+        "photonic".into()
+    }
+
+    fn net_dims(&self, config: &str) -> Result<NetDims> {
+        self.native.net_dims(config)
+    }
+
+    fn configs(&self) -> Vec<(String, NetDims)> {
+        self.native.configs()
+    }
+
+    fn artifact_specs(&self) -> Vec<ArtifactSpec> {
+        // the digital backprop baseline does not exist on this substrate
+        self.native
+            .artifact_specs()
+            .into_iter()
+            .filter(|s| !s.name.starts_with("bp_step_"))
+            .collect()
+    }
+
+    fn load(&self, name: &str) -> Result<Arc<dyn Artifact>> {
+        if name.starts_with("bp_step_") {
+            return Err(Error::Config(format!(
+                "artifact '{name}': the photonic backend trains with DFA only \
+                 (the paper's in-situ algorithm); run the digital backprop \
+                 baseline with --backend native"
+            )));
+        }
+        let kind = if name.starts_with("fwd_") {
+            Kind::Fwd
+        } else if name.starts_with("dfa_step_") {
+            Kind::DfaStep
+        } else {
+            // apply_grads_* is the digital SGD update; photonic_matvec is
+            // already the raw MRR kernel — both execute natively
+            return self.native.load(name);
+        };
+        let spec = self.native.load(name)?.spec().clone();
+        Ok(Arc::new(PhotonicArtifact {
+            spec,
+            kind,
+            physics: self.physics,
+            state: Mutex::new(BankState::new(&self.physics)?),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfa::params::NetState;
+    use crate::util::check::assert_close;
+
+    fn small_physics() -> PhysicsConfig {
+        PhysicsConfig { bank_rows: 7, bank_cols: 5, ..PhysicsConfig::ideal() }
+    }
+
+    fn state_for(phys: &PhysicsConfig) -> BankState {
+        BankState::new(phys).unwrap()
+    }
+
+    #[test]
+    fn physics_parse_presets_and_overrides() {
+        assert_eq!(PhysicsConfig::parse("ideal").unwrap(), PhysicsConfig::ideal());
+        assert_eq!(PhysicsConfig::parse("paper").unwrap(), PhysicsConfig::paper());
+        let p = PhysicsConfig::parse(
+            "ideal,bank=10x4,dac=6,adc=4,sigma=0.05,xtalk=on,lock=on,seed=9",
+        )
+        .unwrap();
+        assert_eq!((p.bank_rows, p.bank_cols), (10, 4));
+        assert_eq!((p.dac_bits, p.adc_bits), (6, 4));
+        assert_eq!(p.sigma, 0.05);
+        assert!(p.crosstalk && p.lock);
+        assert_eq!(p.seed, 9);
+        // seeds parse as u64 directly: no f64 rounding above 2^53
+        let p = PhysicsConfig::parse("ideal,seed=9007199254740993").unwrap();
+        assert_eq!(p.seed, 9_007_199_254_740_993);
+        for bad in [
+            "bogus",
+            "ideal,dac",
+            "ideal,dac=x",
+            "ideal,dac=-3",
+            "ideal,dac=2.5",
+            "ideal,adc=99",
+            "ideal,seed=-1",
+            "ideal,seed=1.5",
+            "ideal,bank=10",
+            "ideal,warp=9",
+            "ideal,xtalk=maybe",
+            "ideal,sigma=-1",
+            "ideal,bank=0x4",
+            "ideal,bank=10x200",
+        ] {
+            assert!(PhysicsConfig::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn describe_is_protocol_stable() {
+        let a = PhysicsConfig::ideal().describe();
+        assert_eq!(a, PhysicsConfig::ideal().describe());
+        assert_ne!(a, PhysicsConfig::paper().describe());
+        let mut p = PhysicsConfig::ideal();
+        p.dac_bits = 5;
+        assert_ne!(a, p.describe());
+        let mut p = PhysicsConfig::ideal();
+        p.sigma = 0.125;
+        assert_ne!(a, p.describe());
+    }
+
+    #[test]
+    fn tiled_bank_linear_matches_dense_for_ragged_shapes() {
+        // the satellite property: Tiling-driven bank matvec == dense
+        // matmul, for shapes that pad both tile axes
+        let phys = small_physics(); // 7 x 5 bank
+        let mut st = state_for(&phys);
+        let mut rng = Pcg64::seed(21);
+        for (batch, k, m) in [
+            (3usize, 11usize, 9usize), // ragged both ways
+            (1, 5, 7),                 // exact fit
+            (2, 6, 8),                 // one extra row/col
+            (4, 3, 2),                 // smaller than one tile
+            (2, 16, 15),               // multi-block ragged
+        ] {
+            let x = Tensor::randn(&[batch, k], 0.8, &mut rng);
+            let w = Tensor::rand_uniform(&[k, m], -0.9, 0.9, &mut rng);
+            let b = Tensor::rand_uniform(&[m], -0.2, 0.2, &mut rng);
+            let got = bank_linear(&mut st, &phys, &x, &w, Some(&b)).unwrap();
+            let mut want = x.matmul(&w).unwrap();
+            for r in 0..batch {
+                for (v, bv) in want.row_mut(r).iter_mut().zip(b.data()) {
+                    *v += bv;
+                }
+            }
+            assert_close(got.data(), want.data(), 1e-3)
+                .unwrap_or_else(|e| panic!("({batch},{k},{m}): {e}"));
+        }
+    }
+
+    #[test]
+    fn locked_inscription_tracks_dense_within_device_budget() {
+        let phys = PhysicsConfig {
+            bank_rows: 10,
+            bank_cols: 5,
+            lock: true,
+            ..PhysicsConfig::ideal()
+        };
+        let mut st = state_for(&phys);
+        let mut rng = Pcg64::seed(4);
+        let x = Tensor::rand_uniform(&[2, 7], 0.0, 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[7, 12], -0.9, 0.9, &mut rng);
+        let got = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        let want = x.matmul(&w).unwrap();
+        // lock residual ~2e-3/ring, amplified by the inscription gain and
+        // summed over k terms: generous 5σ-style budget, plus correlation
+        assert_close(got.data(), want.data(), 0.15 * 7.0).unwrap();
+        let c = crate::util::stats::correlation(
+            &got.data().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &want.data().iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(c > 0.98, "correlation {c}");
+    }
+
+    #[test]
+    fn converter_resolution_degrades_fidelity() {
+        let mut rng = Pcg64::seed(8);
+        let x = Tensor::rand_uniform(&[2, 9], 0.0, 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[9, 6], -0.9, 0.9, &mut rng);
+        let want = x.matmul(&w).unwrap();
+        let err_at = |dac: u32, adc: u32| {
+            let phys = PhysicsConfig { dac_bits: dac, adc_bits: adc, ..small_physics() };
+            let mut st = state_for(&phys);
+            let got = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+            got.data()
+                .iter()
+                .zip(want.data())
+                .map(|(g, w)| (g - w).abs() as f64)
+                .fold(0.0, f64::max)
+        };
+        let exact = err_at(0, 0);
+        let coarse = err_at(2, 2);
+        assert!(exact < 1e-4, "ideal converters should be transparent: {exact}");
+        assert!(coarse > 10.0 * exact.max(1e-6), "2-bit converters: {coarse}");
+    }
+
+    #[test]
+    fn read_noise_hits_gradient_readouts_only() {
+        let phys = PhysicsConfig { sigma: 0.1, ..small_physics() };
+        let clean = small_physics();
+        let mut rng = Pcg64::seed(9);
+        let x = Tensor::rand_uniform(&[1, 5], 0.0, 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[5, 7], -0.9, 0.9, &mut rng);
+        // forward inference is exempt from the lumped gradient-read σ
+        let a = bank_linear(&mut state_for(&phys), &phys, &x, &w, None).unwrap();
+        let c = bank_linear(&mut state_for(&clean), &clean, &x, &w, None).unwrap();
+        assert_eq!(a, c, "sigma must not perturb the forward chain");
+        // the B·e path picks it up, deterministically per device seed
+        let bmat = Tensor::rand_uniform(&[7, 5], -0.9, 0.9, &mut rng);
+        let e = Tensor::randn(&[2, 5], 0.5, &mut rng);
+        let act = Tensor::full(&[2, 7], 1.0);
+        let g1 = bank_dfa_gradient(&mut state_for(&phys), &phys, &bmat, &e, &act).unwrap();
+        let g2 = bank_dfa_gradient(&mut state_for(&phys), &phys, &bmat, &e, &act).unwrap();
+        assert_eq!(g1, g2, "same device seed, same draw");
+        let g3 = bank_dfa_gradient(&mut state_for(&clean), &clean, &bmat, &e, &act).unwrap();
+        assert_ne!(g1, g3, "sigma=0.1 must perturb the gradient readout");
+    }
+
+    #[test]
+    fn nan_input_darks_its_channel_only() {
+        // regression companion to the converter NaN fix: one NaN feature
+        // must not poison the other channels of the matvec
+        let phys = small_physics();
+        let mut st = state_for(&phys);
+        let mut x = Tensor::rand_uniform(&[1, 5], 0.1, 1.0, &mut Pcg64::seed(3));
+        let w = Tensor::rand_uniform(&[5, 4], -0.9, 0.9, &mut Pcg64::seed(4));
+        let clean = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        assert!(clean.data().iter().all(|v| v.is_finite()));
+        x.set(0, 2, f32::NAN);
+        let poisoned = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        assert!(
+            poisoned.data().iter().all(|v| v.is_finite()),
+            "NaN leaked through the analog path: {:?}",
+            poisoned.data()
+        );
+        // the surviving channels still contribute
+        assert!(poisoned.data().iter().any(|v| v.abs() > 1e-3));
+    }
+
+    #[test]
+    fn dfa_gradient_masks_inactive_rows() {
+        let phys = small_physics();
+        let mut st = state_for(&phys);
+        let mut rng = Pcg64::seed(6);
+        let bmat = Tensor::rand_uniform(&[9, 4], -0.9, 0.9, &mut rng);
+        let e = Tensor::randn(&[3, 4], 0.5, &mut rng);
+        let mut a = Tensor::randn(&[3, 9], 1.0, &mut rng);
+        for j in 0..9 {
+            a.set(1, j, -1.0); // sample 1 fully inactive
+        }
+        let d = bank_dfa_gradient(&mut st, &phys, &bmat, &e, &a).unwrap();
+        assert_eq!(d.shape(), &[9, 3]);
+        for j in 0..9 {
+            assert_eq!(d.at(j, 1), 0.0, "row {j} of the dead sample");
+        }
+        // ideal physics: live entries match B·e ⊙ g'(a)
+        let dense = bmat.matmul(&e.t()).unwrap();
+        for j in 0..9 {
+            for smp in [0usize, 2] {
+                let want = if a.at(smp, j) > 0.0 { dense.at(j, smp) } else { 0.0 };
+                assert!(
+                    (d.at(j, smp) - want).abs() < 1e-3,
+                    "({j},{smp}): {} vs {want}",
+                    d.at(j, smp)
+                );
+            }
+        }
+        // and under read noise: dead rows stay exactly zero — the noise
+        // enters pre-TIA, so the g'(a) mask gates it like the reference
+        // model's mask x (B·e + noise)
+        let noisy = PhysicsConfig { sigma: 0.2, ..small_physics() };
+        let dn = bank_dfa_gradient(&mut state_for(&noisy), &noisy, &bmat, &e, &a).unwrap();
+        for j in 0..9 {
+            assert_eq!(dn.at(j, 1), 0.0, "noisy dead row {j}");
+        }
+        assert_ne!(dn, d, "sigma=0.2 must perturb the live rows");
+    }
+
+    #[test]
+    fn engine_serves_photonic_vocabulary() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let e = PhotonicEngine::open(&dir, PhysicsConfig::ideal()).unwrap();
+        assert_eq!(e.platform_name(), "photonic");
+        let names: Vec<String> = e.artifact_specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), 10); // 3 per config x 3 configs + photonic_matvec
+        assert!(names.iter().all(|n| !n.starts_with("bp_step_")));
+        assert!(e.load("fwd_tiny").is_ok());
+        assert!(e.load("dfa_step_tiny").is_ok());
+        assert!(e.load("apply_grads_tiny").is_ok());
+        assert!(e.load("photonic_matvec").is_ok());
+        let err = e.load("bp_step_tiny").unwrap_err().to_string();
+        assert!(err.contains("backend native"), "{err}");
+        assert!(e.load("nonexistent").is_err());
+    }
+
+    #[test]
+    fn ideal_fwd_reproduces_native_logits() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let phys = PhysicsConfig { bank_rows: 16, bank_cols: 12, ..PhysicsConfig::ideal() };
+        let photonic = PhotonicEngine::open(&dir, phys).unwrap();
+        let native = NativeEngine::open(&dir).unwrap();
+        let dims = native.net_dims("tiny").unwrap();
+        let mut rng = Pcg64::seed(2);
+        let state = NetState::init(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.7, &mut rng);
+        let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        inputs.push(x);
+        let want = native.load("fwd_tiny").unwrap().execute(&inputs).unwrap();
+        let got = photonic.load("fwd_tiny").unwrap().execute(&inputs).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_close(g.data(), w.data(), IDEAL_LOGIT_TOL)
+                .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn dfa_step_rejects_gaussian_noise_inputs() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let phys = PhysicsConfig { bank_rows: 16, bank_cols: 12, ..PhysicsConfig::ideal() };
+        let e = PhotonicEngine::open(&dir, phys).unwrap();
+        let art = e.load("dfa_step_tiny").unwrap();
+        let dims = e.net_dims("tiny").unwrap();
+        let mut rng = Pcg64::seed(3);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let n1 = Tensor::zeros(&[dims.d_h1, dims.batch]);
+        let n2 = Tensor::zeros(&[dims.d_h2, dims.batch]);
+        let mut inputs = state.tensors.clone();
+        inputs.extend([
+            b1, b2, x, y, n1, n2,
+            Tensor::scalar(0.1), // sigma: the Gaussian model, not ours
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.05),
+            Tensor::scalar(0.9),
+        ]);
+        let err = art.execute(&inputs).unwrap_err().to_string();
+        assert!(err.contains("--physics"), "{err}");
+        // zero sigma/bits executes the full in-situ step
+        inputs[18] = Tensor::scalar(0.0);
+        let out = art.execute(&inputs).unwrap();
+        assert_eq!(out.len(), 14);
+        assert!(out[12].item().is_finite());
+    }
+}

@@ -8,6 +8,9 @@
 //!   [`crate::dfa::reference`] (the op-for-op twin of the JAX model).
 //! * [`crate::runtime::engine::Engine`] (`--features pjrt`) — the
 //!   compile-once/execute-many PJRT path over the AOT HLO artifacts.
+//! * [`crate::runtime::photonic::PhotonicEngine`] — in-situ execution:
+//!   every matvec of the training step routed through the device-level
+//!   MRR weight-bank simulator under a [`PhysicsConfig`].
 //!
 //! Both backends speak the same artifact vocabulary (`fwd_<cfg>`,
 //! `dfa_step_<cfg>`, `bp_step_<cfg>`, `apply_grads_<cfg>`,
@@ -18,6 +21,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::runtime::manifest::{ArtifactSpec, NetDims};
+use crate::runtime::photonic::PhysicsConfig;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -76,7 +80,7 @@ pub trait StepEngine: Send + Sync {
 }
 
 /// Which backend [`open`] should construct.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Backend {
     /// PJRT when built with `--features pjrt` *and* the artifact directory
     /// holds a manifest; the native engine otherwise.
@@ -86,16 +90,29 @@ pub enum Backend {
     Native,
     /// Force PJRT; errors without `--features pjrt` or a manifest.
     Pjrt,
+    /// The in-situ device backend: every training-step matvec routed
+    /// through the simulated MRR weight bank under the carried
+    /// [`PhysicsConfig`].
+    Photonic(PhysicsConfig),
 }
 
 impl Backend {
-    /// Parse "auto" | "native" | "pjrt" (the `--backend` CLI values).
-    pub fn parse(s: &str) -> Option<Backend> {
+    /// Parse "auto" | "native" | "photonic" | "pjrt" (the `--backend` CLI
+    /// values). `photonic` carries [`PhysicsConfig::default`]; callers
+    /// with a `--physics` argument substitute it before [`open`].
+    ///
+    /// Unknown names are a hard [`Error::Cli`] enumerating every valid
+    /// value — a bad `--backend` string must never fall back silently.
+    pub fn parse(s: &str) -> Result<Backend> {
         match s {
-            "auto" => Some(Backend::Auto),
-            "native" => Some(Backend::Native),
-            "pjrt" => Some(Backend::Pjrt),
-            _ => None,
+            "auto" => Ok(Backend::Auto),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            "photonic" => Ok(Backend::Photonic(PhysicsConfig::default())),
+            other => Err(Error::Cli(format!(
+                "unknown backend '{other}' (valid values: auto | native | \
+                 photonic | pjrt)"
+            ))),
         }
     }
 }
@@ -109,6 +126,9 @@ pub fn open(artifacts_dir: impl AsRef<Path>, backend: Backend) -> Result<Arc<dyn
     let has_manifest = dir.join("manifest.json").exists();
     match backend {
         Backend::Native => Ok(Arc::new(super::native::NativeEngine::open(dir)?)),
+        Backend::Photonic(physics) => {
+            Ok(Arc::new(super::photonic::PhotonicEngine::open(dir, physics)?))
+        }
         Backend::Pjrt => open_pjrt(dir, has_manifest),
         Backend::Auto => {
             if cfg!(feature = "pjrt") && has_manifest {
@@ -144,10 +164,34 @@ mod tests {
 
     #[test]
     fn backend_parses_cli_values() {
-        assert_eq!(Backend::parse("auto"), Some(Backend::Auto));
-        assert_eq!(Backend::parse("native"), Some(Backend::Native));
-        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
-        assert_eq!(Backend::parse("xla"), None);
+        assert_eq!(Backend::parse("auto").unwrap(), Backend::Auto);
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert_eq!(
+            Backend::parse("photonic").unwrap(),
+            Backend::Photonic(PhysicsConfig::default())
+        );
+        // unknown values are a hard CLI error enumerating the valid set
+        let err = Backend::parse("xla").unwrap_err().to_string();
+        for valid in ["auto", "native", "photonic", "pjrt"] {
+            assert!(err.contains(valid), "{err} should list {valid}");
+        }
+    }
+
+    #[test]
+    fn photonic_backend_opens_device_engine() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let engine = open(
+            &dir,
+            Backend::Photonic(crate::runtime::photonic::PhysicsConfig::ideal()),
+        )
+        .unwrap();
+        assert_eq!(engine.platform_name(), "photonic");
+        assert!(engine.net_dims("tiny").is_ok());
+        // invalid physics surfaces as an open() error
+        let mut bad = crate::runtime::photonic::PhysicsConfig::ideal();
+        bad.bank_cols = 0;
+        assert!(open(&dir, Backend::Photonic(bad)).is_err());
     }
 
     #[test]

@@ -302,6 +302,18 @@ fn bad_flags_rejected() {
     assert!(!out.status.success());
     let out = pdfa().args(["train", "--backend", "bogus"]).output().unwrap();
     assert!(!out.status.success());
+    // photonic physics values are validated, not coerced
+    let out = pdfa()
+        .args(["train", "--backend", "photonic", "--physics", "ideal,dac=-3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let out = pdfa().args(["sweep-physics", "--bits", "-2"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = pdfa().args(["sweep-physics", "--bits", "2.5"]).output().unwrap();
+    assert!(!out.status.success());
+    let out = pdfa().args(["sweep-physics", "--sigmas", "-0.1"]).output().unwrap();
+    assert!(!out.status.success());
 }
 
 #[test]
@@ -316,4 +328,107 @@ fn info_lists_native_artifacts_without_manifest() {
     for needle in ["small: 784-128-128-10 batch 64", "dfa_step_mnist", "photonic_matvec"] {
         assert!(text.contains(needle), "missing {needle} in:\n{text}");
     }
+}
+
+#[test]
+fn bad_backend_error_enumerates_valid_values() {
+    let out = pdfa().args(["info", "--backend", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for valid in ["auto", "native", "photonic", "pjrt"] {
+        assert!(err.contains(valid), "stderr should list '{valid}': {err}");
+    }
+}
+
+#[test]
+fn train_photonic_backend_completes_an_epoch() {
+    // the acceptance smoke: `pdfa train --config tiny --backend photonic`
+    // trains through the device-level bank end to end
+    let out_dir = std::env::temp_dir().join("pdfa_cli_photonic");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--backend", "photonic",
+            "--physics", "ideal",
+            "--epochs", "1",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--max-steps", "2",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "photonic_smoke",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("test accuracy"), "{text}");
+    // the run record carries the physics protocol
+    let cfg = std::fs::read_to_string(out_dir.join("photonic_smoke/config.json")).unwrap();
+    assert!(cfg.contains("bank=50x20"), "{cfg}");
+    // a Gaussian-noise mode on the photonic backend is a clean error
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--backend", "photonic",
+            "--noise", "offchip",
+            "--epochs", "1",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--max-steps", "1",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "photonic_noise_clash",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--physics"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn sweep_physics_emits_accuracy_table() {
+    let out = pdfa()
+        .args([
+            "sweep-physics",
+            "--config", "tiny",
+            "--physics", "ideal",
+            "--bits", "0,4",
+            "--sigmas", "0,0.1",
+            "--epochs", "1",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--max-steps", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("dac/adc bits"), "{text}");
+    assert!(text.contains("test_acc"), "{text}");
+    // 2 bits x 2 sigmas = 4 table rows + header (+ the banner line)
+    let rows = text
+        .lines()
+        .filter(|l| l.contains("ideal") || l.trim_start().starts_with('4'))
+        .count();
+    assert!(rows >= 4, "expected 4 grid rows:\n{text}");
+}
+
+#[test]
+fn info_photonic_reports_physics() {
+    let out = pdfa()
+        .args(["info", "--backend", "photonic", "--physics", "ideal,dac=6"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backend: photonic"), "{text}");
+    assert!(text.contains("dac=6"), "{text}");
+    // bp_step is native-only: it must not appear in the photonic vocabulary
+    assert!(!text.contains("bp_step"), "{text}");
 }

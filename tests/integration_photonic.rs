@@ -1,0 +1,166 @@
+//! Integration: the photonic step engine against its digital twins.
+//!
+//! Pins the `ideal` physics preset to the native engine (the acceptance
+//! contract: same artifact vocabulary, logits within the documented
+//! tolerance, same end-to-end training outcome), exercises the realistic
+//! paper preset end to end, and checks that checkpoints refuse to resume
+//! across different device physics.
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::config::TrainConfig;
+use photonic_dfa::dfa::noise_model::NoiseMode;
+use photonic_dfa::dfa::reference;
+use photonic_dfa::dfa::trainer::Trainer;
+use photonic_dfa::photonics::BpdMode;
+use photonic_dfa::runtime::photonic::IDEAL_LOGIT_TOL;
+use photonic_dfa::runtime::{self, Backend, PhysicsConfig, StepEngine};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::check::assert_close;
+use photonic_dfa::util::rng::Pcg64;
+
+fn photonic(physics: PhysicsConfig) -> Arc<dyn StepEngine> {
+    runtime::open("artifacts", Backend::Photonic(physics)).unwrap()
+}
+
+fn native() -> Arc<dyn StepEngine> {
+    runtime::open("artifacts", Backend::Native).unwrap()
+}
+
+fn tiny_cfg(physics: Option<PhysicsConfig>) -> TrainConfig {
+    TrainConfig {
+        config: "tiny".into(),
+        epochs: 3,
+        lr: 0.05,
+        n_train: 256,
+        n_test: 64,
+        seed: 3,
+        physics,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn ideal_preset_pins_to_reference_forward() {
+    // tolerance pin of the whole tiled analog path against
+    // dfa::reference::forward on every output of the fwd artifact
+    let engine = photonic(PhysicsConfig::ideal());
+    let fwd = engine.load("fwd_tiny").unwrap();
+    let dims = engine.net_dims("tiny").unwrap();
+    let mut rng = Pcg64::seed(11);
+    let params: Vec<Tensor> = fwd.spec().inputs[..6]
+        .iter()
+        .map(|s| Tensor::randn(&s.shape, 0.3, &mut rng))
+        .collect();
+    let x = Tensor::randn(&[dims.batch, dims.d_in], 0.8, &mut rng);
+    let want = reference::forward(&params, &x);
+    let mut inputs = params.clone();
+    inputs.push(x);
+    let got = fwd.execute(&inputs).unwrap();
+    for (g, w, name) in [
+        (&got[0], &want.logits, "logits"),
+        (&got[1], &want.a1, "a1"),
+        (&got[2], &want.a2, "a2"),
+        (&got[3], &want.h1, "h1"),
+        (&got[4], &want.h2, "h2"),
+    ] {
+        assert_eq!(g.shape(), w.shape());
+        assert_close(g.data(), w.data(), IDEAL_LOGIT_TOL)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn ideal_preset_reproduces_native_training_end_to_end() {
+    // the acceptance pin: a full tiny training run through the bank with
+    // ideal physics must land on the native backend's accuracy
+    let mut nat = Trainer::new(native(), tiny_cfg(None)).unwrap();
+    let (train, test) = nat.load_data().unwrap();
+    let nat_res = nat.train(train.clone(), test.clone(), |_| {}).unwrap();
+
+    let physics = PhysicsConfig::ideal();
+    let mut pho = Trainer::new(photonic(physics), tiny_cfg(Some(physics))).unwrap();
+    // identical dataset recipe: config + seed + sizes match
+    let (ptrain, ptest) = pho.load_data().unwrap();
+    assert_eq!(ptrain.x.data(), train.x.data());
+    let pho_res = pho.train(ptrain, ptest, |_| {}).unwrap();
+
+    assert!(nat_res.test_acc > 0.6, "native sanity: {}", nat_res.test_acc);
+    assert!(
+        (pho_res.test_acc - nat_res.test_acc).abs() <= 0.05,
+        "ideal photonic {} vs native {}",
+        pho_res.test_acc,
+        nat_res.test_acc
+    );
+    // the first-epoch losses track before rounding noise can compound
+    let (p, n) = (&pho_res.history[0], &nat_res.history[0]);
+    assert!(
+        (p.train_loss - n.train_loss).abs() < 0.05,
+        "epoch 1: {} vs {}",
+        p.train_loss,
+        n.train_loss
+    );
+}
+
+#[test]
+fn paper_preset_trains_under_full_physics() {
+    // the realistic operating point: 12/6-bit converters, sigma 0.098,
+    // crosstalk, feedback-locked inscription — one capped epoch must
+    // execute cleanly and produce finite, learning-shaped numbers
+    let physics = PhysicsConfig::paper();
+    let mut cfg = tiny_cfg(Some(physics));
+    cfg.epochs = 1;
+    cfg.max_steps_per_epoch = Some(4);
+    cfg.n_train = 64;
+    let mut t = Trainer::new(photonic(physics), cfg).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    assert_eq!(res.history.len(), 1);
+    assert!(res.history[0].train_loss.is_finite());
+    assert!(res.test_acc.is_finite());
+    assert!(res.total_steps == 4, "{}", res.total_steps);
+}
+
+#[test]
+fn checkpoint_refuses_resume_under_different_physics() {
+    let physics = PhysicsConfig::ideal();
+    let mut cfg = tiny_cfg(Some(physics));
+    cfg.epochs = 1;
+    let mut donor = Trainer::new(photonic(physics), cfg).unwrap();
+    let (train, test) = donor.load_data().unwrap();
+    donor.train(train, test, |_| {}).unwrap();
+    let ckpt = donor.checkpoint();
+
+    // same physics resumes fine
+    let mut same = Trainer::new(photonic(physics), tiny_cfg(Some(physics))).unwrap();
+    same.restore(&ckpt).unwrap();
+    assert_eq!(same.epochs_done(), 1);
+
+    // a different DAC resolution is a different trajectory: rejected
+    let other = PhysicsConfig { dac_bits: 4, ..PhysicsConfig::ideal() };
+    let mut mismatched = Trainer::new(photonic(other), tiny_cfg(Some(other))).unwrap();
+    let err = mismatched.restore(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("protocol"), "{err}");
+
+    // and a native run cannot adopt a photonic checkpoint at all
+    let mut nat = Trainer::new(native(), tiny_cfg(None)).unwrap();
+    assert!(nat.restore(&ckpt).is_err());
+}
+
+#[test]
+fn device_noise_mode_is_rejected_on_photonic_backend() {
+    // the legacy device-mode gradient path and the photonic backend are
+    // two different physics models — combining them must be a hard error,
+    // not a silent hybrid
+    let physics = PhysicsConfig::ideal();
+    let mut cfg = tiny_cfg(Some(physics));
+    cfg.noise = NoiseMode::Device { bpd: BpdMode::Ideal };
+    let err = Trainer::new(photonic(physics), cfg).unwrap_err().to_string();
+    assert!(err.contains("--physics"), "{err}");
+}
+
+#[test]
+fn photonic_backend_is_a_hard_parse_error_for_typos() {
+    let err = Backend::parse("photonics").unwrap_err().to_string();
+    assert!(err.contains("photonic") && err.contains("native"), "{err}");
+}
