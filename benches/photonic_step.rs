@@ -74,4 +74,52 @@ fn main() {
         );
         println!("{}", r.report());
     }
+
+    // ---- batch-row sharding: 1 thread vs all cores, mnist-sized ----
+    // Ideal physics so the per-cycle optical chain (the part the worker
+    // pool shards) dominates rather than the lock protocol. Outputs are
+    // bit-identical across the two rows; only the wall clock moves.
+    let threads_cfg = BenchConfig {
+        warmup_iters: 0,
+        min_iters: 2,
+        max_time: std::time::Duration::from_secs(4),
+    };
+    let all_cores = photonic_dfa::util::threads::available();
+    for threads in [1, all_cores] {
+        let engine =
+            PhotonicEngine::open_threaded("artifacts", PhysicsConfig::ideal(), threads)
+                .unwrap();
+        let step = engine.load("dfa_step_mnist").unwrap();
+        let dims = engine.net_dims("mnist").unwrap();
+        let mut rng = Pcg64::seed(2);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::rand_uniform(&[dims.batch, dims.d_in], 0.0, 1.0, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let mut step_inputs = state.tensors.clone();
+        step_inputs.extend([
+            b1,
+            b2,
+            x,
+            y,
+            Tensor::zeros(&[dims.d_h1, dims.batch]),
+            Tensor::zeros(&[dims.d_h2, dims.batch]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.05),
+            Tensor::scalar(0.9),
+        ]);
+        let gradient_macs = ((dims.d_h1 + dims.d_h2) * dims.d_out * dims.batch) as f64;
+        let r = bench_throughput(
+            &format!("photonic/dfa_step_mnist_ideal_threads{threads}"),
+            &threads_cfg,
+            gradient_macs,
+            "MAC",
+            || step.execute(&step_inputs).unwrap(),
+        );
+        println!("{}", r.report());
+    }
 }

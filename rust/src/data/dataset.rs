@@ -65,9 +65,17 @@ impl Dataset {
         Dataset::from_idx(&find(img_base)?, &find(lab_base)?, synth::N_CLASSES)
     }
 
-    /// Generate the synthetic split in memory (no files).
+    /// Generate the synthetic split in memory (no files) on all cores.
     pub fn synthetic(n: usize, seed: u64) -> Dataset {
-        let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+        Self::synthetic_threaded(n, seed, 0)
+    }
+
+    /// [`Self::synthetic`] with an explicit worker count (0 = all cores,
+    /// the `--threads` convention). Generation is sharded per chunk with
+    /// chunk-keyed RNG streams, so the worker count never changes the
+    /// data — only wall-clock time.
+    pub fn synthetic_threaded(n: usize, seed: u64, threads: usize) -> Dataset {
+        let threads = crate::util::threads::resolve(threads);
         let (img, lab) = synth::generate_split_parallel(n, seed, threads);
         Dataset::from_idx(&img, &lab, synth::N_CLASSES).expect("synth arrays are consistent")
     }

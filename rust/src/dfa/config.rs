@@ -48,6 +48,12 @@ pub struct TrainConfig {
     /// fidelity. `None` for the digital backends. Part of the protocol
     /// string — a resume under different physics is a trajectory change.
     pub physics: Option<PhysicsConfig>,
+    /// Worker threads for the engines' parallel paths (0 = all cores,
+    /// the `--threads` CLI convention). Deliberately NOT part of the
+    /// protocol string: per-row counter-keyed noise streams make every
+    /// trajectory bit-identical at any thread count, so this knob only
+    /// changes wall-clock time.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -68,6 +74,7 @@ impl Default for TrainConfig {
             save_path: None,
             save_every: 0,
             physics: None,
+            threads: 0,
         }
     }
 }
@@ -96,6 +103,8 @@ impl TrainConfig {
                 self.physics
                     .map_or(Value::Null, |p| Value::str(&p.describe())),
             ),
+            // recorded for the run report only; not trajectory-determining
+            ("threads", Value::Number(self.threads as f64)),
         ])
     }
 
@@ -178,6 +187,10 @@ mod tests {
         assert_eq!(base.protocol_string(), TrainConfig::default().protocol_string());
         // epochs and checkpoint cadence are NOT part of the protocol
         let c = TrainConfig { epochs: 99, save_every: 3, ..TrainConfig::default() };
+        assert_eq!(c.protocol_string(), base.protocol_string());
+        // neither is the thread count: results are bit-identical at any
+        // value, so a --threads 4 run may resume a --threads 1 checkpoint
+        let c = TrainConfig { threads: 4, ..TrainConfig::default() };
         assert_eq!(c.protocol_string(), base.protocol_string());
         // every trajectory-determining knob changes it
         for mutate in [

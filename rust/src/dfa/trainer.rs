@@ -188,7 +188,10 @@ impl Trainer {
     /// plus every trajectory-determining hyperparameter. Backends round
     /// floats differently (XLA vs the native kernels), so a cross-backend
     /// resume is a trajectory change and gets rejected like any other
-    /// protocol mismatch.
+    /// protocol mismatch. The worker-thread count is deliberately absent:
+    /// every parallel path is bit-deterministic, so a `--threads 4` run
+    /// may resume a `--threads 1` checkpoint (and vice versa) without
+    /// changing the trajectory.
     fn run_protocol(&self) -> String {
         format!(
             "backend={};{}",
@@ -276,8 +279,16 @@ impl Trainer {
                 (tr, te)
             }
             None if self.dims.d_in == 784 => (
-                Dataset::synthetic(self.cfg.n_train, self.cfg.seed ^ 0x7a11),
-                Dataset::synthetic(self.cfg.n_test, self.cfg.seed ^ 0x7e57),
+                Dataset::synthetic_threaded(
+                    self.cfg.n_train,
+                    self.cfg.seed ^ 0x7a11,
+                    self.cfg.threads,
+                ),
+                Dataset::synthetic_threaded(
+                    self.cfg.n_test,
+                    self.cfg.seed ^ 0x7e57,
+                    self.cfg.threads,
+                ),
             ),
             // non-MNIST-shaped configs (e.g. `tiny`) get the generic
             // separable generator at the network's own input width
@@ -671,6 +682,11 @@ mod tests {
         let hot = TrainConfig { lr: 0.5, ..tiny_cfg() };
         let mut other = Trainer::new(engine.clone(), hot).unwrap();
         assert!(other.restore(&ckpt).is_err());
+        // a changed thread count is NOT: trajectories are thread-invariant
+        let wide = TrainConfig { threads: 4, ..tiny_cfg() };
+        let mut wide = Trainer::new(engine.clone(), wide).unwrap();
+        wide.restore(&ckpt).unwrap();
+        assert_eq!(wide.epochs_done(), 1);
         t.restore(&ckpt).unwrap();
         assert_eq!(t.epochs_done(), 1);
         assert_eq!(t.state.to_bytes(), donor.state.to_bytes());

@@ -8,12 +8,13 @@
 //! on the bank, and records the final test accuracy. `pdfa sweep-physics`
 //! renders the table via the [`crate::util::benchx`] formatting helpers.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::dfa::config::{Algorithm, TrainConfig};
 use crate::dfa::noise_model::NoiseMode;
 use crate::dfa::trainer::Trainer;
-use crate::runtime::{self, Backend, PhysicsConfig};
+use crate::runtime::{PhotonicEngine, PhysicsConfig, StepEngine};
 use crate::util::benchx::fmt_ns;
 use crate::Result;
 
@@ -41,55 +42,124 @@ pub struct SweepSettings {
     pub n_train: usize,
     pub n_test: usize,
     pub max_steps_per_epoch: Option<usize>,
+    /// Worker threads (0 = all cores). Grid cells are independent
+    /// training runs, so the sweep shards *cells* across this many
+    /// workers; with more than one cell worker, each cell's engine runs
+    /// single-threaded (no oversubscription). Accuracy per cell is
+    /// bit-identical at any value — only wall-clock time changes.
+    pub threads: usize,
+}
+
+/// One independent grid cell: open a fresh photonic engine under the
+/// overridden physics and train end to end.
+fn run_cell(
+    settings: &SweepSettings,
+    bits: u32,
+    sigma: f64,
+    engine_threads: usize,
+) -> Result<PhysicsPoint> {
+    let mut physics = settings.base;
+    physics.dac_bits = bits;
+    physics.adc_bits = bits;
+    physics.sigma = sigma;
+    // open the engine directly (not through runtime::open_threaded): the
+    // sweep already set the process-wide GEMM cap to the per-cell plan,
+    // and a cell worker must not override it mid-flight
+    let engine: Arc<dyn StepEngine> = Arc::new(PhotonicEngine::open_threaded(
+        &settings.artifacts_dir,
+        physics,
+        engine_threads,
+    )?);
+    let cfg = TrainConfig {
+        config: settings.config.clone(),
+        algorithm: Algorithm::Dfa,
+        noise: NoiseMode::Clean, // the device supplies the noise
+        epochs: settings.epochs,
+        seed: settings.seed,
+        n_train: settings.n_train,
+        n_test: settings.n_test,
+        max_steps_per_epoch: settings.max_steps_per_epoch,
+        physics: Some(physics),
+        threads: engine_threads,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let (train, test) = trainer.load_data()?;
+    let t0 = Instant::now();
+    let res = trainer.train(train, test, |_| {})?;
+    crate::log_info!(
+        "physics point dac/adc={bits} sigma={sigma}: test acc {:.4}",
+        res.test_acc
+    );
+    Ok(PhysicsPoint {
+        dac_bits: bits,
+        adc_bits: bits,
+        sigma,
+        test_acc: res.test_acc,
+        train_wall_s: t0.elapsed().as_secs_f64(),
+    })
 }
 
 /// Train one network per (bits, sigma) grid point on the photonic backend
 /// and report final test accuracy — the paper-style accuracy-vs-resolution
-/// table, with the physics actually in the loop.
+/// table, with the physics actually in the loop. Cells are independent
+/// runs, sharded across [`SweepSettings::threads`] workers; the returned
+/// points are always in deterministic grid order (bits-major, sigma-minor)
+/// and each cell's accuracy is bit-identical at any thread count.
 pub fn physics_sweep(
     settings: &SweepSettings,
     bits_list: &[u32],
     sigma_list: &[f64],
 ) -> Result<Vec<PhysicsPoint>> {
-    let mut out = Vec::with_capacity(bits_list.len() * sigma_list.len());
-    for &bits in bits_list {
-        for &sigma in sigma_list {
-            let mut physics = settings.base;
-            physics.dac_bits = bits;
-            physics.adc_bits = bits;
-            physics.sigma = sigma;
-            let engine = runtime::open(&settings.artifacts_dir, Backend::Photonic(physics))?;
-            let cfg = TrainConfig {
-                config: settings.config.clone(),
-                algorithm: Algorithm::Dfa,
-                noise: NoiseMode::Clean, // the device supplies the noise
-                epochs: settings.epochs,
-                seed: settings.seed,
-                n_train: settings.n_train,
-                n_test: settings.n_test,
-                max_steps_per_epoch: settings.max_steps_per_epoch,
-                physics: Some(physics),
-                ..TrainConfig::default()
-            };
-            let mut trainer = Trainer::new(engine, cfg)?;
-            let (train, test) = trainer.load_data()?;
-            let t0 = Instant::now();
-            let res = trainer.train(train, test, |_| {})?;
-            let point = PhysicsPoint {
-                dac_bits: bits,
-                adc_bits: bits,
-                sigma,
-                test_acc: res.test_acc,
-                train_wall_s: t0.elapsed().as_secs_f64(),
-            };
-            crate::log_info!(
-                "physics point dac/adc={bits} sigma={sigma}: test acc {:.4}",
-                res.test_acc
-            );
-            out.push(point);
+    let cells: Vec<(u32, f64)> = bits_list
+        .iter()
+        .flat_map(|&b| sigma_list.iter().map(move |&s| (b, s)))
+        .collect();
+    if cells.is_empty() {
+        return Ok(Vec::new());
+    }
+    let workers = crate::util::threads::resolve(settings.threads)
+        .min(cells.len())
+        .max(1);
+    // one worker: let the cell's engine use the full thread budget instead
+    let engine_threads = if workers > 1 { 1 } else { settings.threads };
+    // cap the digital GEMM kernels to the same per-cell plan for the
+    // duration of the sweep (workers x engine_threads ≈ the budget);
+    // results are unaffected either way — this is purely an
+    // oversubscription guard. The guard restores the exact prior cap on
+    // every exit path, including a panicking cell.
+    struct CapGuard(usize);
+    impl Drop for CapGuard {
+        fn drop(&mut self) {
+            crate::tensor::ops::set_thread_cap(self.0);
         }
     }
-    Ok(out)
+    let _restore_cap = CapGuard(crate::tensor::ops::thread_cap_raw());
+    crate::tensor::ops::set_thread_cap(engine_threads);
+    let mut results: Vec<Option<Result<PhysicsPoint>>> =
+        (0..cells.len()).map(|_| None).collect();
+    if workers == 1 {
+        for (slot, &(bits, sigma)) in results.iter_mut().zip(&cells) {
+            *slot = Some(run_cell(settings, bits, sigma, engine_threads));
+        }
+    } else {
+        let per = cells.len().div_ceil(workers);
+        let cells = &cells;
+        std::thread::scope(|scope| {
+            for (t, chunk) in results.chunks_mut(per).enumerate() {
+                scope.spawn(move || {
+                    for (i, slot) in chunk.iter_mut().enumerate() {
+                        let (bits, sigma) = cells[t * per + i];
+                        *slot = Some(run_cell(settings, bits, sigma, engine_threads));
+                    }
+                });
+            }
+        });
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every grid cell ran"))
+        .collect()
 }
 
 /// Render the sweep as the paper-style fixed-width table (one row per
@@ -130,6 +200,7 @@ mod tests {
             n_train: 64,
             n_test: 32,
             max_steps_per_epoch: Some(2),
+            threads: 1,
         }
     }
 
@@ -143,6 +214,32 @@ mod tests {
         }
         assert_eq!(pts[0].dac_bits, 0);
         assert_eq!(pts[1].dac_bits, 2);
+    }
+
+    #[test]
+    fn sweep_grid_is_thread_count_invariant() {
+        // cells shard across workers, but accuracy and order must be
+        // bit-identical to the sequential sweep
+        let grid = (&[0u32, 4u32][..], &[0.0, 0.1][..]);
+        let sequential = physics_sweep(&settings(), grid.0, grid.1).unwrap();
+        let parallel =
+            physics_sweep(&SweepSettings { threads: 4, ..settings() }, grid.0, grid.1)
+                .unwrap();
+        assert_eq!(sequential.len(), 4);
+        assert_eq!(parallel.len(), 4);
+        for (s, p) in sequential.iter().zip(&parallel) {
+            assert_eq!((s.dac_bits, s.adc_bits), (p.dac_bits, p.adc_bits));
+            assert_eq!(s.sigma.to_bits(), p.sigma.to_bits());
+            assert_eq!(
+                s.test_acc.to_bits(),
+                p.test_acc.to_bits(),
+                "cell dac/adc={} sigma={}: {} vs {}",
+                s.dac_bits,
+                s.sigma,
+                s.test_acc,
+                p.test_acc
+            );
+        }
     }
 
     #[test]

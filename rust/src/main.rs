@@ -121,9 +121,12 @@ fn print_global_help() {
     );
 }
 
-/// Shared `--backend`/`--physics`/`--artifacts` resolution for
-/// engine-driving commands. Returns the engine plus the physics config
-/// when the photonic backend was selected (for the train protocol).
+/// Shared `--backend`/`--physics`/`--threads`/`--artifacts` resolution
+/// for engine-driving commands. Returns the engine plus the physics
+/// config when the photonic backend was selected (for the train
+/// protocol). The thread knob reaches every engine: the photonic
+/// batch-row shards directly, the native/PJRT GEMM kernels via the
+/// process-wide cap — results are bit-identical at any value.
 fn open_engine(a: &Args) -> Result<(Arc<dyn StepEngine>, Option<PhysicsConfig>)> {
     let backend = match Backend::parse(a.str("backend"))? {
         // the --physics argument replaces the default carried by parse()
@@ -134,7 +137,8 @@ fn open_engine(a: &Args) -> Result<(Arc<dyn StepEngine>, Option<PhysicsConfig>)>
         Backend::Photonic(p) => Some(p),
         _ => None,
     };
-    Ok((runtime::open(a.str("artifacts"), backend)?, physics))
+    let engine = runtime::open_threaded(a.str("artifacts"), backend, a.usize("threads")?)?;
+    Ok((engine, physics))
 }
 
 const BACKEND_SPEC: ArgSpec = ArgSpec::opt(
@@ -147,6 +151,12 @@ const PHYSICS_SPEC: ArgSpec = ArgSpec::opt(
     "physics",
     "paper",
     "photonic-backend device physics: ideal | paper, with optional key=value overrides bank=RxC, dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N (e.g. 'ideal,dac=6,sigma=0.05'); ignored by the other backends",
+);
+
+const THREADS_SPEC: ArgSpec = ArgSpec::opt(
+    "threads",
+    "0",
+    "worker threads for the parallel paths: photonic batch-row shards, GEMM kernels, sweep grid cells, dataset synthesis (0 = all cores); per-row counter-keyed noise streams keep results bit-identical at any value",
 );
 
 // ---------------- train ----------------
@@ -171,6 +181,7 @@ fn train_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
         PHYSICS_SPEC,
+        THREADS_SPEC,
         ArgSpec::opt("out", "runs", "run output directory"),
         ArgSpec::opt("run-name", "", "run name (default: derived)"),
         ArgSpec::opt(
@@ -207,6 +218,7 @@ fn cmd_train(a: &Args) -> Result<()> {
             0 => None,
             n => Some(n),
         },
+        threads: a.usize("threads")?,
         ..TrainConfig::default()
     };
     let run_name = if a.str("run-name").is_empty() {
@@ -300,6 +312,7 @@ fn serving_knob_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
         PHYSICS_SPEC,
+        THREADS_SPEC,
     ]
 }
 
@@ -509,6 +522,7 @@ fn sweep_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
         PHYSICS_SPEC,
+        THREADS_SPEC,
     ]
 }
 
@@ -557,6 +571,7 @@ fn sweep_physics_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("max-steps", "0", "cap steps per epoch (0 = full)"),
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         PHYSICS_SPEC,
+        THREADS_SPEC,
     ]
 }
 
@@ -588,6 +603,7 @@ fn cmd_sweep_physics(a: &Args) -> Result<()> {
             0 => None,
             n => Some(n),
         },
+        threads: a.usize("threads")?,
     };
     let pts = experiments::physics_sweep(&settings, &bits, &sigmas)?;
     println!(
@@ -688,13 +704,14 @@ fn gendata_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("n-train", "60000", "training images"),
         ArgSpec::opt("n-test", "10000", "test images"),
         ArgSpec::opt("seed", "1", "generation seed"),
+        THREADS_SPEC,
     ]
 }
 
 fn cmd_gen_data(a: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(a.str("out"));
     std::fs::create_dir_all(&out)?;
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let threads = photonic_dfa::util::threads::resolve(a.usize("threads")?);
     let seed = a.u64("seed")?;
     let (tr_img, tr_lab) =
         synth::generate_split_parallel(a.usize("n-train")?, seed ^ 0x7a11, threads);
@@ -720,6 +737,7 @@ fn info_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("artifacts", "artifacts", "AOT artifact directory"),
         BACKEND_SPEC,
         PHYSICS_SPEC,
+        THREADS_SPEC,
     ]
 }
 

@@ -303,10 +303,11 @@ impl WeightBank {
             )));
         }
         self.cycles += 1;
+        let mut out = vec![0.0f32; self.cfg.rows];
         // disjoint field borrows: the ring table is read-only while the
         // intrinsic noise stream advances
         let rings = &self.rings;
-        Ok(run_chain(
+        run_chain(
             &self.noise,
             &self.bpd,
             &self.tias,
@@ -318,7 +319,9 @@ impl WeightBank {
             x,
             None,
             &mut self.rng,
-        ))
+            &mut out,
+        );
+        Ok(out)
     }
 
     /// Read-only evaluation of one operational cycle against a *stored*
@@ -344,6 +347,23 @@ impl WeightBank {
         gains: Option<&[f32]>,
         rng: &mut Pcg64,
     ) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.cfg.rows];
+        self.eval_into(ins, x, gains, rng, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::eval`] without the per-cycle allocation: the row readouts
+    /// are written into `out` (length exactly `rows`). This is the form
+    /// the photonic runtime drives from its batch-row worker pool — one
+    /// reusable buffer per worker instead of one `Vec` per optical cycle.
+    pub fn eval_into(
+        &self,
+        ins: &Inscription,
+        x: &[f32],
+        gains: Option<&[f32]>,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) -> Result<()> {
         if (ins.rows, ins.cols) != (self.cfg.rows, self.cfg.cols) {
             return Err(Error::Shape("inscription geometry mismatch".into()));
         }
@@ -363,7 +383,14 @@ impl WeightBank {
                 )));
             }
         }
-        Ok(run_chain(
+        if out.len() != self.cfg.rows {
+            return Err(Error::Shape(format!(
+                "eval_into expects an output buffer of {} rows, got {}",
+                self.cfg.rows,
+                out.len()
+            )));
+        }
+        run_chain(
             &self.noise,
             &self.bpd,
             &self.tias,
@@ -375,7 +402,9 @@ impl WeightBank {
             x,
             gains,
             rng,
-        ))
+            out,
+        );
+        Ok(())
     }
 
     /// 1×N inner product (the §4 experiment shape). Uses row 0.
@@ -443,10 +472,11 @@ impl WeightBank {
 }
 
 /// The full §2–§3 signal chain for one operational cycle, shared by the
-/// mutating [`WeightBank::matvec`] and the read-only [`WeightBank::eval`]:
-/// amplitude encoding + RIN, per-ring Lorentzian-slope phase jitter on the
-/// effective weights, balanced photodetection, TIA gain (programmed or
-/// overridden per cycle), optional ADC.
+/// mutating [`WeightBank::matvec`] and the read-only [`WeightBank::eval`] /
+/// [`WeightBank::eval_into`]: amplitude encoding + RIN, per-ring
+/// Lorentzian-slope phase jitter on the effective weights, balanced
+/// photodetection, TIA gain (programmed or overridden per cycle), optional
+/// ADC. Row readouts land in `out[..rows]` (caller-validated length).
 #[allow(clippy::too_many_arguments)]
 fn run_chain(
     noise: &NoiseModel,
@@ -460,7 +490,8 @@ fn run_chain(
     x: &[f32],
     gain_override: Option<&[f32]>,
     rng: &mut Pcg64,
-) -> Vec<f32> {
+    out: &mut [f32],
+) {
     let n = cols;
     // amplitude encoding + RIN, shared by all rows (same bus + splitter);
     // stack scratch for every realistic channel count (the §3 design tops
@@ -480,7 +511,6 @@ fn run_chain(
         let xi = if xi.is_nan() { 0.0 } else { xi };
         *a = xi * noise.sample_rin(rng);
     }
-    let mut out = Vec::with_capacity(rows);
     for r in 0..rows {
         // per-ring instantaneous weight = crosstalk-effective weight +
         // phase jitter mapped through the local Lorentzian slope
@@ -501,12 +531,11 @@ fn run_chain(
             }
             None => tias.amplify_row(r, i_out),
         };
-        out.push(match adc {
+        out[r] = match adc {
             Some(q) => q.quantize(v) as f32,
             None => v as f32,
-        });
+        };
     }
-    out
 }
 
 /// A stored weight-bank inscription (see [`WeightBank::snapshot`]).
@@ -744,6 +773,26 @@ mod tests {
         assert!(out[0].abs() > 0.3);
         // and validated
         assert!(bank.eval(&ins, &x, Some(&[1.0]), &mut rng).is_err());
+    }
+
+    #[test]
+    fn eval_into_matches_eval_and_validates_buffer() {
+        let mut bank = ideal_bank(3, 4);
+        bank.inscribe(&Tensor::new(
+            &[3, 4],
+            vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2, 0.0, 0.9, 0.25, -0.75, 0.4, -0.1],
+        )
+        .unwrap())
+        .unwrap();
+        let ins = bank.snapshot();
+        let x = [1.0f32, 0.5, 0.8, 0.2];
+        let mut rng = Pcg64::seed(2);
+        let want = bank.eval(&ins, &x, None, &mut rng).unwrap();
+        let mut got = vec![9.0f32; 3]; // stale values must be overwritten
+        bank.eval_into(&ins, &x, None, &mut rng, &mut got).unwrap();
+        assert_eq!(got, want);
+        let mut short = vec![0.0f32; 2];
+        assert!(bank.eval_into(&ins, &x, None, &mut rng, &mut short).is_err());
     }
 
     #[test]

@@ -33,4 +33,4 @@ pub use engine::{Engine, LoadedArtifact};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use native::NativeEngine;
 pub use photonic::{PhotonicEngine, PhysicsConfig};
-pub use step_engine::{open, Artifact, Backend, StepEngine};
+pub use step_engine::{open, open_threaded, Artifact, Backend, StepEngine};

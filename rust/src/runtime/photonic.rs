@@ -30,13 +30,28 @@
 //! architecture trains with DFA.
 //!
 //! Sharing contract: each [`StepEngine::load`] call builds an artifact
-//! with its *own* bank + RNG behind a `Mutex`, so worker-pool replicas
-//! (one `load` per worker, as the serve pool does) never contend, and the
+//! with its *own* bank behind a `Mutex`, so worker-pool replicas (one
+//! `load` per worker, as the serve pool does) never contend, and the
 //! artifacts satisfy the same `Send + Sync` bound as the native ones.
 //! Hardware-in-the-loop precedent: Launay et al., arXiv:2006.01475; Pai
 //! et al., arXiv:2205.08501.
+//!
+//! Execution model (the wavelength-parallel hot path): every dispatch has
+//! a short *sequential* phase — inscribe each bank-sized tile once and
+//! snapshot it (the §5 analog weight memory) — followed by a *row-parallel*
+//! phase in which the batch rows drive the snapshotted tiles through the
+//! read-only [`WeightBank::eval_into`] chain, sharded across a
+//! `std::thread::scope` worker pool ([`PhotonicEngine::open_threaded`],
+//! CLI `--threads`). Results are **bit-identical at any thread count**:
+//! each batch row draws its read noise from a counter-keyed stream
+//! ([`Pcg64::keyed`] over `(device seed, bank-op counter, row)`), a pure
+//! function of the row's index rather than of scheduling order, and a
+//! row's outputs accumulate in a fixed tile order. The bank-op counter
+//! and the optical-cycle tally live in atomics, so [`PhotonicArtifact::cycles`]
+//! never takes the bank lock.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::dfa::reference;
@@ -285,35 +300,109 @@ impl PhysicsConfig {
 /// accumulation vs the dense f32 reference GEMM.
 pub const IDEAL_LOGIT_TOL: f32 = 2e-3;
 
-/// The mutable device state of one loaded artifact: the bank, the
-/// converter pair and the engine-level stochastic state.
-struct BankState {
+/// The device state of one loaded artifact: the bank and the converter
+/// pair. Split from the old monolithic bank-state: everything stochastic
+/// now lives in per-row counter-keyed streams (see [`NoiseKey`]), so the
+/// device itself is mutated only during a dispatch's sequential
+/// inscription phase — the row-parallel eval phase borrows it immutably
+/// from every worker.
+struct Device {
     bank: WeightBank,
     dac: Quantizer,
     adc: Quantizer,
-    rng: Pcg64,
-    /// Optical cycles fired through this artifact (throughput accounting).
-    cycles: u64,
 }
 
-impl BankState {
-    fn new(physics: &PhysicsConfig) -> Result<BankState> {
-        Ok(BankState {
+/// Noise keying of one bank operation (one `bank_linear` /
+/// `bank_dfa_gradient` call): batch row `r` draws its read noise from
+/// `Pcg64::keyed(seed, op, r)` — a fresh stream per (operation, row), so
+/// a row's draws (including Box–Muller spare caching, which stays inside
+/// the row's own stream) are a pure function of its index, never of which
+/// worker thread ran it or how many rows came before it.
+#[derive(Clone, Copy)]
+struct NoiseKey {
+    /// Device seed ([`PhysicsConfig::seed`]).
+    seed: u64,
+    /// The artifact's bank-operation counter at this operation.
+    op: u64,
+}
+
+impl NoiseKey {
+    fn row_rng(self, row: usize) -> Pcg64 {
+        Pcg64::keyed(self.seed, self.op, row as u64)
+    }
+}
+
+/// Shard the rows of a row-major buffer across up to `threads` scoped
+/// workers and run `per_row(global_row_index, row_slice, scratch)` on
+/// each row. `make_scratch` builds one worker-local scratch value per
+/// worker (reusable buffers — allocated once per worker, not per row).
+/// Every row's work — including its read-noise draws, which come from a
+/// counter-keyed stream — is a pure function of the row index, so the
+/// result is bit-identical at any thread count; only wall-clock time
+/// changes. Returns the summed per-row optical-cycle counts.
+fn shard_rows<S>(
+    threads: usize,
+    out: &mut [f32],
+    row_len: usize,
+    make_scratch: impl Fn() -> S + Sync,
+    per_row: impl Fn(usize, &mut [f32], &mut S) -> Result<u64> + Sync,
+) -> Result<u64> {
+    if out.is_empty() || row_len == 0 {
+        return Ok(0);
+    }
+    let rows = out.len() / row_len;
+    let threads = threads.min(rows).max(1);
+    if threads == 1 {
+        let mut fired = 0u64;
+        let mut scratch = make_scratch();
+        for (i, row) in out.chunks_mut(row_len).enumerate() {
+            fired += per_row(i, row, &mut scratch)?;
+        }
+        return Ok(fired);
+    }
+    let rows_per = rows.div_ceil(threads);
+    let chunks: Vec<&mut [f32]> = out.chunks_mut(rows_per * row_len).collect();
+    let per_row = &per_row;
+    let make_scratch = &make_scratch;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(t, chunk)| {
+                scope.spawn(move || -> Result<u64> {
+                    let mut fired = 0u64;
+                    let mut scratch = make_scratch();
+                    for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                        fired += per_row(t * rows_per + i, row, &mut scratch)?;
+                    }
+                    Ok(fired)
+                })
+            })
+            .collect();
+        let mut fired = 0u64;
+        for h in handles {
+            fired += h.join().expect("photonic row worker panicked")?;
+        }
+        Ok(fired)
+    })
+}
+
+impl Device {
+    fn new(physics: &PhysicsConfig) -> Result<Device> {
+        Ok(Device {
             bank: WeightBank::new(physics.bank_config())?,
             dac: Quantizer::new(physics.dac_bits, 1.0),
             adc: Quantizer::new(physics.adc_bits, 1.0),
-            rng: Pcg64::new(physics.seed, 0x9107),
-            cycles: 0,
         })
     }
 
     /// Receiver path of one row readout: normalised chain output + read
     /// noise (gradient path only — callers pass `sigma = 0` for forward
-    /// inference), then the ADC.
-    fn readout(&mut self, sigma: f64, v: f32) -> f32 {
+    /// inference), then the ADC. `rng` is the batch row's keyed stream.
+    fn readout(&self, sigma: f64, v: f32, rng: &mut Pcg64) -> f32 {
         let mut v = v as f64;
         if sigma > 0.0 {
-            v += self.rng.normal(0.0, sigma);
+            v += rng.normal(0.0, sigma);
         }
         self.adc.quantize(v) as f32
     }
@@ -328,12 +417,13 @@ impl BankState {
     }
 
     /// Fire one (or, with negative values, two differential) optical
-    /// cycles driving the currently-snapshotted tile with the signed
-    /// channel values `vals`, and accumulate the digitally rescaled result
-    /// into `out[..n_rows]`.
+    /// cycles driving the snapshotted tile `ins` with the signed channel
+    /// values `vals`, and accumulate the digitally rescaled result into
+    /// `out[..n_rows]`. `ebuf` is the worker's reusable readout buffer
+    /// (length = bank rows); returns the cycles fired.
     #[allow(clippy::too_many_arguments)]
     fn drive_tile(
-        &mut self,
+        &self,
         sigma: f64,
         ins: &Inscription,
         n_rows: usize,
@@ -341,7 +431,9 @@ impl BankState {
         gains: Option<&[f32]>,
         amp: f32,
         out: &mut [f32],
-    ) -> Result<()> {
+        ebuf: &mut [f32],
+        rng: &mut Pcg64,
+    ) -> Result<u64> {
         let bc = self.bank.cols();
         // per-sample full scale: the DAC drives |v|/s onto the channels
         let mut s = 0.0f32;
@@ -351,7 +443,7 @@ impl BankState {
             }
         }
         if s <= 0.0 {
-            return Ok(()); // all channels dark (zero or non-finite input)
+            return Ok(0); // all channels dark (zero or non-finite input)
         }
         // stack scratch: validate() caps the bank at 108 WDM channels, and
         // this runs per (tile × batch row) — the training hot loop
@@ -376,19 +468,20 @@ impl BankState {
         // it, so a g'(a)=0 row reads exactly zero, like the reference model
         let row_sigma =
             |r: usize| gains.map_or(sigma, |g| sigma * (g[r] as f64).clamp(0.0, 1.0));
-        let pos = self.bank.eval(ins, &x_pos, gains, &mut self.rng)?;
-        self.cycles += 1;
-        for (r, (o, &p)) in out[..n_rows].iter_mut().zip(&pos).enumerate() {
-            *o += self.readout(row_sigma(r), p) * gain;
+        let mut fired = 0u64;
+        self.bank.eval_into(ins, x_pos, gains, rng, ebuf)?;
+        fired += 1;
+        for (r, (o, &p)) in out[..n_rows].iter_mut().zip(ebuf.iter()).enumerate() {
+            *o += self.readout(row_sigma(r), p, rng) * gain;
         }
         if any_neg {
-            let neg = self.bank.eval(ins, &x_neg, gains, &mut self.rng)?;
-            self.cycles += 1;
-            for (r, (o, &p)) in out[..n_rows].iter_mut().zip(&neg).enumerate() {
-                *o -= self.readout(row_sigma(r), p) * gain;
+            self.bank.eval_into(ins, x_neg, gains, rng, ebuf)?;
+            fired += 1;
+            for (r, (o, &p)) in out[..n_rows].iter_mut().zip(ebuf.iter()).enumerate() {
+                *o -= self.readout(row_sigma(r), p, rng) * gain;
             }
         }
-        Ok(())
+        Ok(fired)
     }
 }
 
@@ -405,11 +498,18 @@ fn inscription_amp(physics: &PhysicsConfig, bank: &WeightBank, w: &Tensor) -> f3
 }
 
 /// `y = x @ w [+ b]` with every MAC on the bank: `wᵀ` is tiled onto the
-/// array, inscribed once per tile, and each batch row is driven through
-/// the optical chain (Fig. 4(b) operation).
+/// array, inscribed once per tile (sequential phase), and each batch row
+/// is driven through the optical chain (Fig. 4(b) operation) by the
+/// row-parallel worker pool. Per output element the tile contributions
+/// accumulate in the fixed tiling order, so the result is bit-identical
+/// at any `threads`.
+#[allow(clippy::too_many_arguments)]
 fn bank_linear(
-    st: &mut BankState,
+    dev: &mut Device,
     physics: &PhysicsConfig,
+    threads: usize,
+    key: NoiseKey,
+    cycles: &AtomicU64,
     x: &Tensor,
     w: &Tensor,
     b: Option<&Tensor>,
@@ -422,17 +522,13 @@ fn bank_linear(
             w.rows()
         )));
     }
-    let tiling = Tiling::new(m, k, st.bank.rows(), st.bank.cols())?;
-    let amp = inscription_amp(physics, &st.bank, w);
-    let mut y = Tensor::zeros(&[batch, m]);
-    if let Some(b) = b {
-        for r in 0..batch {
-            y.row_mut(r).copy_from_slice(&b.data()[..m]);
-        }
-    }
-    let (br, bc) = (st.bank.rows(), st.bank.cols());
+    let tiling = Tiling::new(m, k, dev.bank.rows(), dev.bank.cols())?;
+    let amp = inscription_amp(physics, &dev.bank, w);
+    let (br, bc) = (dev.bank.rows(), dev.bank.cols());
+    // sequential phase: inscribe every tile once and snapshot it (§5
+    // analog weight memory) — the only part that needs the bank mutably
     let mut tile_w = Tensor::zeros(&[br, bc]);
-    let mut acc = vec![0.0f32; br];
+    let mut snaps = Vec::with_capacity(tiling.tiles.len());
     for tile in &tiling.tiles {
         tile_w.data_mut().fill(0.0);
         for r in 0..tile.rows() {
@@ -441,19 +537,41 @@ fn bank_linear(
                 tile_w.set(r, c, w.at(tile.col0 + c, tile.row0 + r) / amp);
             }
         }
-        st.inscribe(physics, &tile_w)?;
-        let ins = st.bank.snapshot();
-        for smp in 0..batch {
-            let vals = &x.row(smp)[tile.col0..tile.col1];
-            acc[..tile.rows()].fill(0.0);
-            // forward inference: converters yes, gradient read-noise no
-            st.drive_tile(0.0, &ins, tile.rows(), vals, None, amp, &mut acc)?;
-            for r in 0..tile.rows() {
-                let cur = y.at(smp, tile.row0 + r);
-                y.set(smp, tile.row0 + r, cur + acc[r]);
-            }
+        dev.inscribe(physics, &tile_w)?;
+        snaps.push(dev.bank.snapshot());
+    }
+    let mut y = Tensor::zeros(&[batch, m]);
+    if let Some(b) = b {
+        for r in 0..batch {
+            y.row_mut(r).copy_from_slice(&b.data()[..m]);
         }
     }
+    // row-parallel phase: batch rows are independent on the device
+    let dev = &*dev;
+    let fired = shard_rows(
+        threads,
+        y.data_mut(),
+        m,
+        // worker-local reusable buffers: (acc, ebuf)
+        || (vec![0.0f32; br], vec![0.0f32; br]),
+        |smp, y_row, scratch| {
+            let (acc, ebuf) = scratch;
+            let mut rng = key.row_rng(smp);
+            let mut fired = 0u64;
+            for (tile, ins) in tiling.tiles.iter().zip(&snaps) {
+                let vals = &x.row(smp)[tile.col0..tile.col1];
+                acc[..tile.rows()].fill(0.0);
+                // forward inference: converters yes, gradient read-noise no
+                fired +=
+                    dev.drive_tile(0.0, ins, tile.rows(), vals, None, amp, acc, ebuf, &mut rng)?;
+                for r in 0..tile.rows() {
+                    y_row[tile.row0 + r] += acc[r];
+                }
+            }
+            Ok(fired)
+        },
+    )?;
+    cycles.fetch_add(fired, Ordering::Relaxed);
     Ok(y)
 }
 
@@ -461,9 +579,13 @@ fn bank_linear(
 /// `bmat (m, k)`, error rows `e (batch, k)` and pre-activations
 /// `a (batch, m)`. The g′(a) ReLU mask rides on the TIA gains, so the
 /// Hadamard product costs no extra optical cycle (§3).
+#[allow(clippy::too_many_arguments)]
 fn bank_dfa_gradient(
-    st: &mut BankState,
+    dev: &mut Device,
     physics: &PhysicsConfig,
+    threads: usize,
+    key: NoiseKey,
+    cycles: &AtomicU64,
     bmat: &Tensor,
     e: &Tensor,
     a: &Tensor,
@@ -478,13 +600,12 @@ fn bank_dfa_gradient(
             a.shape()
         )));
     }
-    let tiling = Tiling::new(m, k, st.bank.rows(), st.bank.cols())?;
-    let amp = inscription_amp(physics, &st.bank, bmat);
-    let mut out = Tensor::zeros(&[m, batch]);
-    let (br, bc) = (st.bank.rows(), st.bank.cols());
+    let tiling = Tiling::new(m, k, dev.bank.rows(), dev.bank.cols())?;
+    let amp = inscription_amp(physics, &dev.bank, bmat);
+    let (br, bc) = (dev.bank.rows(), dev.bank.cols());
+    // sequential inscription phase (see bank_linear)
     let mut tile_w = Tensor::zeros(&[br, bc]);
-    let mut gains = vec![0.0f32; br];
-    let mut acc = vec![0.0f32; br];
+    let mut snaps = Vec::with_capacity(tiling.tiles.len());
     for tile in &tiling.tiles {
         tile_w.data_mut().fill(0.0);
         for r in 0..tile.rows() {
@@ -492,21 +613,56 @@ fn bank_dfa_gradient(
                 tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
             }
         }
-        st.inscribe(physics, &tile_w)?;
-        let ins = st.bank.snapshot();
-        for smp in 0..batch {
-            // TIA gains: g'(a) for live rows, padding rows gated off
-            gains.fill(0.0);
-            for r in 0..tile.rows() {
-                gains[r] = if a.at(smp, tile.row0 + r) > 0.0 { 1.0 } else { 0.0 };
+        dev.inscribe(physics, &tile_w)?;
+        snaps.push(dev.bank.snapshot());
+    }
+    // row-parallel phase into a (batch, m) scratch — each worker owns
+    // contiguous per-sample rows — transposed afterwards into the
+    // (m, batch) layout the digital update expects
+    let mut scratch = Tensor::zeros(&[batch, m]);
+    let dev = &*dev;
+    let sigma = physics.sigma;
+    let fired = shard_rows(
+        threads,
+        scratch.data_mut(),
+        m,
+        // worker-local reusable buffers: (gains, acc, ebuf)
+        || (vec![0.0f32; br], vec![0.0f32; br], vec![0.0f32; br]),
+        |smp, d_row, scratch| {
+            let (gains, acc, ebuf) = scratch;
+            let mut rng = key.row_rng(smp);
+            let mut fired = 0u64;
+            for (tile, ins) in tiling.tiles.iter().zip(&snaps) {
+                // TIA gains: g'(a) for live rows, padding rows gated off
+                gains.fill(0.0);
+                for r in 0..tile.rows() {
+                    gains[r] = if a.at(smp, tile.row0 + r) > 0.0 { 1.0 } else { 0.0 };
+                }
+                let vals = &e.row(smp)[tile.col0..tile.col1];
+                acc[..tile.rows()].fill(0.0);
+                fired += dev.drive_tile(
+                    sigma,
+                    ins,
+                    tile.rows(),
+                    vals,
+                    Some(&gains[..]),
+                    amp,
+                    acc,
+                    ebuf,
+                    &mut rng,
+                )?;
+                for r in 0..tile.rows() {
+                    d_row[tile.row0 + r] += acc[r];
+                }
             }
-            let vals = &e.row(smp)[tile.col0..tile.col1];
-            acc[..tile.rows()].fill(0.0);
-            st.drive_tile(physics.sigma, &ins, tile.rows(), vals, Some(&gains), amp, &mut acc)?;
-            for r in 0..tile.rows() {
-                let cur = out.at(tile.row0 + r, smp);
-                out.set(tile.row0 + r, smp, cur + acc[r]);
-            }
+            Ok(fired)
+        },
+    )?;
+    cycles.fetch_add(fired, Ordering::Relaxed);
+    let mut out = Tensor::zeros(&[m, batch]);
+    for smp in 0..batch {
+        for (j, &v) in scratch.row(smp).iter().enumerate() {
+            out.set(j, smp, v);
         }
     }
     Ok(out)
@@ -525,27 +681,98 @@ pub struct PhotonicArtifact {
     spec: ArtifactSpec,
     kind: Kind,
     physics: PhysicsConfig,
-    state: Mutex<BankState>,
+    /// Worker threads for the batch-row shards (resolved, >= 1).
+    threads: usize,
+    /// The bank + converters. The mutex serializes whole dispatches (the
+    /// inscription phase mutates the bank); within a dispatch the
+    /// row-parallel phase runs under the guard with scoped workers
+    /// borrowing the device immutably.
+    ///
+    /// Poisoned-lock recovery semantics: a panic inside a dispatch (e.g.
+    /// in a row worker) can leave the bank with a partially-updated
+    /// inscription, but never an *observable* one — every dispatch
+    /// re-inscribes each tile it uses before snapshotting and driving it,
+    /// so the next dispatch starts from freshly written ring state and
+    /// `into_inner` recovery is sound. Noise determinism is unaffected
+    /// too: the read-noise streams are counter-keyed (not carried in the
+    /// device), and the engine's banks run the Ideal BPD chain, so the
+    /// bank's internal stream has no value-bearing draws to lose.
+    device: Mutex<Device>,
+    /// Bank operations dispatched so far; keys the per-row noise streams.
+    op: AtomicU64,
+    /// Optical cycles fired; atomic so [`Self::cycles`] never takes the
+    /// bank lock.
+    cycles: AtomicU64,
 }
 
 impl PhotonicArtifact {
     /// Optical cycles fired through this artifact so far (differential
     /// encoding counts both the e⁺ and e⁻ passes, like the real chip).
+    /// Lock-free: safe to poll while a dispatch is in flight.
     pub fn cycles(&self) -> u64 {
-        self.state.lock().unwrap_or_else(|p| p.into_inner()).cycles
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// Claim the next bank-operation id. Sequential callers (the trainer
+    /// executes steps one by one) observe a deterministic sequence, which
+    /// makes every noise draw of a run reproducible; concurrent `execute`
+    /// calls on one artifact stay safe but interleave op ids.
+    fn next_key(&self) -> NoiseKey {
+        NoiseKey {
+            seed: self.physics.seed,
+            op: self.op.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    fn linear(
+        &self,
+        dev: &mut Device,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        bank_linear(
+            dev,
+            &self.physics,
+            self.threads,
+            self.next_key(),
+            &self.cycles,
+            x,
+            w,
+            b,
+        )
+    }
+
+    fn dfa_gradient(
+        &self,
+        dev: &mut Device,
+        bmat: &Tensor,
+        e: &Tensor,
+        a: &Tensor,
+    ) -> Result<Tensor> {
+        bank_dfa_gradient(
+            dev,
+            &self.physics,
+            self.threads,
+            self.next_key(),
+            &self.cycles,
+            bmat,
+            e,
+            a,
+        )
     }
 
     fn forward(
         &self,
-        st: &mut BankState,
+        dev: &mut Device,
         params: &[Tensor],
         x: &Tensor,
     ) -> Result<reference::Forward> {
-        let a1 = bank_linear(st, &self.physics, x, &params[0], Some(&params[1]))?;
+        let a1 = self.linear(dev, x, &params[0], Some(&params[1]))?;
         let h1 = a1.map(|v| v.max(0.0));
-        let a2 = bank_linear(st, &self.physics, &h1, &params[2], Some(&params[3]))?;
+        let a2 = self.linear(dev, &h1, &params[2], Some(&params[3]))?;
         let h2 = a2.map(|v| v.max(0.0));
-        let logits = bank_linear(st, &self.physics, &h2, &params[4], Some(&params[5]))?;
+        let logits = self.linear(dev, &h2, &params[4], Some(&params[5]))?;
         Ok(reference::Forward { a1, h1, a2, h2, logits })
     }
 }
@@ -557,10 +784,11 @@ impl Artifact for PhotonicArtifact {
 
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.spec.validate_inputs(inputs)?;
-        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        // see the `device` field docs for the poisoned-lock recovery story
+        let mut dev = self.device.lock().unwrap_or_else(|p| p.into_inner());
         match self.kind {
             Kind::Fwd => {
-                let f = self.forward(&mut st, &inputs[..6], &inputs[6])?;
+                let f = self.forward(&mut dev, &inputs[..6], &inputs[6])?;
                 Ok(vec![f.logits, f.a1, f.a2, f.h1, f.h2])
             }
             Kind::DfaStep => {
@@ -581,10 +809,10 @@ impl Artifact for PhotonicArtifact {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
                 let (bmat1, bmat2) = (&inputs[12], &inputs[13]);
                 let (x, y) = (&inputs[14], &inputs[15]);
-                let f = self.forward(&mut st, &state[..6], x)?;
+                let f = self.forward(&mut dev, &state[..6], x)?;
                 let (loss, e, correct) = reference::loss_and_error(&f.logits, y);
-                let d1t = bank_dfa_gradient(&mut st, &self.physics, bmat1, &e, &f.a1)?;
-                let d2t = bank_dfa_gradient(&mut st, &self.physics, bmat2, &e, &f.a2)?;
+                let d1t = self.dfa_gradient(&mut dev, bmat1, &e, &f.a1)?;
+                let d2t = self.dfa_gradient(&mut dev, bmat2, &e, &f.a2)?;
                 let grads = reference::grads_from_deltas(x, &f.h1, &f.h2, &e, &d1t, &d2t);
                 reference::sgd_momentum(&mut state, &grads, lr, momentum);
                 state.push(Tensor::scalar(loss));
@@ -599,18 +827,42 @@ impl Artifact for PhotonicArtifact {
 pub struct PhotonicEngine {
     native: NativeEngine,
     physics: PhysicsConfig,
+    /// Resolved batch-row worker count every loaded artifact shards with.
+    threads: usize,
 }
 
 impl PhotonicEngine {
     /// Engine over `artifacts_dir` (same config resolution as the native
-    /// engine: built-ins plus any manifest extras) with the given physics.
+    /// engine: built-ins plus any manifest extras) with the given physics,
+    /// sharding batch rows across all available cores.
     pub fn open(artifacts_dir: impl AsRef<Path>, physics: PhysicsConfig) -> Result<Self> {
+        Self::open_threaded(artifacts_dir, physics, 0)
+    }
+
+    /// [`Self::open`] with an explicit batch-row worker count (0 = all
+    /// cores, the CLI `--threads` convention). Thread count changes
+    /// wall-clock time only: per-row counter-keyed noise streams keep
+    /// every result bit-identical at any value.
+    pub fn open_threaded(
+        artifacts_dir: impl AsRef<Path>,
+        physics: PhysicsConfig,
+        threads: usize,
+    ) -> Result<Self> {
         physics.validate()?;
-        Ok(PhotonicEngine { native: NativeEngine::open(artifacts_dir)?, physics })
+        Ok(PhotonicEngine {
+            native: NativeEngine::open(artifacts_dir)?,
+            physics,
+            threads: crate::util::threads::resolve(threads),
+        })
     }
 
     pub fn physics(&self) -> &PhysicsConfig {
         &self.physics
+    }
+
+    /// The resolved batch-row worker count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -658,7 +910,10 @@ impl StepEngine for PhotonicEngine {
             spec,
             kind,
             physics: self.physics,
-            state: Mutex::new(BankState::new(&self.physics)?),
+            threads: self.threads,
+            device: Mutex::new(Device::new(&self.physics)?),
+            op: AtomicU64::new(0),
+            cycles: AtomicU64::new(0),
         }))
     }
 }
@@ -673,8 +928,34 @@ mod tests {
         PhysicsConfig { bank_rows: 7, bank_cols: 5, ..PhysicsConfig::ideal() }
     }
 
-    fn state_for(phys: &PhysicsConfig) -> BankState {
-        BankState::new(phys).unwrap()
+    fn dev_for(phys: &PhysicsConfig) -> Device {
+        Device::new(phys).unwrap()
+    }
+
+    /// Single-threaded `bank_linear` driver for the numerics tests.
+    fn linear(
+        dev: &mut Device,
+        phys: &PhysicsConfig,
+        op: u64,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        let key = NoiseKey { seed: phys.seed, op };
+        bank_linear(dev, phys, 1, key, &AtomicU64::new(0), x, w, b)
+    }
+
+    /// Single-threaded `bank_dfa_gradient` driver for the numerics tests.
+    fn gradient(
+        dev: &mut Device,
+        phys: &PhysicsConfig,
+        op: u64,
+        bmat: &Tensor,
+        e: &Tensor,
+        a: &Tensor,
+    ) -> Result<Tensor> {
+        let key = NoiseKey { seed: phys.seed, op };
+        bank_dfa_gradient(dev, phys, 1, key, &AtomicU64::new(0), bmat, e, a)
     }
 
     #[test]
@@ -731,19 +1012,22 @@ mod tests {
         // the satellite property: Tiling-driven bank matvec == dense
         // matmul, for shapes that pad both tile axes
         let phys = small_physics(); // 7 x 5 bank
-        let mut st = state_for(&phys);
+        let mut dev = dev_for(&phys);
         let mut rng = Pcg64::seed(21);
-        for (batch, k, m) in [
+        for (op, (batch, k, m)) in [
             (3usize, 11usize, 9usize), // ragged both ways
             (1, 5, 7),                 // exact fit
             (2, 6, 8),                 // one extra row/col
             (4, 3, 2),                 // smaller than one tile
             (2, 16, 15),               // multi-block ragged
-        ] {
+        ]
+        .into_iter()
+        .enumerate()
+        {
             let x = Tensor::randn(&[batch, k], 0.8, &mut rng);
             let w = Tensor::rand_uniform(&[k, m], -0.9, 0.9, &mut rng);
             let b = Tensor::rand_uniform(&[m], -0.2, 0.2, &mut rng);
-            let got = bank_linear(&mut st, &phys, &x, &w, Some(&b)).unwrap();
+            let got = linear(&mut dev, &phys, op as u64, &x, &w, Some(&b)).unwrap();
             let mut want = x.matmul(&w).unwrap();
             for r in 0..batch {
                 for (v, bv) in want.row_mut(r).iter_mut().zip(b.data()) {
@@ -763,11 +1047,11 @@ mod tests {
             lock: true,
             ..PhysicsConfig::ideal()
         };
-        let mut st = state_for(&phys);
+        let mut dev = dev_for(&phys);
         let mut rng = Pcg64::seed(4);
         let x = Tensor::rand_uniform(&[2, 7], 0.0, 1.0, &mut rng);
         let w = Tensor::rand_uniform(&[7, 12], -0.9, 0.9, &mut rng);
-        let got = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        let got = linear(&mut dev, &phys, 0, &x, &w, None).unwrap();
         let want = x.matmul(&w).unwrap();
         // lock residual ~2e-3/ring, amplified by the inscription gain and
         // summed over k terms: generous 5σ-style budget, plus correlation
@@ -787,8 +1071,8 @@ mod tests {
         let want = x.matmul(&w).unwrap();
         let err_at = |dac: u32, adc: u32| {
             let phys = PhysicsConfig { dac_bits: dac, adc_bits: adc, ..small_physics() };
-            let mut st = state_for(&phys);
-            let got = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+            let mut dev = dev_for(&phys);
+            let got = linear(&mut dev, &phys, 0, &x, &w, None).unwrap();
             got.data()
                 .iter()
                 .zip(want.data())
@@ -809,18 +1093,21 @@ mod tests {
         let x = Tensor::rand_uniform(&[1, 5], 0.0, 1.0, &mut rng);
         let w = Tensor::rand_uniform(&[5, 7], -0.9, 0.9, &mut rng);
         // forward inference is exempt from the lumped gradient-read σ
-        let a = bank_linear(&mut state_for(&phys), &phys, &x, &w, None).unwrap();
-        let c = bank_linear(&mut state_for(&clean), &clean, &x, &w, None).unwrap();
+        let a = linear(&mut dev_for(&phys), &phys, 0, &x, &w, None).unwrap();
+        let c = linear(&mut dev_for(&clean), &clean, 0, &x, &w, None).unwrap();
         assert_eq!(a, c, "sigma must not perturb the forward chain");
-        // the B·e path picks it up, deterministically per device seed
+        // the B·e path picks it up, deterministically per (seed, op, row)
         let bmat = Tensor::rand_uniform(&[7, 5], -0.9, 0.9, &mut rng);
         let e = Tensor::randn(&[2, 5], 0.5, &mut rng);
         let act = Tensor::full(&[2, 7], 1.0);
-        let g1 = bank_dfa_gradient(&mut state_for(&phys), &phys, &bmat, &e, &act).unwrap();
-        let g2 = bank_dfa_gradient(&mut state_for(&phys), &phys, &bmat, &e, &act).unwrap();
-        assert_eq!(g1, g2, "same device seed, same draw");
-        let g3 = bank_dfa_gradient(&mut state_for(&clean), &clean, &bmat, &e, &act).unwrap();
+        let g1 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
+        let g2 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
+        assert_eq!(g1, g2, "same device seed + op, same draw");
+        let g3 = gradient(&mut dev_for(&clean), &clean, 0, &bmat, &e, &act).unwrap();
         assert_ne!(g1, g3, "sigma=0.1 must perturb the gradient readout");
+        // a different bank-op counter is a different noise stream
+        let g4 = gradient(&mut dev_for(&phys), &phys, 1, &bmat, &e, &act).unwrap();
+        assert_ne!(g1, g4, "op counter must advance the noise stream");
     }
 
     #[test]
@@ -828,13 +1115,13 @@ mod tests {
         // regression companion to the converter NaN fix: one NaN feature
         // must not poison the other channels of the matvec
         let phys = small_physics();
-        let mut st = state_for(&phys);
+        let mut dev = dev_for(&phys);
         let mut x = Tensor::rand_uniform(&[1, 5], 0.1, 1.0, &mut Pcg64::seed(3));
         let w = Tensor::rand_uniform(&[5, 4], -0.9, 0.9, &mut Pcg64::seed(4));
-        let clean = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        let clean = linear(&mut dev, &phys, 0, &x, &w, None).unwrap();
         assert!(clean.data().iter().all(|v| v.is_finite()));
         x.set(0, 2, f32::NAN);
-        let poisoned = bank_linear(&mut st, &phys, &x, &w, None).unwrap();
+        let poisoned = linear(&mut dev, &phys, 1, &x, &w, None).unwrap();
         assert!(
             poisoned.data().iter().all(|v| v.is_finite()),
             "NaN leaked through the analog path: {:?}",
@@ -847,7 +1134,7 @@ mod tests {
     #[test]
     fn dfa_gradient_masks_inactive_rows() {
         let phys = small_physics();
-        let mut st = state_for(&phys);
+        let mut dev = dev_for(&phys);
         let mut rng = Pcg64::seed(6);
         let bmat = Tensor::rand_uniform(&[9, 4], -0.9, 0.9, &mut rng);
         let e = Tensor::randn(&[3, 4], 0.5, &mut rng);
@@ -855,7 +1142,7 @@ mod tests {
         for j in 0..9 {
             a.set(1, j, -1.0); // sample 1 fully inactive
         }
-        let d = bank_dfa_gradient(&mut st, &phys, &bmat, &e, &a).unwrap();
+        let d = gradient(&mut dev, &phys, 0, &bmat, &e, &a).unwrap();
         assert_eq!(d.shape(), &[9, 3]);
         for j in 0..9 {
             assert_eq!(d.at(j, 1), 0.0, "row {j} of the dead sample");
@@ -876,11 +1163,147 @@ mod tests {
         // enters pre-TIA, so the g'(a) mask gates it like the reference
         // model's mask x (B·e + noise)
         let noisy = PhysicsConfig { sigma: 0.2, ..small_physics() };
-        let dn = bank_dfa_gradient(&mut state_for(&noisy), &noisy, &bmat, &e, &a).unwrap();
+        let dn = gradient(&mut dev_for(&noisy), &noisy, 0, &bmat, &e, &a).unwrap();
         for j in 0..9 {
             assert_eq!(dn.at(j, 1), 0.0, "noisy dead row {j}");
         }
         assert_ne!(dn, d, "sigma=0.2 must perturb the live rows");
+    }
+
+    #[test]
+    fn row_sharding_is_bit_identical_at_any_thread_count() {
+        // the tentpole guarantee: every result — forward, gradient, cycle
+        // tally — is a pure function of the inputs, not of the thread count
+        let phys = PhysicsConfig {
+            sigma: 0.15,
+            dac_bits: 6,
+            adc_bits: 6,
+            ..small_physics()
+        };
+        let mut rng = Pcg64::seed(12);
+        let x = Tensor::rand_uniform(&[5, 11], 0.0, 1.0, &mut rng);
+        let w = Tensor::rand_uniform(&[11, 9], -0.9, 0.9, &mut rng);
+        let bmat = Tensor::rand_uniform(&[9, 11], -0.9, 0.9, &mut rng);
+        let e = Tensor::randn(&[5, 11], 0.5, &mut rng);
+        let act = Tensor::full(&[5, 9], 1.0);
+        let run = |threads: usize| {
+            let mut dev = dev_for(&phys);
+            let cycles = AtomicU64::new(0);
+            let key = |op| NoiseKey { seed: phys.seed, op };
+            let y = bank_linear(&mut dev, &phys, threads, key(0), &cycles, &x, &w, None)
+                .unwrap();
+            let g = bank_dfa_gradient(
+                &mut dev, &phys, threads, key(1), &cycles, &bmat, &e, &act,
+            )
+            .unwrap();
+            (y, g, cycles.load(Ordering::Relaxed))
+        };
+        let (y1, g1, c1) = run(1);
+        assert!(c1 > 0);
+        for threads in [2, 3, 8] {
+            let (y, g, c) = run(threads);
+            assert_eq!(y, y1, "{threads} threads: forward diverged");
+            assert_eq!(g, g1, "{threads} threads: gradient diverged");
+            assert_eq!(c, c1, "{threads} threads: cycle tally diverged");
+        }
+    }
+
+    #[test]
+    fn row_noise_streams_are_prefix_stable() {
+        // growing the batch must not change earlier rows' noise draws:
+        // each row's stream is keyed by its index, not carved from a
+        // shared sequential stream (the pre-refactor failure mode, where
+        // the second tile's draws shifted when a row was appended)
+        let phys = PhysicsConfig { sigma: 0.2, ..small_physics() };
+        let mut rng = Pcg64::seed(14);
+        let bmat = Tensor::rand_uniform(&[9, 11], -0.9, 0.9, &mut rng); // multi-tile
+        let e2 = Tensor::randn(&[2, 11], 0.5, &mut rng);
+        let extra = Tensor::randn(&[1, 11], 0.5, &mut rng);
+        let mut e3_data = e2.data().to_vec();
+        e3_data.extend_from_slice(extra.data());
+        let e3 = Tensor::new(&[3, 11], e3_data).unwrap();
+        let act2 = Tensor::full(&[2, 9], 1.0);
+        let act3 = Tensor::full(&[3, 9], 1.0);
+        let g2 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e2, &act2).unwrap();
+        let g3 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e3, &act3).unwrap();
+        for j in 0..9 {
+            for smp in 0..2 {
+                assert_eq!(
+                    g3.at(j, smp),
+                    g2.at(j, smp),
+                    "({j},{smp}): appending a row changed an earlier row's draws"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_execute_is_thread_count_invariant_and_counts_cycles() {
+        // end-to-end dfa_step dispatch under live read noise: engines
+        // opened at different --threads must produce identical outputs,
+        // and cycles() reads lock-free
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let phys = PhysicsConfig {
+            bank_rows: 16,
+            bank_cols: 12,
+            sigma: 0.1,
+            ..PhysicsConfig::ideal()
+        };
+        let dims = PhotonicEngine::open(&dir, phys).unwrap().net_dims("tiny").unwrap();
+        let mut rng = Pcg64::seed(5);
+        let state = NetState::init(&dims, &mut rng);
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let mut inputs = state.tensors.clone();
+        inputs.extend([
+            b1,
+            b2,
+            x,
+            y,
+            Tensor::zeros(&[dims.d_h1, dims.batch]),
+            Tensor::zeros(&[dims.d_h2, dims.batch]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.05),
+            Tensor::scalar(0.9),
+        ]);
+        let run = |threads: usize| {
+            let engine = PhotonicEngine::open_threaded(&dir, phys, threads).unwrap();
+            assert_eq!(engine.threads(), threads);
+            let art = engine.load("dfa_step_tiny").unwrap();
+            art.execute(&inputs).unwrap()
+        };
+        let want = run(1);
+        let got = run(4);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "output {i} diverged across thread counts");
+        }
+        // cycles() is lock-free and tallies the whole dispatch (the test
+        // module can build the concrete artifact directly)
+        let spec = NativeEngine::open(&dir)
+            .unwrap()
+            .load("dfa_step_tiny")
+            .unwrap()
+            .spec()
+            .clone();
+        let art = PhotonicArtifact {
+            spec,
+            kind: Kind::DfaStep,
+            physics: phys,
+            threads: 2,
+            device: Mutex::new(Device::new(&phys).unwrap()),
+            op: AtomicU64::new(0),
+            cycles: AtomicU64::new(0),
+        };
+        assert_eq!(art.cycles(), 0);
+        Artifact::execute(&art, &inputs).unwrap();
+        assert!(art.cycles() > 0, "dispatch must tally optical cycles");
+        assert!(art.op.load(Ordering::Relaxed) >= 5, "3 fwd + 2 gradient ops");
     }
 
     #[test]

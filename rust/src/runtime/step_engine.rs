@@ -117,18 +117,48 @@ impl Backend {
     }
 }
 
-/// Construct a [`StepEngine`] over `artifacts_dir` per the backend policy.
+/// Construct a [`StepEngine`] over `artifacts_dir` per the backend policy,
+/// sharding parallel work across all available cores.
 ///
 /// The directory may not exist at all for [`Backend::Native`] /
 /// [`Backend::Auto`]: the native engine then serves its built-in configs.
 pub fn open(artifacts_dir: impl AsRef<Path>, backend: Backend) -> Result<Arc<dyn StepEngine>> {
+    open_inner(artifacts_dir, backend, 0)
+}
+
+/// [`open`] with an explicit worker-thread count (0 = all cores, the CLI
+/// `--threads` convention). The photonic engine shards batch rows across
+/// this many workers; the native (and PJRT-fallback) GEMM kernels are
+/// capped process-wide via [`crate::tensor::ops::set_thread_cap`] — plain
+/// [`open`] leaves that cap untouched. The GEMM cap is deliberately
+/// process-global (matching the one-engine-per-process CLI): the last
+/// `open_threaded` call wins for every engine in the process. Library
+/// callers juggling several engines with different budgets should open
+/// engines directly (e.g. [`crate::runtime::PhotonicEngine::open_threaded`],
+/// which carries its row-shard width per engine) and drive
+/// `set_thread_cap` themselves. Every parallel path is bit-deterministic,
+/// so the count changes wall-clock time only, never results.
+pub fn open_threaded(
+    artifacts_dir: impl AsRef<Path>,
+    backend: Backend,
+    threads: usize,
+) -> Result<Arc<dyn StepEngine>> {
+    crate::tensor::ops::set_thread_cap(threads);
+    open_inner(artifacts_dir, backend, threads)
+}
+
+fn open_inner(
+    artifacts_dir: impl AsRef<Path>,
+    backend: Backend,
+    threads: usize,
+) -> Result<Arc<dyn StepEngine>> {
     let dir = artifacts_dir.as_ref();
     let has_manifest = dir.join("manifest.json").exists();
     match backend {
         Backend::Native => Ok(Arc::new(super::native::NativeEngine::open(dir)?)),
-        Backend::Photonic(physics) => {
-            Ok(Arc::new(super::photonic::PhotonicEngine::open(dir, physics)?))
-        }
+        Backend::Photonic(physics) => Ok(Arc::new(
+            super::photonic::PhotonicEngine::open_threaded(dir, physics, threads)?,
+        )),
         Backend::Pjrt => open_pjrt(dir, has_manifest),
         Backend::Auto => {
             if cfg!(feature = "pjrt") && has_manifest {
@@ -176,6 +206,18 @@ mod tests {
         for valid in ["auto", "native", "photonic", "pjrt"] {
             assert!(err.contains(valid), "{err} should list {valid}");
         }
+    }
+
+    #[test]
+    fn open_threaded_reaches_every_backend() {
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let physics = crate::runtime::photonic::PhysicsConfig::ideal();
+        let engine = open_threaded(&dir, Backend::Photonic(physics), 3).unwrap();
+        assert_eq!(engine.platform_name(), "photonic");
+        let engine = open_threaded(&dir, Backend::Native, 1).unwrap();
+        assert_eq!(engine.platform_name(), "native");
+        // restore the all-cores default cap (tests share the process)
+        crate::tensor::ops::set_thread_cap(0);
     }
 
     #[test]

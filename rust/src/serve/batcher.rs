@@ -43,6 +43,41 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Reject degenerate policies before a queue is built around them.
+    ///
+    /// * `max_batch == 0` would make the full-flush trigger
+    ///   (`q.len() >= max_batch`) always true, so `next_batch` would hand
+    ///   out empty batches in a hot loop — every worker spinning at 100%
+    ///   CPU while no request is ever served.
+    /// * `max_wait == 0` degenerates the timeout trigger into a busy
+    ///   poll: consumers flush one request at a time the instant it
+    ///   arrives, so micro-batching never engages.
+    /// * `queue_cap == 0` would deadlock every `push` on backpressure.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Config(
+                "serve: max_batch must be >= 1 (0 would flush empty \
+                 micro-batches in a hot loop)"
+                    .into(),
+            ));
+        }
+        if self.max_wait == Duration::ZERO {
+            return Err(Error::Config(
+                "serve: max_wait must be > 0 (a zero wait degenerates into \
+                 a busy poll; use e.g. --max-wait-ms 1)"
+                    .into(),
+            ));
+        }
+        if self.queue_cap == 0 {
+            return Err(Error::Config(
+                "serve: queue_cap must be >= 1 (0 would block every push)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Why a micro-batch was flushed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FlushCause {
@@ -92,10 +127,13 @@ pub struct Queue {
 }
 
 impl Queue {
-    pub fn new(policy: BatchPolicy) -> Queue {
-        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
-        assert!(policy.queue_cap >= 1, "queue_cap must be >= 1");
-        Queue {
+    /// Build a queue under `policy`. A degenerate policy (zero
+    /// `max_batch`, `max_wait` or `queue_cap`) is a clean
+    /// [`Error::Config`] instead of the panic (or, worse, the silent
+    /// empty-batch hot spin) it used to be — see [`BatchPolicy::validate`].
+    pub fn new(policy: BatchPolicy) -> Result<Queue> {
+        policy.validate()?;
+        Ok(Queue {
             policy,
             inner: Mutex::new(Inner {
                 q: VecDeque::new(),
@@ -104,7 +142,7 @@ impl Queue {
             }),
             work: Condvar::new(),
             space: Condvar::new(),
-        }
+        })
     }
 
     pub fn policy(&self) -> &BatchPolicy {
@@ -206,8 +244,25 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_policies_are_clean_config_errors() {
+        // regression: max_batch 0 used to satisfy `q.len() >= max_batch`
+        // unconditionally, flushing empty batches in a hot spin (and the
+        // assert-based guard panicked instead of returning an error)
+        for (max_batch, max_wait_ms, cap) in [(0, 5, 16), (4, 0, 16), (4, 5, 0)] {
+            let p = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                queue_cap: cap,
+            };
+            let err = Queue::new(p).map(|_| ()).unwrap_err().to_string();
+            assert!(err.starts_with("config:"), "{err}");
+        }
+        BatchPolicy::default().validate().unwrap();
+    }
+
+    #[test]
     fn full_flush_takes_exactly_max_batch() {
-        let q = Queue::new(policy(3, 10_000, 16));
+        let q = Queue::new(policy(3, 10_000, 16)).unwrap();
         let mut rxs = Vec::new();
         for i in 0..5 {
             let (r, rx) = req(i as f32);
@@ -228,7 +283,7 @@ mod tests {
 
     #[test]
     fn timeout_flushes_partial_batch() {
-        let q = Queue::new(policy(64, 5, 16));
+        let q = Queue::new(policy(64, 5, 16)).unwrap();
         let (r, _rx) = req(1.0);
         let enqueued = r.enqueued;
         q.push(r).unwrap();
@@ -247,7 +302,7 @@ mod tests {
 
     #[test]
     fn push_blocks_on_full_queue_until_drained() {
-        let q = Arc::new(Queue::new(policy(2, 10_000, 2)));
+        let q = Arc::new(Queue::new(policy(2, 10_000, 2)).unwrap());
         for i in 0..2 {
             let (r, _rx) = req(i as f32);
             q.push(r).unwrap();
@@ -268,7 +323,7 @@ mod tests {
 
     #[test]
     fn push_after_shutdown_errors() {
-        let q = Queue::new(policy(2, 1, 4));
+        let q = Queue::new(policy(2, 1, 4)).unwrap();
         q.shutdown();
         let (r, _rx) = req(1.0);
         assert!(q.push(r).is_err());

@@ -206,7 +206,7 @@ impl Server {
             .map(|_| engine.load(&format!("fwd_{config}")))
             .collect();
         let replicas = replicas?;
-        let queue = Arc::new(Queue::new(cfg.policy.clone()));
+        let queue = Arc::new(Queue::new(cfg.policy.clone())?);
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let mut workers = Vec::new();
         for (w, fwd) in replicas.into_iter().enumerate() {

@@ -7,6 +7,8 @@
 //! (stride-1 inner loop), cache blocking, and a multi-threaded row split
 //! for large products. No unsafe, no external BLAS.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::{Error, Result};
 
 use super::Tensor;
@@ -15,6 +17,29 @@ use super::Tensor;
 const BLOCK: usize = 64;
 /// Below this many f32 multiply-adds a single thread is faster.
 const PAR_THRESHOLD: usize = 1 << 20;
+
+/// Process-wide cap on the kernels' worker threads (0 = all cores), set
+/// once from the CLI's `--threads` flag. Row results are independent of
+/// the chunking, so the cap changes wall-clock time only — outputs stay
+/// bit-identical at any value.
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the parallel kernels at `threads` workers (0 = all cores).
+pub fn set_thread_cap(threads: usize) {
+    THREAD_CAP.store(threads, Ordering::Relaxed);
+}
+
+/// The resolved worker count the parallel kernels will use.
+pub fn thread_cap() -> usize {
+    crate::util::threads::resolve(THREAD_CAP.load(Ordering::Relaxed))
+}
+
+/// The raw cap value as last set (0 = all cores), unresolved — for
+/// callers that temporarily override the cap and must restore exactly
+/// what they found.
+pub fn thread_cap_raw() -> usize {
+    THREAD_CAP.load(Ordering::Relaxed)
+}
 
 /// C = A @ B for 2-D tensors.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
@@ -85,11 +110,7 @@ fn split_rows_parallel(
     n: usize,
     kernel: impl Fn(&[f32], &mut [f32]) + Copy + Send,
 ) {
-    let threads = std::thread::available_parallelism()
-        .map(|t| t.get())
-        .unwrap_or(1)
-        .min(m)
-        .max(1);
+    let threads = thread_cap().min(m).max(1);
     if threads <= 1 {
         return kernel(a, c);
     }
@@ -284,6 +305,20 @@ mod tests {
         let mut want = Tensor::zeros(&[256, 200]);
         matmul_blocked(a.data(), b.data(), want.data_mut(), 256, 128, 200);
         assert_close(got.data(), want.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn thread_cap_changes_chunking_not_results() {
+        let mut rng = Pcg64::seed(43);
+        let a = Tensor::randn(&[256, 128], 1.0, &mut rng);
+        let b = Tensor::randn(&[128, 200], 1.0, &mut rng);
+        let multi = matmul(&a, &b).unwrap();
+        set_thread_cap(1);
+        let single = matmul(&a, &b).unwrap();
+        set_thread_cap(0); // restore the all-cores default
+        assert!(thread_cap() >= 1);
+        // row chunking never changes the per-row accumulation order
+        assert_eq!(single.data(), multi.data());
     }
 
     #[test]

@@ -38,19 +38,36 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Every summary statistic of an empty sample set is pinned to 0
+    /// (not the NaN mean / panicking percentile / +∞ min the naive math
+    /// yields): a zero-sample result renders as an explicit "no data"
+    /// row instead of poisoning report aggregation downstream.
     pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
         self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
     }
 
     pub fn p50_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
         percentile(&self.samples_ns, 50.0)
     }
 
     pub fn p95_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
         percentile(&self.samples_ns, 95.0)
     }
 
     pub fn min_ns(&self) -> f64 {
+        // fold over the empty set would report +∞
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
         self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
@@ -66,7 +83,12 @@ impl BenchResult {
             fmt_ns(self.min_ns()),
         );
         if let Some((units, label)) = self.units_per_iter {
-            let per_sec = units / (self.mean_ns() * 1e-9);
+            // an empty result has no meaningful rate; 0/s beats NaN/s
+            let per_sec = if self.mean_ns() > 0.0 {
+                units / (self.mean_ns() * 1e-9)
+            } else {
+                0.0
+            };
             line.push_str(&format!(" throughput={} {label}/s", fmt_si(per_sec)));
         }
         line
@@ -219,6 +241,25 @@ mod tests {
         let flat = result_with(&[7.0; 16]);
         assert_eq!(flat.mean_ns(), 7.0);
         assert_eq!(flat.p50_ns(), 7.0);
+    }
+
+    #[test]
+    fn empty_samples_yield_zeros_not_garbage() {
+        // regression: mean was NaN (0/0), min +inf, and the percentile
+        // call panicked on an empty sample set
+        let empty = result_with(&[]);
+        assert_eq!(empty.mean_ns(), 0.0);
+        assert_eq!(empty.p50_ns(), 0.0);
+        assert_eq!(empty.p95_ns(), 0.0);
+        assert_eq!(empty.min_ns(), 0.0);
+        let line = empty.report();
+        assert!(line.contains("iters=0"), "{line}");
+        assert!(!line.contains("NaN") && !line.contains("inf"), "{line}");
+        // throughput over zero samples reports a zero rate, not NaN/s
+        let mut tp = result_with(&[]);
+        tp.units_per_iter = Some((1000.0, "MAC"));
+        let line = tp.report();
+        assert!(line.contains("throughput=0.00 MAC/s"), "{line}");
     }
 
     #[test]

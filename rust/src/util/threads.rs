@@ -1,0 +1,41 @@
+//! Thread-count resolution shared by every parallel subsystem.
+//!
+//! One convention, everywhere a `--threads`/`threads` knob appears
+//! (tensor kernels, the photonic row shards, the physics-sweep grid,
+//! dataset synthesis): `0` means "use every core the OS grants us",
+//! any other value is taken literally. Centralising the
+//! `available_parallelism` fallback keeps the CLI default and the
+//! library defaults in lockstep — and because every parallel path in
+//! this crate is bit-deterministic by construction, the resolved value
+//! only ever changes wall-clock time, never results.
+
+/// Cores the OS reports as available (>= 1; single-core fallback when
+/// the query fails, e.g. in restricted sandboxes).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a user-facing thread knob: `0` = [`available`], otherwise the
+/// literal request (callers cap it against their own work-item count).
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        available()
+    } else {
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_semantics() {
+        assert!(available() >= 1);
+        assert_eq!(resolve(0), available());
+        assert_eq!(resolve(1), 1);
+        assert_eq!(resolve(7), 7);
+    }
+}

@@ -121,6 +121,89 @@ fn paper_preset_trains_under_full_physics() {
     assert!(res.total_steps == 4, "{}", res.total_steps);
 }
 
+/// A small noisy operating point that exercises the whole stochastic
+/// path: live read noise, real converters, multi-tile layers.
+fn noisy_physics() -> PhysicsConfig {
+    PhysicsConfig {
+        bank_rows: 16,
+        bank_cols: 12,
+        dac_bits: 6,
+        adc_bits: 6,
+        sigma: 0.1,
+        ..PhysicsConfig::ideal()
+    }
+}
+
+#[test]
+fn photonic_training_is_bit_identical_across_thread_counts() {
+    // the tentpole acceptance: train under live read noise at --threads 1
+    // and --threads 4 and compare the checkpoints byte for byte — the
+    // per-row counter-keyed noise streams make the trajectory a pure
+    // function of the inputs, never of scheduling
+    let physics = noisy_physics();
+    let ckpt_at = |threads: usize| {
+        let engine = runtime::open_threaded(
+            "artifacts",
+            Backend::Photonic(physics),
+            threads,
+        )
+        .unwrap();
+        let mut cfg = tiny_cfg(Some(physics));
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(3);
+        cfg.n_train = 64;
+        cfg.threads = threads;
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let (train, test) = t.load_data().unwrap();
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert!(res.test_acc.is_finite());
+        let path =
+            std::env::temp_dir().join(format!("pdfa_thread_inv_{threads}.ckpt"));
+        t.save_checkpoint(&path).unwrap();
+        std::fs::read(&path).unwrap()
+    };
+    let a = ckpt_at(1);
+    let b = ckpt_at(4);
+    assert_eq!(a, b, "checkpoints diverged across thread counts");
+}
+
+#[test]
+fn physics_sweep_table_is_thread_count_invariant() {
+    // `pdfa sweep-physics` output must not depend on --threads: compare
+    // the rendered tables minus the wall-clock column
+    use photonic_dfa::experiments::{physics_sweep, render_table, SweepSettings};
+    let settings = |threads: usize| SweepSettings {
+        artifacts_dir: "artifacts".into(),
+        config: "tiny".into(),
+        base: noisy_physics(),
+        epochs: 1,
+        seed: 5,
+        n_train: 64,
+        n_test: 32,
+        max_steps_per_epoch: Some(2),
+        threads,
+    };
+    // the wall column is the only non-deterministic one; it renders as
+    // two whitespace tokens ("<num> <unit>", util::benchx::fmt_ns)
+    let strip_wall = |table: String| -> Vec<String> {
+        table
+            .lines()
+            .map(|l| {
+                let toks: Vec<&str> = l.split_whitespace().collect();
+                toks[..toks.len().saturating_sub(2)].join(" ")
+            })
+            .collect()
+    };
+    let seq = strip_wall(render_table(
+        &physics_sweep(&settings(1), &[0, 4], &[0.0, 0.1]).unwrap(),
+    ));
+    let par = strip_wall(render_table(
+        &physics_sweep(&settings(4), &[0, 4], &[0.0, 0.1]).unwrap(),
+    ));
+    assert_eq!(seq.len(), 5); // header + 4 grid cells
+    assert_eq!(seq, par, "sweep table diverged across thread counts");
+}
+
 #[test]
 fn checkpoint_refuses_resume_under_different_physics() {
     let physics = PhysicsConfig::ideal();
