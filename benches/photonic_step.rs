@@ -73,6 +73,20 @@ fn main() {
             || step.execute(&step_inputs).unwrap(),
         );
         println!("{}", r.report());
+
+        // the telemetry roll-up of everything the bench dispatched: the
+        // §5-modeled energy figure next to the wall-clock numbers above
+        let t = engine.telemetry();
+        println!(
+            "photonic/telemetry_{label}: {} MACs ({} on-bank), {} cycles, \
+             {} modeled{}",
+            t.macs,
+            t.photonic_macs,
+            t.cycles,
+            photonic_dfa::telemetry::report::fmt_joules(t.energy_j),
+            t.pj_per_mac()
+                .map_or(String::new(), |pj| format!(", {pj:.2} pJ/MAC")),
+        );
     }
 
     // ---- batch-row sharding: 1 thread vs all cores, mnist-sized ----

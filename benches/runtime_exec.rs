@@ -42,6 +42,20 @@ fn main() {
             fwd.execute(&inputs).unwrap()
         });
         println!("{}", r.report());
+
+        // analytic MAC cost of one dispatch (telemetry layer), giving the
+        // wall-clock MAC/s this backend sustains on the fwd path
+        let macs_per_exec =
+            photonic_dfa::telemetry::macs_forward(&dims) as f64;
+        let mac_per_s = if r.mean_ns() > 0.0 {
+            macs_per_exec / (r.mean_ns() * 1e-9)
+        } else {
+            0.0
+        };
+        println!(
+            "runtime/fwd_macs_{config}: {macs_per_exec} MACs/dispatch, {} MAC/s",
+            photonic_dfa::util::benchx::fmt_si(mac_per_s)
+        );
     }
 
     // artifact load cost (for PJRT: HLO compile, amortised once per

@@ -37,6 +37,17 @@ impl Metrics {
         *self.timers.entry(key).or_default() += d;
     }
 
+    /// Fold a telemetry delta into the counter set under stable keys
+    /// (`macs`, `bank_macs`, `optical_cycles`, `bank_ops`). Energy is a
+    /// float and stays in the run record's dedicated `telemetry` block
+    /// rather than in these integer counters.
+    pub fn add_telemetry(&mut self, t: &crate::telemetry::Telemetry) {
+        self.add("macs", t.macs);
+        self.add("bank_macs", t.photonic_macs);
+        self.add("optical_cycles", t.cycles);
+        self.add("bank_ops", t.bank_ops);
+    }
+
     pub fn seconds(&self, key: &str) -> f64 {
         self.timers.get(key).map(|d| d.as_secs_f64()).unwrap_or(0.0)
     }
@@ -96,6 +107,25 @@ mod tests {
         assert_eq!(out, 42);
         assert!(m.seconds("work") >= 0.004);
         assert!(m.rate("steps", "work") > 0.0);
+    }
+
+    #[test]
+    fn telemetry_folds_into_counters() {
+        use crate::telemetry::Telemetry;
+        let mut m = Metrics::new();
+        let t = Telemetry {
+            macs: 100,
+            photonic_macs: 60,
+            cycles: 7,
+            bank_ops: 2,
+            energy_j: 1e-9,
+        };
+        m.add_telemetry(&t);
+        m.add_telemetry(&t);
+        assert_eq!(m.count("macs"), 200);
+        assert_eq!(m.count("bank_macs"), 120);
+        assert_eq!(m.count("optical_cycles"), 14);
+        assert_eq!(m.count("bank_ops"), 4);
     }
 
     #[test]

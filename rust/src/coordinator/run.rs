@@ -5,6 +5,14 @@
 //! into the same directory through [`crate::dfa::checkpoint`]. History is
 //! plain JSON so result tables can be regenerated from recorded runs
 //! without re-training.
+//!
+//! Telemetry contract: each history record carries the epoch's hardware
+//! counters (`telemetry`: MACs, optical cycles, bank ops, modeled
+//! energy — see [`crate::telemetry`]) plus the wall-clock `mac_per_s`
+//! rate, and `result.json` carries the run totals. The counter objects
+//! are byte-identical at any `--threads` value; only the rate and
+//! `wall_s` fields vary. `pdfa report <run-dir>` renders them against
+//! the paper's §5 targets via [`crate::telemetry::report`].
 
 use std::path::{Path, PathBuf};
 

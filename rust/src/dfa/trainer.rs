@@ -27,7 +27,9 @@ use crate::coordinator::pipeline::BatchFeeder;
 use crate::data::Dataset;
 use crate::runtime::manifest::NetDims;
 use crate::runtime::{Artifact, StepEngine};
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
+use crate::util::benchx::fmt_si;
 use crate::util::json::Value;
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
@@ -42,6 +44,11 @@ pub struct EpochStats {
     pub val_acc: Option<f64>,
     pub wall_s: f64,
     pub steps: usize,
+    /// Hardware counters accrued during this epoch (training steps plus
+    /// the epoch's evaluation passes). The counter values are
+    /// bit-identical at any `--threads` count; only rates derived from
+    /// `wall_s` vary.
+    pub telemetry: Telemetry,
 }
 
 impl EpochStats {
@@ -56,6 +63,13 @@ impl EpochStats {
             ),
             ("wall_s", Value::Number(self.wall_s)),
             ("steps", Value::Number(self.steps as f64)),
+            // deterministic counters in their own object; the wall-clock
+            // dependent rate outside it (see telemetry module docs)
+            ("telemetry", self.telemetry.to_json()),
+            (
+                "mac_per_s",
+                Value::Number(self.telemetry.macs_per_second(self.wall_s)),
+            ),
         ])
     }
 }
@@ -69,8 +83,14 @@ pub struct TrainResult {
     /// includes the pre-resume epochs, matching the checkpoint's count.
     pub total_steps: usize,
     pub wall_s: f64,
-    /// Gradient-matvec MACs performed on the (simulated) photonic path.
+    /// Gradient-matvec MACs performed on the (simulated) photonic path
+    /// (the pre-telemetry analytic counter, kept for continuity of the
+    /// run-record schema; `telemetry.macs` is the full accounting).
     pub photonic_macs: u64,
+    /// Hardware counters accrued over the whole run (every training
+    /// step and evaluation pass since this trainer was constructed or
+    /// restored): MACs, optical cycles, modeled §5 energy.
+    pub telemetry: Telemetry,
 }
 
 /// The coordinator-owned trainer.
@@ -91,6 +111,12 @@ pub struct Trainer {
     epochs_done: usize,
     /// Optimizer steps across the whole run, including pre-resume epochs.
     steps_done: u64,
+    /// Engine telemetry at construction: the run's counters are reported
+    /// as a delta from here, so a shared engine (sweep cells, servers)
+    /// never leaks another run's work into this one.
+    tel_base: Telemetry,
+    /// Engine telemetry at the end of the last completed epoch.
+    tel_last: Telemetry,
 }
 
 impl Trainer {
@@ -153,6 +179,7 @@ impl Trainer {
             _ => None,
         };
 
+        let tel_base = engine.telemetry();
         Ok(Trainer {
             cfg,
             dims,
@@ -168,6 +195,8 @@ impl Trainer {
             metrics: Metrics::new(),
             epochs_done: 0,
             steps_done: 0,
+            tel_base,
+            tel_last: tel_base,
         })
     }
 
@@ -489,6 +518,10 @@ impl Trainer {
             } else {
                 None
             };
+            let tel_now = self.engine.telemetry();
+            let epoch_tel = tel_now.delta(&self.tel_last);
+            self.tel_last = tel_now;
+            self.metrics.add_telemetry(&epoch_tel);
             let stats = EpochStats {
                 epoch,
                 train_loss: loss_sum / steps.max(1) as f64,
@@ -496,16 +529,21 @@ impl Trainer {
                 val_acc,
                 wall_s: e0.elapsed().as_secs_f64(),
                 steps,
+                telemetry: epoch_tel,
             };
             crate::log_info!(
-                "epoch {epoch:3}: loss {:.4} train_acc {:.4} val_acc {} ({:.1}s, {} steps)",
+                "epoch {epoch:3}: loss {:.4} train_acc {:.4} val_acc {} ({:.1}s, {} steps, {} MAC/s{})",
                 stats.train_loss,
                 stats.train_acc,
                 stats
                     .val_acc
                     .map_or("-".to_string(), |a| format!("{a:.4}")),
                 stats.wall_s,
-                steps
+                steps,
+                fmt_si(epoch_tel.macs_per_second(stats.wall_s)),
+                epoch_tel
+                    .pj_per_mac()
+                    .map_or(String::new(), |pj| format!(", {pj:.2} pJ/MAC modeled")),
             );
             on_epoch(&stats);
             history.push(stats);
@@ -525,12 +563,18 @@ impl Trainer {
         }
 
         let test_acc = self.evaluate(&test)?;
+        // run totals: everything this trainer dispatched (training steps,
+        // per-epoch evals, and this final test eval) since construction
+        let final_tel = self.engine.telemetry();
+        let run_tel = final_tel.delta(&self.tel_base);
+        self.tel_last = final_tel;
         Ok(TrainResult {
             history,
             test_acc,
             total_steps: self.steps_done as usize,
             wall_s: t0.elapsed().as_secs_f64(),
             photonic_macs: self.metrics.count("photonic_macs"),
+            telemetry: run_tel,
         })
     }
 }
@@ -599,6 +643,29 @@ mod tests {
         );
         assert!(res.test_acc > 0.5, "test acc {}", res.test_acc);
         assert!(res.photonic_macs > 0);
+    }
+
+    #[test]
+    fn epoch_telemetry_sums_into_run_total() {
+        let mut t = Trainer::new(engine(), tiny_cfg()).unwrap();
+        let train = Arc::new(tiny_data(256, 1));
+        let test = Arc::new(tiny_data(64, 2));
+        let mut epoch_macs = 0u64;
+        let res = t
+            .train(train, test, |s| {
+                // every epoch dispatches work and records it
+                assert!(s.telemetry.macs > 0, "epoch {} counted nothing", s.epoch);
+                assert_eq!(s.telemetry.cycles, 0, "native backend fires no optics");
+                epoch_macs += s.telemetry.macs;
+            })
+            .unwrap();
+        // per-epoch: 32 steps × 28672 (dfa_step) + 8 eval fwd × 13312
+        assert_eq!(epoch_macs, 3 * (32 * 28_672 + 8 * 13_312));
+        // the run total additionally counts the final test evaluation
+        assert_eq!(res.telemetry.macs - epoch_macs, 8 * 13_312);
+        assert_eq!(res.telemetry.energy_j, 0.0);
+        // metrics folded the same counters
+        assert_eq!(t.metrics.count("macs"), epoch_macs);
     }
 
     #[test]

@@ -1,4 +1,10 @@
 //! Component power table (§5) with provenance.
+//!
+//! These per-part numbers feed both the analytic tables (`pdfa energy`)
+//! and the runtime accrual path: [`crate::energy::EnergyModel`] rolls
+//! them up into joules-per-optical-cycle for the telemetry layer, so a
+//! training run's modeled energy is priced from exactly the same §5
+//! budget as the headline E_op figures.
 
 use crate::photonics::constants as k;
 

@@ -9,9 +9,15 @@
 //! * compute density: 5.78 TOPS/mm² at the 47.4 µm × 73.0 µm MAC cell
 //!
 //! * [`components`] — per-part power table with §5 provenance
-//! * [`model`]      — Eqs. (2)/(4) and E_op
+//! * [`model`]      — Eqs. (2)/(4), E_op, and the [`EnergyModel`] that
+//!   prices the telemetry layer's optical cycles in joules
 //! * [`sweep`]      — the Fig. 6 optimiser over bank aspect ratios
 //! * [`area`]       — compute density
+//!
+//! The analytic tables are rendered by `pdfa energy`; the *runtime* side
+//! — attaching [`EnergyModel`] to a live photonic engine so every
+//! training step accrues modeled joules — lives in [`crate::telemetry`]
+//! and surfaces through `pdfa report`.
 
 pub mod area;
 pub mod components;
@@ -19,5 +25,5 @@ pub mod model;
 pub mod sweep;
 
 pub use components::{ComponentPowers, MrrTuning};
-pub use model::{ArchitectureModel, PowerBreakdown};
+pub use model::{ArchitectureModel, EnergyModel, PowerBreakdown};
 pub use sweep::{optimal_energy_curve, OptimalPoint};

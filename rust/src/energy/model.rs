@@ -80,6 +80,54 @@ impl ArchitectureModel {
     }
 }
 
+/// Runtime energy-accrual model: prices the telemetry layer's optical
+/// cycles in joules under the paper's §5 component budget (laser, MRR
+/// tuning, DAC, TIA, ADC — balanced photodetection is passive).
+///
+/// One optical cycle drives the whole M × N bank for one symbol period,
+/// so a cycle costs `P_total / f_s` joules (Eq. 4 over Eq. 2's rate).
+/// The photonic engine builds one of these from its
+/// [`crate::runtime::PhysicsConfig`] bank geometry and multiplies it
+/// into every [`crate::telemetry::Telemetry`] snapshot.
+///
+/// ```
+/// use photonic_dfa::energy::{EnergyModel, MrrTuning};
+///
+/// // the §5 bank: 50 × 20 at 10 GHz, heater-locked
+/// let m = EnergyModel::for_bank(50, 20, MrrTuning::HeaterLocked);
+/// // one cycle = 1000 MACs = 2000 ops at ~1 pJ/op => ~2 nJ
+/// let per_cycle = m.joules_per_cycle();
+/// assert!((per_cycle - 2.0e-9).abs() < 0.2e-9, "{per_cycle}");
+/// assert_eq!(m.joules(10), 10.0 * per_cycle);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    arch: ArchitectureModel,
+}
+
+impl EnergyModel {
+    /// Model for an M × N bank with the paper's §5 part selection and
+    /// the given MRR tuning scheme.
+    pub fn for_bank(rows: usize, cols: usize, tuning: MrrTuning) -> EnergyModel {
+        EnergyModel { arch: ArchitectureModel::paper(tuning).with_dims(rows, cols) }
+    }
+
+    /// The underlying Eq. (2)/(4) architecture model.
+    pub fn arch(&self) -> &ArchitectureModel {
+        &self.arch
+    }
+
+    /// Joules per optical cycle: `P_total / f_s`.
+    pub fn joules_per_cycle(&self) -> f64 {
+        self.arch.power_breakdown().total_w() / self.arch.f_s_hz
+    }
+
+    /// Modeled energy of `cycles` optical cycles.
+    pub fn joules(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.joules_per_cycle()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +186,19 @@ mod tests {
         let mid = base.with_dims(50, 20).energy_per_op();
         let big = base.with_dims(200, 50).energy_per_op();
         assert!(small > mid && mid > big, "{small} {mid} {big}");
+    }
+
+    #[test]
+    fn energy_model_prices_cycles_consistently() {
+        // J/cycle over the cycle's M·N MACs == energy_per_mac (= 2·E_op)
+        let m = EnergyModel::for_bank(50, 20, MrrTuning::HeaterLocked);
+        let per_mac = m.joules_per_cycle() / (50.0 * 20.0);
+        assert!((per_mac - m.arch().energy_per_mac()).abs() < 1e-18);
+        assert_eq!(m.joules(0), 0.0);
+        assert!((m.joules(3) - 3.0 * m.joules_per_cycle()).abs() < 1e-18);
+        // trimming removes the heater budget
+        let t = EnergyModel::for_bank(50, 20, MrrTuning::Trimmed);
+        assert!(t.joules_per_cycle() < 0.5 * m.joules_per_cycle());
     }
 
     #[test]

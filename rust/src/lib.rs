@@ -25,9 +25,27 @@
 //! requires vendoring the `xla` crate by hand — see the note in
 //! `Cargo.toml` — since it is not part of the offline dependency set.
 //!
+//! Every engine reports hardware [`telemetry`] — analytic MAC counts,
+//! optical cycles, and (on the photonic backend) modeled energy under
+//! the paper's §5 component budget — surfaced per epoch in run records,
+//! per request window in serve stats, and as a paper-comparison table by
+//! `pdfa report`:
+//!
+//! ```
+//! use photonic_dfa::runtime::{open, Backend};
+//!
+//! let engine = open("artifacts", Backend::Native).unwrap();
+//! assert_eq!(engine.platform_name(), "native");
+//! let fwd = engine.load("fwd_tiny").unwrap();
+//! assert_eq!(fwd.spec().inputs.len(), 7); // w1 b1 w2 b2 w3 b3 x
+//! // nothing executed yet: the telemetry counters are still zero
+//! assert!(engine.telemetry().is_empty());
+//! ```
+//!
 //! See `README.md` for the workspace layout, test/bench entry points and
-//! the `pjrt` feature flag, and `ROADMAP.md` for the project north star
-//! and open items.
+//! the `pjrt` feature flag, `DESIGN.md` for the module map and subsystem
+//! contracts, `EXPERIMENTS.md` for the paper-figure reproduction guide,
+//! and `ROADMAP.md` for the project north star and open items.
 
 pub mod coordinator;
 pub mod data;
@@ -39,6 +57,7 @@ pub mod gemm;
 pub mod photonics;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 

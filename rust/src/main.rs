@@ -11,6 +11,7 @@
 //! pdfa characterize     MRR profile + single-MRR multiplies (Fig. 3(b,c))
 //! pdfa inner-product    1x4 photonic inner products (Fig. 5(a))
 //! pdfa energy           Eq. 2-4 headline numbers + Fig. 6 table
+//! pdfa report           telemetry of a recorded run vs the §5 targets
 //! pdfa gen-data         write the synthetic digit dataset as IDX files
 //! pdfa info             list artifacts and configs in the manifest
 //! ```
@@ -29,6 +30,7 @@ use photonic_dfa::experiments;
 use photonic_dfa::photonics::BpdMode;
 use photonic_dfa::runtime::{self, Backend, PhysicsConfig, StepEngine};
 use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
+use photonic_dfa::telemetry::report as telemetry_report;
 use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
 use photonic_dfa::util::json::Value;
 use photonic_dfa::util::logging;
@@ -72,6 +74,17 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "energy" => run_or_help(cmd,
             "Eqs. 2-4 headline numbers and the Fig. 6 sweep",
             &energy_specs(), rest, wants_help, cmd_energy),
+        "report" => {
+            // `pdfa report <path>` reads naturally; rewrite the leading
+            // positional into the declared --path flag
+            let mut rest = rest.to_vec();
+            if rest.first().is_some_and(|a| !a.starts_with("--")) {
+                rest.insert(0, "--path".into());
+            }
+            run_or_help(cmd,
+                "telemetry of a recorded run (or checkpoint) vs the paper's §5 targets",
+                &report_specs(), &rest, wants_help, cmd_report)
+        }
         "gen-data" => run_or_help(cmd,
             "generate the synthetic digit dataset as IDX files",
             &gendata_specs(), rest, wants_help, cmd_gen_data),
@@ -115,6 +128,7 @@ fn print_global_help() {
          \u{20}  characterize       MRR profile + multiplies (Fig. 3(b,c))\n\
          \u{20}  inner-product      1x4 inner-product stats (Fig. 5(a))\n\
          \u{20}  energy             Eq. 2-4 + Fig. 6 tables\n\
+         \u{20}  report             run telemetry vs the §5 targets (MAC/s, pJ/MAC)\n\
          \u{20}  gen-data           write synthetic IDX dataset\n\
          \u{20}  info               inspect the artifact manifest\n\n\
          run `pdfa <command> --help` for options"
@@ -281,13 +295,32 @@ fn cmd_train(a: &Args) -> Result<()> {
             ("wall_s", Value::Number(result.wall_s)),
             ("photonic_macs", Value::Number(result.photonic_macs as f64)),
             ("metrics", trainer.metrics.to_json()),
+            // deterministic counters (byte-identical at any --threads);
+            // the wall-clock rate rides outside the counter object
+            ("telemetry", result.telemetry.to_json()),
+            (
+                "mac_per_s",
+                Value::Number(result.telemetry.macs_per_second(result.wall_s)),
+            ),
         ]),
     )?;
     println!(
         "test accuracy: {:.4} ({} steps, {:.1}s, {} photonic MACs)",
         result.test_acc, result.total_steps, result.wall_s, result.photonic_macs
     );
+    println!(
+        "telemetry: {} MACs, {} MAC/s{}",
+        result.telemetry.macs,
+        photonic_dfa::util::benchx::fmt_si(
+            result.telemetry.macs_per_second(result.wall_s)
+        ),
+        result
+            .telemetry
+            .pj_per_mac()
+            .map_or(String::new(), |pj| format!(", {pj:.2} pJ/MAC modeled")),
+    );
     println!("run artifacts in {}", recorder.dir.display());
+    println!("telemetry report: pdfa report {}", recorder.dir.display());
     if let Some(path) = &trainer.cfg.save_path {
         println!("checkpoint: {path}");
     }
@@ -692,6 +725,29 @@ fn cmd_energy(a: &Args) -> Result<()> {
         experiments::fig6_rows(25, a.usize("fig6-max-cells")?, a.usize("fig6-points")?)
     {
         println!("{cells:>7}   {:>12.3}      {:>12.3}", h * 1e12, t * 1e12);
+    }
+    Ok(())
+}
+
+// ---------------- report ----------------
+
+fn report_specs() -> Vec<ArgSpec> {
+    vec![ArgSpec::req(
+        "path",
+        "a `pdfa train` run directory (measured telemetry) or a checkpoint \
+         file (analytic cost); the leading positional argument is accepted \
+         too: `pdfa report runs/my_run`",
+    )]
+}
+
+fn cmd_report(a: &Args) -> Result<()> {
+    let path = std::path::Path::new(a.str("path"));
+    if path.is_dir() {
+        let run = telemetry_report::load_run(path)?;
+        print!("{}", telemetry_report::render_run(&run));
+    } else {
+        let ckpt = Checkpoint::load(path)?;
+        print!("{}", telemetry_report::render_checkpoint(path, &ckpt));
     }
     Ok(())
 }

@@ -199,6 +199,15 @@ impl WeightBank {
         self.cfg.cols
     }
 
+    /// MAC cells in the array (`rows × cols`) — the MACs one optical
+    /// cycle performs when every channel and row is live. `on-bank MACs
+    /// / (cycles × cells)` is the bank-utilisation figure `pdfa report`
+    /// derives from a run's recorded bank geometry (padding tiles and
+    /// differential e⁺/e⁻ passes drive it below 100%).
+    pub fn cells(&self) -> usize {
+        self.cfg.rows * self.cfg.cols
+    }
+
     fn check_tile_shape(&self, weights: &Tensor) -> Result<()> {
         if weights.shape() != [self.cfg.rows, self.cfg.cols] {
             return Err(Error::Shape(format!(
@@ -568,6 +577,7 @@ mod tests {
     #[test]
     fn ideal_bank_computes_exact_matvec() {
         let mut bank = ideal_bank(3, 4);
+        assert_eq!(bank.cells(), 12); // per-cycle MAC capacity (telemetry)
         let w = Tensor::new(
             &[3, 4],
             vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2, 0.0, 0.9, 0.25, -0.75, 0.4, -0.1],

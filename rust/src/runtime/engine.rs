@@ -8,10 +8,11 @@
 //! trainer is oblivious to which backend runs the step.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::runtime::manifest::{ArtifactSpec, Manifest, NetDims};
 use crate::runtime::step_engine::{Artifact, StepEngine};
+use crate::telemetry::{self, Counters, Telemetry};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -19,6 +20,11 @@ use crate::{Error, Result};
 pub struct LoadedArtifact {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+    /// Analytic MACs of one successful `execute` (from the manifest
+    /// shapes — the PJRT runtime exposes no hardware counters).
+    macs: u64,
+    /// Engine-shared telemetry cells.
+    counters: Arc<Counters>,
 }
 
 impl LoadedArtifact {
@@ -55,13 +61,16 @@ impl LoadedArtifact {
                 elements.len()
             )));
         }
-        elements
+        let out: Result<Vec<Tensor>> = elements
             .into_iter()
             .zip(&self.spec.outputs)
             .map(|(lit, spec)| literal_to_tensor(&lit, &spec.shape))
-            .collect()
+            .collect();
+        if out.is_ok() {
+            self.counters.add_macs(self.macs);
+        }
+        out
     }
-
 }
 
 impl Artifact for LoadedArtifact {
@@ -98,6 +107,9 @@ pub struct Engine {
     manifest: Manifest,
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<LoadedArtifact>>>,
+    /// Telemetry cells shared with every compiled artifact (analytic
+    /// MAC counts from the manifest shapes).
+    counters: Arc<Counters>,
 }
 
 // xla::PjRtClient wraps a thread-safe C++ client; executables are immutable
@@ -115,7 +127,12 @@ impl Engine {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            counters: Arc::new(Counters::default()),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -141,7 +158,19 @@ impl Engine {
         let computation = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&computation)?;
         crate::log_info!("compiled artifact '{name}' in {:.2?}", t0.elapsed());
-        let loaded = std::sync::Arc::new(LoadedArtifact { spec, exe });
+        let macs = if name == "photonic_matvec" {
+            spec.inputs[1].shape.iter().product::<usize>() as u64
+        } else {
+            self.manifest
+                .net_dims(&spec.config)
+                .map_or(0, |d| telemetry::macs_for_artifact(name, d))
+        };
+        let loaded = std::sync::Arc::new(LoadedArtifact {
+            spec,
+            exe,
+            macs,
+            counters: self.counters.clone(),
+        });
         self.cache
             .lock()
             .unwrap()
@@ -173,6 +202,10 @@ impl StepEngine for Engine {
 
     fn load(&self, name: &str) -> Result<std::sync::Arc<dyn Artifact>> {
         Ok(Engine::load(self, name)?)
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.counters.snapshot(None)
     }
 }
 

@@ -3,7 +3,10 @@
 //!
 //! * [`step_engine`] — the [`StepEngine`] / [`Artifact`] traits every
 //!   caller programs against, plus the [`open`] factory and [`Backend`]
-//!   selection policy
+//!   selection policy. Every engine also reports hardware telemetry
+//!   ([`StepEngine::telemetry`]): analytic MAC counts on the digital
+//!   backends, measured optical cycles plus modeled §5 energy on the
+//!   photonic one — see [`crate::telemetry`]
 //! * [`native`]    — [`native::NativeEngine`]: pure-Rust execution of the
 //!   artifact contract via `dfa::reference` (default build; hermetic)
 //! * [`photonic`]  — [`photonic::PhotonicEngine`]: the same contract with

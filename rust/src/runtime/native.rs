@@ -22,6 +22,7 @@ use crate::photonics::constants::{BANK_COLS, BANK_ROWS};
 use crate::photonics::mrr::MrrDesign;
 use crate::runtime::manifest::{ArtifactSpec, IoSpec, Manifest, NetDims};
 use crate::runtime::step_engine::{Artifact, StepEngine};
+use crate::telemetry::{self, Counters, Telemetry};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -174,6 +175,10 @@ fn photonic_matvec_spec(dir: &Path) -> ArtifactSpec {
 pub struct NativeEngine {
     configs: BTreeMap<String, NetDims>,
     artifacts: BTreeMap<String, (ArtifactSpec, Kind)>,
+    /// Telemetry cells shared with every loaded artifact. MAC counts are
+    /// analytic (from the dispatch shapes), so snapshots are exact and
+    /// deterministic at any thread count.
+    counters: Arc<Counters>,
 }
 
 impl NativeEngine {
@@ -211,7 +216,14 @@ impl NativeEngine {
         }
         let pm = photonic_matvec_spec(dir);
         artifacts.insert(pm.name.clone(), (pm, Kind::PhotonicMatvec));
-        NativeEngine { configs, artifacts }
+        NativeEngine { configs, artifacts, counters: Arc::new(Counters::default()) }
+    }
+
+    /// The engine's telemetry cells — shared so a wrapping engine (the
+    /// photonic one delegates its digital artifacts here) aggregates into
+    /// a single snapshot.
+    pub(crate) fn counters(&self) -> Arc<Counters> {
+        self.counters.clone()
     }
 }
 
@@ -249,7 +261,25 @@ impl StepEngine for NativeEngine {
             .artifacts
             .get(name)
             .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))?;
-        Ok(Arc::new(NativeArtifact { spec: spec.clone(), kind: *kind }))
+        // analytic MACs of one execute: from the config dims for the
+        // training vocabulary, from the phi shape for the raw bank kernel
+        let macs = match kind {
+            Kind::PhotonicMatvec => spec.inputs[1].shape.iter().product::<usize>() as u64,
+            _ => self
+                .configs
+                .get(&spec.config)
+                .map_or(0, |d| telemetry::macs_for_artifact(name, d)),
+        };
+        Ok(Arc::new(NativeArtifact {
+            spec: spec.clone(),
+            kind: *kind,
+            macs,
+            counters: self.counters.clone(),
+        }))
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.counters.snapshot(None)
     }
 }
 
@@ -257,6 +287,10 @@ impl StepEngine for NativeEngine {
 pub struct NativeArtifact {
     spec: ArtifactSpec,
     kind: Kind,
+    /// Analytic MACs of one successful `execute`.
+    macs: u64,
+    /// Engine-shared telemetry cells.
+    counters: Arc<Counters>,
 }
 
 impl Artifact for NativeArtifact {
@@ -266,10 +300,10 @@ impl Artifact for NativeArtifact {
 
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.spec.validate_inputs(inputs)?;
-        match self.kind {
+        let out = match self.kind {
             Kind::Fwd => {
                 let f = reference::forward(&inputs[..6], &inputs[6]);
-                Ok(vec![f.logits, f.a1, f.a2, f.h1, f.h2])
+                vec![f.logits, f.a1, f.a2, f.h1, f.h2]
             }
             Kind::DfaStep => {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
@@ -288,7 +322,7 @@ impl Artifact for NativeArtifact {
                 );
                 state.push(Tensor::scalar(loss));
                 state.push(Tensor::scalar(correct as f32));
-                Ok(state)
+                state
             }
             Kind::BpStep => {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
@@ -301,7 +335,7 @@ impl Artifact for NativeArtifact {
                 );
                 state.push(Tensor::scalar(loss));
                 state.push(Tensor::scalar(correct as f32));
-                Ok(state)
+                state
             }
             Kind::ApplyGrads => {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
@@ -319,7 +353,7 @@ impl Artifact for NativeArtifact {
                     inputs[18].item(),
                     inputs[19].item(),
                 );
-                Ok(state)
+                state
             }
             Kind::PhotonicMatvec => {
                 let (x, phi) = (&inputs[0], &inputs[1]);
@@ -337,9 +371,11 @@ impl Artifact for NativeArtifact {
                             .sum::<f64>() as f32
                     })
                     .collect();
-                Ok(vec![Tensor::new(&[m], out)?])
+                vec![Tensor::new(&[m], out)?]
             }
-        }
+        };
+        self.counters.add_macs(self.macs);
+        Ok(out)
     }
 }
 
@@ -416,6 +452,68 @@ mod tests {
         for (got, want) in out[..12].iter().zip(&ref_state) {
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn telemetry_pins_analytic_mac_counts() {
+        // tiny (16-32-32-4, batch 8): fwd = 8·1664 = 13312 MACs,
+        // dfa_step = fwd + feedback 2048 + weight grads 13312 = 28672
+        let e = engine();
+        let dims = e.net_dims("tiny").unwrap();
+        assert!(e.telemetry().is_empty());
+
+        let fwd = e.load("fwd_tiny").unwrap();
+        let mut rng = Pcg64::seed(7);
+        let state = NetState::init(&dims, &mut rng);
+        let x = Tensor::randn(&[dims.batch, dims.d_in], 0.5, &mut rng);
+        let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        inputs.push(x.clone());
+        fwd.execute(&inputs).unwrap();
+        assert_eq!(e.telemetry().macs, 13_312);
+        fwd.execute(&inputs).unwrap();
+        assert_eq!(e.telemetry().macs, 2 * 13_312);
+
+        let step = e.load("dfa_step_tiny").unwrap();
+        let (b1, b2) = NetState::init_feedback(&dims, &mut rng);
+        let mut y = Tensor::zeros(&[dims.batch, dims.d_out]);
+        for r in 0..dims.batch {
+            y.set(r, r % dims.d_out, 1.0);
+        }
+        let mut si = state.tensors.clone();
+        si.extend([
+            b1,
+            b2,
+            x,
+            y,
+            Tensor::zeros(&[dims.d_h1, dims.batch]),
+            Tensor::zeros(&[dims.d_h2, dims.batch]),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.0),
+            Tensor::scalar(0.05),
+            Tensor::scalar(0.9),
+        ]);
+        step.execute(&si).unwrap();
+        let t = e.telemetry();
+        assert_eq!(t.macs, 2 * 13_312 + 28_672);
+        // a digital engine never fires optical cycles or accrues energy
+        assert_eq!(t.photonic_macs, 0);
+        assert_eq!(t.cycles, 0);
+        assert_eq!(t.energy_j, 0.0);
+        assert_eq!(t.pj_per_mac(), None);
+
+        // a failed dispatch (bad shapes) counts nothing
+        let before = e.telemetry();
+        assert!(step.execute(&si[..3]).is_err());
+        assert_eq!(e.telemetry(), before);
+
+        // photonic_matvec counts its bank cells from the spec shape
+        let pm = e.load("photonic_matvec").unwrap();
+        let xb = Tensor::rand_uniform(&[BANK_COLS], 0.0, 1.0, &mut rng);
+        let phi = Tensor::zeros(&[BANK_ROWS, BANK_COLS]);
+        pm.execute(&[xb, phi, Tensor::scalar(0.95), Tensor::scalar(0.999)])
+            .unwrap();
+        let t2 = e.telemetry();
+        assert_eq!(t2.macs, before.macs + (BANK_ROWS * BANK_COLS) as u64);
     }
 
     #[test]

@@ -55,6 +55,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::dfa::reference;
+use crate::energy::{EnergyModel, MrrTuning};
 use crate::gemm::tiler::Tiling;
 use crate::photonics::converters::Quantizer;
 use crate::photonics::mrr::MrrDesign;
@@ -62,6 +63,7 @@ use crate::photonics::weight_bank::{BankConfig, BpdMode, Inscription, WeightBank
 use crate::runtime::manifest::{ArtifactSpec, NetDims};
 use crate::runtime::native::NativeEngine;
 use crate::runtime::step_engine::{Artifact, StepEngine};
+use crate::telemetry::{self, Counters, Telemetry};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use crate::{Error, Result};
@@ -270,6 +272,15 @@ impl PhysicsConfig {
             )));
         }
         Ok(())
+    }
+
+    /// The §5 energy model sized to this bank: heater-locked MRRs (the
+    /// paper's nominal operating point — `pdfa report` re-prices the
+    /// same cycle tally under trimming for the 0.28 pJ/op comparison).
+    /// Attached to the engine so every dispatch accrues modeled joules
+    /// in its [`Telemetry`] snapshots.
+    pub fn energy_model(&self) -> EnergyModel {
+        EnergyModel::for_bank(self.bank_rows, self.bank_cols, MrrTuning::HeaterLocked)
     }
 
     /// The bank this physics describes. Read noise is injected at the
@@ -501,19 +512,19 @@ fn inscription_amp(physics: &PhysicsConfig, bank: &WeightBank, w: &Tensor) -> f3
 /// array, inscribed once per tile (sequential phase), and each batch row
 /// is driven through the optical chain (Fig. 4(b) operation) by the
 /// row-parallel worker pool. Per output element the tile contributions
-/// accumulate in the fixed tiling order, so the result is bit-identical
-/// at any `threads`.
+/// accumulate in the fixed tiling order, so the result — including the
+/// returned optical-cycle count, which the telemetry layer prices in
+/// joules — is bit-identical at any `threads`.
 #[allow(clippy::too_many_arguments)]
 fn bank_linear(
     dev: &mut Device,
     physics: &PhysicsConfig,
     threads: usize,
     key: NoiseKey,
-    cycles: &AtomicU64,
     x: &Tensor,
     w: &Tensor,
     b: Option<&Tensor>,
-) -> Result<Tensor> {
+) -> Result<(Tensor, u64)> {
     let (batch, k) = (x.rows(), x.cols());
     let m = w.cols();
     if w.rows() != k {
@@ -571,8 +582,7 @@ fn bank_linear(
             Ok(fired)
         },
     )?;
-    cycles.fetch_add(fired, Ordering::Relaxed);
-    Ok(y)
+    Ok((y, fired))
 }
 
 /// Eq. (1) on the bank: `delta(k)ᵀ (m, batch)` for feedback matrix
@@ -585,11 +595,10 @@ fn bank_dfa_gradient(
     physics: &PhysicsConfig,
     threads: usize,
     key: NoiseKey,
-    cycles: &AtomicU64,
     bmat: &Tensor,
     e: &Tensor,
     a: &Tensor,
-) -> Result<Tensor> {
+) -> Result<(Tensor, u64)> {
     let (batch, k) = (e.rows(), e.cols());
     let m = bmat.rows();
     if bmat.cols() != k || a.rows() != batch || a.cols() != m {
@@ -658,14 +667,13 @@ fn bank_dfa_gradient(
             Ok(fired)
         },
     )?;
-    cycles.fetch_add(fired, Ordering::Relaxed);
     let mut out = Tensor::zeros(&[m, batch]);
     for smp in 0..batch {
         for (j, &v) in scratch.row(smp).iter().enumerate() {
             out.set(j, smp, v);
         }
     }
-    Ok(out)
+    Ok((out, fired))
 }
 
 /// Which physical routine an artifact name maps onto.
@@ -703,6 +711,18 @@ pub struct PhotonicArtifact {
     /// Optical cycles fired; atomic so [`Self::cycles`] never takes the
     /// bank lock.
     cycles: AtomicU64,
+    /// Engine-shared telemetry cells (cycles also accrue here, next to
+    /// the analytic MAC counts, so [`StepEngine::telemetry`] aggregates
+    /// across every loaded artifact).
+    counters: Arc<Counters>,
+    /// Analytic on-bank MACs of one successful `execute`.
+    bank_macs: u64,
+    /// Analytic digitally-executed MACs of one successful `execute`
+    /// (the weight-gradient outer products of `dfa_step`).
+    digital_macs: u64,
+    /// Bank operations one `execute` dispatches (3 for `fwd`, 5 for
+    /// `dfa_step`).
+    bank_ops: u64,
 }
 
 impl PhotonicArtifact {
@@ -724,23 +744,19 @@ impl PhotonicArtifact {
         }
     }
 
+    /// One bank linear dispatch; tallies the fired cycles on the
+    /// artifact counter and returns them for the engine-level accrual.
     fn linear(
         &self,
         dev: &mut Device,
         x: &Tensor,
         w: &Tensor,
         b: Option<&Tensor>,
-    ) -> Result<Tensor> {
-        bank_linear(
-            dev,
-            &self.physics,
-            self.threads,
-            self.next_key(),
-            &self.cycles,
-            x,
-            w,
-            b,
-        )
+    ) -> Result<(Tensor, u64)> {
+        let (y, fired) =
+            bank_linear(dev, &self.physics, self.threads, self.next_key(), x, w, b)?;
+        self.cycles.fetch_add(fired, Ordering::Relaxed);
+        Ok((y, fired))
     }
 
     fn dfa_gradient(
@@ -749,17 +765,11 @@ impl PhotonicArtifact {
         bmat: &Tensor,
         e: &Tensor,
         a: &Tensor,
-    ) -> Result<Tensor> {
-        bank_dfa_gradient(
-            dev,
-            &self.physics,
-            self.threads,
-            self.next_key(),
-            &self.cycles,
-            bmat,
-            e,
-            a,
-        )
+    ) -> Result<(Tensor, u64)> {
+        let (d, fired) =
+            bank_dfa_gradient(dev, &self.physics, self.threads, self.next_key(), bmat, e, a)?;
+        self.cycles.fetch_add(fired, Ordering::Relaxed);
+        Ok((d, fired))
     }
 
     fn forward(
@@ -767,13 +777,13 @@ impl PhotonicArtifact {
         dev: &mut Device,
         params: &[Tensor],
         x: &Tensor,
-    ) -> Result<reference::Forward> {
-        let a1 = self.linear(dev, x, &params[0], Some(&params[1]))?;
+    ) -> Result<(reference::Forward, u64)> {
+        let (a1, f1) = self.linear(dev, x, &params[0], Some(&params[1]))?;
         let h1 = a1.map(|v| v.max(0.0));
-        let a2 = self.linear(dev, &h1, &params[2], Some(&params[3]))?;
+        let (a2, f2) = self.linear(dev, &h1, &params[2], Some(&params[3]))?;
         let h2 = a2.map(|v| v.max(0.0));
-        let logits = self.linear(dev, &h2, &params[4], Some(&params[5]))?;
-        Ok(reference::Forward { a1, h1, a2, h2, logits })
+        let (logits, f3) = self.linear(dev, &h2, &params[4], Some(&params[5]))?;
+        Ok((reference::Forward { a1, h1, a2, h2, logits }, f1 + f2 + f3))
     }
 }
 
@@ -786,10 +796,10 @@ impl Artifact for PhotonicArtifact {
         self.spec.validate_inputs(inputs)?;
         // see the `device` field docs for the poisoned-lock recovery story
         let mut dev = self.device.lock().unwrap_or_else(|p| p.into_inner());
-        match self.kind {
+        let (out, fired) = match self.kind {
             Kind::Fwd => {
-                let f = self.forward(&mut dev, &inputs[..6], &inputs[6])?;
-                Ok(vec![f.logits, f.a1, f.a2, f.h1, f.h2])
+                let (f, fired) = self.forward(&mut dev, &inputs[..6], &inputs[6])?;
+                (vec![f.logits, f.a1, f.a2, f.h1, f.h2], fired)
             }
             Kind::DfaStep => {
                 // contract twin of reference::dfa_step, with the Gaussian
@@ -809,17 +819,20 @@ impl Artifact for PhotonicArtifact {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
                 let (bmat1, bmat2) = (&inputs[12], &inputs[13]);
                 let (x, y) = (&inputs[14], &inputs[15]);
-                let f = self.forward(&mut dev, &state[..6], x)?;
+                let (f, ff) = self.forward(&mut dev, &state[..6], x)?;
                 let (loss, e, correct) = reference::loss_and_error(&f.logits, y);
-                let d1t = self.dfa_gradient(&mut dev, bmat1, &e, &f.a1)?;
-                let d2t = self.dfa_gradient(&mut dev, bmat2, &e, &f.a2)?;
+                let (d1t, f1) = self.dfa_gradient(&mut dev, bmat1, &e, &f.a1)?;
+                let (d2t, f2) = self.dfa_gradient(&mut dev, bmat2, &e, &f.a2)?;
                 let grads = reference::grads_from_deltas(x, &f.h1, &f.h2, &e, &d1t, &d2t);
                 reference::sgd_momentum(&mut state, &grads, lr, momentum);
                 state.push(Tensor::scalar(loss));
                 state.push(Tensor::scalar(correct as f32));
-                Ok(state)
+                (state, ff + f1 + f2)
             }
-        }
+        };
+        self.counters.add_bank(self.bank_macs, fired, self.bank_ops);
+        self.counters.add_macs(self.digital_macs);
+        Ok(out)
     }
 }
 
@@ -829,6 +842,13 @@ pub struct PhotonicEngine {
     physics: PhysicsConfig,
     /// Resolved batch-row worker count every loaded artifact shards with.
     threads: usize,
+    /// Telemetry cells shared with the inner native engine, so the
+    /// digitally delegated artifacts (`apply_grads_*`, `photonic_matvec`)
+    /// and the bank dispatches aggregate into one snapshot.
+    counters: Arc<Counters>,
+    /// §5 energy model sized to the configured bank; prices the cycle
+    /// tally in every [`StepEngine::telemetry`] snapshot.
+    energy: EnergyModel,
 }
 
 impl PhotonicEngine {
@@ -849,15 +869,24 @@ impl PhotonicEngine {
         threads: usize,
     ) -> Result<Self> {
         physics.validate()?;
+        let native = NativeEngine::open(artifacts_dir)?;
+        let counters = native.counters();
         Ok(PhotonicEngine {
-            native: NativeEngine::open(artifacts_dir)?,
+            native,
             physics,
             threads: crate::util::threads::resolve(threads),
+            counters,
+            energy: physics.energy_model(),
         })
     }
 
     pub fn physics(&self) -> &PhysicsConfig {
         &self.physics
+    }
+
+    /// The energy model pricing this engine's optical cycles.
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy
     }
 
     /// The resolved batch-row worker count (>= 1).
@@ -906,6 +935,17 @@ impl StepEngine for PhotonicEngine {
             return self.native.load(name);
         };
         let spec = self.native.load(name)?.spec().clone();
+        let dims = self.native.net_dims(&spec.config)?;
+        // analytic MAC split of one execute: what runs on the bank vs
+        // what stays digital (the weight-gradient outer products)
+        let (bank_macs, digital_macs, bank_ops) = match kind {
+            Kind::Fwd => (telemetry::macs_forward(&dims), 0, 3),
+            Kind::DfaStep => (
+                telemetry::macs_forward(&dims) + telemetry::macs_feedback(&dims),
+                telemetry::macs_weight_grads(&dims),
+                5,
+            ),
+        };
         Ok(Arc::new(PhotonicArtifact {
             spec,
             kind,
@@ -914,7 +954,15 @@ impl StepEngine for PhotonicEngine {
             device: Mutex::new(Device::new(&self.physics)?),
             op: AtomicU64::new(0),
             cycles: AtomicU64::new(0),
+            counters: self.counters.clone(),
+            bank_macs,
+            digital_macs,
+            bank_ops,
         }))
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.counters.snapshot(Some(&self.energy))
     }
 }
 
@@ -942,7 +990,7 @@ mod tests {
         b: Option<&Tensor>,
     ) -> Result<Tensor> {
         let key = NoiseKey { seed: phys.seed, op };
-        bank_linear(dev, phys, 1, key, &AtomicU64::new(0), x, w, b)
+        bank_linear(dev, phys, 1, key, x, w, b).map(|(y, _)| y)
     }
 
     /// Single-threaded `bank_dfa_gradient` driver for the numerics tests.
@@ -955,7 +1003,7 @@ mod tests {
         a: &Tensor,
     ) -> Result<Tensor> {
         let key = NoiseKey { seed: phys.seed, op };
-        bank_dfa_gradient(dev, phys, 1, key, &AtomicU64::new(0), bmat, e, a)
+        bank_dfa_gradient(dev, phys, 1, key, bmat, e, a).map(|(d, _)| d)
     }
 
     #[test]
@@ -1188,15 +1236,13 @@ mod tests {
         let act = Tensor::full(&[5, 9], 1.0);
         let run = |threads: usize| {
             let mut dev = dev_for(&phys);
-            let cycles = AtomicU64::new(0);
             let key = |op| NoiseKey { seed: phys.seed, op };
-            let y = bank_linear(&mut dev, &phys, threads, key(0), &cycles, &x, &w, None)
-                .unwrap();
-            let g = bank_dfa_gradient(
-                &mut dev, &phys, threads, key(1), &cycles, &bmat, &e, &act,
-            )
-            .unwrap();
-            (y, g, cycles.load(Ordering::Relaxed))
+            let (y, fy) =
+                bank_linear(&mut dev, &phys, threads, key(0), &x, &w, None).unwrap();
+            let (g, fg) =
+                bank_dfa_gradient(&mut dev, &phys, threads, key(1), &bmat, &e, &act)
+                    .unwrap();
+            (y, g, fy + fg)
         };
         let (y1, g1, c1) = run(1);
         assert!(c1 > 0);
@@ -1275,14 +1321,20 @@ mod tests {
             let engine = PhotonicEngine::open_threaded(&dir, phys, threads).unwrap();
             assert_eq!(engine.threads(), threads);
             let art = engine.load("dfa_step_tiny").unwrap();
-            art.execute(&inputs).unwrap()
+            let out = art.execute(&inputs).unwrap();
+            (out, engine.telemetry())
         };
-        let want = run(1);
-        let got = run(4);
+        let (want, tel1) = run(1);
+        let (got, tel4) = run(4);
         assert_eq!(got.len(), want.len());
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(g, w, "output {i} diverged across thread counts");
         }
+        // the tentpole extension of PR 4's determinism contract: the
+        // telemetry snapshot (counters AND priced energy) is identical too
+        assert_eq!(tel1, tel4, "telemetry diverged across thread counts");
+        assert!(tel1.cycles > 0 && tel1.energy_j > 0.0, "{tel1:?}");
+        assert_eq!(tel1.pj_per_mac(), tel4.pj_per_mac());
         // cycles() is lock-free and tallies the whole dispatch (the test
         // module can build the concrete artifact directly)
         let spec = NativeEngine::open(&dir)
@@ -1299,11 +1351,24 @@ mod tests {
             device: Mutex::new(Device::new(&phys).unwrap()),
             op: AtomicU64::new(0),
             cycles: AtomicU64::new(0),
+            counters: Arc::new(Counters::default()),
+            bank_macs: telemetry::macs_forward(&dims) + telemetry::macs_feedback(&dims),
+            digital_macs: telemetry::macs_weight_grads(&dims),
+            bank_ops: 5,
         };
         assert_eq!(art.cycles(), 0);
         Artifact::execute(&art, &inputs).unwrap();
         assert!(art.cycles() > 0, "dispatch must tally optical cycles");
         assert!(art.op.load(Ordering::Relaxed) >= 5, "3 fwd + 2 gradient ops");
+        // the engine-shared counters saw the same dispatch: identical
+        // cycle tally, analytic MAC split, one energy-priced snapshot
+        let t = art.counters.snapshot(Some(&phys.energy_model()));
+        assert_eq!(t.cycles, art.cycles());
+        assert_eq!(t.photonic_macs, art.bank_macs);
+        assert_eq!(t.macs, art.bank_macs + art.digital_macs);
+        assert_eq!(t.bank_ops, 5);
+        assert_eq!(t.energy_j, phys.energy_model().joules(t.cycles));
+        assert!(t.energy_j > 0.0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::sync::Arc;
 
 use crate::runtime::manifest::{ArtifactSpec, NetDims};
 use crate::runtime::photonic::PhysicsConfig;
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -77,6 +78,20 @@ pub trait StepEngine: Send + Sync {
 
     /// Load (and for PJRT, compile) an artifact by name.
     fn load(&self, name: &str) -> Result<Arc<dyn Artifact>>;
+
+    /// Lock-free snapshot of the engine's accumulated hardware telemetry:
+    /// MACs dispatched (counted analytically from artifact shapes),
+    /// optical cycles fired, and — on the photonic backend — the modeled
+    /// energy of those cycles under the §5 component budget.
+    ///
+    /// Counters accrue across every artifact loaded from this engine.
+    /// Taken between dispatches the snapshot is exact; taken mid-dispatch
+    /// it is a valid lower bound. Counter values are bit-identical at any
+    /// worker-thread count (see [`crate::telemetry`]), so snapshots may
+    /// be diffed ([`Telemetry::delta`]) and recorded deterministically.
+    fn telemetry(&self) -> Telemetry {
+        Telemetry::default()
+    }
 }
 
 /// Which backend [`open`] should construct.
@@ -122,6 +137,15 @@ impl Backend {
 ///
 /// The directory may not exist at all for [`Backend::Native`] /
 /// [`Backend::Auto`]: the native engine then serves its built-in configs.
+///
+/// ```
+/// use photonic_dfa::runtime::{open, Backend};
+///
+/// let engine = open("artifacts", Backend::Native).unwrap();
+/// assert_eq!(engine.platform_name(), "native");
+/// assert!(engine.net_dims("mnist").is_ok());
+/// assert!(engine.telemetry().is_empty()); // nothing dispatched yet
+/// ```
 pub fn open(artifacts_dir: impl AsRef<Path>, backend: Backend) -> Result<Arc<dyn StepEngine>> {
     open_inner(artifacts_dir, backend, 0)
 }

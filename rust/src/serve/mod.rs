@@ -18,6 +18,11 @@
 //!   logits), then routes each row back to its requester and records
 //!   per-request latency for the [`server::ServeStats`] report.
 //!
+//! The [`server::ServeStats`] report pairs per-request latency with the
+//! engine's hardware telemetry over the serving window (dispatch MACs
+//! per request, and on the photonic backend the modeled §5 energy and
+//! pJ/MAC — see [`crate::telemetry`]).
+//!
 //! The CLI front ends are `pdfa serve` (stdin / synthetic loopback
 //! request loop) and `pdfa infer` (batch inference over a checkpoint);
 //! `benches/serve_throughput.rs` measures the stack end to end.

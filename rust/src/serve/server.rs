@@ -19,6 +19,7 @@ use super::batcher::{BatchPolicy, Queue, Reply, Request};
 use crate::dfa::checkpoint::Checkpoint;
 use crate::dfa::params::NetState;
 use crate::runtime::{Artifact, StepEngine};
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 use crate::util::benchx::{fmt_ns, fmt_si, BenchResult};
 use crate::{Error, Result};
@@ -98,6 +99,11 @@ pub struct ServeStats {
     /// Bounded at [`LATENCY_RESERVOIR`] samples via reservoir sampling,
     /// so long-lived servers report unbiased percentiles at fixed memory.
     pub latency: BenchResult,
+    /// Hardware counters accrued by the engine since the server started:
+    /// dispatch MACs (chunking pads the ragged tail, so padded rows are
+    /// included — this is the hardware cost, not the useful work),
+    /// optical cycles and modeled energy on the photonic backend.
+    pub telemetry: Telemetry,
 }
 
 impl ServeStats {
@@ -126,6 +132,22 @@ impl ServeStats {
                 fmt_ns(self.latency.p95_ns()),
                 fmt_ns(self.latency.min_ns()),
             ));
+        }
+        if self.completed > 0 && !self.telemetry.is_empty() {
+            let t = &self.telemetry;
+            line.push_str(&format!(
+                "\nwork: {} MACs ({} MACs/req)",
+                fmt_si(t.macs as f64),
+                fmt_si(t.macs as f64 / self.completed as f64),
+            ));
+            if let Some(pj) = t.pj_per_mac() {
+                use crate::telemetry::report::fmt_joules;
+                line.push_str(&format!(
+                    " | energy {} modeled ({}/req, {pj:.2} pJ/MAC)",
+                    fmt_joules(t.energy_j),
+                    fmt_joules(t.energy_j / self.completed as f64),
+                ));
+            }
         }
         line
     }
@@ -170,12 +192,36 @@ pub struct Server {
     d_in: usize,
     d_out: usize,
     started: Instant,
+    /// The engine whose telemetry window this server reports.
+    engine: Arc<dyn StepEngine>,
+    /// Engine telemetry when the server started; [`Self::stats`] reports
+    /// the delta, so a shared engine never leaks earlier work in.
+    tel_base: Telemetry,
 }
 
 impl Server {
     /// Start a worker pool serving `params` (the 6 leading tensors
     /// `[w1, b1, w2, b2, w3, b3]`; momentum slots are ignored if present)
     /// through `engine`'s `fwd_<config>` artifact.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use photonic_dfa::dfa::params::NetState;
+    /// use photonic_dfa::runtime::{NativeEngine, StepEngine};
+    /// use photonic_dfa::serve::{ServeConfig, Server};
+    /// use photonic_dfa::util::rng::Pcg64;
+    ///
+    /// let engine: Arc<dyn StepEngine> = Arc::new(NativeEngine::new());
+    /// let dims = engine.net_dims("tiny").unwrap();
+    /// let state = NetState::init(&dims, &mut Pcg64::seed(1));
+    /// let server =
+    ///     Server::start(&engine, "tiny", state.params(), ServeConfig::default()).unwrap();
+    /// let logits = server.infer(vec![0.5; dims.d_in]).unwrap();
+    /// assert_eq!(logits.len(), dims.d_out);
+    /// let stats = server.shutdown();
+    /// assert_eq!(stats.completed, 1);
+    /// assert!(stats.telemetry.macs > 0); // the dispatch was counted
+    /// ```
     pub fn start(
         engine: &Arc<dyn StepEngine>,
         config: &str,
@@ -240,6 +286,8 @@ impl Server {
             d_in: dims.d_in,
             d_out: dims.d_out,
             started: Instant::now(),
+            engine: engine.clone(),
+            tel_base: engine.telemetry(),
         })
     }
 
@@ -311,6 +359,7 @@ impl Server {
                 samples_ns: s.latencies_ns.clone(),
                 units_per_iter: None,
             },
+            telemetry: self.engine.telemetry().delta(&self.tel_base),
         }
     }
 
@@ -441,6 +490,11 @@ mod tests {
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.failed, 0);
         assert_eq!(stats.latency.samples_ns.len(), 1);
+        // telemetry window: one fwd_tiny dispatch = 8·1664 = 13312 MACs
+        // (the traced batch is the dispatch cost, padding included)
+        assert_eq!(stats.telemetry.macs, 13_312);
+        assert_eq!(stats.telemetry.cycles, 0); // digital backend
+        assert!(stats.report().contains("MACs/req"), "{}", stats.report());
     }
 
     #[test]
@@ -466,6 +520,8 @@ mod tests {
         assert_eq!(stats.completed, 20);
         assert!(stats.executes >= 3, "{}", stats.executes);
         assert!(stats.report().contains("serve:"));
+        // every execute is one fwd_tiny dispatch: MACs track executes
+        assert_eq!(stats.telemetry.macs, stats.executes * 13_312);
     }
 
     #[test]

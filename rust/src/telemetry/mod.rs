@@ -1,0 +1,347 @@
+//! Hardware telemetry: MAC, optical-cycle and energy accounting for every
+//! [`crate::runtime::StepEngine`].
+//!
+//! The paper's headline claims are *operational*: Eq. (2) promises
+//! 2·f_s·M·N operations per second (20 TOPS for the 50 × 20 bank at
+//! 10 GHz) and §5 budgets the wall-plug energy at 1.0 pJ per operation
+//! with heater-locked MRRs, 0.28 pJ with post-fabrication trimming. This
+//! module is how the reproduction states those numbers about its own
+//! runs instead of only about the analytic model in [`crate::energy`]:
+//!
+//! * [`Counters`] — lock-free accrual cells an engine shares with every
+//!   artifact it loads. Digital engines ([`crate::runtime::NativeEngine`],
+//!   the PJRT engine) count MACs *analytically* from each dispatch's
+//!   manifest shapes ([`macs_for_artifact`]); the photonic engine
+//!   additionally tallies the optical cycles its weight bank actually
+//!   fired (differential e⁺/e⁻ encoding counts both passes, exactly as
+//!   the artifact's own cycle counter does).
+//! * [`Telemetry`] — an immutable snapshot of those counters, plus the
+//!   modeled energy ([`crate::energy::EnergyModel`]) for engines with a
+//!   physical substrate. Snapshots subtract ([`Telemetry::delta`]) so the
+//!   trainer can attribute work to epochs and the serve stack to request
+//!   windows.
+//! * [`report`] — the `pdfa report` renderer: measured MAC/s and modeled
+//!   pJ/MAC of a recorded run against the §5 targets.
+//!
+//! Determinism contract (inherited from the PR 4 threading work): every
+//! counter is a pure function of the executed dispatches — MAC counts are
+//! analytic, cycle counts are bit-identical at any `--threads` value —
+//! so the telemetry block of a run record is byte-identical across
+//! thread counts. Only *rates* (MAC/s) depend on wall-clock time, and
+//! they are kept out of the counter snapshot for exactly that reason.
+//!
+//! ```
+//! use photonic_dfa::telemetry::Counters;
+//!
+//! let c = Counters::default();
+//! c.add_macs(1_000); // a digital dispatch
+//! c.add_bank(500, 4, 2); // a bank dispatch: 500 MACs over 4 cycles, 2 ops
+//! let t = c.snapshot(None);
+//! assert_eq!(t.macs, 1_500);
+//! assert_eq!(t.photonic_macs, 500);
+//! assert_eq!(t.cycles, 4);
+//! assert_eq!(t.energy_j, 0.0); // no energy model attached
+//! ```
+
+pub mod report;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::energy::EnergyModel;
+use crate::runtime::manifest::NetDims;
+use crate::util::json::Value;
+
+/// §5 nominal energy target: 1.0 pJ per operation with heater-locked
+/// MRRs (Eq. 4 at the 50 × 20 / 10 GHz operating point).
+pub const PAPER_PJ_PER_OP_NOMINAL: f64 = 1.0;
+
+/// §5 trimmed energy target: 0.28 pJ per operation once post-fabrication
+/// trimming removes the heater budget.
+pub const PAPER_PJ_PER_OP_TRIMMED: f64 = 0.28;
+
+/// Eq. (2) headline throughput of the §5 bank: 20 TOPS (= 10 T MAC/s,
+/// one MAC being a multiply + an add).
+pub const PAPER_TOPS: f64 = 20.0;
+
+/// One engine's accumulated hardware counters at a point in time.
+///
+/// `macs` counts *all* multiply-accumulates the engine dispatched, on any
+/// substrate; `photonic_macs` is the subset executed on the MRR weight
+/// bank (zero for the digital backends). `cycles`/`bank_ops` mirror the
+/// photonic artifact's own counters: optical cycles fired and bank
+/// operations (inscribe-and-evaluate dispatches). `energy_j` is the
+/// modeled wall-plug energy of those cycles under the §5 component
+/// budget — zero when no [`EnergyModel`] is attached.
+///
+/// Every field except `energy_j` is an exact integer; `energy_j` is
+/// `cycles` × a configuration constant, so the whole snapshot is
+/// bit-identical at any worker-thread count.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Telemetry {
+    /// Multiply-accumulates dispatched (analytic, from dispatch shapes).
+    pub macs: u64,
+    /// MACs executed on the photonic weight bank (subset of `macs`).
+    pub photonic_macs: u64,
+    /// Optical cycles fired (0 on digital backends).
+    pub cycles: u64,
+    /// Bank operations: inscribe-and-evaluate dispatches (0 on digital).
+    pub bank_ops: u64,
+    /// Modeled wall-plug energy in joules (0 without an energy model).
+    pub energy_j: f64,
+}
+
+impl Telemetry {
+    /// Counters accrued since `earlier` (which must be an older snapshot
+    /// of the same engine; fields saturate at zero otherwise).
+    pub fn delta(&self, earlier: &Telemetry) -> Telemetry {
+        Telemetry {
+            macs: self.macs.saturating_sub(earlier.macs),
+            photonic_macs: self.photonic_macs.saturating_sub(earlier.photonic_macs),
+            cycles: self.cycles.saturating_sub(earlier.cycles),
+            bank_ops: self.bank_ops.saturating_sub(earlier.bank_ops),
+            energy_j: (self.energy_j - earlier.energy_j).max(0.0),
+        }
+    }
+
+    /// True when nothing has been counted (e.g. an engine predating the
+    /// telemetry contract, or no dispatch yet).
+    pub fn is_empty(&self) -> bool {
+        self.macs == 0 && self.cycles == 0
+    }
+
+    /// Wall-clock MAC rate over `wall_s` seconds (0 for a zero window).
+    pub fn macs_per_second(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.macs as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Modeled pJ per on-bank MAC: `energy_j / photonic_macs`, the number
+    /// `pdfa report` compares against the §5 targets. `None` when no
+    /// bank work (or no energy model) was recorded.
+    pub fn pj_per_mac(&self) -> Option<f64> {
+        if self.photonic_macs > 0 && self.energy_j > 0.0 {
+            Some(self.energy_j * 1e12 / self.photonic_macs as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Serialise for run records. Keys hold counters only (no rates), so
+    /// the object is byte-identical at any `--threads` value.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("macs", Value::Number(self.macs as f64)),
+            ("photonic_macs", Value::Number(self.photonic_macs as f64)),
+            ("cycles", Value::Number(self.cycles as f64)),
+            ("bank_ops", Value::Number(self.bank_ops as f64)),
+            ("energy_j", Value::Number(self.energy_j)),
+        ])
+    }
+
+    /// Parse a [`Self::to_json`] object back (run-report loading).
+    pub fn from_json(v: &Value) -> Option<Telemetry> {
+        Some(Telemetry {
+            macs: v.get("macs").as_f64()? as u64,
+            photonic_macs: v.get("photonic_macs").as_f64()? as u64,
+            cycles: v.get("cycles").as_f64()? as u64,
+            bank_ops: v.get("bank_ops").as_f64()? as u64,
+            energy_j: v.get("energy_j").as_f64()?,
+        })
+    }
+}
+
+/// Lock-free accrual cells, shared (`Arc`) between an engine and every
+/// artifact it loads. All adds are `Relaxed` fetch-adds: counters are
+/// monotone tallies, never synchronisation points, so a snapshot taken
+/// between dispatches is exact and a snapshot taken mid-dispatch is a
+/// valid lower bound.
+#[derive(Debug, Default)]
+pub struct Counters {
+    macs: AtomicU64,
+    photonic_macs: AtomicU64,
+    cycles: AtomicU64,
+    bank_ops: AtomicU64,
+}
+
+impl Counters {
+    /// Record `n` digitally executed MACs.
+    pub fn add_macs(&self, n: u64) {
+        self.macs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a bank dispatch: `macs` on-bank MACs over `cycles` optical
+    /// cycles across `ops` bank operations.
+    pub fn add_bank(&self, macs: u64, cycles: u64, ops: u64) {
+        self.macs.fetch_add(macs, Ordering::Relaxed);
+        self.photonic_macs.fetch_add(macs, Ordering::Relaxed);
+        self.cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.bank_ops.fetch_add(ops, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters; `energy` converts the cycle tally into
+    /// modeled joules (the photonic engine passes its §5 model, the
+    /// digital engines pass `None`).
+    pub fn snapshot(&self, energy: Option<&EnergyModel>) -> Telemetry {
+        let cycles = self.cycles.load(Ordering::Relaxed);
+        Telemetry {
+            macs: self.macs.load(Ordering::Relaxed),
+            photonic_macs: self.photonic_macs.load(Ordering::Relaxed),
+            cycles,
+            bank_ops: self.bank_ops.load(Ordering::Relaxed),
+            energy_j: energy.map_or(0.0, |e| e.joules(cycles)),
+        }
+    }
+}
+
+/// MACs of the three-layer forward pass: one per weight-matrix cell per
+/// batch row (`B·(d_in·h1 + h1·h2 + h2·out)`).
+pub fn macs_forward(d: &NetDims) -> u64 {
+    d.batch as u64 * (d.d_in * d.d_h1 + d.d_h1 * d.d_h2 + d.d_h2 * d.d_out) as u64
+}
+
+/// MACs of the DFA feedback projections `B(1)·e, B(2)·e` (Eq. 1):
+/// `B·(h1 + h2)·out`.
+pub fn macs_feedback(d: &NetDims) -> u64 {
+    d.batch as u64 * ((d.d_h1 + d.d_h2) * d.d_out) as u64
+}
+
+/// MACs of the weight-gradient outer products `xᵀ·δ` — one per weight
+/// cell per batch row, the same count as the forward pass.
+pub fn macs_weight_grads(d: &NetDims) -> u64 {
+    macs_forward(d)
+}
+
+/// MACs of backprop's extra delta transposes `δ3·W3ᵀ, δ2·W2ᵀ`:
+/// `B·(h2·out + h1·h2)`.
+pub fn macs_backprop_deltas(d: &NetDims) -> u64 {
+    d.batch as u64 * (d.d_h2 * d.d_out + d.d_h1 * d.d_h2) as u64
+}
+
+/// Analytic MAC count of one `execute` of a config-bound artifact, by
+/// vocabulary prefix. Unknown names (and `photonic_matvec`, whose bank
+/// geometry is not described by `NetDims` — engines derive its count
+/// from the spec's `phi` shape instead) report 0.
+pub fn macs_for_artifact(name: &str, d: &NetDims) -> u64 {
+    if name.starts_with("fwd_") {
+        macs_forward(d)
+    } else if name.starts_with("dfa_step_") {
+        macs_forward(d) + macs_feedback(d) + macs_weight_grads(d)
+    } else if name.starts_with("bp_step_") {
+        macs_forward(d) + macs_backprop_deltas(d) + macs_weight_grads(d)
+    } else if name.starts_with("apply_grads_") {
+        macs_weight_grads(d)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NetDims {
+        NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 }
+    }
+
+    #[test]
+    fn analytic_mac_counts_for_known_shapes() {
+        // tiny: 8·(16·32 + 32·32 + 32·4) = 8·1664 = 13312
+        let d = tiny();
+        assert_eq!(macs_forward(&d), 13_312);
+        // feedback: 8·(32+32)·4 = 2048
+        assert_eq!(macs_feedback(&d), 2_048);
+        assert_eq!(macs_weight_grads(&d), 13_312);
+        // bp deltas: 8·(32·4 + 32·32) = 9216
+        assert_eq!(macs_backprop_deltas(&d), 9_216);
+
+        assert_eq!(macs_for_artifact("fwd_tiny", &d), 13_312);
+        assert_eq!(macs_for_artifact("dfa_step_tiny", &d), 13_312 + 2_048 + 13_312);
+        assert_eq!(macs_for_artifact("bp_step_tiny", &d), 13_312 + 9_216 + 13_312);
+        assert_eq!(macs_for_artifact("apply_grads_tiny", &d), 13_312);
+        assert_eq!(macs_for_artifact("photonic_matvec", &d), 0);
+        assert_eq!(macs_for_artifact("unknown", &d), 0);
+
+        // mnist: 64·(784·800 + 800·800 + 800·10) per fwd
+        let mnist = NetDims { d_in: 784, d_h1: 800, d_h2: 800, d_out: 10, batch: 64 };
+        assert_eq!(macs_forward(&mnist), 64 * (784 * 800 + 800 * 800 + 800 * 10) as u64);
+    }
+
+    #[test]
+    fn counters_accrue_and_snapshot() {
+        let c = Counters::default();
+        assert!(c.snapshot(None).is_empty());
+        c.add_macs(100);
+        c.add_bank(50, 7, 2);
+        c.add_bank(50, 3, 1);
+        let t = c.snapshot(None);
+        assert_eq!(t.macs, 200);
+        assert_eq!(t.photonic_macs, 100);
+        assert_eq!(t.cycles, 10);
+        assert_eq!(t.bank_ops, 3);
+        assert_eq!(t.energy_j, 0.0);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn snapshot_with_energy_model_prices_cycles() {
+        use crate::energy::{EnergyModel, MrrTuning};
+        let c = Counters::default();
+        c.add_bank(1_000, 10, 1);
+        let model = EnergyModel::for_bank(50, 20, MrrTuning::HeaterLocked);
+        let t = c.snapshot(Some(&model));
+        assert_eq!(t.energy_j, model.joules(10));
+        assert!(t.energy_j > 0.0);
+        // pJ/MAC = energy / on-bank MACs
+        let pj = t.pj_per_mac().unwrap();
+        assert!((pj - t.energy_j * 1e12 / 1_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_subtracts_and_saturates() {
+        let c = Counters::default();
+        c.add_bank(100, 4, 1);
+        let a = c.snapshot(None);
+        c.add_bank(50, 2, 1);
+        let b = c.snapshot(None);
+        let d = b.delta(&a);
+        assert_eq!(d.macs, 50);
+        assert_eq!(d.cycles, 2);
+        assert_eq!(d.bank_ops, 1);
+        // reversed order saturates instead of wrapping
+        let z = a.delta(&b);
+        assert_eq!(z.macs, 0);
+        assert_eq!(z.energy_j, 0.0);
+    }
+
+    #[test]
+    fn rates_and_edge_cases() {
+        let t = Telemetry { macs: 1_000, ..Telemetry::default() };
+        assert_eq!(t.macs_per_second(2.0), 500.0);
+        assert_eq!(t.macs_per_second(0.0), 0.0);
+        assert_eq!(t.pj_per_mac(), None); // no bank work
+        let t = Telemetry { photonic_macs: 10, energy_j: 0.0, ..t };
+        assert_eq!(t.pj_per_mac(), None); // no energy model
+    }
+
+    #[test]
+    fn json_round_trips_exactly() {
+        let t = Telemetry {
+            macs: 123_456,
+            photonic_macs: 98_765,
+            cycles: 4_321,
+            bank_ops: 17,
+            energy_j: 1.25e-6,
+        };
+        let v = t.to_json();
+        assert_eq!(Telemetry::from_json(&v), Some(t));
+        // serialised form is stable (sorted keys, counters only)
+        let text = v.to_string_compact();
+        let reparsed = Value::parse(&text).unwrap();
+        assert_eq!(Telemetry::from_json(&reparsed), Some(t));
+        assert!(!text.contains("mac_per_s"), "rates must stay out: {text}");
+        assert_eq!(Telemetry::from_json(&Value::Null), None);
+    }
+}

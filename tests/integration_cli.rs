@@ -11,7 +11,7 @@ fn help_lists_commands() {
     let out = pdfa().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["train", "energy", "characterize", "inner-product", "gen-data"] {
+    for cmd in ["train", "energy", "characterize", "inner-product", "gen-data", "report"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }

@@ -1,0 +1,186 @@
+//! Integration: telemetry in run records and the `pdfa report` command.
+//!
+//! The acceptance pins of the telemetry subsystem:
+//! * a photonic tiny-config run's `pdfa report` prints MACs, MAC/s and
+//!   modeled pJ/MAC next to the §5 targets (1.0 pJ nominal / 0.28 pJ
+//!   trimmed), and the printed counters match the run json;
+//! * the `telemetry` counter objects in `result.json` and `history.json`
+//!   are byte-identical at `--threads 1` vs `--threads 4` (the PR 4
+//!   determinism contract extended to the new counters).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use photonic_dfa::util::json::Value;
+
+fn pdfa() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pdfa"))
+}
+
+/// Train a small photonic run (noisy physics, so cycles and noise paths
+/// are genuinely exercised) and return its run directory.
+fn train_photonic(out_dir: &Path, run: &str, threads: &str) -> PathBuf {
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--backend", "photonic",
+            "--physics", "ideal,bank=16x12,dac=6,adc=6,sigma=0.1",
+            "--threads", threads,
+            "--epochs", "2",
+            "--max-steps", "3",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--seed", "9",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", run,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("MAC/s"), "train summary lacks MAC/s: {text}");
+    assert!(text.contains("pJ/MAC"), "photonic train lacks pJ/MAC: {text}");
+    out_dir.join(run)
+}
+
+fn read_json(path: &Path) -> Value {
+    Value::parse(&std::fs::read_to_string(path).unwrap()).unwrap()
+}
+
+/// The value printed right after `label` on its report line.
+fn report_value(text: &str, label: &str) -> String {
+    let line = text
+        .lines()
+        .find(|l| l.starts_with(label))
+        .unwrap_or_else(|| panic!("no '{label}' line in:\n{text}"));
+    line[label.len()..]
+        .split_whitespace()
+        .next()
+        .unwrap_or_else(|| panic!("no value on '{label}' line: {line}"))
+        .to_string()
+}
+
+#[test]
+fn telemetry_counters_byte_identical_across_threads() {
+    let out_dir = std::env::temp_dir().join("pdfa_report_threads");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let t1 = train_photonic(&out_dir, "t1", "1");
+    let t4 = train_photonic(&out_dir, "t4", "4");
+
+    // run totals: the telemetry counter object serialises identically
+    let tel = |dir: &Path| {
+        read_json(&dir.join("result.json"))
+            .get("telemetry")
+            .to_string_compact()
+    };
+    let (a, b) = (tel(&t1), tel(&t4));
+    assert!(a.contains("\"cycles\""), "telemetry block missing: {a}");
+    assert_eq!(a, b, "run telemetry diverged across --threads");
+
+    // per-epoch records too (wall_s/mac_per_s may differ; counters not)
+    let hist = |dir: &Path| read_json(&dir.join("history.json"));
+    let (h1, h4) = (hist(&t1), hist(&t4));
+    let (e1, e4) = (h1.as_array().unwrap(), h4.as_array().unwrap());
+    assert_eq!(e1.len(), 2);
+    assert_eq!(e1.len(), e4.len());
+    for (a, b) in e1.iter().zip(e4) {
+        assert_eq!(
+            a.get("telemetry").to_string_compact(),
+            b.get("telemetry").to_string_compact(),
+            "epoch telemetry diverged across --threads"
+        );
+        assert!(a.get("mac_per_s").as_f64().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn report_on_photonic_run_matches_run_json() {
+    let out_dir = std::env::temp_dir().join("pdfa_report_run");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let run = train_photonic(&out_dir, "photonic", "2");
+
+    let out = pdfa().args(["report", run.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+
+    // the acceptance needles: measured rows + the §5 targets
+    for needle in [
+        "MACs dispatched",
+        "on-bank MACs",
+        "MAC/s (wall-clock)",
+        "optical cycles",
+        "bank utilisation",
+        "pJ/MAC heater-locked",
+        "pJ/MAC trimmed",
+        "1.0 pJ nominal",
+        "0.28 pJ trimmed",
+        "20 TOPS peak",
+        "backend photonic",
+    ] {
+        assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+    }
+
+    // printed counters == run json counters, exactly
+    let result = read_json(&run.join("result.json"));
+    let tel = result.get("telemetry");
+    let macs = tel.get("macs").as_f64().unwrap() as u64;
+    let bank = tel.get("photonic_macs").as_f64().unwrap() as u64;
+    let cycles = tel.get("cycles").as_f64().unwrap() as u64;
+    assert!(macs > 0 && bank > 0 && cycles > 0, "empty telemetry: {tel:?}");
+    assert_eq!(report_value(&text, "MACs dispatched"), macs.to_string());
+    assert_eq!(report_value(&text, "on-bank MACs"), bank.to_string());
+    assert_eq!(report_value(&text, "optical cycles"), cycles.to_string());
+
+    // the measured pJ/MAC row is a parseable number
+    let pj: f64 = report_value(&text, "pJ/MAC heater-locked").parse().unwrap();
+    assert!(pj > 0.0, "{pj}");
+}
+
+#[test]
+fn report_handles_checkpoints_and_native_runs() {
+    let out_dir = std::env::temp_dir().join("pdfa_report_misc");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    // a native run: telemetry exists, energy rows fall back to targets
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--epochs", "1",
+            "--max-steps", "2",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", "native",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let run = out_dir.join("native");
+
+    let out = pdfa().args(["report", run.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backend native"), "{text}");
+    assert!(text.contains("n/a (no on-bank work recorded)"), "{text}");
+    assert!(text.contains("1.0 pJ nominal"), "{text}");
+
+    // checkpoint form: analytic cost report (positional and --path both)
+    let ckpt = run.join("final.ckpt");
+    let out = pdfa().args(["report", ckpt.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("(checkpoint)"), "{text}");
+    assert!(text.contains("MACs/step"), "{text}");
+    let out = pdfa()
+        .args(["report", "--path", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // a bogus path is a clean error
+    let out = pdfa().args(["report", "definitely/not/there"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("error:"), "{err}");
+}
