@@ -1,6 +1,8 @@
 //! Serving-stack throughput: burst-submit batches of single-sample
 //! requests through the dynamic batcher + worker pool and measure
 //! end-to-end request throughput, vs the raw forward-artifact floor.
+//! Also times the NDJSON wire codec both ways — the zero-allocation
+//! streaming hot path vs the DOM parser it replaced.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
@@ -12,6 +14,7 @@ use photonic_dfa::runtime::{NativeEngine, StepEngine};
 use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
 use photonic_dfa::tensor::Tensor;
 use photonic_dfa::util::benchx::{bench_throughput, black_box, BenchConfig};
+use photonic_dfa::util::json_stream::{self, Lexer};
 use photonic_dfa::util::rng::Pcg64;
 
 const BURST: usize = 64;
@@ -23,9 +26,67 @@ fn requests(d_in: usize, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// NDJSON codec rows: request parse via the streaming lexer (the serve
+/// hot path), the DOM parser on the same line (the old path), and the
+/// reply serialize+parse round trip.
+fn bench_codec(cfg: &BenchConfig, d_in: usize) {
+    let mut rng = Pcg64::seed(9);
+    let feats: Vec<f32> = (0..d_in).map(|_| rng.uniform() as f32).collect();
+    let mut line = String::new();
+    json_stream::write_request(&mut line, Some(7), &feats);
+    let req = line.trim_end().to_string();
+
+    let mut lexer = Lexer::new();
+    let mut x: Vec<f32> = Vec::new();
+    let r = bench_throughput(
+        &format!("ndjson_parse_request_stream_d{d_in}"),
+        cfg,
+        d_in as f64,
+        "feat",
+        || black_box(json_stream::parse_request(&mut lexer, &req, &mut x).unwrap()),
+    );
+    println!("{}", r.report());
+
+    let r = bench_throughput(
+        &format!("ndjson_parse_request_dom_d{d_in}"),
+        cfg,
+        d_in as f64,
+        "feat",
+        || black_box(photonic_dfa::util::json::Value::parse(&req).unwrap()),
+    );
+    println!("{}", r.report());
+
+    let mut logits: Vec<f32> = Vec::new();
+    let mut errbuf = String::new();
+    let r = bench_throughput(
+        &format!("ndjson_reply_round_trip_d{d_in}"),
+        cfg,
+        d_in as f64,
+        "logit",
+        || {
+            json_stream::write_reply(&mut line, Some(7), 3, &feats);
+            black_box(
+                json_stream::parse_reply(
+                    &mut lexer,
+                    line.trim_end(),
+                    &mut logits,
+                    &mut errbuf,
+                )
+                .unwrap(),
+            )
+        },
+    );
+    println!("{}", r.report());
+}
+
 fn main() {
     let cfg = BenchConfig { warmup_iters: 2, min_iters: 10, max_time: Duration::from_secs(2) };
     let engine: Arc<dyn StepEngine> = Arc::new(NativeEngine::new());
+
+    // the wire codec alone, at two request widths
+    for d_in in [16, 784] {
+        bench_codec(&cfg, d_in);
+    }
 
     for config in ["tiny", "small"] {
         let dims = engine.net_dims(config).unwrap();

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""NDJSON-over-TCP smoke client for `pdfa serve --source listen`.
+
+Reads the first N test images from an IDX dataset directory, normalizes
+exactly like the Rust loader (`b as f32 / 255.0` — validated free of
+double-rounding for every byte value), streams them as one
+`{"id":i,"x":[...]}` request line each, and compares every reply's
+logits — bit for bit — against the raw little-endian f32 dump written by
+`pdfa infer --dump-logits` over the same samples.
+
+Usage: tcp_client.py HOST:PORT DATA_DIR WANT_LOGITS.bin N
+"""
+import gzip
+import json
+import socket
+import struct
+import sys
+
+
+def as_f32(x):
+    """Round to the nearest f32, returned as the exact f64 holding it."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def load_images(path, n):
+    with gzip.open(path, "rb") as f:
+        magic, count, rows, cols = struct.unpack(">IIII", f.read(16))
+        assert magic == 2051, f"bad IDX magic {magic}"
+        assert n <= count, f"asked for {n} of {count} images"
+        dim = rows * cols
+        return [[as_f32(b / 255.0) for b in f.read(dim)] for _ in range(n)]
+
+
+def main():
+    addr, data_dir, want_path, n = (
+        sys.argv[1],
+        sys.argv[2],
+        sys.argv[3],
+        int(sys.argv[4]),
+    )
+    host, port = addr.rsplit(":", 1)
+    xs = load_images(f"{data_dir}/t10k-images-idx3-ubyte.gz", n)
+    with open(want_path, "rb") as f:
+        want = f.read()
+
+    sock = socket.create_connection((host, int(port)), timeout=30)
+    rfile = sock.makefile("rb")
+    got = b""
+    for i, x in enumerate(xs):
+        # repr() of an exact-f32 f64 is within a half-ulp of the f32, so
+        # Rust's correctly-rounded parse recovers the same bits
+        line = '{"id":%d,"x":[%s]}\n' % (i, ",".join(repr(v) for v in x))
+        sock.sendall(line.encode())
+        reply = json.loads(rfile.readline())
+        assert "error" not in reply, f"server errored: {reply}"
+        assert reply["id"] == i, f"reply out of order: {reply}"
+        for v in reply["logits"]:
+            got += struct.pack("<f", float("nan") if v is None else v)
+    sock.close()
+
+    assert got == want, "TCP logits differ from `pdfa infer --dump-logits`"
+    print(f"{n} TCP replies bit-identical to pdfa infer")
+
+
+if __name__ == "__main__":
+    main()

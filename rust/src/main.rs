@@ -5,7 +5,7 @@
 //! ```text
 //! pdfa train            train a network (Fig. 5(b) conditions)
 //! pdfa infer            batched inference over a saved checkpoint
-//! pdfa serve            dynamic-batching inference server (stdin/loopback)
+//! pdfa serve            dynamic-batching inference server (stdin/TCP/loopback)
 //! pdfa sweep-resolution test accuracy vs gradient resolution (Fig. 5(c))
 //! pdfa sweep-physics    in-situ accuracy vs DAC/ADC bits x read noise
 //! pdfa characterize     MRR profile + single-MRR multiplies (Fig. 3(b,c))
@@ -29,7 +29,10 @@ use photonic_dfa::dfa::trainer::Trainer;
 use photonic_dfa::experiments;
 use photonic_dfa::photonics::BpdMode;
 use photonic_dfa::runtime::{self, Backend, PhysicsConfig, StepEngine};
-use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
+use photonic_dfa::serve::{
+    net, BatchPolicy, NetConfig, NetServer, NetStats, ServeConfig, ServeStats, Server,
+    Ticket, TrafficConfig, TrafficReport,
+};
 use photonic_dfa::telemetry::report as telemetry_report;
 use photonic_dfa::util::cli::{help_text, ArgSpec, Args};
 use photonic_dfa::util::json::Value;
@@ -57,7 +60,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
             "batched inference over a checkpoint (bit-identical to the reference forward)",
             &infer_specs(), rest, wants_help, cmd_infer),
         "serve" => run_or_help(cmd,
-            "dynamic-batching inference server over a checkpoint",
+            "dynamic-batching inference server over a checkpoint (stdin, \
+             synthetic loopback, or a concurrent NDJSON-over-TCP front-end)",
             &serve_specs(), rest, wants_help, cmd_serve),
         "sweep-resolution" => run_or_help(cmd,
             "Fig. 5(c): accuracy vs gradient effective resolution",
@@ -441,19 +445,39 @@ fn cmd_infer(a: &Args) -> Result<()> {
 fn serve_specs() -> Vec<ArgSpec> {
     let mut specs = serving_knob_specs();
     specs.extend([
-        ArgSpec::opt("source", "stdin", "stdin | synthetic (loopback load generator)"),
+        ArgSpec::opt(
+            "source",
+            "stdin",
+            "stdin | synthetic (in-process loopback) | tcp (NDJSON server + \
+             many-connection loopback traffic driver) | listen (NDJSON server \
+             for external clients)",
+        ),
         ArgSpec::opt(
             "max-requests",
             "0",
-            "stop after N requests (0 = until EOF; synthetic default 64)",
+            "stop after N accepted requests (0 = until EOF / until stopped; \
+             synthetic and tcp default to 64 and 512)",
         ),
-        ArgSpec::opt("seed", "1", "synthetic request seed"),
+        ArgSpec::opt("seed", "1", "synthetic/tcp request seed"),
         ArgSpec::opt(
             "pipeline",
             "1",
-            "max in-flight stdin requests (1 = reply before reading the next \
-             line; raise for piped batch input so micro-batching engages)",
+            "max in-flight requests per producer: the stdin loop's depth cap, \
+             and each tcp driver connection's pipeline depth (1 = await every \
+             reply before the next request; raise so micro-batching engages)",
         ),
+        ArgSpec::opt("listen", "127.0.0.1:0", "bind address for tcp/listen (port 0 = ephemeral)"),
+        ArgSpec::opt("clients", "8", "concurrent driver connections (tcp source)"),
+        ArgSpec::opt(
+            "inflight",
+            "32",
+            "per-connection in-flight request cap on the server side (tcp/listen)",
+        ),
+        ArgSpec::flag(
+            "verify",
+            "tcp source: check every reply bit-exact against the reference forward",
+        ),
+        ArgSpec::opt("bench-out", "", "tcp source: write a BENCH_SERVE.json perf record here"),
     ]);
     specs
 }
@@ -466,16 +490,89 @@ fn cmd_serve(a: &Args) -> Result<()> {
         "synthetic" => {
             let n = if max_requests == 0 { 64 } else { max_requests };
             let mut rng = Pcg64::seed(a.u64("seed")?);
-            let inputs: Vec<Vec<f32>> = (0..n)
-                .map(|_| (0..d_in).map(|_| rng.uniform() as f32).collect())
+            // keep per-request failures (submit or execution) from
+            // aborting the run: tally them and still print the stats
+            // report, so a partially failing load run stays diagnosable
+            let tickets: Vec<Result<Ticket>> = (0..n)
+                .map(|_| {
+                    let x: Vec<f32> =
+                        (0..d_in).map(|_| rng.uniform() as f32).collect();
+                    server.submit(x)
+                })
                 .collect();
-            let tickets: Result<Vec<_>> =
-                inputs.into_iter().map(|x| server.submit(x)).collect();
             let mut preds = vec![0usize; server.d_out()];
-            for ticket in tickets? {
-                preds[argmax(&ticket.wait()?)] += 1;
+            let mut failed = 0usize;
+            for ticket in tickets {
+                match ticket.and_then(Ticket::wait) {
+                    Ok(logits) => preds[argmax(&logits)] += 1,
+                    Err(e) => {
+                        failed += 1;
+                        println!("error: {e}");
+                    }
+                }
             }
-            println!("served {n} synthetic requests; predictions per class: {preds:?}");
+            println!(
+                "served {n} synthetic requests ({failed} failed); \
+                 predictions per class: {preds:?}"
+            );
+        }
+        "tcp" => {
+            let listener = std::net::TcpListener::bind(a.str("listen"))?;
+            let clients = a.usize("clients")?.max(1);
+            let total = if max_requests == 0 { 512 } else { max_requests };
+            let tcfg = TrafficConfig {
+                clients,
+                requests_per_client: total.div_ceil(clients),
+                depth: a.usize("pipeline")?.max(1),
+                d_in,
+                seed: a.u64("seed")?,
+            };
+            // the driver sends an exact request count and then the
+            // front-end is shut down, so no server-side budget here
+            let net_cfg = NetConfig {
+                max_inflight: a.usize("inflight")?.max(1),
+                max_requests: 0,
+            };
+            let server = Arc::new(server);
+            let netsrv = NetServer::start(server.clone(), listener, net_cfg)?;
+            let addr = netsrv.local_addr();
+            println!("listening on {addr}");
+            let verify_params =
+                a.flag("verify").then(|| ckpt.state.params().to_vec());
+            let report = net::drive(addr, &tcfg, verify_params.as_deref())?;
+            let net_stats = netsrv.shutdown();
+            let server = Arc::try_unwrap(server).map_err(|_| {
+                Error::msg("serve: server still referenced after drain")
+            })?;
+            let stats = server.shutdown();
+            println!("{}", report.report());
+            println!("{}", stats.report());
+            if !a.str("bench-out").is_empty() {
+                write_bench_serve(a, &ckpt, &tcfg, &report, &net_stats, &stats)?;
+            }
+            return Ok(());
+        }
+        "listen" => {
+            let listener = std::net::TcpListener::bind(a.str("listen"))?;
+            let net_cfg = NetConfig {
+                max_inflight: a.usize("inflight")?.max(1),
+                max_requests: max_requests as u64,
+            };
+            let server = Arc::new(server);
+            let netsrv = NetServer::start(server.clone(), listener, net_cfg)?;
+            // external clients (and the CI smoke test) scrape this line
+            // for the ephemeral port
+            println!("listening on {}", netsrv.local_addr());
+            let net_stats = netsrv.join();
+            println!(
+                "tcp front-end: {} accepted / {} rejected over {} connections",
+                net_stats.accepted, net_stats.rejected, net_stats.connections
+            );
+            let server = Arc::try_unwrap(server).map_err(|_| {
+                Error::msg("serve: server still referenced after drain")
+            })?;
+            println!("{}", server.shutdown().report());
+            return Ok(());
         }
         "stdin" => {
             // in-order replies with up to --pipeline requests in flight:
@@ -502,19 +599,25 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     .map(str::parse::<f32>)
                     .collect();
                 let x = match parsed {
-                    Ok(x) if x.len() == d_in => x,
-                    Ok(x) => {
-                        println!("error: got {} features, want {d_in}", x.len());
-                        continue;
-                    }
+                    // width errors surface through submit's Shape check
+                    Ok(x) => x,
                     Err(e) => {
                         println!("error: bad request line ({e})");
                         continue;
                     }
                 };
                 match server.submit(x) {
-                    Ok(ticket) => pending.push_back(ticket),
-                    Err(e) => println!("error: {e}"),
+                    Ok(ticket) => {
+                        pending.push_back(ticket);
+                        // only an accepted request consumes the
+                        // --max-requests budget: a rejected submit used to
+                        // count too, stopping the loop short of N
+                        served += 1;
+                    }
+                    Err(e) => {
+                        println!("error: {e}");
+                        continue;
+                    }
                 }
                 // drain replies that are already done (poll consumes the
                 // reply, so print it directly), then enforce the depth cap
@@ -526,7 +629,6 @@ fn cmd_serve(a: &Args) -> Result<()> {
                     let ticket = pending.pop_front().expect("len checked");
                     print_reply(ticket.wait());
                 }
-                served += 1;
                 if max_requests > 0 && served >= max_requests {
                     break;
                 }
@@ -538,6 +640,71 @@ fn cmd_serve(a: &Args) -> Result<()> {
         other => return Err(Error::Cli(format!("bad --source '{other}'"))),
     }
     println!("{}", server.shutdown().report());
+    Ok(())
+}
+
+/// Write the `--bench-out` perf record for a `--source tcp` run. Cold
+/// path, so the DOM builder is the right tool (the per-request wire uses
+/// the streaming codec instead).
+fn write_bench_serve(
+    a: &Args,
+    ckpt: &Checkpoint,
+    tcfg: &TrafficConfig,
+    report: &TrafficReport,
+    net_stats: &NetStats,
+    stats: &ServeStats,
+) -> Result<()> {
+    let path = a.str("bench-out");
+    let lat = &report.latency;
+    let max_batch = match a.usize("max-batch")? {
+        0 => ckpt.dims.batch,
+        n => n,
+    };
+    let v = Value::object(vec![
+        ("bench", Value::String("serve_tcp".into())),
+        ("config", Value::String(ckpt.config.clone())),
+        ("clients", Value::Number(tcfg.clients as f64)),
+        ("requests", Value::Number(report.sent as f64)),
+        ("pipeline_depth", Value::Number(tcfg.depth as f64)),
+        ("workers", Value::Number(a.usize("workers")?.max(1) as f64)),
+        ("max_batch", Value::Number(max_batch as f64)),
+        ("inflight", Value::Number(a.usize("inflight")?.max(1) as f64)),
+        ("ok", Value::Number(report.ok as f64)),
+        ("errors", Value::Number(report.errors as f64)),
+        ("verified", Value::Number(report.verified as f64)),
+        ("wall_s", Value::Number(report.wall_s)),
+        ("req_per_s", Value::Number(report.req_per_s())),
+        (
+            "latency_ns",
+            Value::object(vec![
+                ("mean", Value::Number(lat.mean_ns())),
+                ("p50", Value::Number(lat.p50_ns())),
+                ("p95", Value::Number(lat.p95_ns())),
+                ("min", Value::Number(lat.min_ns())),
+            ]),
+        ),
+        (
+            "net",
+            Value::object(vec![
+                ("accepted", Value::Number(net_stats.accepted as f64)),
+                ("rejected", Value::Number(net_stats.rejected as f64)),
+                ("connections", Value::Number(net_stats.connections as f64)),
+            ]),
+        ),
+        (
+            "serve",
+            Value::object(vec![
+                ("completed", Value::Number(stats.completed as f64)),
+                ("failed", Value::Number(stats.failed as f64)),
+                ("batches", Value::Number(stats.batches as f64)),
+                ("mean_fill", Value::Number(stats.mean_fill)),
+                ("executes", Value::Number(stats.executes as f64)),
+            ]),
+        ),
+        ("telemetry", stats.telemetry.to_json()),
+    ]);
+    std::fs::write(path, v.to_string_pretty() + "\n")?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -89,13 +89,32 @@ pub enum FlushCause {
     Drain,
 }
 
-/// Response payload: logits, or a stringified server-side error.
-pub type Reply = std::result::Result<Vec<f32>, String>;
+/// Response payload routed back to the submitting client.
+///
+/// Both buffers travel back with the reply so a recycling front-end
+/// (the TCP reader/writer pair in [`crate::serve::net`]) can return
+/// them to its pool — the zero-allocation hot path depends on `x` and
+/// `logits` round-tripping instead of being dropped in the worker.
+pub struct Reply {
+    /// `Ok` when `logits` holds the forward result; `Err` carries a
+    /// stringified server-side execution error.
+    pub result: std::result::Result<(), String>,
+    /// The request's input buffer, returned for reuse.
+    pub x: Vec<f32>,
+    /// Logits row (`d_out` values) on success; the untouched reply
+    /// buffer on failure.
+    pub logits: Vec<f32>,
+}
 
 /// One queued inference request.
 pub struct Request {
     /// Input features, length `d_in`.
     pub x: Vec<f32>,
+    /// Reply buffer: the worker clears and refills it with the logits
+    /// row, so a client that recycles buffers pays no per-request
+    /// allocation (first use grows it to `d_out` capacity, then it's
+    /// warm).
+    pub out: Vec<f32>,
     /// Oneshot reply channel back to the submitting client.
     pub tx: mpsc::Sender<Reply>,
     /// Enqueue time (latency accounting + the `max_wait` trigger).
@@ -232,7 +251,7 @@ mod tests {
 
     fn req(v: f32) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::channel();
-        (Request { x: vec![v], tx, enqueued: Instant::now() }, rx)
+        (Request { x: vec![v], out: Vec::new(), tx, enqueued: Instant::now() }, rx)
     }
 
     fn policy(max_batch: usize, max_wait_ms: u64, cap: usize) -> BatchPolicy {

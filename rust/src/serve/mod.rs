@@ -17,18 +17,29 @@
 //!   results are independent, so padding never changes a client's
 //!   logits), then routes each row back to its requester and records
 //!   per-request latency for the [`server::ServeStats`] report.
+//! * [`net`]     — the concurrent TCP front-end: an accept loop plus a
+//!   reader/writer thread pair per connection speaking newline-delimited
+//!   JSON over real sockets, with per-connection in-flight caps feeding
+//!   the queue's backpressure and in-order replies. The request hot path
+//!   uses the [`crate::util::json_stream`] codec and recycles buffers
+//!   through [`server::Ticket::wait_reply`], so steady-state serving
+//!   performs no per-request heap allocation. Also home to the
+//!   many-connection loopback traffic driver ([`net::drive`]) behind
+//!   `pdfa serve --source tcp` and `BENCH_SERVE.json`.
 //!
 //! The [`server::ServeStats`] report pairs per-request latency with the
 //! engine's hardware telemetry over the serving window (dispatch MACs
 //! per request, and on the photonic backend the modeled §5 energy and
 //! pJ/MAC — see [`crate::telemetry`]).
 //!
-//! The CLI front ends are `pdfa serve` (stdin / synthetic loopback
-//! request loop) and `pdfa infer` (batch inference over a checkpoint);
+//! The CLI front ends are `pdfa serve` (stdin / synthetic / TCP request
+//! loops) and `pdfa infer` (batch inference over a checkpoint);
 //! `benches/serve_throughput.rs` measures the stack end to end.
 
 pub mod batcher;
+pub mod net;
 pub mod server;
 
 pub use batcher::{BatchPolicy, FlushCause};
+pub use net::{NetConfig, NetServer, NetStats, TrafficConfig, TrafficReport};
 pub use server::{ServeConfig, ServeStats, Server, Ticket};

@@ -1,0 +1,754 @@
+//! TCP front-end for the batched inference server, NDJSON wire format.
+//!
+//! Promotes [`crate::serve::Server`] from a stdin loop to a real
+//! concurrent network service, hermetically on `std::net`:
+//!
+//! * **accept loop** — one listener thread hands each connection to a
+//!   dedicated reader thread; a stop flag (budget exhausted or
+//!   [`NetServer::stop`]) drains everything gracefully.
+//! * **reader thread (per connection)** — reads newline-delimited JSON
+//!   requests `{"x":[...]}` (optional `"id":N`), parses them with the
+//!   zero-allocation [`json_stream`] codec into pooled buffers, and
+//!   submits to the shared micro-batching queue. A bounded channel to
+//!   the writer caps the connection's in-flight requests, so one greedy
+//!   client saturates its own pipeline — not the server queue (whose
+//!   `queue_cap` backpressure still bounds the sum over connections).
+//! * **writer thread (per connection)** — pops tickets in submission
+//!   order and writes replies `{"id":N,"pred":P,"logits":[...]}` (or
+//!   `{"error":"..."}`), so replies are always in request order even
+//!   though micro-batches complete out of order across workers. Reply
+//!   buffers are recycled back to the reader, closing the
+//!   allocation-free loop.
+//!
+//! A malformed line gets an in-order `{"error":...}` reply and the
+//! connection stays up; an oversized line (> [`MAX_LINE_BYTES`]) or
+//! non-UTF-8 input closes the connection after an error reply. Lines are
+//! buffered until their newline arrives, so the cap is enforced after
+//! the fact — this is a lab serving stack, not a hardened edge.
+//!
+//! The module also ships the client side: [`drive`] opens N real
+//! sockets, pipelines deterministic requests over each, optionally
+//! verifies every reply bit-exact against
+//! [`crate::dfa::reference::forward`], and reports sustained req/s plus
+//! latency percentiles — the loopback load generator behind
+//! `pdfa serve --source tcp` and the `BENCH_SERVE.json` perf record.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::server::{Server, Ticket};
+use crate::dfa::reference;
+use crate::tensor::Tensor;
+use crate::util::benchx::{fmt_ns, fmt_si, BenchResult};
+use crate::util::json_stream::{self, Lexer};
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+/// Reject request lines longer than this (16 MiB): a runaway client
+/// can't grow a reader's line buffer without bound. Generous — an
+/// MNIST-sized request is ~20 KiB.
+pub const MAX_LINE_BYTES: usize = 16 << 20;
+
+/// How long blocking reads wait before re-checking the stop flag; also
+/// the accept loop's poll interval. Bounds shutdown latency for idle
+/// connections.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Front-end sizing knobs (the queue policy lives in the [`Server`]).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-connection in-flight request cap: the reader blocks once this
+    /// many submissions await their reply on this connection.
+    pub max_inflight: usize,
+    /// Stop accepting after this many requests were accepted across all
+    /// connections (0 = serve until [`NetServer::stop`]). Accepted means
+    /// submitted to the queue: malformed and rejected lines don't count.
+    pub max_requests: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { max_inflight: 32, max_requests: 0 }
+    }
+}
+
+/// Front-end counters, returned by [`NetServer::join`]/`shutdown`.
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Requests accepted into the queue (every one of these got a reply).
+    pub accepted: u64,
+    /// Lines answered with an error reply instead (parse/shape/submit).
+    pub rejected: u64,
+    /// Connections accepted over the front-end's lifetime.
+    pub connections: u64,
+}
+
+/// The TCP front-end: accept loop + per-connection reader/writer pairs.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+    connections: Arc<AtomicU64>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Start serving `server` on `listener`. The listener is switched to
+    /// non-blocking so the accept loop can notice the stop flag; accepted
+    /// connections run blocking with a short read timeout for the same
+    /// reason.
+    pub fn start(
+        server: Arc<Server>,
+        listener: TcpListener,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let rejected = Arc::new(AtomicU64::new(0));
+        let connections = Arc::new(AtomicU64::new(0));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (server, cfg) = (server.clone(), cfg.clone());
+            let (stop, accepted, rejected) =
+                (stop.clone(), accepted.clone(), rejected.clone());
+            let (connections, conns) = (connections.clone(), conns.clone());
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || {
+                    accept_loop(
+                        listener, server, cfg, stop, accepted, rejected, connections,
+                        conns,
+                    )
+                })
+                .map_err(Error::Io)?
+        };
+        Ok(NetServer {
+            local_addr,
+            stop,
+            accepted,
+            rejected,
+            connections,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Ask the front-end to stop: no new connections or requests are
+    /// accepted; in-flight requests still get their replies.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> NetStats {
+        NetStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until the front-end stops — the request budget is reached
+    /// or [`Self::stop`] is called — then join every connection thread.
+    /// When this returns, every accepted request's reply has been
+    /// written (graceful drain).
+    pub fn join(mut self) -> NetStats {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        loop {
+            let hs: Vec<_> = {
+                let mut g = self.conns.lock().unwrap();
+                g.drain(..).collect()
+            };
+            if hs.is_empty() {
+                break;
+            }
+            for h in hs {
+                let _ = h.join();
+            }
+        }
+        self.stats()
+    }
+
+    /// [`Self::stop`] + [`Self::join`].
+    pub fn shutdown(self) -> NetStats {
+        self.stop();
+        self.join()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.conns.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+    connections: Arc<AtomicU64>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut conn_id = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conn_id += 1;
+                connections.fetch_add(1, Ordering::Relaxed);
+                let _ = stream.set_nodelay(true);
+                // accepted sockets may inherit the listener's
+                // non-blocking mode on some platforms; force blocking +
+                // a read timeout so readers can see the stop flag
+                let _ = stream.set_nonblocking(false);
+                let ctx = ConnCtx {
+                    server: server.clone(),
+                    cfg: cfg.clone(),
+                    stop: stop.clone(),
+                    accepted: accepted.clone(),
+                    rejected: rejected.clone(),
+                };
+                let spawned = std::thread::Builder::new()
+                    .name(format!("serve-conn-{conn_id}"))
+                    .spawn(move || ctx.run(stream));
+                let mut g = conns.lock().unwrap();
+                if let Ok(h) = spawned {
+                    g.push(h);
+                }
+                // reap finished connections so a long-lived server's
+                // handle list stays proportional to live connections
+                let mut i = 0;
+                while i < g.len() {
+                    if g[i].is_finished() {
+                        let _ = g.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL_INTERVAL);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Work handed from a connection's reader to its writer, in request
+/// order. The bounded channel carrying these IS the per-connection
+/// in-flight cap.
+enum ConnItem {
+    /// A submitted request awaiting its reply.
+    Pending(Ticket, Option<u64>),
+    /// A line answered locally with an error (parse/shape/submit).
+    Failed(String, Option<u64>),
+}
+
+struct ConnCtx {
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+}
+
+impl ConnCtx {
+    /// Claim one unit of the global request budget; `false` once
+    /// exhausted. Lock-free so concurrent readers can't overshoot
+    /// `max_requests`.
+    fn try_claim(&self) -> bool {
+        if self.cfg.max_requests == 0 {
+            self.accepted.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        let mut cur = self.accepted.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cfg.max_requests {
+                return false;
+            }
+            match self.accepted.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Reader loop: owns the read half; the writer owns the write half
+    /// and is joined before the connection closes, so every in-flight
+    /// reply drains even when the reader stops first.
+    fn run(self, stream: TcpStream) {
+        let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(stream);
+        let depth = self.cfg.max_inflight.max(1);
+        let (work_tx, work_rx) = mpsc::sync_channel::<ConnItem>(depth);
+        let (recycle_tx, recycle_rx) = mpsc::channel::<(Vec<f32>, Vec<f32>)>();
+        let writer = std::thread::Builder::new()
+            .name("serve-conn-writer".into())
+            .spawn(move || writer_loop(write_half, work_rx, recycle_tx));
+        let writer = match writer {
+            Ok(h) => h,
+            Err(_) => return,
+        };
+
+        let mut lexer = Lexer::new();
+        let mut line = String::new();
+        'conn: while !self.stop.load(Ordering::Relaxed) {
+            line.clear();
+            // a timeout leaves any partial line appended to `line`;
+            // retrying without clearing completes it
+            let n = loop {
+                match reader.read_line(&mut line) {
+                    Ok(n) => break n,
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            ErrorKind::WouldBlock | ErrorKind::TimedOut
+                        ) =>
+                    {
+                        if self.stop.load(Ordering::Relaxed) {
+                            break 'conn;
+                        }
+                    }
+                    Err(_) => break 'conn, // includes non-UTF-8 input
+                }
+            };
+            if n == 0 {
+                break; // clean EOF
+            }
+            if line.len() > MAX_LINE_BYTES {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = work_tx.send(ConnItem::Failed(
+                    format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                    None,
+                ));
+                break;
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            // pooled buffers: fresh allocations only until the pool
+            // warms up to the pipeline depth
+            let (mut x, out) = recycle_rx.try_recv().unwrap_or_default();
+            match json_stream::parse_request(&mut lexer, trimmed, &mut x) {
+                Ok(id) => {
+                    if !self.try_claim() {
+                        self.stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                    match self.server.submit_with(x, out) {
+                        Ok(ticket) => {
+                            if work_tx.send(ConnItem::Pending(ticket, id)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            // refund: the request never reached the queue
+                            self.accepted.fetch_sub(1, Ordering::Relaxed);
+                            self.rejected.fetch_add(1, Ordering::Relaxed);
+                            if work_tx
+                                .send(ConnItem::Failed(e.to_string(), id))
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
+                    if work_tx.send(ConnItem::Failed(e.to_string(), None)).is_err() {
+                        break;
+                    }
+                }
+            }
+            if self.cfg.max_requests > 0
+                && self.accepted.load(Ordering::Relaxed) >= self.cfg.max_requests
+            {
+                // budget reached: stop the whole front-end, drain below
+                self.stop.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+        // dropping the work channel lets the writer drain remaining
+        // replies and exit; joining it guarantees the drain finished
+        drop(work_tx);
+        let _ = writer.join();
+        // lingering close: half-close the write side (FIN after the last
+        // reply), then discard whatever the peer still has in flight
+        // until it closes. Closing with unread pipelined input would RST
+        // and could destroy replies still in the peer's receive queue.
+        let _ = reader.get_ref().shutdown(std::net::Shutdown::Write);
+        let mut scrap = [0u8; 4096];
+        let deadline = Instant::now() + Duration::from_secs(1);
+        loop {
+            use std::io::Read;
+            match reader.get_mut().read(&mut scrap) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Writer loop: replies strictly in request order; flushes only when the
+/// queue runs dry so pipelined bursts coalesce into one syscall.
+fn writer_loop(
+    stream: TcpStream,
+    rx: mpsc::Receiver<ConnItem>,
+    recycle: mpsc::Sender<(Vec<f32>, Vec<f32>)>,
+) {
+    let mut w = BufWriter::new(stream);
+    let mut out = String::new();
+    let mut next = rx.recv();
+    while let Ok(item) = next {
+        match item {
+            ConnItem::Pending(ticket, id) => match ticket.wait_reply() {
+                Ok(reply) => {
+                    match &reply.result {
+                        Ok(()) => {
+                            let pred = argmax(&reply.logits);
+                            json_stream::write_reply(&mut out, id, pred, &reply.logits);
+                        }
+                        Err(msg) => json_stream::write_error(&mut out, id, msg),
+                    }
+                    if w.write_all(out.as_bytes()).is_err() {
+                        break;
+                    }
+                    let _ = recycle.send((reply.x, reply.logits));
+                }
+                Err(e) => {
+                    json_stream::write_error(&mut out, id, &e.to_string());
+                    if w.write_all(out.as_bytes()).is_err() {
+                        break;
+                    }
+                }
+            },
+            ConnItem::Failed(msg, id) => {
+                json_stream::write_error(&mut out, id, &msg);
+                if w.write_all(out.as_bytes()).is_err() {
+                    break;
+                }
+            }
+        }
+        match rx.try_recv() {
+            Ok(item) => next = Ok(item),
+            Err(mpsc::TryRecvError::Empty) => {
+                if w.flush().is_err() {
+                    break;
+                }
+                next = rx.recv();
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                let _ = w.flush();
+                break;
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------- loopback traffic driver (client side) ----------------
+
+/// Load shape for [`drive`].
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Concurrent client connections (each its own OS thread + socket).
+    pub clients: usize,
+    /// Requests sent per connection.
+    pub requests_per_client: usize,
+    /// Pipeline depth per connection: requests in flight before the
+    /// client blocks on the oldest reply.
+    pub depth: usize,
+    /// Feature width of generated requests (must match the checkpoint).
+    pub d_in: usize,
+    /// Master seed; each client derives its own deterministic stream.
+    pub seed: u64,
+}
+
+/// Per-client tallies, merged into the [`TrafficReport`].
+#[derive(Debug, Default)]
+struct ClientStats {
+    ok: u64,
+    errors: u64,
+    verified: u64,
+    latencies_ns: Vec<f64>,
+}
+
+/// Aggregate result of one [`drive`] run.
+#[derive(Debug)]
+pub struct TrafficReport {
+    /// Requests sent (clients × requests_per_client).
+    pub sent: u64,
+    /// Success replies.
+    pub ok: u64,
+    /// Error replies.
+    pub errors: u64,
+    /// Replies checked bit-exact against the reference forward.
+    pub verified: u64,
+    /// Wall time of the whole run (connect to last reply).
+    pub wall_s: f64,
+    /// Per-request latency (write to reply parsed), all clients merged.
+    pub latency: BenchResult,
+}
+
+impl TrafficReport {
+    /// Sustained request rate over the run.
+    pub fn req_per_s(&self) -> f64 {
+        self.ok as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Two-line human/machine-readable summary (mirrors
+    /// [`super::ServeStats::report`]).
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "tcp: {} ok / {} errors over {} in {:.3}s ({} req/s)",
+            self.ok,
+            self.errors,
+            self.sent,
+            self.wall_s,
+            fmt_si(self.req_per_s()),
+        );
+        if !self.latency.samples_ns.is_empty() {
+            line.push_str(&format!(
+                "\nlatency: mean={} p50={} p95={} min={}",
+                fmt_ns(self.latency.mean_ns()),
+                fmt_ns(self.latency.p50_ns()),
+                fmt_ns(self.latency.p95_ns()),
+                fmt_ns(self.latency.min_ns()),
+            ));
+        }
+        if self.verified > 0 {
+            line.push_str(&format!(
+                "\nverified: {} replies bit-exact vs the reference forward",
+                self.verified
+            ));
+        }
+        line
+    }
+}
+
+/// Drive `cfg.clients` concurrent connections of deterministic traffic
+/// against `addr`. With `verify`, every success reply is checked
+/// bit-exact against [`reference::forward`] on the given parameters —
+/// the end-to-end proof that JSON transport, micro-batching and
+/// chunk padding never perturb a client's logits.
+pub fn drive(
+    addr: SocketAddr,
+    cfg: &TrafficConfig,
+    verify: Option<&[Tensor]>,
+) -> Result<TrafficReport> {
+    if cfg.clients == 0 || cfg.requests_per_client == 0 {
+        return Err(Error::Config("traffic: clients and requests must be >= 1".into()));
+    }
+    let start = Instant::now();
+    let results: Vec<Result<ClientStats>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| scope.spawn(move || client_run(addr, cfg, c, verify)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::msg("traffic: client thread panicked")))
+            })
+            .collect()
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut merged = ClientStats::default();
+    for r in results {
+        let s = r?;
+        merged.ok += s.ok;
+        merged.errors += s.errors;
+        merged.verified += s.verified;
+        merged.latencies_ns.extend(s.latencies_ns);
+    }
+    Ok(TrafficReport {
+        sent: (cfg.clients * cfg.requests_per_client) as u64,
+        ok: merged.ok,
+        errors: merged.errors,
+        verified: merged.verified,
+        wall_s,
+        latency: BenchResult {
+            name: "tcp_request".into(),
+            samples_ns: merged.latencies_ns,
+            units_per_iter: None,
+        },
+    })
+}
+
+fn client_run(
+    addr: SocketAddr,
+    cfg: &TrafficConfig,
+    client: usize,
+    verify: Option<&[Tensor]>,
+) -> Result<ClientStats> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut w = BufWriter::new(stream);
+    // per-client deterministic stream: disjoint from every other client
+    let mut rng = Pcg64::seed(
+        cfg.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(client as u64 + 1),
+    );
+    let total = cfg.requests_per_client as u64;
+    let depth = cfg.depth.max(1);
+    let mut pending: VecDeque<(u64, Instant, Vec<f32>)> = VecDeque::new();
+    let mut line_out = String::new();
+    let mut line_in = String::new();
+    let mut logits = Vec::new();
+    let mut errbuf = String::new();
+    let mut lexer = Lexer::new();
+    let mut stats = ClientStats::default();
+    let mut next_id = 0u64;
+
+    while next_id < total || !pending.is_empty() {
+        while next_id < total && pending.len() < depth {
+            let x: Vec<f32> =
+                (0..cfg.d_in).map(|_| rng.uniform() as f32).collect();
+            json_stream::write_request(&mut line_out, Some(next_id), &x);
+            let t0 = Instant::now();
+            w.write_all(line_out.as_bytes())?;
+            pending.push_back((next_id, t0, x));
+            next_id += 1;
+        }
+        w.flush()?;
+        line_in.clear();
+        if reader.read_line(&mut line_in)? == 0 {
+            return Err(Error::msg(format!(
+                "traffic client {client}: server closed with {} replies pending",
+                pending.len()
+            )));
+        }
+        let head =
+            json_stream::parse_reply(&mut lexer, line_in.trim_end(), &mut logits, &mut errbuf)?;
+        let (id, t0, x) = pending
+            .pop_front()
+            .ok_or_else(|| Error::msg("traffic: reply with nothing pending"))?;
+        stats.latencies_ns.push(t0.elapsed().as_nanos() as f64);
+        if head.is_error {
+            stats.errors += 1;
+            continue;
+        }
+        stats.ok += 1;
+        // in-order replies are part of the wire contract: the echoed id
+        // must be the oldest in-flight request's
+        if head.id != Some(id) {
+            return Err(Error::msg(format!(
+                "traffic client {client}: reply id {:?}, expected {id} (ordering broken)",
+                head.id
+            )));
+        }
+        if let Some(params) = verify {
+            let xt = Tensor::new(&[1, cfg.d_in], x)?;
+            let want = reference::forward(params, &xt);
+            if logits != want.logits.row(0) {
+                return Err(Error::msg(format!(
+                    "traffic client {client}: request {id} logits drifted from the \
+                     reference forward"
+                )));
+            }
+            stats.verified += 1;
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_unbounded_and_pipelined() {
+        let cfg = NetConfig::default();
+        assert_eq!(cfg.max_requests, 0);
+        assert!(cfg.max_inflight >= 1);
+    }
+
+    #[test]
+    fn budget_claims_never_overshoot() {
+        let ctx = ConnCtx {
+            server: panic_free_server_stub(),
+            cfg: NetConfig { max_inflight: 1, max_requests: 5 },
+            stop: Arc::new(AtomicBool::new(false)),
+            accepted: Arc::new(AtomicU64::new(0)),
+            rejected: Arc::new(AtomicU64::new(0)),
+        };
+        let mut granted = 0;
+        for _ in 0..20 {
+            if ctx.try_claim() {
+                granted += 1;
+            }
+        }
+        assert_eq!(granted, 5);
+        assert_eq!(ctx.accepted.load(Ordering::Relaxed), 5);
+    }
+
+    /// try_claim never touches the server, so a minimal real instance
+    /// backs the stub.
+    fn panic_free_server_stub() -> Arc<Server> {
+        use crate::dfa::params::NetState;
+        use crate::runtime::{NativeEngine, StepEngine};
+        use crate::serve::ServeConfig;
+        let engine: Arc<dyn StepEngine> = Arc::new(NativeEngine::new());
+        let dims = engine.net_dims("tiny").unwrap();
+        let state = NetState::init(&dims, &mut Pcg64::seed(1));
+        Arc::new(
+            Server::start(&engine, "tiny", state.params(), ServeConfig::default())
+                .unwrap(),
+        )
+    }
+}

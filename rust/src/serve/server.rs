@@ -161,11 +161,19 @@ pub struct Ticket {
 impl Ticket {
     /// Block until the request's logits (or the server's error) arrive.
     pub fn wait(self) -> Result<Vec<f32>> {
-        match self.rx.recv() {
-            Ok(Ok(logits)) => Ok(logits),
-            Ok(Err(msg)) => Err(Error::msg(format!("serve: {msg}"))),
-            Err(_) => Err(Error::msg("serve: worker dropped the request")),
+        match self.wait_reply()? {
+            Reply { result: Ok(()), logits, .. } => Ok(logits),
+            Reply { result: Err(msg), .. } => Err(Error::msg(format!("serve: {msg}"))),
         }
+    }
+
+    /// Block for the full [`Reply`], input buffer included — the
+    /// buffer-recycling variant used by the TCP front-end
+    /// ([`crate::serve::net`]) to keep the hot path allocation-free.
+    pub fn wait_reply(self) -> Result<Reply> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("serve: worker dropped the request"))
     }
 
     /// Non-blocking probe: `Some` once the reply has arrived (pipelined
@@ -174,8 +182,10 @@ impl Ticket {
     /// [`Self::wait`] would report the request as dropped.
     pub fn poll(&self) -> Option<Result<Vec<f32>>> {
         match self.rx.try_recv() {
-            Ok(Ok(logits)) => Some(Ok(logits)),
-            Ok(Err(msg)) => Some(Err(Error::msg(format!("serve: {msg}")))),
+            Ok(Reply { result: Ok(()), logits, .. }) => Some(Ok(logits)),
+            Ok(Reply { result: Err(msg), .. }) => {
+                Some(Err(Error::msg(format!("serve: {msg}"))))
+            }
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) => {
                 Some(Err(Error::msg("serve: worker dropped the request")))
@@ -319,6 +329,15 @@ impl Server {
     /// Enqueue one sample (length `d_in`); blocks only on queue
     /// backpressure. The [`Ticket`] resolves to this sample's logits.
     pub fn submit(&self, x: Vec<f32>) -> Result<Ticket> {
+        self.submit_with(x, Vec::new())
+    }
+
+    /// [`Self::submit`] with a recycled reply buffer: the worker clears
+    /// and refills `out` with the logits row, and both buffers ride the
+    /// [`Reply`] back through [`Ticket::wait_reply`] — after one warm-up
+    /// round-trip per buffer pair, submitting costs no heap allocation
+    /// beyond the oneshot reply channel.
+    pub fn submit_with(&self, x: Vec<f32>, out: Vec<f32>) -> Result<Ticket> {
         if x.len() != self.d_in {
             return Err(Error::Shape(format!(
                 "serve: request has {} features, network wants {}",
@@ -327,7 +346,7 @@ impl Server {
             )));
         }
         let (tx, rx) = mpsc::channel();
-        self.queue.push(Request { x, tx, enqueued: Instant::now() })?;
+        self.queue.push(Request { x, out, tx, enqueued: Instant::now() })?;
         Ok(Ticket { rx })
     }
 
@@ -401,16 +420,21 @@ impl WorkerCtx {
         // slot is rewritten per chunk, parameters stay in place.
         let mut inputs = self.params.clone();
         inputs.push(Tensor::zeros(&[self.batch, self.d_in]));
-        while let Some((reqs, _cause)) = self.queue.next_batch() {
+        while let Some((mut reqs, _cause)) = self.queue.next_batch() {
+            let total = reqs.len() as u64;
             let mut executes = 0u64;
-            for chunk in reqs.chunks(self.batch) {
+            // process (and drain) the micro-batch front-chunk by
+            // front-chunk: requests are moved out so their buffers can
+            // ride the Reply back to the client for recycling
+            while !reqs.is_empty() {
+                let n = reqs.len().min(self.batch);
                 let x = inputs.last_mut().expect("x slot");
-                for (i, r) in chunk.iter().enumerate() {
+                for (i, r) in reqs.iter().take(n).enumerate() {
                     x.row_mut(i).copy_from_slice(&r.x);
                 }
                 // zero only the ragged tail: full chunks overwrite every
                 // row, and row results are independent anyway
-                for i in chunk.len()..self.batch {
+                for i in n..self.batch {
                     x.row_mut(i).fill(0.0);
                 }
                 match self.fwd.execute(&inputs) {
@@ -419,17 +443,25 @@ impl WorkerCtx {
                         let done = Instant::now();
                         let logits = &out[0];
                         let mut s = self.stats.lock().unwrap();
-                        for (i, r) in chunk.iter().enumerate() {
-                            let _ = r.tx.send(Ok(logits.row(i).to_vec()));
-                            s.record_latency((done - r.enqueued).as_nanos() as f64);
+                        for (i, r) in reqs.drain(..n).enumerate() {
+                            let Request { x, mut out, tx, enqueued } = r;
+                            out.clear();
+                            out.extend_from_slice(logits.row(i));
+                            let _ = tx.send(Reply { result: Ok(()), x, logits: out });
+                            s.record_latency((done - enqueued).as_nanos() as f64);
                             s.completed += 1;
                         }
                     }
                     Err(e) => {
                         let msg = e.to_string();
                         let mut s = self.stats.lock().unwrap();
-                        for r in chunk {
-                            let _ = r.tx.send(Err(msg.clone()));
+                        for r in reqs.drain(..n) {
+                            let Request { x, out, tx, .. } = r;
+                            let _ = tx.send(Reply {
+                                result: Err(msg.clone()),
+                                x,
+                                logits: out,
+                            });
                             s.failed += 1;
                         }
                     }
@@ -437,7 +469,7 @@ impl WorkerCtx {
             }
             let mut s = self.stats.lock().unwrap();
             s.batches += 1;
-            s.fill_sum += reqs.len() as u64;
+            s.fill_sum += total;
             s.executes += executes;
         }
     }
@@ -540,6 +572,65 @@ mod tests {
         assert_eq!(server.d_in(), 16);
         assert_eq!(server.d_out(), 4);
         drop(server); // Drop shuts down cleanly with requests never sent
+    }
+
+    #[test]
+    fn ticket_poll_consumes_the_reply_exactly_once() {
+        let engine = engine();
+        let (dims, state) = tiny_params(17);
+        let server = Server::start(&engine, "tiny", state.params(), cfg(1, 1)).unwrap();
+        let ticket = server.submit(vec![0.25; dims.d_in]).unwrap();
+        let logits = loop {
+            if let Some(r) = ticket.poll() {
+                break r.unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(logits.len(), dims.d_out);
+        // pinned semantics: the oneshot delivers exactly once — after a
+        // consuming poll, both poll and wait report the request dropped
+        match ticket.poll() {
+            Some(Err(e)) => assert!(e.to_string().contains("dropped"), "{e}"),
+            other => panic!("poll after consume must report dropped, got {other:?}"),
+        }
+        assert!(ticket.wait().unwrap_err().to_string().contains("dropped"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_with_round_trips_both_buffers() {
+        let engine = engine();
+        let (dims, state) = tiny_params(19);
+        let server = Server::start(&engine, "tiny", state.params(), cfg(1, 1)).unwrap();
+        let x: Vec<f32> = (0..dims.d_in).map(|j| j as f32 * 0.01).collect();
+        let want = {
+            let xt = Tensor::new(&[1, dims.d_in], x.clone()).unwrap();
+            reference::forward(state.params(), &xt).logits.row(0).to_vec()
+        };
+        // recycle the same pair of buffers through several requests: the
+        // input comes back untouched, the reply buffer holds the logits,
+        // and neither regrows once warm
+        let mut xbuf = x.clone();
+        let mut obuf = Vec::new();
+        let mut caps = (0, 0);
+        for round in 0..4 {
+            let reply = server
+                .submit_with(std::mem::take(&mut xbuf), std::mem::take(&mut obuf))
+                .unwrap()
+                .wait_reply()
+                .unwrap();
+            assert!(reply.result.is_ok());
+            assert_eq!(reply.x, x, "input buffer must ride back unchanged");
+            assert_eq!(reply.logits, want);
+            xbuf = reply.x;
+            obuf = reply.logits;
+            if round == 1 {
+                caps = (xbuf.capacity(), obuf.capacity());
+            } else if round > 1 {
+                assert_eq!((xbuf.capacity(), obuf.capacity()), caps);
+            }
+        }
+        assert_eq!(server.shutdown().completed, 4);
     }
 
     #[test]

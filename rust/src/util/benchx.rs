@@ -146,18 +146,22 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 pub fn fmt_si(x: f64) -> String {
-    let (v, suffix) = if x >= 1e12 {
-        (x / 1e12, "T")
-    } else if x >= 1e9 {
-        (x / 1e9, "G")
-    } else if x >= 1e6 {
-        (x / 1e6, "M")
-    } else if x >= 1e3 {
-        (x / 1e3, "k")
-    } else {
-        (x, "")
+    if !x.is_finite() {
+        // a non-finite rate (0/0 before the first wall-clock tick,
+        // overflow) renders as an explicit zero, never NaN/inf, so
+        // machine-parsed report lines stay numeric
+        return "0.00".to_string();
+    }
+    // branch on the magnitude so negative values pick up the same SI
+    // suffix as their absolute value (-2e6 -> "-2.00M", not "-2000000.00")
+    let (div, suffix) = match x.abs() {
+        a if a >= 1e12 => (1e12, "T"),
+        a if a >= 1e9 => (1e9, "G"),
+        a if a >= 1e6 => (1e6, "M"),
+        a if a >= 1e3 => (1e3, "k"),
+        _ => (1.0, ""),
     };
-    format!("{v:.2}{suffix}")
+    format!("{:.2}{suffix}", x / div)
 }
 
 #[cfg(test)]
@@ -204,6 +208,22 @@ mod tests {
         assert_eq!(fmt_si(3.0e6), "3.00M");
         assert_eq!(fmt_si(1.5e3), "1.50k");
         assert_eq!(fmt_si(5.0), "5.00");
+        assert_eq!(fmt_si(1e3), "1.00k"); // boundary lands on the suffix
+    }
+
+    #[test]
+    fn fmt_si_negative_and_nonfinite() {
+        // regression: negatives fell through every `x >= threshold`
+        // branch ("-2000000.00"), and NaN rendered literally in report
+        // lines parsed by the bench tooling
+        assert_eq!(fmt_si(-2.0e6), "-2.00M");
+        assert_eq!(fmt_si(-2.5e9), "-2.50G");
+        assert_eq!(fmt_si(-1.5e3), "-1.50k");
+        assert_eq!(fmt_si(-5.0), "-5.00");
+        assert_eq!(fmt_si(f64::NAN), "0.00");
+        assert_eq!(fmt_si(f64::INFINITY), "0.00");
+        assert_eq!(fmt_si(f64::NEG_INFINITY), "0.00");
+        assert_eq!(fmt_si(0.0), "0.00");
     }
 
     fn result_with(samples: &[f64]) -> BenchResult {

@@ -180,7 +180,11 @@ impl Value {
 }
 
 fn write_number(out: &mut String, n: f64) {
-    if n.is_finite() && n.fract() == 0.0 && n.abs() < 1e15 {
+    if n == 0.0 && n.is_sign_negative() {
+        // the integer fast path would cast -0.0 to 0 and drop the sign;
+        // "-0" parses back to -0.0, keeping round-trips bit-exact
+        out.push_str("-0");
+    } else if n.is_finite() && n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else if n.is_finite() {
         let _ = write!(out, "{n}");
@@ -494,5 +498,50 @@ mod tests {
         assert_eq!(Value::Number(3.0).to_string_compact(), "3");
         assert_eq!(Value::Number(0.25).to_string_compact(), "0.25");
         assert_eq!(Value::Number(f64::NAN).to_string_compact(), "null");
+        // regression: the i64 fast path cast -0.0 to "0", losing the sign
+        assert_eq!(Value::Number(-0.0).to_string_compact(), "-0");
+    }
+
+    #[test]
+    fn number_round_trip_preserves_bits() {
+        use crate::util::rng::Pcg64;
+        // `Value::PartialEq` can't see this drift (-0.0 == 0.0 under f64
+        // equality), so compare raw bit patterns
+        let check = |v: f64| {
+            let ser = Value::Number(v).to_string_compact();
+            let back = Value::parse(&ser).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v:?} -> {ser} -> {back:?}");
+        };
+        // sign, subnormal and i64-cast-boundary edges, explicitly
+        for v in [
+            0.0,
+            -0.0,
+            5e-324,  // smallest positive subnormal
+            -5e-324,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::MIN,
+            f64::EPSILON,
+            1e15,     // first value routed to the float branch
+            -1e15,
+            1e15 - 1.0, // last value through the integer fast path
+            999999999999999.5,
+            9007199254740992.0, // 2^53: integral but above 1e15
+            1.0 / 3.0,
+        ] {
+            check(v);
+        }
+        // randomized sweep over raw bit patterns: hits subnormals, huge
+        // exponents and long mantissas the handpicked list can't
+        let mut rng = Pcg64::seed(2026);
+        let mut tested = 0;
+        while tested < 4000 {
+            let v = f64::from_bits(rng.next_u64());
+            if !v.is_finite() {
+                continue; // NaN/inf serialize as null by design
+            }
+            check(v);
+            tested += 1;
+        }
     }
 }

@@ -1,0 +1,793 @@
+//! Streaming JSON lexer + the NDJSON wire codec for `pdfa serve`.
+//!
+//! The DOM parser in [`super::json`] builds a `BTreeMap`+`String` tree —
+//! fine for manifests and reports, far too allocation-heavy for a request
+//! hot path. This module is the complement: a callback/visitor lexer that
+//! walks a JSON document and emits borrowed [`Event`]s, plus specialized
+//! codecs for the serving wire format that parse straight into reusable
+//! buffers:
+//!
+//! * request line  — `{"x":[<f32>...]}` with an optional `"id":<u64>`
+//! * success reply — `{"id":<u64>,"pred":<usize>,"logits":[<f32>...]}`
+//! * error reply   — `{"id":<u64>,"error":"<message>"}`
+//!
+//! At steady state the codec performs **zero heap allocations per
+//! request**: [`parse_request`] fills a caller-owned `Vec<f32>`,
+//! [`write_reply`]/[`write_error`] fill a caller-owned `String`, number
+//! tokens are handed out as borrowed `&str` slices (`Event::Num`) so the
+//! caller parses `f32`/`u64` directly without an intermediate `f64` DOM
+//! node, and escaped strings decode into the lexer's persistent scratch
+//! buffer. Allocation-freedom is pinned by `tests/alloc_hotpath.rs` with
+//! a counting global allocator.
+//!
+//! Floats survive the wire bit-exactly: serialization uses Rust's
+//! shortest-round-trip `Display` and parsing is correctly rounded, so
+//! `parse(write(v)) == v` for every finite `f32` — the property the
+//! serve-path bit-identity guarantee rests on.
+
+use std::fmt::Write as _;
+
+use crate::{Error, Result};
+
+/// Nesting depth cap: a parser guard, not a wire limit (request lines
+/// are depth 2). Keeps adversarial `[[[[...` input from overflowing the
+/// recursive-descent stack.
+const MAX_DEPTH: usize = 128;
+
+/// One structural event emitted by [`Lexer::lex`].
+///
+/// Borrowed payloads (`Key`, `Str`, `Num`) are valid only for the
+/// duration of the visitor call: string data may live in the lexer's
+/// reused scratch buffer. `Num` is the *raw token text* — the visitor
+/// picks the parse target (`f32`, `u64`, ...) so no precision is forced
+/// by the lexer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    BeginObject,
+    EndObject,
+    BeginArray,
+    EndArray,
+    /// Object key (emitted before its value's events).
+    Key(&'a str),
+    Str(&'a str),
+    /// Raw number token, syntax-checked against the JSON grammar.
+    Num(&'a str),
+    Bool(bool),
+    Null,
+}
+
+/// Reusable streaming lexer. Holds only the escape-decoding scratch
+/// buffer, so a long-lived connection pays for string unescaping
+/// capacity once.
+#[derive(Default)]
+pub struct Lexer {
+    scratch: String,
+}
+
+impl Lexer {
+    pub fn new() -> Lexer {
+        Lexer::default()
+    }
+
+    /// Lex one complete JSON document, calling `visit` for every event.
+    /// Trailing non-whitespace is an error (NDJSON: one value per line).
+    /// An `Err` from `visit` aborts the walk and is returned verbatim.
+    pub fn lex(
+        &mut self,
+        src: &str,
+        visit: &mut dyn FnMut(Event) -> Result<()>,
+    ) -> Result<()> {
+        let mut lx = Lex {
+            src,
+            bytes: src.as_bytes(),
+            pos: 0,
+            scratch: &mut self.scratch,
+            visit,
+        };
+        lx.skip_ws();
+        lx.value(0)?;
+        lx.skip_ws();
+        if lx.pos != lx.bytes.len() {
+            return Err(lx.err("trailing data after JSON value"));
+        }
+        Ok(())
+    }
+}
+
+struct Lex<'s, 'v> {
+    src: &'s str,
+    bytes: &'s [u8],
+    pos: usize,
+    scratch: &'v mut String,
+    visit: &'v mut dyn FnMut(Event) -> Result<()>,
+}
+
+impl Lex<'_, '_> {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Json { offset: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(format!("invalid literal, expected '{lit}'")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<()> {
+        if depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                (self.visit)(Event::BeginObject)?;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return (self.visit)(Event::EndObject);
+                }
+                loop {
+                    self.skip_ws();
+                    self.string_event(true)?;
+                    self.skip_ws();
+                    if self.bump() != Some(b':') {
+                        self.pos = self.pos.saturating_sub(1);
+                        return Err(self.err("expected ':' after object key"));
+                    }
+                    self.skip_ws();
+                    self.value(depth + 1)?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return (self.visit)(Event::EndObject),
+                        _ => return Err(self.err("expected ',' or '}' in object")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                (self.visit)(Event::BeginArray)?;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return (self.visit)(Event::EndArray);
+                }
+                loop {
+                    self.skip_ws();
+                    self.value(depth + 1)?;
+                    self.skip_ws();
+                    match self.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return (self.visit)(Event::EndArray),
+                        _ => return Err(self.err("expected ',' or ']' in array")),
+                    }
+                }
+            }
+            Some(b'"') => self.string_event(false),
+            Some(b't') => {
+                self.literal("true")?;
+                (self.visit)(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                (self.visit)(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal("null")?;
+                (self.visit)(Event::Null)
+            }
+            Some(b'-' | b'0'..=b'9') => self.number_event(),
+            Some(c) => Err(self.err(format!("unexpected byte '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    /// Emit `Key`/`Str`. Escape-free strings are borrowed straight from
+    /// the input; escaped ones decode into the persistent scratch buffer
+    /// (no allocation once its capacity is warm).
+    fn string_event(&mut self, key: bool) -> Result<()> {
+        if self.bump() != Some(b'"') {
+            self.pos = self.pos.saturating_sub(1);
+            return Err(self.err("expected string"));
+        }
+        let start = self.pos;
+        let mut i = self.pos;
+        while i < self.bytes.len() {
+            let b = self.bytes[i];
+            if b == b'"' {
+                let s = &self.src[start..i];
+                self.pos = i + 1;
+                return (self.visit)(if key { Event::Key(s) } else { Event::Str(s) });
+            }
+            if b == b'\\' || b < 0x20 {
+                break;
+            }
+            i += 1;
+        }
+        if self.bytes.get(i).copied() == Some(b'\\') {
+            // slow path: copy the clean prefix, then decode escapes
+            self.scratch.clear();
+            self.scratch.push_str(&self.src[start..i]);
+            self.pos = i;
+            self.decode_escaped_tail()?;
+            let s: &str = self.scratch;
+            return (self.visit)(if key { Event::Key(s) } else { Event::Str(s) });
+        }
+        self.pos = i;
+        if i < self.bytes.len() {
+            Err(self.err("control character in string"))
+        } else {
+            Err(self.err("unterminated string"))
+        }
+    }
+
+    /// Continue an escaped string from `pos` into `scratch`, consuming
+    /// the closing quote.
+    fn decode_escaped_tail(&mut self) -> Result<()> {
+        loop {
+            match self.bump() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => return Ok(()),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => self.scratch.push('"'),
+                    Some(b'\\') => self.scratch.push('\\'),
+                    Some(b'/') => self.scratch.push('/'),
+                    Some(b'b') => self.scratch.push('\u{0008}'),
+                    Some(b'f') => self.scratch.push('\u{000C}'),
+                    Some(b'n') => self.scratch.push('\n'),
+                    Some(b'r') => self.scratch.push('\r'),
+                    Some(b't') => self.scratch.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.hex4()?;
+                        let c = if (0xD800..0xDC00).contains(&cp) {
+                            if self.bump() != Some(b'\\') || self.bump() != Some(b'u') {
+                                return Err(self.err("expected low surrogate"));
+                            }
+                            let lo = self.hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
+                            char::from_u32(0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00))
+                        } else {
+                            char::from_u32(cp)
+                        };
+                        self.scratch
+                            .push(c.ok_or_else(|| self.err("invalid codepoint"))?);
+                    }
+                    _ => return Err(self.err("invalid escape")),
+                },
+                Some(b) if b < 0x20 => {
+                    return Err(self.err("control character in string"))
+                }
+                Some(b) => {
+                    // multibyte UTF-8 passthrough (input is a valid &str)
+                    let len = utf8_len(b);
+                    let st = self.pos - 1;
+                    for _ in 1..len {
+                        self.bump();
+                    }
+                    let chunk = self
+                        .src
+                        .get(st..self.pos)
+                        .ok_or_else(|| self.err("invalid utf-8"))?;
+                    self.scratch.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = self.bump().ok_or_else(|| self.err("eof in \\u escape"))?;
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err("invalid hex digit"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    /// Syntax-check a number token against the RFC 8259 grammar and emit
+    /// it as a raw slice; the visitor chooses the numeric type to parse.
+    fn number_event(&mut self) -> Result<()> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        if self.digits() == 0 {
+            return Err(self.err("invalid number"));
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.err("invalid number: empty fraction"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if self.digits() == 0 {
+                return Err(self.err("invalid number: empty exponent"));
+            }
+        }
+        (self.visit)(Event::Num(&self.src[start..self.pos]))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------- serving wire codec ----------------
+
+/// Parse one request line `{"x":[...]}` (optional `"id":<u64>`, either
+/// key order) into the reusable `x` buffer; returns the id. Strict by
+/// design: unknown keys, duplicate keys, non-numeric features and
+/// anything but a top-level object are errors, so client bugs surface as
+/// error replies instead of silently skewed inputs.
+pub fn parse_request(lexer: &mut Lexer, line: &str, x: &mut Vec<f32>) -> Result<Option<u64>> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Start,
+        Top,
+        WantX,
+        InX,
+        WantId,
+        Done,
+    }
+    x.clear();
+    let mut id: Option<u64> = None;
+    let mut saw_x = false;
+    let mut st = St::Start;
+    lexer.lex(line, &mut |ev| {
+        match (st, ev) {
+            (St::Start, Event::BeginObject) => st = St::Top,
+            (St::Start, _) => return Err(Error::msg("request must be a JSON object")),
+            (St::Top, Event::Key("x")) => {
+                if saw_x {
+                    return Err(Error::msg("request: duplicate key \"x\""));
+                }
+                st = St::WantX;
+            }
+            (St::Top, Event::Key("id")) => {
+                if id.is_some() {
+                    return Err(Error::msg("request: duplicate key \"id\""));
+                }
+                st = St::WantId;
+            }
+            (St::Top, Event::Key(k)) => {
+                return Err(Error::msg(format!("request: unknown key \"{k}\"")))
+            }
+            (St::Top, Event::EndObject) => st = St::Done,
+            (St::WantX, Event::BeginArray) => st = St::InX,
+            (St::WantX, _) => {
+                return Err(Error::msg("request: \"x\" must be an array of numbers"))
+            }
+            (St::InX, Event::Num(s)) => x.push(parse_f32(s)?),
+            (St::InX, Event::EndArray) => {
+                saw_x = true;
+                st = St::Top;
+            }
+            (St::InX, _) => {
+                return Err(Error::msg("request: \"x\" must contain only numbers"))
+            }
+            (St::WantId, Event::Num(s)) => {
+                id = Some(s.parse::<u64>().map_err(|_| {
+                    Error::msg(format!("request: \"id\" must be an unsigned integer, got '{s}'"))
+                })?);
+                st = St::Top;
+            }
+            (St::WantId, _) => {
+                return Err(Error::msg("request: \"id\" must be an unsigned integer"))
+            }
+            _ => return Err(Error::msg("request: unexpected structure")),
+        }
+        Ok(())
+    })?;
+    if !saw_x {
+        return Err(Error::msg("request is missing \"x\""));
+    }
+    Ok(id)
+}
+
+/// Scalar fields of a parsed reply line (logits land in the caller's
+/// buffer). `Copy`, so handing it around never allocates.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplyHead {
+    pub id: Option<u64>,
+    pub pred: Option<u64>,
+    pub is_error: bool,
+}
+
+/// Client-side parse of one reply line into reusable buffers: on success
+/// `logits` is filled; on an error reply `error` carries the message and
+/// `is_error` is set. A `null` logit (the JSON spelling of a non-finite
+/// float) decodes as NaN.
+pub fn parse_reply(
+    lexer: &mut Lexer,
+    line: &str,
+    logits: &mut Vec<f32>,
+    error: &mut String,
+) -> Result<ReplyHead> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Start,
+        Top,
+        WantId,
+        WantPred,
+        WantLogits,
+        InLogits,
+        WantError,
+        Done,
+    }
+    logits.clear();
+    error.clear();
+    let mut head = ReplyHead::default();
+    let mut saw_logits = false;
+    let mut st = St::Start;
+    lexer.lex(line, &mut |ev| {
+        match (st, ev) {
+            (St::Start, Event::BeginObject) => st = St::Top,
+            (St::Start, _) => return Err(Error::msg("reply must be a JSON object")),
+            (St::Top, Event::Key("id")) => st = St::WantId,
+            (St::Top, Event::Key("pred")) => st = St::WantPred,
+            (St::Top, Event::Key("logits")) => st = St::WantLogits,
+            (St::Top, Event::Key("error")) => st = St::WantError,
+            (St::Top, Event::Key(k)) => {
+                return Err(Error::msg(format!("reply: unknown key \"{k}\"")))
+            }
+            (St::Top, Event::EndObject) => st = St::Done,
+            (St::WantId, Event::Num(s)) => {
+                head.id = Some(s.parse::<u64>().map_err(|_| {
+                    Error::msg(format!("reply: bad id '{s}'"))
+                })?);
+                st = St::Top;
+            }
+            (St::WantPred, Event::Num(s)) => {
+                head.pred = Some(s.parse::<u64>().map_err(|_| {
+                    Error::msg(format!("reply: bad pred '{s}'"))
+                })?);
+                st = St::Top;
+            }
+            (St::WantLogits, Event::BeginArray) => st = St::InLogits,
+            (St::InLogits, Event::Num(s)) => logits.push(parse_f32(s)?),
+            (St::InLogits, Event::Null) => logits.push(f32::NAN),
+            (St::InLogits, Event::EndArray) => {
+                saw_logits = true;
+                st = St::Top;
+            }
+            (St::WantError, Event::Str(s)) => {
+                error.push_str(s);
+                head.is_error = true;
+                st = St::Top;
+            }
+            _ => return Err(Error::msg("reply: unexpected structure")),
+        }
+        Ok(())
+    })?;
+    if !saw_logits && !head.is_error {
+        return Err(Error::msg("reply has neither \"logits\" nor \"error\""));
+    }
+    Ok(head)
+}
+
+fn parse_f32(s: &str) -> Result<f32> {
+    s.parse::<f32>()
+        .map_err(|_| Error::msg(format!("bad number '{s}'")))
+}
+
+fn push_f32(out: &mut String, v: f32) {
+    if v.is_finite() {
+        // shortest-round-trip Display: parses back to the same bits
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null"); // JSON has no Inf/NaN
+    }
+}
+
+fn push_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize a request line (client side) into `out` (cleared first),
+/// trailing newline included.
+pub fn write_request(out: &mut String, id: Option<u64>, x: &[f32]) {
+    out.clear();
+    out.push('{');
+    if let Some(id) = id {
+        let _ = write!(out, "\"id\":{id},");
+    }
+    out.push_str("\"x\":[");
+    for (i, &v) in x.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_f32(out, v);
+    }
+    out.push_str("]}\n");
+}
+
+/// Serialize a success reply into `out` (cleared first), trailing
+/// newline included.
+pub fn write_reply(out: &mut String, id: Option<u64>, pred: usize, logits: &[f32]) {
+    out.clear();
+    out.push('{');
+    if let Some(id) = id {
+        let _ = write!(out, "\"id\":{id},");
+    }
+    let _ = write!(out, "\"pred\":{pred},\"logits\":[");
+    for (i, &v) in logits.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_f32(out, v);
+    }
+    out.push_str("]}\n");
+}
+
+/// Serialize an error reply into `out` (cleared first), trailing newline
+/// included.
+pub fn write_error(out: &mut String, id: Option<u64>, msg: &str) {
+    out.clear();
+    out.push('{');
+    if let Some(id) = id {
+        let _ = write!(out, "\"id\":{id},");
+    }
+    out.push_str("\"error\":");
+    push_escaped(out, msg);
+    out.push_str("}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Render the event stream as a compact trace for golden comparison.
+    fn trace(src: &str) -> Result<Vec<String>> {
+        let mut lx = Lexer::new();
+        let mut out = Vec::new();
+        lx.lex(src, &mut |ev| {
+            out.push(match ev {
+                Event::BeginObject => "{".into(),
+                Event::EndObject => "}".into(),
+                Event::BeginArray => "[".into(),
+                Event::EndArray => "]".into(),
+                Event::Key(k) => format!("k:{k}"),
+                Event::Str(s) => format!("s:{s}"),
+                Event::Num(n) => format!("n:{n}"),
+                Event::Bool(b) => format!("b:{b}"),
+                Event::Null => "null".into(),
+            });
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    #[test]
+    fn event_stream_of_nested_document() {
+        let got = trace(r#" {"a": [1, -2.5e3, true, null], "b\n": "c\"d"} "#).unwrap();
+        assert_eq!(
+            got,
+            vec![
+                "{", "k:a", "[", "n:1", "n:-2.5e3", "b:true", "null", "]",
+                "k:b\n", "s:c\"d", "}"
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"\\x\"", "{}extra",
+            "\"unterminated", "[1 2]", "{\"a\" 1}", "-", "1.", "1e", "01x",
+            "[\"\u{1}\"]",
+        ] {
+            assert!(trace(bad).is_err(), "should reject {bad:?}");
+        }
+        // recursion guard, not a stack overflow
+        let bomb = "[".repeat(4096);
+        assert!(trace(&bomb).is_err());
+    }
+
+    #[test]
+    fn visitor_error_aborts_the_walk() {
+        let mut lx = Lexer::new();
+        let mut seen = 0;
+        let err = lx.lex("[1,2,3]", &mut |ev| {
+            if matches!(ev, Event::Num("2")) {
+                return Err(Error::msg("stop here"));
+            }
+            seen += 1;
+            Ok(())
+        });
+        assert!(err.is_err());
+        assert_eq!(seen, 2); // BeginArray + "1"
+    }
+
+    #[test]
+    fn agrees_with_the_dom_parser_on_strings() {
+        use crate::util::json::Value;
+        // escaped + multibyte content decodes identically in both parsers
+        let src = r#""a\n\t\"\\é😀 \u00e9 \ud83d\ude00""#;
+        let want = Value::parse(src).unwrap().as_str().unwrap().to_string();
+        let got = trace(src).unwrap();
+        assert_eq!(got, vec![format!("s:{want}")]);
+    }
+
+    #[test]
+    fn parse_request_happy_paths() {
+        let mut lx = Lexer::new();
+        let mut x = Vec::new();
+        assert_eq!(parse_request(&mut lx, r#"{"x":[1,2.5,-3e-1]}"#, &mut x).unwrap(), None);
+        assert_eq!(x, vec![1.0, 2.5, -0.3]);
+        // both key orders, whitespace, empty array
+        assert_eq!(
+            parse_request(&mut lx, r#" {"id": 7, "x": [0.5]} "#, &mut x).unwrap(),
+            Some(7)
+        );
+        assert_eq!(x, vec![0.5]);
+        assert_eq!(
+            parse_request(&mut lx, r#"{"x":[],"id":0}"#, &mut x).unwrap(),
+            Some(0)
+        );
+        assert!(x.is_empty());
+    }
+
+    #[test]
+    fn parse_request_is_strict() {
+        let mut lx = Lexer::new();
+        let mut x = Vec::new();
+        for bad in [
+            r#"[1,2]"#,                     // not an object
+            r#"{"id":3}"#,                  // missing x
+            r#"{"x":[1],"x":[2]}"#,         // duplicate x
+            r#"{"x":[1],"y":2}"#,           // unknown key
+            r#"{"x":[1],"id":-1}"#,         // negative id
+            r#"{"x":[1],"id":1.5}"#,        // fractional id
+            r#"{"x":[1,"a"]}"#,             // non-numeric feature
+            r#"{"x":[null]}"#,              // null feature
+            r#"{"x":[[1]]}"#,               // nested array
+            r#"{"x":1}"#,                   // scalar x
+            r#"{"x":[1]} {"x":[2]}"#,       // trailing data
+        ] {
+            assert!(parse_request(&mut lx, bad, &mut x).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_request_reuses_buffers() {
+        let mut lx = Lexer::new();
+        let mut x = Vec::new();
+        let line = r#"{"x":[1,2,3,4,5,6,7,8]}"#;
+        parse_request(&mut lx, line, &mut x).unwrap();
+        let cap = x.capacity();
+        for _ in 0..16 {
+            parse_request(&mut lx, line, &mut x).unwrap();
+        }
+        assert_eq!(x.capacity(), cap, "steady-state parse must not regrow");
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn request_round_trip_is_bit_exact() {
+        let mut lx = Lexer::new();
+        let mut line = String::new();
+        let mut back = Vec::new();
+        let mut rng = Pcg64::seed(42);
+        for case in 0..200 {
+            let n = 1 + (case % 17);
+            let x: Vec<f32> = (0..n)
+                .map(|_| {
+                    // mix magnitudes: uniforms, tiny, huge, negatives
+                    let u = rng.uniform() as f32;
+                    let scale = match rng.next_u64() % 4 {
+                        0 => 1.0,
+                        1 => 1e-20,
+                        2 => 1e20,
+                        _ => -1.0,
+                    };
+                    u * scale
+                })
+                .collect();
+            write_request(&mut line, Some(case as u64), &x);
+            let id = parse_request(&mut lx, line.trim_end(), &mut back).unwrap();
+            assert_eq!(id, Some(case as u64));
+            assert_eq!(
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "bits drifted for {x:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reply_round_trip_and_error_replies() {
+        let mut lx = Lexer::new();
+        let mut line = String::new();
+        let mut logits = Vec::new();
+        let mut err = String::new();
+
+        let want = [1.5f32, -0.25, 3.0e-8, 7.0];
+        write_reply(&mut line, Some(9), 3, &want);
+        assert!(line.ends_with("]}\n"), "{line}");
+        let head = parse_reply(&mut lx, line.trim_end(), &mut logits, &mut err).unwrap();
+        assert_eq!(head, ReplyHead { id: Some(9), pred: Some(3), is_error: false });
+        assert_eq!(
+            logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+
+        // id-less replies (stdin-style clients) stay parseable
+        write_reply(&mut line, None, 0, &[1.0]);
+        let head = parse_reply(&mut lx, line.trim_end(), &mut logits, &mut err).unwrap();
+        assert_eq!(head.id, None);
+
+        // error replies escape the message and round-trip it
+        let msg = "bad \"x\"\twidth\n(16 wanted)";
+        write_error(&mut line, Some(4), msg);
+        let head = parse_reply(&mut lx, line.trim_end(), &mut logits, &mut err).unwrap();
+        assert!(head.is_error);
+        assert_eq!(head.id, Some(4));
+        assert_eq!(err, msg);
+        assert!(logits.is_empty());
+
+        // non-finite logits serialize as null and decode as NaN
+        write_reply(&mut line, None, 0, &[f32::INFINITY, 1.0]);
+        assert!(line.contains("null"), "{line}");
+        parse_reply(&mut lx, line.trim_end(), &mut logits, &mut err).unwrap();
+        assert!(logits[0].is_nan() && logits[1] == 1.0);
+
+        // a reply with neither payload nor error is rejected
+        assert!(parse_reply(&mut lx, r#"{"id":1}"#, &mut logits, &mut err).is_err());
+    }
+}

@@ -6,6 +6,8 @@
 //! unit-tested:
 //!
 //! * [`json`]   — JSON parser/serializer (artifact manifest, run configs)
+//! * [`json_stream`] — visiting JSON lexer + zero-allocation NDJSON codec
+//!   for the serving hot path (requests into reusable buffers, no DOM)
 //! * [`rng`]    — PCG64 RNG + Gaussian/uniform draws (noise sampling, init)
 //! * [`stats`]  — mean/std/percentiles, effective-resolution, correlation
 //! * [`cli`]    — declarative argument parser for the `pdfa` binary
@@ -19,6 +21,7 @@ pub mod check;
 pub mod cli;
 pub mod gzip;
 pub mod json;
+pub mod json_stream;
 pub mod logging;
 pub mod rng;
 pub mod stats;

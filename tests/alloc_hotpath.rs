@@ -1,0 +1,103 @@
+//! Proof that the NDJSON serving hot path is allocation-free at steady
+//! state: a counting global allocator wraps `System`, the codec buffers
+//! are warmed up, and then a thousand parse/serialize round trips must
+//! not allocate once.
+//!
+//! This file deliberately holds a SINGLE test: the allocator counter is
+//! process-global, and libtest runs tests in parallel threads, so any
+//! sibling test in this binary could pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use photonic_dfa::util::json_stream::{self, Lexer};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn ndjson_round_trip_is_allocation_free_at_steady_state() {
+    let mut lexer = Lexer::new();
+    let mut line = String::new();
+    let mut x: Vec<f32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    let mut errbuf = String::new();
+    // a realistic request: wide enough that a per-feature allocation
+    // would light the counter up hundreds of times per iteration
+    let feats: Vec<f32> = (0..64).map(|j| j as f32 * 0.015_625 - 0.5).collect();
+
+    // warm-up: grow every reusable buffer to its steady-state capacity
+    for _ in 0..4 {
+        json_stream::write_request(&mut line, Some(41), &feats);
+        let id = json_stream::parse_request(&mut lexer, line.trim_end(), &mut x).unwrap();
+        assert_eq!(id, Some(41));
+        json_stream::write_reply(&mut line, id, 3, &x);
+        let head = json_stream::parse_reply(
+            &mut lexer,
+            line.trim_end(),
+            &mut logits,
+            &mut errbuf,
+        )
+        .unwrap();
+        assert_eq!(head.pred, Some(3));
+        json_stream::write_error(&mut line, Some(9), "serve: queue is shut down");
+        let head = json_stream::parse_reply(
+            &mut lexer,
+            line.trim_end(),
+            &mut logits,
+            &mut errbuf,
+        )
+        .unwrap();
+        assert!(head.is_error);
+    }
+
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for i in 0..1000u64 {
+        // client serializes a request, server parses it...
+        json_stream::write_request(&mut line, Some(i), &feats);
+        let id = json_stream::parse_request(&mut lexer, line.trim_end(), &mut x).unwrap();
+        // ...server serializes the reply, client parses it back
+        json_stream::write_reply(&mut line, id, (i % 10) as usize, &x);
+        let head = json_stream::parse_reply(
+            &mut lexer,
+            line.trim_end(),
+            &mut logits,
+            &mut errbuf,
+        )
+        .unwrap();
+        assert!(!head.is_error);
+        assert!(logits == feats, "round trip drifted at iteration {i}");
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "per-request hot path allocated {} times over 1000 round trips",
+        after - before
+    );
+}

@@ -204,6 +204,188 @@ fn serve_synthetic_smoke_run() {
     assert!(text.contains("serve: 16 ok / 0 failed"), "{text}");
 }
 
+/// Train a quick tiny checkpoint for the serve-path tests.
+fn train_tiny_ckpt(tag: &str) -> std::path::PathBuf {
+    let out_dir = std::env::temp_dir().join(format!("pdfa_cli_{tag}"));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let out = pdfa()
+        .args([
+            "train",
+            "--config", "tiny",
+            "--epochs", "1",
+            "--max-steps", "2",
+            "--n-train", "64",
+            "--n-test", "32",
+            "--out", out_dir.to_str().unwrap(),
+            "--run-name", tag,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    out_dir.join(tag).join("final.ckpt")
+}
+
+#[test]
+fn serve_stdin_budget_counts_only_accepted_requests() {
+    use std::io::Write;
+    use std::process::Stdio;
+
+    let ckpt = train_tiny_ckpt("serve_stdin_budget");
+    let mut child = pdfa()
+        .args([
+            "serve",
+            "--checkpoint", ckpt.to_str().unwrap(),
+            "--max-requests", "2",
+            "--max-wait-ms", "1",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    // a wrong-width line first, then three good ones: the rejected
+    // submit must NOT consume the 2-request budget (it used to, so the
+    // run stopped one accepted request short)
+    let good: String =
+        (0..16).map(|j| format!("{} ", 0.1 + j as f64 * 0.01)).collect();
+    let mut input = String::from("0.5 0.5\n");
+    for _ in 0..3 {
+        input.push_str(good.trim_end());
+        input.push('\n');
+    }
+    child.stdin.take().unwrap().write_all(input.as_bytes()).unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.lines().any(|l| l.starts_with("error:") && l.contains("features")),
+        "wrong-width line must error: {text}"
+    );
+    let preds = text.lines().filter(|l| l.starts_with("pred ")).count();
+    assert_eq!(preds, 2, "budget is 2 ACCEPTED requests: {text}");
+    assert!(text.contains("serve: 2 ok / 0 failed"), "{text}");
+}
+
+#[test]
+fn serve_listen_tcp_round_trip_bit_exact() {
+    use photonic_dfa::dfa::checkpoint::Checkpoint;
+    use photonic_dfa::dfa::reference;
+    use photonic_dfa::tensor::Tensor;
+    use photonic_dfa::util::json_stream::{self, Lexer};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::process::Stdio;
+
+    let ckpt_path = train_tiny_ckpt("serve_listen_tcp");
+    let mut child = pdfa()
+        .args([
+            "serve",
+            "--checkpoint", ckpt_path.to_str().unwrap(),
+            "--source", "listen",
+            "--listen", "127.0.0.1:0",
+            "--max-requests", "2",
+            "--max-wait-ms", "1",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut child_out = BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        assert!(
+            child_out.read_line(&mut line).unwrap() > 0,
+            "server exited before announcing its port"
+        );
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            break rest.to_string();
+        }
+    };
+
+    let ckpt = Checkpoint::load(&ckpt_path).unwrap();
+    let d_in = ckpt.dims.d_in;
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    let mut lexer = Lexer::new();
+    let mut out = String::new();
+    let mut logits = Vec::new();
+    let mut errbuf = String::new();
+    for id in 0..2u64 {
+        let x: Vec<f32> =
+            (0..d_in).map(|j| (j as f32 + id as f32 * 3.0) * 0.02).collect();
+        json_stream::write_request(&mut out, Some(id), &x);
+        w.write_all(out.as_bytes()).unwrap();
+        w.flush().unwrap();
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "no reply for {id}");
+        let head = json_stream::parse_reply(
+            &mut lexer,
+            line.trim_end(),
+            &mut logits,
+            &mut errbuf,
+        )
+        .unwrap();
+        assert!(!head.is_error, "{line}");
+        assert_eq!(head.id, Some(id));
+        // the acceptance pin: logits over TCP == reference::forward on
+        // the checkpoint params, bit for bit
+        let xt = Tensor::new(&[1, d_in], x).unwrap();
+        let want = reference::forward(ckpt.state.params(), &xt);
+        assert_eq!(logits, want.logits.row(0), "TCP logits drifted");
+    }
+    drop(w);
+    drop(reader);
+
+    // budget reached: the server drains and exits on its own
+    let mut rest = String::new();
+    child_out.read_to_string(&mut rest).unwrap();
+    assert!(child.wait().unwrap().success(), "{rest}");
+    assert!(rest.contains("2 accepted"), "{rest}");
+    assert!(rest.contains("serve: 2 ok / 0 failed"), "{rest}");
+}
+
+#[test]
+fn serve_tcp_driver_writes_bench_record() {
+    use photonic_dfa::util::json::Value;
+
+    let ckpt = train_tiny_ckpt("serve_tcp_bench");
+    let bench_path = std::env::temp_dir().join("pdfa_cli_tcp_bench.json");
+    let _ = std::fs::remove_file(&bench_path);
+    let out = pdfa()
+        .args([
+            "serve",
+            "--checkpoint", ckpt.to_str().unwrap(),
+            "--source", "tcp",
+            "--max-requests", "64",
+            "--clients", "8",
+            "--pipeline", "4",
+            "--max-wait-ms", "1",
+            "--verify",
+            "--bench-out", bench_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tcp: 64 ok / 0 errors"), "{text}");
+    assert!(text.contains("verified: 64 replies bit-exact"), "{text}");
+    assert!(text.contains("serve: 64 ok"), "{text}");
+
+    let record = std::fs::read_to_string(&bench_path).unwrap();
+    let v = Value::parse(&record).unwrap();
+    let get = |k: &str| match &v {
+        Value::Object(map) => map.get(k).cloned().unwrap(),
+        other => panic!("bench record is not an object: {other:?}"),
+    };
+    assert_eq!(get("bench"), Value::String("serve_tcp".into()));
+    assert_eq!(get("ok"), Value::Number(64.0));
+    assert_eq!(get("verified"), Value::Number(64.0));
+    assert_eq!(get("clients"), Value::Number(8.0));
+    assert!(matches!(get("latency_ns"), Value::Object(_)));
+}
+
 #[test]
 fn malformed_checkpoints_rejected_cleanly() {
     let dir = std::env::temp_dir().join("pdfa_cli_badckpt");

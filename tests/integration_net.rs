@@ -1,0 +1,225 @@
+//! Integration: the NDJSON-over-TCP serving front-end on real loopback
+//! sockets. The acceptance invariants: many concurrent pipelined clients
+//! sustain traffic through the micro-batcher with every reply bit-exact
+//! vs `dfa::reference::forward`; malformed lines get in-order error
+//! replies without dropping the connection; and a request budget drains
+//! gracefully — every accepted request is answered before the socket
+//! closes.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::dfa::reference;
+use photonic_dfa::runtime::manifest::NetDims;
+use photonic_dfa::runtime::{NativeEngine, StepEngine};
+use photonic_dfa::serve::net::{self, NetConfig, NetServer, TrafficConfig};
+use photonic_dfa::serve::{BatchPolicy, ServeConfig, Server};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::json_stream::{self, Lexer};
+use photonic_dfa::util::rng::Pcg64;
+
+fn tiny_server(seed: u64, max_batch: usize) -> (Arc<Server>, NetState, NetDims) {
+    let engine: Arc<dyn StepEngine> = Arc::new(NativeEngine::new());
+    let dims = NetDims { d_in: 16, d_h1: 32, d_h2: 32, d_out: 4, batch: 8 };
+    let state = NetState::init(&dims, &mut Pcg64::seed(seed));
+    let server = Server::start(
+        &engine,
+        "tiny",
+        state.params(),
+        ServeConfig {
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 128,
+            },
+        },
+    )
+    .unwrap();
+    (Arc::new(server), state, dims)
+}
+
+fn bind_loopback() -> TcpListener {
+    TcpListener::bind("127.0.0.1:0").unwrap()
+}
+
+fn shutdown_server(server: Arc<Server>) -> photonic_dfa::serve::ServeStats {
+    Arc::try_unwrap(server)
+        .unwrap_or_else(|_| panic!("connections joined, server uniquely owned"))
+        .shutdown()
+}
+
+/// The headline acceptance run: 8 concurrent pipelined TCP clients, every
+/// reply verified bit-exact against the reference forward.
+#[test]
+fn eight_concurrent_clients_get_bit_identical_logits() {
+    let (server, state, dims) = tiny_server(101, 8);
+    let netsrv =
+        NetServer::start(server.clone(), bind_loopback(), NetConfig::default())
+            .unwrap();
+    let cfg = TrafficConfig {
+        clients: 8,
+        requests_per_client: 32,
+        depth: 8,
+        d_in: dims.d_in,
+        seed: 2026,
+    };
+    let report =
+        net::drive(netsrv.local_addr(), &cfg, Some(state.params())).unwrap();
+    assert_eq!(report.sent, 256);
+    assert_eq!(report.ok, 256, "every request answered: {report:?}");
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.verified, 256, "every reply checked bit-exact");
+    assert_eq!(report.latency.samples_ns.len(), 256);
+    assert!(report.req_per_s() > 0.0);
+    let text = report.report();
+    assert!(text.contains("req/s") && text.contains("bit-exact"), "{text}");
+
+    let net_stats = netsrv.shutdown();
+    assert_eq!(net_stats.accepted, 256);
+    assert_eq!(net_stats.rejected, 0);
+    assert_eq!(net_stats.connections, 8);
+    let stats = shutdown_server(server);
+    assert_eq!(stats.completed, 256);
+    assert_eq!(stats.failed, 0);
+}
+
+/// Malformed lines must produce in-order `{"error":...}` replies and
+/// leave the connection serving; a wrong-width request echoes its id.
+#[test]
+fn malformed_lines_get_in_order_error_replies() {
+    let (server, state, dims) = tiny_server(103, 4);
+    let netsrv =
+        NetServer::start(server.clone(), bind_loopback(), NetConfig::default())
+            .unwrap();
+    let stream = TcpStream::connect(netsrv.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    let x: Vec<f32> = (0..dims.d_in).map(|j| j as f32 * 0.03).collect();
+    let mut good = String::new();
+    json_stream::write_request(&mut good, Some(7), &x);
+    // garbage, then a good request, then a wrong-width request — the
+    // replies must come back in exactly that order
+    w.write_all(b"this is not json\n").unwrap();
+    w.write_all(good.as_bytes()).unwrap();
+    w.write_all(b"{\"id\":8,\"x\":[1,2,3]}\n").unwrap();
+    w.flush().unwrap();
+
+    let mut lexer = Lexer::new();
+    let mut line = String::new();
+    let mut logits = Vec::new();
+    let mut errbuf = String::new();
+    let mut read_reply = |line: &mut String,
+                          logits: &mut Vec<f32>,
+                          errbuf: &mut String| {
+        line.clear();
+        assert!(reader.read_line(line).unwrap() > 0, "connection closed early");
+        json_stream::parse_reply(&mut lexer, line.trim_end(), logits, errbuf)
+            .unwrap()
+    };
+
+    let head = read_reply(&mut line, &mut logits, &mut errbuf);
+    assert!(head.is_error, "garbage line must error: {line}");
+    assert_eq!(head.id, None, "a line that failed to parse has no id");
+
+    let head = read_reply(&mut line, &mut logits, &mut errbuf);
+    assert!(!head.is_error, "good request must succeed: {line}");
+    assert_eq!(head.id, Some(7));
+    let xt = Tensor::new(&[1, dims.d_in], x).unwrap();
+    let want = reference::forward(state.params(), &xt);
+    assert_eq!(logits, want.logits.row(0), "logits drifted over the wire");
+
+    let head = read_reply(&mut line, &mut logits, &mut errbuf);
+    assert!(head.is_error, "wrong-width request must error: {line}");
+    assert_eq!(head.id, Some(8), "submit-side errors echo the request id");
+    assert!(errbuf.contains("features"), "{errbuf}");
+
+    drop(w);
+    drop(reader);
+    let net_stats = netsrv.shutdown();
+    assert_eq!(net_stats.accepted, 1);
+    assert_eq!(net_stats.rejected, 2);
+    let stats = shutdown_server(server);
+    assert_eq!(stats.completed, 1);
+}
+
+/// A `max_requests` budget drains gracefully: a client that pipelines
+/// past the budget still receives a reply for every accepted request (in
+/// order) before the server half-closes.
+#[test]
+fn request_budget_drains_gracefully() {
+    let (server, _state, dims) = tiny_server(107, 4);
+    let netsrv = NetServer::start(
+        server.clone(),
+        bind_loopback(),
+        NetConfig { max_inflight: 32, max_requests: 16 },
+    )
+    .unwrap();
+    let stream = TcpStream::connect(netsrv.local_addr()).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+
+    // fire 24 pipelined requests at a 16-request budget
+    let mut out = String::new();
+    for id in 0..24u64 {
+        let x: Vec<f32> = (0..dims.d_in).map(|j| (id + j as u64) as f32 * 0.01).collect();
+        json_stream::write_request(&mut out, Some(id), &x);
+        w.write_all(out.as_bytes()).unwrap();
+    }
+    w.flush().unwrap();
+
+    let mut lexer = Lexer::new();
+    let mut line = String::new();
+    let mut logits = Vec::new();
+    let mut errbuf = String::new();
+    let mut replies = Vec::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break; // server half-closed after the drain
+        }
+        let head = json_stream::parse_reply(
+            &mut lexer,
+            line.trim_end(),
+            &mut logits,
+            &mut errbuf,
+        )
+        .unwrap();
+        assert!(!head.is_error, "budgeted requests must succeed: {line}");
+        replies.push(head.id.unwrap());
+    }
+    assert_eq!(
+        replies,
+        (0..16).collect::<Vec<u64>>(),
+        "exactly the accepted budget, replied in order"
+    );
+
+    drop(w);
+    drop(reader);
+    let net_stats = netsrv.join(); // budget exhaustion stops the front-end
+    assert_eq!(net_stats.accepted, 16);
+    let stats = shutdown_server(server);
+    assert_eq!(stats.completed, 16);
+    assert_eq!(stats.failed, 0);
+}
+
+/// Oversized driver shapes are rejected cleanly, not served garbage.
+#[test]
+fn traffic_driver_validates_its_config() {
+    let cfg = TrafficConfig {
+        clients: 0,
+        requests_per_client: 8,
+        depth: 1,
+        d_in: 16,
+        seed: 1,
+    };
+    let addr = "127.0.0.1:9".parse().unwrap(); // never dialed
+    let err = net::drive(addr, &cfg, None).unwrap_err().to_string();
+    assert!(err.contains("clients"), "{err}");
+}
