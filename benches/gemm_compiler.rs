@@ -1,16 +1,23 @@
 //! GeMM-compiler bench: planning cost and tiled mat-vec execution over the
 //! numeric and device executors for the paper's layer shapes.
+//!
+//! Supports the same `--json <path>` machine-readable record flag as the
+//! `gemm_kernels` / `photonic_step` trajectory benches.
 
 use photonic_dfa::dfa::device_backend::DeviceBackend;
 use photonic_dfa::gemm::compiler::{GemmCompiler, NumericExecutor};
 use photonic_dfa::gemm::schedule::Order;
 use photonic_dfa::photonics::BpdMode;
 use photonic_dfa::tensor::Tensor;
-use photonic_dfa::util::benchx::{bench, bench_throughput, BenchConfig};
+use photonic_dfa::util::benchx::{
+    bench, bench_throughput, json_out_arg, BenchConfig, BenchRecords,
+};
+use photonic_dfa::util::json::Value;
 use photonic_dfa::util::rng::Pcg64;
 
 fn main() {
     let cfg = BenchConfig::default();
+    let mut records = BenchRecords::new("gemm_compiler");
     let mut rng = Pcg64::seed(1);
 
     // planning cost for the paper's 800x10 feedback matrix
@@ -19,6 +26,7 @@ fn main() {
         GemmCompiler::plan(800, 10, &exec, Order::ColMajor).unwrap()
     });
     println!("{}", r.report());
+    records.push(&r, vec![("stage", Value::str("plan"))]);
 
     // numeric execution (16 cycles per matvec)
     let bmat = Tensor::rand_uniform(&[800, 10], -1.0, 1.0, &mut rng);
@@ -33,6 +41,7 @@ fn main() {
         || plan.matvec(&mut exec, &bmat, &e).unwrap(),
     );
     println!("{}", r.report());
+    records.push(&r, vec![("stage", Value::str("numeric_matvec"))]);
 
     // device-level execution with pre-compiled (analog-memory) tiles
     let mut be = DeviceBackend::new(BpdMode::OffChip, 3).unwrap();
@@ -45,6 +54,7 @@ fn main() {
         || be.matvec(&fb, &e, None).unwrap(),
     );
     println!("{}", r.report());
+    records.push(&r, vec![("stage", Value::str("device_matvec"))]);
 
     // schedule statistics for the paper's case (prints the cycle count the
     // energy model consumes)
@@ -56,4 +66,9 @@ fn main() {
         stats.macs,
         stats.compute_time_s * 1e9
     );
+
+    if let Some(path) = json_out_arg() {
+        records.write(&path).expect("write bench record");
+        println!("gemm_compiler: wrote {} rows to {path}", records.len());
+    }
 }

@@ -1,0 +1,119 @@
+//! Raw GEMM kernel trajectory: the register-blocked `matmul` micro-kernel
+//! and its transpose-operand variants on the paper's MNIST layer shapes,
+//! across thread caps 1 / 2 / 4 / all-cores.
+//!
+//! Writes the machine-readable record CI commits on main pushes:
+//!
+//! ```text
+//! cargo bench --bench gemm_kernels -- --json BENCH_GEMM.json
+//! ```
+
+use photonic_dfa::tensor::ops::{matmul, matmul_at, matmul_bt, ThreadCapGuard};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{
+    bench_throughput, json_out_arg, BenchConfig, BenchRecords,
+};
+use photonic_dfa::util::json::Value;
+use photonic_dfa::util::rng::Pcg64;
+use photonic_dfa::util::threads;
+
+fn main() {
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 5,
+        max_time: std::time::Duration::from_secs(2),
+    };
+    let mut records = BenchRecords::new("gemm_kernels");
+    let mut rng = Pcg64::seed(7);
+    let all_cores = threads::available();
+
+    // forward-activation GEMM of the mnist config: [batch, d_in] @
+    // [d_in, d_h1] = (64 x 784) · (784 x 800) — large enough to cross
+    // PAR_THRESHOLD, so the thread-cap rows exercise the row split.
+    let (m, k, n) = (64usize, 784usize, 800usize);
+    let a = Tensor::rand_uniform(&[m, k], -1.0, 1.0, &mut rng);
+    let b = Tensor::rand_uniform(&[k, n], -1.0, 1.0, &mut rng);
+    let macs = (m * k * n) as f64;
+    // caps 1/2/4 plus all-cores when that is a distinct count (keeps the
+    // row names unique on 4-core machines)
+    let mut caps = vec![1usize, 2, 4];
+    if !caps.contains(&all_cores) {
+        caps.push(all_cores);
+    }
+    for &threads in &caps {
+        let _guard = ThreadCapGuard::set(threads);
+        let r = bench_throughput(
+            &format!("gemm/matmul_{m}x{k}x{n}_threads{threads}"),
+            &cfg,
+            macs,
+            "MAC",
+            || matmul(&a, &b).unwrap(),
+        );
+        println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("kernel", Value::str("matmul")),
+                ("m", Value::Number(m as f64)),
+                ("k", Value::Number(k as f64)),
+                ("n", Value::Number(n as f64)),
+                ("threads", Value::Number(threads as f64)),
+            ],
+        );
+    }
+
+    // DFA backward shapes for the transpose-operand kernels, at one
+    // thread and all cores:
+    //   matmul_bt — error projection e @ Bᵀ: (64 x 10) · (800 x 10)ᵀ
+    //   matmul_at — weight update aᵀ @ δ:   (64 x 784)ᵀ · (64 x 800)
+    let e = Tensor::rand_uniform(&[64, 10], -1.0, 1.0, &mut rng);
+    let bmat = Tensor::rand_uniform(&[800, 10], -1.0, 1.0, &mut rng);
+    let act = Tensor::rand_uniform(&[64, 784], 0.0, 1.0, &mut rng);
+    let delta = Tensor::rand_uniform(&[64, 800], -1.0, 1.0, &mut rng);
+    let scale_caps = if all_cores == 1 { vec![1usize] } else { vec![1, all_cores] };
+    for &threads in &scale_caps {
+        let _guard = ThreadCapGuard::set(threads);
+        let r = bench_throughput(
+            &format!("gemm/matmul_bt_64x10x800_threads{threads}"),
+            &cfg,
+            (64 * 10 * 800) as f64,
+            "MAC",
+            || matmul_bt(&e, &bmat).unwrap(),
+        );
+        println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("kernel", Value::str("matmul_bt")),
+                ("m", Value::Number(64.0)),
+                ("k", Value::Number(10.0)),
+                ("n", Value::Number(800.0)),
+                ("threads", Value::Number(threads as f64)),
+            ],
+        );
+
+        let r = bench_throughput(
+            &format!("gemm/matmul_at_784x64x800_threads{threads}"),
+            &cfg,
+            (784 * 64 * 800) as f64,
+            "MAC",
+            || matmul_at(&act, &delta).unwrap(),
+        );
+        println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("kernel", Value::str("matmul_at")),
+                ("m", Value::Number(784.0)),
+                ("k", Value::Number(64.0)),
+                ("n", Value::Number(800.0)),
+                ("threads", Value::Number(threads as f64)),
+            ],
+        );
+    }
+
+    if let Some(path) = json_out_arg() {
+        records.write(&path).expect("write bench record");
+        println!("gemm_kernels: wrote {} rows to {path}", records.len());
+    }
+}

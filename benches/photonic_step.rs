@@ -6,14 +6,24 @@
 //! feedback-locked inscription (the §4 lock protocol dominates), plus the
 //! one-off bank build (fabrication + calibration) cost. MAC throughput is
 //! reported against the gradient-path MACs the dispatch performs.
+//!
+//! Writes the machine-readable record CI commits on main pushes:
+//!
+//! ```text
+//! cargo bench --bench photonic_step -- --json BENCH_STEP.json
+//! ```
 
 use photonic_dfa::dfa::params::NetState;
 use photonic_dfa::runtime::{PhotonicEngine, PhysicsConfig, StepEngine};
 use photonic_dfa::tensor::Tensor;
-use photonic_dfa::util::benchx::{bench, bench_throughput, BenchConfig};
+use photonic_dfa::util::benchx::{
+    bench, bench_throughput, json_out_arg, BenchConfig, BenchRecords,
+};
+use photonic_dfa::util::json::Value;
 use photonic_dfa::util::rng::Pcg64;
 
 fn main() {
+    let mut records = BenchRecords::new("photonic_step");
     let cfg = BenchConfig {
         warmup_iters: 1,
         min_iters: 5,
@@ -50,6 +60,15 @@ fn main() {
             fwd.execute(&fwd_inputs).unwrap()
         });
         println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("net", Value::str("tiny")),
+                ("physics", Value::str(label)),
+                ("artifact", Value::str("fwd")),
+                ("threads", Value::Number(1.0)),
+            ],
+        );
 
         let mut step_inputs = state.tensors.clone();
         step_inputs.extend([
@@ -73,6 +92,15 @@ fn main() {
             || step.execute(&step_inputs).unwrap(),
         );
         println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("net", Value::str("tiny")),
+                ("physics", Value::str(label)),
+                ("artifact", Value::str("dfa_step")),
+                ("threads", Value::Number(1.0)),
+            ],
+        );
 
         // the telemetry roll-up of everything the bench dispatched: the
         // §5-modeled energy figure next to the wall-clock numbers above
@@ -89,17 +117,22 @@ fn main() {
         );
     }
 
-    // ---- batch-row sharding: 1 thread vs all cores, mnist-sized ----
+    // ---- batch-row sharding: thread scaling 1/2/4/all, mnist-sized ----
     // Ideal physics so the per-cycle optical chain (the part the worker
     // pool shards) dominates rather than the lock protocol. Outputs are
-    // bit-identical across the two rows; only the wall clock moves.
+    // bit-identical across every row; only the wall clock moves.
     let threads_cfg = BenchConfig {
         warmup_iters: 0,
         min_iters: 2,
         max_time: std::time::Duration::from_secs(4),
     };
     let all_cores = photonic_dfa::util::threads::available();
-    for threads in [1, all_cores] {
+    let mut thread_counts = vec![1usize, 2, 4];
+    thread_counts.retain(|&t| t <= all_cores);
+    if !thread_counts.contains(&all_cores) {
+        thread_counts.push(all_cores);
+    }
+    for threads in thread_counts {
         let engine =
             PhotonicEngine::open_threaded("artifacts", PhysicsConfig::ideal(), threads)
                 .unwrap();
@@ -135,5 +168,19 @@ fn main() {
             || step.execute(&step_inputs).unwrap(),
         );
         println!("{}", r.report());
+        records.push(
+            &r,
+            vec![
+                ("net", Value::str("mnist")),
+                ("physics", Value::str("ideal")),
+                ("artifact", Value::str("dfa_step")),
+                ("threads", Value::Number(threads as f64)),
+            ],
+        );
+    }
+
+    if let Some(path) = json_out_arg() {
+        records.write(&path).expect("write bench record");
+        println!("photonic_step: wrote {} rows to {path}", records.len());
     }
 }

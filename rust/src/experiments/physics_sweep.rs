@@ -126,16 +126,11 @@ pub fn physics_sweep(
     // cap the digital GEMM kernels to the same per-cell plan for the
     // duration of the sweep (workers x engine_threads ≈ the budget);
     // results are unaffected either way — this is purely an
-    // oversubscription guard. The guard restores the exact prior cap on
-    // every exit path, including a panicking cell.
-    struct CapGuard(usize);
-    impl Drop for CapGuard {
-        fn drop(&mut self) {
-            crate::tensor::ops::set_thread_cap(self.0);
-        }
-    }
-    let _restore_cap = CapGuard(crate::tensor::ops::thread_cap_raw());
-    crate::tensor::ops::set_thread_cap(engine_threads);
+    // oversubscription guard. `ThreadCapGuard` serializes this scope
+    // against every other cap-scoped user of the process-global cap and
+    // restores the exact prior value on every exit path, including a
+    // panicking cell.
+    let _restore_cap = crate::tensor::ops::ThreadCapGuard::set(engine_threads);
     let mut results: Vec<Option<Result<PhysicsPoint>>> =
         (0..cells.len()).map(|_| None).collect();
     if workers == 1 {

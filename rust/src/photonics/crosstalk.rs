@@ -42,23 +42,41 @@ impl CrosstalkModel {
     /// Effective per-channel weights of a row inscribed with `weights`
     /// (each ring tuned so that its *own* channel sees the target weight).
     pub fn effective_weights(&self, weights: &[f32]) -> Vec<f64> {
-        let n = weights.len();
-        let phis: Vec<f64> = weights
-            .iter()
-            .map(|&w| self.design.detuning_for_weight(w as f64))
-            .collect();
-        (0..n)
-            .map(|j| {
-                let mut drop_sum = 0.0;
-                let mut thru_prod = 1.0;
-                for (i, &phi_i) in phis.iter().enumerate() {
-                    let phi_ij = phi_i + self.channel_offset(i, j);
-                    drop_sum += self.design.drop(phi_ij);
-                    thru_prod *= self.design.through(phi_ij);
-                }
-                drop_sum - thru_prod
-            })
-            .collect()
+        let mut phis = Vec::new();
+        let mut out = vec![0.0f64; weights.len()];
+        self.effective_weights_into(weights, &mut phis, &mut out);
+        out
+    }
+
+    /// [`Self::effective_weights`] without the per-call allocations: the
+    /// caller owns both the detuning-phase scratch (`phis`, cleared and
+    /// refilled, capacity reused) and the output slice (length exactly
+    /// `weights.len()`). This is the form [`super::weight_bank::WeightBank`]
+    /// drives once per row on every re-inscription — the hottest
+    /// crosstalk path — so steady-state inscriptions stay heap-free.
+    pub fn effective_weights_into(
+        &self,
+        weights: &[f32],
+        phis: &mut Vec<f64>,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(weights.len(), out.len());
+        phis.clear();
+        phis.extend(
+            weights
+                .iter()
+                .map(|&w| self.design.detuning_for_weight(w as f64)),
+        );
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut drop_sum = 0.0;
+            let mut thru_prod = 1.0;
+            for (i, &phi_i) in phis.iter().enumerate() {
+                let phi_ij = phi_i + self.channel_offset(i, j);
+                drop_sum += self.design.drop(phi_ij);
+                thru_prod *= self.design.through(phi_ij);
+            }
+            *o = drop_sum - thru_prod;
+        }
     }
 
     /// Power fraction a resonance-parked ring steals from the adjacent

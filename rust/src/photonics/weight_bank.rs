@@ -133,6 +133,11 @@ pub struct WeightBank {
     /// Effective per-ring weights after crosstalk (row-major), refreshed by
     /// inscribe().
     w_eff: Vec<f64>,
+    /// Reusable per-row scratch of [`Self::refresh_effective`] (achieved
+    /// weights and their detuning phases): re-inscription runs once per
+    /// tile per dispatch, so it must not allocate at steady state.
+    scratch_row_w: Vec<f32>,
+    scratch_phis: Vec<f64>,
     rng: Pcg64,
     /// Count of bank operational cycles performed (for energy/speed roll-up).
     pub cycles: u64,
@@ -176,6 +181,8 @@ impl WeightBank {
             crosstalk: CrosstalkModel::new(design, cfg.spacing_linewidths),
             adc: (cfg.adc_bits > 0).then(|| Quantizer::new(cfg.adc_bits, 1.0)),
             w_eff: vec![0.0; n_total],
+            scratch_row_w: Vec::with_capacity(cfg.cols),
+            scratch_phis: Vec::with_capacity(cfg.cols),
             design,
             actuator,
             rings,
@@ -221,15 +228,29 @@ impl WeightBank {
     }
 
     /// Refresh the crosstalk-effective weights from the per-ring achieved
-    /// weights, row by row.
+    /// weights, row by row. Allocation-free at steady state: the per-row
+    /// weight and phase scratch live on the bank and the crosstalk model
+    /// writes straight into `w_eff`.
     fn refresh_effective(&mut self) {
-        for r in 0..self.cfg.rows {
-            let row_w: Vec<f32> = (0..self.cfg.cols)
-                .map(|c| self.rings[r * self.cfg.cols + c].w_actual as f32)
-                .collect();
-            let eff = self.crosstalk.effective_weights(&row_w);
-            self.w_eff[r * self.cfg.cols..(r + 1) * self.cfg.cols]
-                .copy_from_slice(&eff);
+        let WeightBank {
+            cfg,
+            rings,
+            crosstalk,
+            w_eff,
+            scratch_row_w,
+            scratch_phis,
+            ..
+        } = self;
+        let cols = cfg.cols;
+        for r in 0..cfg.rows {
+            scratch_row_w.clear();
+            scratch_row_w
+                .extend(rings[r * cols..(r + 1) * cols].iter().map(|ring| ring.w_actual as f32));
+            crosstalk.effective_weights_into(
+                scratch_row_w,
+                scratch_phis,
+                &mut w_eff[r * cols..(r + 1) * cols],
+            );
         }
     }
 
@@ -430,13 +451,24 @@ impl WeightBank {
     /// Single-MRR multiplication (Fig. 3(c)): x·w through ring (0, 0) with
     /// all other channels dark.
     pub fn multiply(&mut self, x: f32, w: f32) -> Result<f32> {
-        let mut ws = vec![0.0f32; self.cfg.cols];
+        // stack scratch for every realistic channel count, as in run_chain
+        let n = self.cfg.cols;
+        let mut ws_stack = [0.0f32; 128];
+        let mut xs_stack = [0.0f32; 128];
+        let mut ws_heap = Vec::new();
+        let mut xs_heap = Vec::new();
+        let (ws, xs): (&mut [f32], &mut [f32]) = if n <= 128 {
+            (&mut ws_stack[..n], &mut xs_stack[..n])
+        } else {
+            ws_heap.resize(n, 0.0);
+            xs_heap.resize(n, 0.0);
+            (&mut ws_heap, &mut xs_heap)
+        };
         ws[0] = w;
-        let mut xs = vec![0.0f32; self.cfg.cols];
         xs[0] = x;
         // normalise against cols: matvec divides by n, multiply is 1-channel
-        let y = self.inner_product(&xs, &ws)?;
-        Ok(y * self.cfg.cols as f32)
+        let y = self.inner_product(xs, ws)?;
+        Ok(y * n as f32)
     }
 
     /// The inscribable weight range of ring (0,0)'s calibration (useful for
@@ -450,16 +482,24 @@ impl WeightBank {
     /// memory: the fixed B(k) tiles are stored once and switching between
     /// them costs (near-)nothing, unlike re-locking every ring.
     pub fn snapshot(&self) -> Inscription {
-        Inscription {
-            rows: self.cfg.rows,
-            cols: self.cfg.cols,
-            ring_state: self
-                .rings
-                .iter()
-                .map(|r| (r.drive, r.w_actual, r.slope))
-                .collect(),
-            w_eff: self.w_eff.clone(),
-        }
+        let mut ins = Inscription::empty();
+        self.snapshot_into(&mut ins);
+        ins
+    }
+
+    /// [`Self::snapshot`] into a caller-owned [`Inscription`], reusing its
+    /// vector capacities: clear + extend instead of fresh allocations.
+    /// The photonic runtime keeps a pool of these per dispatcher, so
+    /// snapshotting every tile of every dispatch is heap-free once the
+    /// pool has warmed to the model's tile count.
+    pub fn snapshot_into(&self, ins: &mut Inscription) {
+        ins.rows = self.cfg.rows;
+        ins.cols = self.cfg.cols;
+        ins.ring_state.clear();
+        ins.ring_state
+            .extend(self.rings.iter().map(|r| (r.drive, r.w_actual, r.slope)));
+        ins.w_eff.clear();
+        ins.w_eff.extend_from_slice(&self.w_eff);
     }
 
     /// Restore a previously snapshotted inscription (an analog-memory
@@ -554,6 +594,19 @@ pub struct Inscription {
     cols: usize,
     ring_state: Vec<(f64, f64, f64)>,
     w_eff: Vec<f64>,
+}
+
+impl Inscription {
+    /// An empty pool slot for [`WeightBank::snapshot_into`] to fill. Not
+    /// a valid inscription until then (geometry 0×0 fails every eval).
+    pub fn empty() -> Inscription {
+        Inscription {
+            rows: 0,
+            cols: 0,
+            ring_state: Vec::new(),
+            w_eff: Vec::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -875,6 +928,29 @@ mod tests {
         crowded.inscribe_exact(&w, true).unwrap();
         let xtalk = crowded.matvec(&[1.0, 1.0, 1.0, 1.0]).unwrap()[0];
         assert!((clean - xtalk).abs() > 1e-4, "{clean} vs {xtalk}");
+    }
+
+    #[test]
+    fn snapshot_into_reuses_capacity_and_matches_snapshot() {
+        let mut bank = ideal_bank(2, 3);
+        bank.inscribe(&Tensor::full(&[2, 3], 0.25)).unwrap();
+        let fresh = bank.snapshot();
+        let mut pooled = Inscription::empty();
+        bank.snapshot_into(&mut pooled);
+        let x = [1.0f32, 0.5, 0.8];
+        let mut rng1 = Pcg64::seed(4);
+        let mut rng2 = Pcg64::seed(4);
+        assert_eq!(
+            bank.eval(&fresh, &x, None, &mut rng1).unwrap(),
+            bank.eval(&pooled, &x, None, &mut rng2).unwrap()
+        );
+        // refilling after another inscription reuses the warmed slot
+        bank.inscribe(&Tensor::full(&[2, 3], -0.5)).unwrap();
+        let cap = (pooled.ring_state.capacity(), pooled.w_eff.capacity());
+        bank.snapshot_into(&mut pooled);
+        assert_eq!((pooled.ring_state.capacity(), pooled.w_eff.capacity()), cap);
+        // an unfilled pool slot is not a valid inscription
+        assert!(bank.eval(&Inscription::empty(), &x, None, &mut rng1).is_err());
     }
 
     #[test]

@@ -35,5 +35,5 @@ pub mod step_engine;
 pub use engine::{Engine, LoadedArtifact};
 pub use manifest::{ArtifactSpec, IoSpec, Manifest};
 pub use native::NativeEngine;
-pub use photonic::{PhotonicEngine, PhysicsConfig};
+pub use photonic::{BankDispatcher, PhotonicEngine, PhysicsConfig};
 pub use step_engine::{open, open_threaded, Artifact, Backend, StepEngine};

@@ -49,6 +49,15 @@
 //! row's outputs accumulate in a fixed tile order. The bank-op counter
 //! and the optical-cycle tally live in atomics, so [`PhotonicArtifact::cycles`]
 //! never takes the bank lock.
+//!
+//! All per-dispatch state — the tile staging tensor, the inscription
+//! snapshot pool, the tiling plans, the row-worker buffers — lives in a
+//! reusable [`BankDispatcher`], so a steady-state dispatch performs zero
+//! heap allocations on the single-threaded path (`tests/alloc_photonic.rs`
+//! enforces this under a counting global allocator). Its speed is a
+//! tracked deliverable: `cargo bench --bench photonic_step -- --json
+//! BENCH_STEP.json` records the per-dfa-step trajectory (with 1/2/4/all
+//! thread-scaling rows) that CI commits on main pushes.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -323,8 +332,9 @@ struct Device {
     adc: Quantizer,
 }
 
-/// Noise keying of one bank operation (one `bank_linear` /
-/// `bank_dfa_gradient` call): batch row `r` draws its read noise from
+/// Noise keying of one bank operation (one [`BankDispatcher::linear`] /
+/// [`BankDispatcher::dfa_gradient`] call): batch row `r` draws its read
+/// noise from
 /// `Pcg64::keyed(seed, op, r)` — a fresh stream per (operation, row), so
 /// a row's draws (including Box–Muller spare caching, which stays inside
 /// the row's own stream) are a pure function of its index, never of which
@@ -345,16 +355,20 @@ impl NoiseKey {
 
 /// Shard the rows of a row-major buffer across up to `threads` scoped
 /// workers and run `per_row(global_row_index, row_slice, scratch)` on
-/// each row. `make_scratch` builds one worker-local scratch value per
-/// worker (reusable buffers — allocated once per worker, not per row).
-/// Every row's work — including its read-noise draws, which come from a
-/// counter-keyed stream — is a pure function of the row index, so the
-/// result is bit-identical at any thread count; only wall-clock time
-/// changes. Returns the summed per-row optical-cycle counts.
+/// each row. `scratch0` is the caller's persistent scratch: the
+/// single-threaded path runs entirely on it, so a dispatcher that
+/// hoists its buffers dispatches without touching the heap. Worker
+/// threads each build their own via `make_scratch` (once per worker,
+/// not per row — thread spawning allocates anyway). Every row's work —
+/// including its read-noise draws, which come from a counter-keyed
+/// stream — is a pure function of the row index, so the result is
+/// bit-identical at any thread count; only wall-clock time changes.
+/// Returns the summed per-row optical-cycle counts.
 fn shard_rows<S>(
     threads: usize,
     out: &mut [f32],
     row_len: usize,
+    scratch0: &mut S,
     make_scratch: impl Fn() -> S + Sync,
     per_row: impl Fn(usize, &mut [f32], &mut S) -> Result<u64> + Sync,
 ) -> Result<u64> {
@@ -365,9 +379,8 @@ fn shard_rows<S>(
     let threads = threads.min(rows).max(1);
     if threads == 1 {
         let mut fired = 0u64;
-        let mut scratch = make_scratch();
         for (i, row) in out.chunks_mut(row_len).enumerate() {
-            fired += per_row(i, row, &mut scratch)?;
+            fired += per_row(i, row, scratch0)?;
         }
         return Ok(fired);
     }
@@ -508,172 +521,332 @@ fn inscription_amp(physics: &PhysicsConfig, bank: &WeightBank, w: &Tensor) -> f3
     (w.max_abs() / w_cap).max(1e-12)
 }
 
-/// `y = x @ w [+ b]` with every MAC on the bank: `wᵀ` is tiled onto the
-/// array, inscribed once per tile (sequential phase), and each batch row
-/// is driven through the optical chain (Fig. 4(b) operation) by the
-/// row-parallel worker pool. Per output element the tile contributions
-/// accumulate in the fixed tiling order, so the result — including the
-/// returned optical-cycle count, which the telemetry layer prices in
-/// joules — is bit-identical at any `threads`.
-#[allow(clippy::too_many_arguments)]
-fn bank_linear(
-    dev: &mut Device,
-    physics: &PhysicsConfig,
+/// The reusable dispatch state of one loaded artifact: the device plus
+/// every per-dispatch scratch buffer, hoisted so that a steady-state
+/// dispatch makes **zero heap allocations** (enforced by
+/// `tests/alloc_photonic.rs` under a counting global allocator, at
+/// `threads = 1` — worker threads allocate on spawn by nature).
+///
+/// What is pooled and why:
+/// * `tile_w` — the bank-shaped staging tensor each tile is written
+///   into before inscription (was a fresh `Tensor::zeros` per dispatch);
+/// * `snaps` — one [`Inscription`] pool slot per tile, refilled through
+///   [`WeightBank::snapshot_into`] (was a fresh snapshot `Vec` per tile
+///   per dispatch);
+/// * `tilings` — the [`Tiling`] plans keyed by `(m, k)`: a model has a
+///   handful of GEMM shapes, each planned once per dispatcher lifetime;
+/// * `lin_scratch` / `grad_scratch` — the single-thread row-worker
+///   buffers ((acc, ebuf) and (gains, acc, ebuf), each bank-rows long);
+/// * `gbuf` — the gradient's `(batch, m)` row-major staging buffer,
+///   transposed into the caller's `(m, batch)` output.
+///
+/// The `*_into` entry points write into caller-owned outputs; the
+/// allocating [`Self::linear`] / [`Self::dfa_gradient`] wrappers are
+/// what the artifact layer uses (its outputs leave the dispatch).
+pub struct BankDispatcher {
+    physics: PhysicsConfig,
+    /// Batch-row worker count (resolved, >= 1).
     threads: usize,
-    key: NoiseKey,
-    x: &Tensor,
-    w: &Tensor,
-    b: Option<&Tensor>,
-) -> Result<(Tensor, u64)> {
-    let (batch, k) = (x.rows(), x.cols());
-    let m = w.cols();
-    if w.rows() != k {
-        return Err(Error::Shape(format!(
-            "bank_linear: x is (_, {k}) but w is ({}, {m})",
-            w.rows()
-        )));
-    }
-    let tiling = Tiling::new(m, k, dev.bank.rows(), dev.bank.cols())?;
-    let amp = inscription_amp(physics, &dev.bank, w);
-    let (br, bc) = (dev.bank.rows(), dev.bank.cols());
-    // sequential phase: inscribe every tile once and snapshot it (§5
-    // analog weight memory) — the only part that needs the bank mutably
-    let mut tile_w = Tensor::zeros(&[br, bc]);
-    let mut snaps = Vec::with_capacity(tiling.tiles.len());
-    for tile in &tiling.tiles {
-        tile_w.data_mut().fill(0.0);
-        for r in 0..tile.rows() {
-            for c in 0..tile.cols() {
-                // the bank computes wᵀ · x_row
-                tile_w.set(r, c, w.at(tile.col0 + c, tile.row0 + r) / amp);
-            }
-        }
-        dev.inscribe(physics, &tile_w)?;
-        snaps.push(dev.bank.snapshot());
-    }
-    let mut y = Tensor::zeros(&[batch, m]);
-    if let Some(b) = b {
-        for r in 0..batch {
-            y.row_mut(r).copy_from_slice(&b.data()[..m]);
-        }
-    }
-    // row-parallel phase: batch rows are independent on the device
-    let dev = &*dev;
-    let fired = shard_rows(
-        threads,
-        y.data_mut(),
-        m,
-        // worker-local reusable buffers: (acc, ebuf)
-        || (vec![0.0f32; br], vec![0.0f32; br]),
-        |smp, y_row, scratch| {
-            let (acc, ebuf) = scratch;
-            let mut rng = key.row_rng(smp);
-            let mut fired = 0u64;
-            for (tile, ins) in tiling.tiles.iter().zip(&snaps) {
-                let vals = &x.row(smp)[tile.col0..tile.col1];
-                acc[..tile.rows()].fill(0.0);
-                // forward inference: converters yes, gradient read-noise no
-                fired +=
-                    dev.drive_tile(0.0, ins, tile.rows(), vals, None, amp, acc, ebuf, &mut rng)?;
-                for r in 0..tile.rows() {
-                    y_row[tile.row0 + r] += acc[r];
-                }
-            }
-            Ok(fired)
-        },
-    )?;
-    Ok((y, fired))
+    device: Device,
+    tile_w: Tensor,
+    snaps: Vec<Inscription>,
+    tilings: Vec<((usize, usize), Tiling)>,
+    lin_scratch: (Vec<f32>, Vec<f32>),
+    grad_scratch: (Vec<f32>, Vec<f32>, Vec<f32>),
+    gbuf: Vec<f32>,
 }
 
-/// Eq. (1) on the bank: `delta(k)ᵀ (m, batch)` for feedback matrix
-/// `bmat (m, k)`, error rows `e (batch, k)` and pre-activations
-/// `a (batch, m)`. The g′(a) ReLU mask rides on the TIA gains, so the
-/// Hadamard product costs no extra optical cycle (§3).
-#[allow(clippy::too_many_arguments)]
-fn bank_dfa_gradient(
-    dev: &mut Device,
-    physics: &PhysicsConfig,
-    threads: usize,
-    key: NoiseKey,
-    bmat: &Tensor,
-    e: &Tensor,
-    a: &Tensor,
-) -> Result<(Tensor, u64)> {
-    let (batch, k) = (e.rows(), e.cols());
-    let m = bmat.rows();
-    if bmat.cols() != k || a.rows() != batch || a.cols() != m {
-        return Err(Error::Shape(format!(
-            "bank_dfa_gradient: bmat {:?}, e {:?}, a {:?}",
-            bmat.shape(),
-            e.shape(),
-            a.shape()
-        )));
+impl BankDispatcher {
+    /// Build the device for `physics` and size the per-dispatch scratch
+    /// to its bank geometry. `threads` follows the CLI convention
+    /// (0 = all cores).
+    pub fn new(physics: PhysicsConfig, threads: usize) -> Result<BankDispatcher> {
+        physics.validate()?;
+        let device = Device::new(&physics)?;
+        let br = device.bank.rows();
+        let bc = device.bank.cols();
+        Ok(BankDispatcher {
+            physics,
+            threads: crate::util::threads::resolve(threads),
+            tile_w: Tensor::zeros(&[br, bc]),
+            snaps: Vec::new(),
+            tilings: Vec::new(),
+            lin_scratch: (vec![0.0; br], vec![0.0; br]),
+            grad_scratch: (vec![0.0; br], vec![0.0; br], vec![0.0; br]),
+            gbuf: Vec::new(),
+            device,
+        })
     }
-    let tiling = Tiling::new(m, k, dev.bank.rows(), dev.bank.cols())?;
-    let amp = inscription_amp(physics, &dev.bank, bmat);
-    let (br, bc) = (dev.bank.rows(), dev.bank.cols());
-    // sequential inscription phase (see bank_linear)
-    let mut tile_w = Tensor::zeros(&[br, bc]);
-    let mut snaps = Vec::with_capacity(tiling.tiles.len());
-    for tile in &tiling.tiles {
-        tile_w.data_mut().fill(0.0);
-        for r in 0..tile.rows() {
-            for c in 0..tile.cols() {
-                tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
+
+    /// The resolved batch-row worker count (>= 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The tiling plan for an `(m, k)` weight matrix on this bank,
+    /// planned once and cached (returned by index to keep `self`
+    /// borrowable afterwards).
+    fn tiling_index(&mut self, m: usize, k: usize) -> Result<usize> {
+        if let Some(i) = self
+            .tilings
+            .iter()
+            .position(|&((tm, tk), _)| tm == m && tk == k)
+        {
+            return Ok(i);
+        }
+        let t = Tiling::new(m, k, self.device.bank.rows(), self.device.bank.cols())?;
+        self.tilings.push(((m, k), t));
+        Ok(self.tilings.len() - 1)
+    }
+
+    /// `y = x @ w [+ b]` with every MAC on the bank: `wᵀ` is tiled onto
+    /// the array, inscribed once per tile (sequential phase), and each
+    /// batch row is driven through the optical chain (Fig. 4(b)
+    /// operation) by the row-parallel worker pool. Per output element
+    /// the tile contributions accumulate in the fixed tiling order, so
+    /// the result — including the returned optical-cycle count, which
+    /// the telemetry layer prices in joules — is bit-identical at any
+    /// `threads`. `op` keys the per-row noise streams (see [`NoiseKey`]).
+    pub fn linear(
+        &mut self,
+        op: u64,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+    ) -> Result<(Tensor, u64)> {
+        let mut y = Tensor::zeros(&[x.rows(), w.cols()]);
+        let fired = self.linear_into(op, x, w, b, &mut y)?;
+        Ok((y, fired))
+    }
+
+    /// [`Self::linear`] into a caller-owned `(batch, m)` output tensor —
+    /// the allocation-free form.
+    pub fn linear_into(
+        &mut self,
+        op: u64,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        y: &mut Tensor,
+    ) -> Result<u64> {
+        let (batch, k) = (x.rows(), x.cols());
+        let m = w.cols();
+        if w.rows() != k {
+            return Err(Error::Shape(format!(
+                "bank linear: x is (_, {k}) but w is ({}, {m})",
+                w.rows()
+            )));
+        }
+        if y.shape() != [batch, m] {
+            return Err(Error::Shape(format!(
+                "bank linear: output must be ({batch}, {m}), got {:?}",
+                y.shape()
+            )));
+        }
+        let ti = self.tiling_index(m, k)?;
+        let BankDispatcher {
+            physics,
+            threads,
+            device,
+            tile_w,
+            snaps,
+            tilings,
+            lin_scratch,
+            ..
+        } = self;
+        let tiling = &tilings[ti].1;
+        let amp = inscription_amp(physics, &device.bank, w);
+        // sequential phase: inscribe every tile once and snapshot it
+        // into its pool slot (§5 analog weight memory) — the only part
+        // that needs the bank mutably
+        while snaps.len() < tiling.tiles.len() {
+            snaps.push(Inscription::empty());
+        }
+        for (tile, snap) in tiling.tiles.iter().zip(snaps.iter_mut()) {
+            tile_w.data_mut().fill(0.0);
+            for r in 0..tile.rows() {
+                for c in 0..tile.cols() {
+                    // the bank computes wᵀ · x_row
+                    tile_w.set(r, c, w.at(tile.col0 + c, tile.row0 + r) / amp);
+                }
+            }
+            device.inscribe(physics, tile_w)?;
+            device.bank.snapshot_into(snap);
+        }
+        match b {
+            Some(b) if m > 0 => {
+                for row in y.data_mut().chunks_mut(m) {
+                    row.copy_from_slice(&b.data()[..m]);
+                }
+            }
+            _ => y.data_mut().fill(0.0),
+        }
+        // row-parallel phase: batch rows are independent on the device
+        let key = NoiseKey { seed: physics.seed, op };
+        let dev: &Device = device;
+        let snaps: &[Inscription] = snaps;
+        let br = dev.bank.rows();
+        let fired = shard_rows(
+            *threads,
+            y.data_mut(),
+            m,
+            lin_scratch,
+            // worker-local reusable buffers: (acc, ebuf)
+            || (vec![0.0f32; br], vec![0.0f32; br]),
+            |smp, y_row, scratch| {
+                let (acc, ebuf) = scratch;
+                let mut rng = key.row_rng(smp);
+                let mut fired = 0u64;
+                for (tile, ins) in tiling.tiles.iter().zip(snaps) {
+                    let vals = &x.row(smp)[tile.col0..tile.col1];
+                    acc[..tile.rows()].fill(0.0);
+                    // forward inference: converters yes, gradient read-noise no
+                    fired += dev.drive_tile(
+                        0.0,
+                        ins,
+                        tile.rows(),
+                        vals,
+                        None,
+                        amp,
+                        acc,
+                        ebuf,
+                        &mut rng,
+                    )?;
+                    for r in 0..tile.rows() {
+                        y_row[tile.row0 + r] += acc[r];
+                    }
+                }
+                Ok(fired)
+            },
+        )?;
+        Ok(fired)
+    }
+
+    /// Eq. (1) on the bank: `delta(k)ᵀ (m, batch)` for feedback matrix
+    /// `bmat (m, k)`, error rows `e (batch, k)` and pre-activations
+    /// `a (batch, m)`. The g′(a) ReLU mask rides on the TIA gains, so
+    /// the Hadamard product costs no extra optical cycle (§3).
+    pub fn dfa_gradient(
+        &mut self,
+        op: u64,
+        bmat: &Tensor,
+        e: &Tensor,
+        a: &Tensor,
+    ) -> Result<(Tensor, u64)> {
+        let mut out = Tensor::zeros(&[bmat.rows(), e.rows()]);
+        let fired = self.dfa_gradient_into(op, bmat, e, a, &mut out)?;
+        Ok((out, fired))
+    }
+
+    /// [`Self::dfa_gradient`] into a caller-owned `(m, batch)` output
+    /// tensor — the allocation-free form.
+    pub fn dfa_gradient_into(
+        &mut self,
+        op: u64,
+        bmat: &Tensor,
+        e: &Tensor,
+        a: &Tensor,
+        out: &mut Tensor,
+    ) -> Result<u64> {
+        let (batch, k) = (e.rows(), e.cols());
+        let m = bmat.rows();
+        if bmat.cols() != k || a.rows() != batch || a.cols() != m {
+            return Err(Error::Shape(format!(
+                "bank dfa_gradient: bmat {:?}, e {:?}, a {:?}",
+                bmat.shape(),
+                e.shape(),
+                a.shape()
+            )));
+        }
+        if out.shape() != [m, batch] {
+            return Err(Error::Shape(format!(
+                "bank dfa_gradient: output must be ({m}, {batch}), got {:?}",
+                out.shape()
+            )));
+        }
+        let ti = self.tiling_index(m, k)?;
+        let BankDispatcher {
+            physics,
+            threads,
+            device,
+            tile_w,
+            snaps,
+            tilings,
+            grad_scratch,
+            gbuf,
+            ..
+        } = self;
+        let tiling = &tilings[ti].1;
+        let amp = inscription_amp(physics, &device.bank, bmat);
+        // sequential inscription phase (see linear_into)
+        while snaps.len() < tiling.tiles.len() {
+            snaps.push(Inscription::empty());
+        }
+        for (tile, snap) in tiling.tiles.iter().zip(snaps.iter_mut()) {
+            tile_w.data_mut().fill(0.0);
+            for r in 0..tile.rows() {
+                for c in 0..tile.cols() {
+                    tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
+                }
+            }
+            device.inscribe(physics, tile_w)?;
+            device.bank.snapshot_into(snap);
+        }
+        // row-parallel phase into the pooled (batch, m) staging buffer —
+        // each worker owns contiguous per-sample rows — transposed
+        // afterwards into the (m, batch) layout the digital update expects
+        gbuf.resize(batch * m, 0.0);
+        gbuf.fill(0.0);
+        let key = NoiseKey { seed: physics.seed, op };
+        let dev: &Device = device;
+        let snaps: &[Inscription] = snaps;
+        let sigma = physics.sigma;
+        let br = dev.bank.rows();
+        let fired = shard_rows(
+            *threads,
+            gbuf,
+            m,
+            grad_scratch,
+            // worker-local reusable buffers: (gains, acc, ebuf)
+            || (vec![0.0f32; br], vec![0.0f32; br], vec![0.0f32; br]),
+            |smp, d_row, scratch| {
+                let (gains, acc, ebuf) = scratch;
+                let mut rng = key.row_rng(smp);
+                let mut fired = 0u64;
+                for (tile, ins) in tiling.tiles.iter().zip(snaps) {
+                    // TIA gains: g'(a) for live rows, padding rows gated off
+                    gains.fill(0.0);
+                    for r in 0..tile.rows() {
+                        gains[r] = if a.at(smp, tile.row0 + r) > 0.0 { 1.0 } else { 0.0 };
+                    }
+                    let vals = &e.row(smp)[tile.col0..tile.col1];
+                    acc[..tile.rows()].fill(0.0);
+                    fired += dev.drive_tile(
+                        sigma,
+                        ins,
+                        tile.rows(),
+                        vals,
+                        Some(&gains[..]),
+                        amp,
+                        acc,
+                        ebuf,
+                        &mut rng,
+                    )?;
+                    for r in 0..tile.rows() {
+                        d_row[tile.row0 + r] += acc[r];
+                    }
+                }
+                Ok(fired)
+            },
+        )?;
+        let od = out.data_mut();
+        for smp in 0..batch {
+            for j in 0..m {
+                od[j * batch + smp] = gbuf[smp * m + j];
             }
         }
-        dev.inscribe(physics, &tile_w)?;
-        snaps.push(dev.bank.snapshot());
+        Ok(fired)
     }
-    // row-parallel phase into a (batch, m) scratch — each worker owns
-    // contiguous per-sample rows — transposed afterwards into the
-    // (m, batch) layout the digital update expects
-    let mut scratch = Tensor::zeros(&[batch, m]);
-    let dev = &*dev;
-    let sigma = physics.sigma;
-    let fired = shard_rows(
-        threads,
-        scratch.data_mut(),
-        m,
-        // worker-local reusable buffers: (gains, acc, ebuf)
-        || (vec![0.0f32; br], vec![0.0f32; br], vec![0.0f32; br]),
-        |smp, d_row, scratch| {
-            let (gains, acc, ebuf) = scratch;
-            let mut rng = key.row_rng(smp);
-            let mut fired = 0u64;
-            for (tile, ins) in tiling.tiles.iter().zip(&snaps) {
-                // TIA gains: g'(a) for live rows, padding rows gated off
-                gains.fill(0.0);
-                for r in 0..tile.rows() {
-                    gains[r] = if a.at(smp, tile.row0 + r) > 0.0 { 1.0 } else { 0.0 };
-                }
-                let vals = &e.row(smp)[tile.col0..tile.col1];
-                acc[..tile.rows()].fill(0.0);
-                fired += dev.drive_tile(
-                    sigma,
-                    ins,
-                    tile.rows(),
-                    vals,
-                    Some(&gains[..]),
-                    amp,
-                    acc,
-                    ebuf,
-                    &mut rng,
-                )?;
-                for r in 0..tile.rows() {
-                    d_row[tile.row0 + r] += acc[r];
-                }
-            }
-            Ok(fired)
-        },
-    )?;
-    let mut out = Tensor::zeros(&[m, batch]);
-    for smp in 0..batch {
-        for (j, &v) in scratch.row(smp).iter().enumerate() {
-            out.set(j, smp, v);
-        }
-    }
-    Ok((out, fired))
 }
 
 /// Which physical routine an artifact name maps onto.
@@ -688,11 +861,9 @@ enum Kind {
 pub struct PhotonicArtifact {
     spec: ArtifactSpec,
     kind: Kind,
-    physics: PhysicsConfig,
-    /// Worker threads for the batch-row shards (resolved, >= 1).
-    threads: usize,
-    /// The bank + converters. The mutex serializes whole dispatches (the
-    /// inscription phase mutates the bank); within a dispatch the
+    /// The bank + converters + pooled dispatch scratch. The mutex
+    /// serializes whole dispatches (the inscription phase mutates the
+    /// bank, and the scratch pools are exclusive); within a dispatch the
     /// row-parallel phase runs under the guard with scoped workers
     /// borrowing the device immutably.
     ///
@@ -704,8 +875,10 @@ pub struct PhotonicArtifact {
     /// `into_inner` recovery is sound. Noise determinism is unaffected
     /// too: the read-noise streams are counter-keyed (not carried in the
     /// device), and the engine's banks run the Ideal BPD chain, so the
-    /// bank's internal stream has no value-bearing draws to lose.
-    device: Mutex<Device>,
+    /// bank's internal stream has no value-bearing draws to lose. The
+    /// scratch pools hold no cross-dispatch state either — every buffer
+    /// is refilled before it is read.
+    dispatcher: Mutex<BankDispatcher>,
     /// Bank operations dispatched so far; keys the per-row noise streams.
     op: AtomicU64,
     /// Optical cycles fired; atomic so [`Self::cycles`] never takes the
@@ -737,52 +910,47 @@ impl PhotonicArtifact {
     /// executes steps one by one) observe a deterministic sequence, which
     /// makes every noise draw of a run reproducible; concurrent `execute`
     /// calls on one artifact stay safe but interleave op ids.
-    fn next_key(&self) -> NoiseKey {
-        NoiseKey {
-            seed: self.physics.seed,
-            op: self.op.fetch_add(1, Ordering::Relaxed),
-        }
+    fn next_op(&self) -> u64 {
+        self.op.fetch_add(1, Ordering::Relaxed)
     }
 
     /// One bank linear dispatch; tallies the fired cycles on the
     /// artifact counter and returns them for the engine-level accrual.
     fn linear(
         &self,
-        dev: &mut Device,
+        disp: &mut BankDispatcher,
         x: &Tensor,
         w: &Tensor,
         b: Option<&Tensor>,
     ) -> Result<(Tensor, u64)> {
-        let (y, fired) =
-            bank_linear(dev, &self.physics, self.threads, self.next_key(), x, w, b)?;
+        let (y, fired) = disp.linear(self.next_op(), x, w, b)?;
         self.cycles.fetch_add(fired, Ordering::Relaxed);
         Ok((y, fired))
     }
 
     fn dfa_gradient(
         &self,
-        dev: &mut Device,
+        disp: &mut BankDispatcher,
         bmat: &Tensor,
         e: &Tensor,
         a: &Tensor,
     ) -> Result<(Tensor, u64)> {
-        let (d, fired) =
-            bank_dfa_gradient(dev, &self.physics, self.threads, self.next_key(), bmat, e, a)?;
+        let (d, fired) = disp.dfa_gradient(self.next_op(), bmat, e, a)?;
         self.cycles.fetch_add(fired, Ordering::Relaxed);
         Ok((d, fired))
     }
 
     fn forward(
         &self,
-        dev: &mut Device,
+        disp: &mut BankDispatcher,
         params: &[Tensor],
         x: &Tensor,
     ) -> Result<(reference::Forward, u64)> {
-        let (a1, f1) = self.linear(dev, x, &params[0], Some(&params[1]))?;
+        let (a1, f1) = self.linear(disp, x, &params[0], Some(&params[1]))?;
         let h1 = a1.map(|v| v.max(0.0));
-        let (a2, f2) = self.linear(dev, &h1, &params[2], Some(&params[3]))?;
+        let (a2, f2) = self.linear(disp, &h1, &params[2], Some(&params[3]))?;
         let h2 = a2.map(|v| v.max(0.0));
-        let (logits, f3) = self.linear(dev, &h2, &params[4], Some(&params[5]))?;
+        let (logits, f3) = self.linear(disp, &h2, &params[4], Some(&params[5]))?;
         Ok((reference::Forward { a1, h1, a2, h2, logits }, f1 + f2 + f3))
     }
 }
@@ -794,11 +962,11 @@ impl Artifact for PhotonicArtifact {
 
     fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.spec.validate_inputs(inputs)?;
-        // see the `device` field docs for the poisoned-lock recovery story
-        let mut dev = self.device.lock().unwrap_or_else(|p| p.into_inner());
+        // see the `dispatcher` field docs for the poisoned-lock recovery story
+        let mut disp = self.dispatcher.lock().unwrap_or_else(|p| p.into_inner());
         let (out, fired) = match self.kind {
             Kind::Fwd => {
-                let (f, fired) = self.forward(&mut dev, &inputs[..6], &inputs[6])?;
+                let (f, fired) = self.forward(&mut disp, &inputs[..6], &inputs[6])?;
                 (vec![f.logits, f.a1, f.a2, f.h1, f.h2], fired)
             }
             Kind::DfaStep => {
@@ -819,10 +987,10 @@ impl Artifact for PhotonicArtifact {
                 let mut state: Vec<Tensor> = inputs[..12].to_vec();
                 let (bmat1, bmat2) = (&inputs[12], &inputs[13]);
                 let (x, y) = (&inputs[14], &inputs[15]);
-                let (f, ff) = self.forward(&mut dev, &state[..6], x)?;
+                let (f, ff) = self.forward(&mut disp, &state[..6], x)?;
                 let (loss, e, correct) = reference::loss_and_error(&f.logits, y);
-                let (d1t, f1) = self.dfa_gradient(&mut dev, bmat1, &e, &f.a1)?;
-                let (d2t, f2) = self.dfa_gradient(&mut dev, bmat2, &e, &f.a2)?;
+                let (d1t, f1) = self.dfa_gradient(&mut disp, bmat1, &e, &f.a1)?;
+                let (d2t, f2) = self.dfa_gradient(&mut disp, bmat2, &e, &f.a2)?;
                 let grads = reference::grads_from_deltas(x, &f.h1, &f.h2, &e, &d1t, &d2t);
                 reference::sgd_momentum(&mut state, &grads, lr, momentum);
                 state.push(Tensor::scalar(loss));
@@ -949,9 +1117,7 @@ impl StepEngine for PhotonicEngine {
         Ok(Arc::new(PhotonicArtifact {
             spec,
             kind,
-            physics: self.physics,
-            threads: self.threads,
-            device: Mutex::new(Device::new(&self.physics)?),
+            dispatcher: Mutex::new(BankDispatcher::new(self.physics, self.threads)?),
             op: AtomicU64::new(0),
             cycles: AtomicU64::new(0),
             counters: self.counters.clone(),
@@ -976,34 +1142,32 @@ mod tests {
         PhysicsConfig { bank_rows: 7, bank_cols: 5, ..PhysicsConfig::ideal() }
     }
 
-    fn dev_for(phys: &PhysicsConfig) -> Device {
-        Device::new(phys).unwrap()
+    fn disp_for(phys: &PhysicsConfig) -> BankDispatcher {
+        BankDispatcher::new(*phys, 1).unwrap()
     }
 
-    /// Single-threaded `bank_linear` driver for the numerics tests.
+    /// Single-threaded linear driver for the numerics tests.
     fn linear(
-        dev: &mut Device,
-        phys: &PhysicsConfig,
+        disp: &mut BankDispatcher,
+        _phys: &PhysicsConfig,
         op: u64,
         x: &Tensor,
         w: &Tensor,
         b: Option<&Tensor>,
     ) -> Result<Tensor> {
-        let key = NoiseKey { seed: phys.seed, op };
-        bank_linear(dev, phys, 1, key, x, w, b).map(|(y, _)| y)
+        disp.linear(op, x, w, b).map(|(y, _)| y)
     }
 
-    /// Single-threaded `bank_dfa_gradient` driver for the numerics tests.
+    /// Single-threaded dfa-gradient driver for the numerics tests.
     fn gradient(
-        dev: &mut Device,
-        phys: &PhysicsConfig,
+        disp: &mut BankDispatcher,
+        _phys: &PhysicsConfig,
         op: u64,
         bmat: &Tensor,
         e: &Tensor,
         a: &Tensor,
     ) -> Result<Tensor> {
-        let key = NoiseKey { seed: phys.seed, op };
-        bank_dfa_gradient(dev, phys, 1, key, bmat, e, a).map(|(d, _)| d)
+        disp.dfa_gradient(op, bmat, e, a).map(|(d, _)| d)
     }
 
     #[test]
@@ -1060,7 +1224,7 @@ mod tests {
         // the satellite property: Tiling-driven bank matvec == dense
         // matmul, for shapes that pad both tile axes
         let phys = small_physics(); // 7 x 5 bank
-        let mut dev = dev_for(&phys);
+        let mut dev = disp_for(&phys);
         let mut rng = Pcg64::seed(21);
         for (op, (batch, k, m)) in [
             (3usize, 11usize, 9usize), // ragged both ways
@@ -1095,7 +1259,7 @@ mod tests {
             lock: true,
             ..PhysicsConfig::ideal()
         };
-        let mut dev = dev_for(&phys);
+        let mut dev = disp_for(&phys);
         let mut rng = Pcg64::seed(4);
         let x = Tensor::rand_uniform(&[2, 7], 0.0, 1.0, &mut rng);
         let w = Tensor::rand_uniform(&[7, 12], -0.9, 0.9, &mut rng);
@@ -1119,7 +1283,7 @@ mod tests {
         let want = x.matmul(&w).unwrap();
         let err_at = |dac: u32, adc: u32| {
             let phys = PhysicsConfig { dac_bits: dac, adc_bits: adc, ..small_physics() };
-            let mut dev = dev_for(&phys);
+            let mut dev = disp_for(&phys);
             let got = linear(&mut dev, &phys, 0, &x, &w, None).unwrap();
             got.data()
                 .iter()
@@ -1141,20 +1305,20 @@ mod tests {
         let x = Tensor::rand_uniform(&[1, 5], 0.0, 1.0, &mut rng);
         let w = Tensor::rand_uniform(&[5, 7], -0.9, 0.9, &mut rng);
         // forward inference is exempt from the lumped gradient-read σ
-        let a = linear(&mut dev_for(&phys), &phys, 0, &x, &w, None).unwrap();
-        let c = linear(&mut dev_for(&clean), &clean, 0, &x, &w, None).unwrap();
+        let a = linear(&mut disp_for(&phys), &phys, 0, &x, &w, None).unwrap();
+        let c = linear(&mut disp_for(&clean), &clean, 0, &x, &w, None).unwrap();
         assert_eq!(a, c, "sigma must not perturb the forward chain");
         // the B·e path picks it up, deterministically per (seed, op, row)
         let bmat = Tensor::rand_uniform(&[7, 5], -0.9, 0.9, &mut rng);
         let e = Tensor::randn(&[2, 5], 0.5, &mut rng);
         let act = Tensor::full(&[2, 7], 1.0);
-        let g1 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
-        let g2 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
+        let g1 = gradient(&mut disp_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
+        let g2 = gradient(&mut disp_for(&phys), &phys, 0, &bmat, &e, &act).unwrap();
         assert_eq!(g1, g2, "same device seed + op, same draw");
-        let g3 = gradient(&mut dev_for(&clean), &clean, 0, &bmat, &e, &act).unwrap();
+        let g3 = gradient(&mut disp_for(&clean), &clean, 0, &bmat, &e, &act).unwrap();
         assert_ne!(g1, g3, "sigma=0.1 must perturb the gradient readout");
         // a different bank-op counter is a different noise stream
-        let g4 = gradient(&mut dev_for(&phys), &phys, 1, &bmat, &e, &act).unwrap();
+        let g4 = gradient(&mut disp_for(&phys), &phys, 1, &bmat, &e, &act).unwrap();
         assert_ne!(g1, g4, "op counter must advance the noise stream");
     }
 
@@ -1163,7 +1327,7 @@ mod tests {
         // regression companion to the converter NaN fix: one NaN feature
         // must not poison the other channels of the matvec
         let phys = small_physics();
-        let mut dev = dev_for(&phys);
+        let mut dev = disp_for(&phys);
         let mut x = Tensor::rand_uniform(&[1, 5], 0.1, 1.0, &mut Pcg64::seed(3));
         let w = Tensor::rand_uniform(&[5, 4], -0.9, 0.9, &mut Pcg64::seed(4));
         let clean = linear(&mut dev, &phys, 0, &x, &w, None).unwrap();
@@ -1182,7 +1346,7 @@ mod tests {
     #[test]
     fn dfa_gradient_masks_inactive_rows() {
         let phys = small_physics();
-        let mut dev = dev_for(&phys);
+        let mut dev = disp_for(&phys);
         let mut rng = Pcg64::seed(6);
         let bmat = Tensor::rand_uniform(&[9, 4], -0.9, 0.9, &mut rng);
         let e = Tensor::randn(&[3, 4], 0.5, &mut rng);
@@ -1211,7 +1375,7 @@ mod tests {
         // enters pre-TIA, so the g'(a) mask gates it like the reference
         // model's mask x (B·e + noise)
         let noisy = PhysicsConfig { sigma: 0.2, ..small_physics() };
-        let dn = gradient(&mut dev_for(&noisy), &noisy, 0, &bmat, &e, &a).unwrap();
+        let dn = gradient(&mut disp_for(&noisy), &noisy, 0, &bmat, &e, &a).unwrap();
         for j in 0..9 {
             assert_eq!(dn.at(j, 1), 0.0, "noisy dead row {j}");
         }
@@ -1235,13 +1399,9 @@ mod tests {
         let e = Tensor::randn(&[5, 11], 0.5, &mut rng);
         let act = Tensor::full(&[5, 9], 1.0);
         let run = |threads: usize| {
-            let mut dev = dev_for(&phys);
-            let key = |op| NoiseKey { seed: phys.seed, op };
-            let (y, fy) =
-                bank_linear(&mut dev, &phys, threads, key(0), &x, &w, None).unwrap();
-            let (g, fg) =
-                bank_dfa_gradient(&mut dev, &phys, threads, key(1), &bmat, &e, &act)
-                    .unwrap();
+            let mut disp = BankDispatcher::new(phys, threads).unwrap();
+            let (y, fy) = disp.linear(0, &x, &w, None).unwrap();
+            let (g, fg) = disp.dfa_gradient(1, &bmat, &e, &act).unwrap();
             (y, g, fy + fg)
         };
         let (y1, g1, c1) = run(1);
@@ -1270,8 +1430,8 @@ mod tests {
         let e3 = Tensor::new(&[3, 11], e3_data).unwrap();
         let act2 = Tensor::full(&[2, 9], 1.0);
         let act3 = Tensor::full(&[3, 9], 1.0);
-        let g2 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e2, &act2).unwrap();
-        let g3 = gradient(&mut dev_for(&phys), &phys, 0, &bmat, &e3, &act3).unwrap();
+        let g2 = gradient(&mut disp_for(&phys), &phys, 0, &bmat, &e2, &act2).unwrap();
+        let g3 = gradient(&mut disp_for(&phys), &phys, 0, &bmat, &e3, &act3).unwrap();
         for j in 0..9 {
             for smp in 0..2 {
                 assert_eq!(
@@ -1346,9 +1506,7 @@ mod tests {
         let art = PhotonicArtifact {
             spec,
             kind: Kind::DfaStep,
-            physics: phys,
-            threads: 2,
-            device: Mutex::new(Device::new(&phys).unwrap()),
+            dispatcher: Mutex::new(BankDispatcher::new(phys, 2).unwrap()),
             op: AtomicU64::new(0),
             cycles: AtomicU64::new(0),
             counters: Arc::new(Counters::default()),

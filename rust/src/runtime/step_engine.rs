@@ -234,14 +234,18 @@ mod tests {
 
     #[test]
     fn open_threaded_reaches_every_backend() {
+        // `open_threaded` writes the process-global GEMM cap raw (by
+        // design — the last open wins for the CLI). Wrapping the test in
+        // a `ThreadCapGuard` scope serializes those raw writes against
+        // every other cap-scoped test in the process and restores the
+        // prior cap on every exit path, including a failing assert.
+        let _cap_scope = crate::tensor::ops::ThreadCapGuard::set(0);
         let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
         let physics = crate::runtime::photonic::PhysicsConfig::ideal();
         let engine = open_threaded(&dir, Backend::Photonic(physics), 3).unwrap();
         assert_eq!(engine.platform_name(), "photonic");
         let engine = open_threaded(&dir, Backend::Native, 1).unwrap();
         assert_eq!(engine.platform_name(), "native");
-        // restore the all-cores default cap (tests share the process)
-        crate::tensor::ops::set_thread_cap(0);
     }
 
     #[test]

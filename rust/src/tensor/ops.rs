@@ -4,10 +4,16 @@
 //! pure-Rust reference trainer (dfa::reference) and the device-level
 //! photonic simulation (photonics::weight_bank). Both reduce to GEMM-like
 //! loops, implemented here with the standard CPU tricks: ikj loop order
-//! (stride-1 inner loop), cache blocking, and a multi-threaded row split
-//! for large products. No unsafe, no external BLAS.
+//! (stride-1 inner loop), cache blocking, a register-blocked column
+//! micro-kernel shaped for autovectorization, and a multi-threaded row
+//! split for large products. No unsafe, no external BLAS.
+//!
+//! Kernel speed is a tracked deliverable: `cargo bench --bench
+//! gemm_kernels -- --json BENCH_GEMM.json` records the trajectory CI
+//! commits on main pushes (see DESIGN.md, "Bench trajectory").
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::{Error, Result};
 
@@ -15,6 +21,10 @@ use super::Tensor;
 
 /// Cache block edge (fits comfortably in L1 for three f32 blocks).
 const BLOCK: usize = 64;
+/// Register-block width of the micro-kernel: output columns processed
+/// per strip, with the strip's partial sums held in registers across a
+/// whole K-block (two 4-lane / one 8-lane SIMD register of f32).
+const RBLOCK: usize = 8;
 /// Below this many f32 multiply-adds a single thread is faster.
 const PAR_THRESHOLD: usize = 1 << 20;
 
@@ -41,6 +51,46 @@ pub fn thread_cap_raw() -> usize {
     THREAD_CAP.load(Ordering::Relaxed)
 }
 
+/// Serializes scoped overrides of the process-global cap: concurrent
+/// [`ThreadCapGuard`]s (e.g. libtest threads racing on `set_thread_cap`,
+/// or two sweeps in one process) queue on this instead of clobbering
+/// each other's restore values.
+static CAP_SCOPE: Mutex<()> = Mutex::new(());
+
+/// A mutex-serialized, panic-safe scoped override of the GEMM thread
+/// cap. `set` takes the scope lock, records [`thread_cap_raw`], and
+/// applies the override; `Drop` restores the exact prior raw value —
+/// on panic too, since drop glue runs during unwinding. This is the
+/// only sanctioned way for tests and bounded library scopes (the
+/// physics sweep's oversubscription guard) to touch the cap: raw
+/// `set_thread_cap` calls from concurrently running tests race on the
+/// process-global and leak their override into sibling tests.
+#[must_use = "the override ends when the guard drops"]
+pub struct ThreadCapGuard {
+    prev: usize,
+    _scope: MutexGuard<'static, ()>,
+}
+
+impl ThreadCapGuard {
+    /// Override the cap to `threads` (0 = all cores) until the guard
+    /// drops. Blocks while another guard is alive.
+    pub fn set(threads: usize) -> ThreadCapGuard {
+        // a poisoned scope lock only means some earlier guard's scope
+        // panicked; its Drop already restored the cap, so proceeding is
+        // sound
+        let scope = CAP_SCOPE.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = thread_cap_raw();
+        set_thread_cap(threads);
+        ThreadCapGuard { prev, _scope: scope }
+    }
+}
+
+impl Drop for ThreadCapGuard {
+    fn drop(&mut self) {
+        set_thread_cap(self.prev);
+    }
+}
+
 /// C = A @ B for 2-D tensors.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     if a.rank() != 2 || b.rank() != 2 {
@@ -59,6 +109,18 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 }
 
 /// Raw-slice GEMM: c (m x n) += a (m x k) @ b (k x n); c must be zeroed.
+///
+/// Zero-term semantics (the contract of *all four* kernels in this
+/// module — `matmul`/`matmul_into`, the parallel row split, `matmul_bt`
+/// and `matmul_at` on both their fused and transpose-then-GEMM routes):
+/// a term whose **left-operand** factor is ±0.0 contributes exactly
+/// nothing, even when the matching right-operand element is NaN or ±∞ —
+/// i.e. `0 × x ≡ 0` for every `x`, not the IEEE `0 × NaN = NaN`. Zero
+/// entries of A (ubiquitous post-ReLU activations) are skipped outright,
+/// which is both the performance point and the poison-containment
+/// property: a NaN/∞ in B only reaches output elements that a non-zero
+/// A term actually connects it to, on every route and at every thread
+/// count. Non-zero terms keep full IEEE semantics (NaN in A propagates).
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -76,17 +138,52 @@ fn matmul_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
         for k0 in (0..k).step_by(BLOCK) {
             let k1 = (k0 + BLOCK).min(k);
             for i in i0..i1 {
+                let a_row = &a[i * k..(i + 1) * k];
                 let c_row = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = a[i * k + kk];
-                    if aik == 0.0 {
-                        continue; // ReLU-sparse activations are common
-                    }
-                    let b_row = &b[kk * n..(kk + 1) * n];
-                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                        *cv += aik * bv;
-                    }
-                }
+                microkernel_row(a_row, b, c_row, k0, k1, n);
+            }
+        }
+    }
+}
+
+/// Register-blocked micro-kernel of [`matmul_blocked`]: one output row
+/// against one K-block, in [`RBLOCK`]-column strips whose partial sums
+/// live in a fixed-size accumulator array — registers, after
+/// autovectorization — across the whole K-block, so C is loaded and
+/// stored once per block instead of once per `kk` step. Per output
+/// element the accumulation order (ascending `kk` within the block) is
+/// identical to the pre-register-blocked kernel, so results are
+/// bit-for-bit unchanged; the zero-skip keeps the [`matmul_into`]
+/// left-zero semantics.
+#[inline]
+fn microkernel_row(a_row: &[f32], b: &[f32], c_row: &mut [f32], k0: usize, k1: usize, n: usize) {
+    let mut j0 = 0;
+    while j0 + RBLOCK <= n {
+        let mut acc = [0.0f32; RBLOCK];
+        acc.copy_from_slice(&c_row[j0..j0 + RBLOCK]);
+        for kk in k0..k1 {
+            let aik = a_row[kk];
+            if aik == 0.0 {
+                continue; // ReLU-sparse activations are common
+            }
+            let b_strip = &b[kk * n + j0..kk * n + j0 + RBLOCK];
+            for (av, bv) in acc.iter_mut().zip(b_strip) {
+                *av += aik * bv;
+            }
+        }
+        c_row[j0..j0 + RBLOCK].copy_from_slice(&acc);
+        j0 += RBLOCK;
+    }
+    if j0 < n {
+        // ragged tail (n % RBLOCK columns): same ascending-kk order
+        for kk in k0..k1 {
+            let aik = a_row[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let b_tail = &b[kk * n + j0..kk * n + n];
+            for (cv, bv) in c_row[j0..].iter_mut().zip(b_tail) {
+                *cv += aik * bv;
             }
         }
     }
@@ -98,10 +195,22 @@ fn matmul_parallel(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     });
 }
 
+/// Rows per worker chunk when `m` rows split across up to `threads`
+/// workers. Factored out so the chunk plan is unit-testable: for every
+/// (m, threads) with `1 <= threads <= m`, `ceil(m / rows_per)` chunks
+/// are produced, each with 1..=rows_per rows — never an empty chunk, and
+/// never more chunks than `threads` (awkward pairs like m=5/threads=4
+/// simply use fewer workers: rows_per=2 -> 3 chunks of 2+2+1).
+fn rows_per_chunk(m: usize, threads: usize) -> usize {
+    m.div_ceil(threads)
+}
+
 /// Shared thread scaffolding of the parallel kernels: split C (m x n,
 /// with A's rows aligned to it) into disjoint per-thread row chunks and
 /// run `kernel(a_chunk, c_chunk)` on each. Caller guarantees n > 0;
-/// falls back to one inline kernel call on single-CPU machines.
+/// falls back to one inline kernel call on single-CPU machines. Zero-row
+/// chunks are skipped defensively (no worker is ever spawned for one),
+/// though [`rows_per_chunk`]'s plan cannot produce any.
 fn split_rows_parallel(
     a: &[f32],
     c: &mut [f32],
@@ -114,12 +223,16 @@ fn split_rows_parallel(
     if threads <= 1 {
         return kernel(a, c);
     }
-    let rows_per = m.div_ceil(threads);
+    let rows_per = rows_per_chunk(m, threads);
+    debug_assert!(m.div_ceil(rows_per) <= threads);
     let chunks: Vec<&mut [f32]> = c.chunks_mut(rows_per * n).collect();
     std::thread::scope(|scope| {
         for (t, c_chunk) in chunks.into_iter().enumerate() {
-            let i0 = t * rows_per;
             let rows = c_chunk.len() / n;
+            if rows == 0 {
+                continue; // never burn a spawn on an empty tail chunk
+            }
+            let i0 = t * rows_per;
             let a_chunk = &a[i0 * k..(i0 + rows) * k];
             scope.spawn(move || kernel(a_chunk, c_chunk));
         }
@@ -156,13 +269,18 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 }
 
 /// Row-dot-row kernel of [`matmul_bt`]: c (rows x n) = a (rows x k) @ b^T.
+/// Skips a-zero terms, pinning the [`matmul_into`] left-zero semantics
+/// on this route too (pre-fix it accumulated them, so `0 × NaN`
+/// poisoned here while vanishing on the blocked kernels).
 fn matmul_bt_rows(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize) {
     for (a_row, c_row) in a.chunks(k.max(1)).zip(c.chunks_mut(n)) {
         for (j, cv) in c_row.iter_mut().enumerate() {
             let b_row = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for (x, y) in a_row.iter().zip(b_row) {
-                acc += x * y;
+                if *x != 0.0 {
+                    acc += x * y;
+                }
             }
             *cv = acc;
         }
@@ -185,10 +303,13 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (ad, bd) = (a.data(), b.data());
     let od = out.data_mut();
     if m * n * k >= PAR_THRESHOLD {
-        let mut at = vec![0.0f32; k * m];
-        for kk in 0..k {
-            for i in 0..m {
-                at[i * k + kk] = ad[kk * m + i];
+        // write-once transpose: push aᵀ in its final row-major order
+        // instead of zero-filling k*m floats and then overwriting every
+        // one of them through a strided store
+        let mut at = Vec::with_capacity(k * m);
+        for i in 0..m {
+            for kk in 0..k {
+                at.push(ad[kk * m + i]);
             }
         }
         matmul_into(&at, bd, od, m, k, n);
@@ -312,13 +433,171 @@ mod tests {
         let mut rng = Pcg64::seed(43);
         let a = Tensor::randn(&[256, 128], 1.0, &mut rng);
         let b = Tensor::randn(&[128, 200], 1.0, &mut rng);
-        let multi = matmul(&a, &b).unwrap();
-        set_thread_cap(1);
-        let single = matmul(&a, &b).unwrap();
-        set_thread_cap(0); // restore the all-cores default
+        let single;
+        let multi;
+        {
+            let _cap = ThreadCapGuard::set(4);
+            multi = matmul(&a, &b).unwrap();
+        }
+        {
+            let _cap = ThreadCapGuard::set(1);
+            single = matmul(&a, &b).unwrap();
+        }
+        // the guard restored the ambient cap on both drops
         assert!(thread_cap() >= 1);
         // row chunking never changes the per-row accumulation order
         assert_eq!(single.data(), multi.data());
+    }
+
+    #[test]
+    fn guard_restores_cap_even_on_panic() {
+        // sentinel no other test uses: the restore happens in the
+        // guard's Drop *before* the scope lock releases, so if it works
+        // no thread can ever observe this value after the catch
+        const SENTINEL: usize = 6271;
+        let caught = std::panic::catch_unwind(|| {
+            let _cap = ThreadCapGuard::set(SENTINEL);
+            assert_eq!(thread_cap_raw(), SENTINEL);
+            panic!("boom");
+        });
+        assert!(caught.is_err());
+        assert_ne!(thread_cap_raw(), SENTINEL);
+    }
+
+    #[test]
+    fn microkernel_boundary_remainders_match_naive() {
+        // every edge remainder 1..=8 against both the register-block
+        // (RBLOCK=8) and the cache-block (BLOCK=64) boundary: the strip
+        // loop, its ragged tail, and the K-block edges all get exercised
+        let mut rng = Pcg64::seed(7);
+        for r in 1..=RBLOCK {
+            for (m, k, n) in [
+                (r, BLOCK + r, RBLOCK + r),       // ragged strip tail
+                (RBLOCK + r, r, BLOCK + r),       // K shorter than a block
+                (BLOCK + r, RBLOCK + r, r),       // n below one full strip
+                (BLOCK - r, BLOCK, 2 * RBLOCK + r), // row count under BLOCK
+            ] {
+                let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+                let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+                let got = matmul(&a, &b).unwrap();
+                let want = naive(&a, &b);
+                assert_close(got.data(), want.data(), 1e-3 * k as f32)
+                    .unwrap_or_else(|e| panic!("shape ({m},{k},{n}): {e:?}"));
+            }
+        }
+    }
+
+    /// a with zeroed columns `poison`, b with NaN/+Inf rows at `poison`:
+    /// under the left-zero contract every kernel must produce the finite
+    /// product of the clean terms.
+    fn poison_pair(m: usize, k: usize, n: usize, poison: &[usize]) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seed(91);
+        let mut a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        for i in 0..m {
+            for &kk in poison {
+                a.set(i, kk, 0.0);
+            }
+        }
+        let mut b_clean = b.clone();
+        for (idx, &kk) in poison.iter().enumerate() {
+            for j in 0..n {
+                b.set(kk, j, if idx % 2 == 0 { f32::NAN } else { f32::INFINITY });
+                b_clean.set(kk, j, 0.0);
+            }
+        }
+        let want = naive(&a, &b_clean);
+        (a, b, want)
+    }
+
+    #[test]
+    fn zero_times_poison_vanishes_on_every_kernel_below_threshold() {
+        let (m, k, n) = (9, 17, 13);
+        assert!(m * k * n < super::PAR_THRESHOLD);
+        let (a, b, want) = poison_pair(m, k, n, &[0, 5, 16]);
+        for (name, got) in [
+            ("matmul", matmul(&a, &b).unwrap()),
+            ("matmul_bt", matmul_bt(&a, &b.t()).unwrap()),
+            ("matmul_at", matmul_at(&a.t(), &b).unwrap()),
+        ] {
+            assert!(
+                got.data().iter().all(|v| v.is_finite()),
+                "{name}: poison leaked through a zero left operand"
+            );
+            assert_close(got.data(), want.data(), 1e-3 * k as f32)
+                .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        }
+    }
+
+    #[test]
+    fn zero_times_poison_vanishes_on_parallel_routes() {
+        // 160*80*120 = 1.54M multiply-adds > PAR_THRESHOLD: covers the
+        // row-split matmul, the bt row split, and the at
+        // transpose-then-matmul_into route, at 1 and 4 workers
+        let (m, k, n) = (160, 80, 120);
+        assert!(m * k * n >= super::PAR_THRESHOLD);
+        let (a, b, want) = poison_pair(m, k, n, &[3, 40, 79]);
+        for cap in [1usize, 4] {
+            let _cap = ThreadCapGuard::set(cap);
+            for (name, got) in [
+                ("matmul", matmul(&a, &b).unwrap()),
+                ("matmul_bt", matmul_bt(&a, &b.t()).unwrap()),
+                ("matmul_at", matmul_at(&a.t(), &b).unwrap()),
+            ] {
+                assert!(
+                    got.data().iter().all(|v| v.is_finite()),
+                    "{name} at cap {cap}: poison leaked through a zero left operand"
+                );
+                assert_close(got.data(), want.data(), 1e-3 * k as f32)
+                    .unwrap_or_else(|e| panic!("{name} at cap {cap}: {e:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn rows_per_chunk_plan_is_tight() {
+        for m in 1..=64usize {
+            for threads in 1..=8usize.min(m) {
+                let rows_per = rows_per_chunk(m, threads);
+                assert!(rows_per >= 1, "m={m} threads={threads}");
+                let chunks = m.div_ceil(rows_per);
+                assert!(
+                    chunks <= threads,
+                    "m={m} threads={threads}: {chunks} chunks oversubscribes"
+                );
+                // the tail chunk is never empty: (chunks-1) full chunks
+                // leave at least one row for the last
+                assert!(
+                    (chunks - 1) * rows_per < m,
+                    "m={m} threads={threads}: empty tail chunk"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn awkward_row_splits_match_single_thread() {
+        // m values that divide badly across small worker counts, at a
+        // size that crosses PAR_THRESHOLD (m*512*512 >= 1<<20 for m>=4)
+        let mut rng = Pcg64::seed(29);
+        for m in [5usize, 7, 13] {
+            let a = Tensor::randn(&[m, 512], 1.0, &mut rng);
+            let b = Tensor::randn(&[512, 512], 1.0, &mut rng);
+            assert!(m * 512 * 512 >= super::PAR_THRESHOLD);
+            let single = {
+                let _cap = ThreadCapGuard::set(1);
+                matmul(&a, &b).unwrap()
+            };
+            for threads in [2usize, 3, 4, 5] {
+                let _cap = ThreadCapGuard::set(threads);
+                let multi = matmul(&a, &b).unwrap();
+                assert_eq!(
+                    single.data(),
+                    multi.data(),
+                    "m={m} threads={threads} drifted"
+                );
+            }
+        }
     }
 
     #[test]

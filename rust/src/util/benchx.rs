@@ -4,9 +4,17 @@
 //! N timed iterations, robust summary (mean / p50 / p95 / min), optional
 //! throughput units, and machine-readable one-line output so
 //! `cargo bench | tee bench_output.txt` captures the paper-table rows.
+//!
+//! For the tracked bench *trajectory* (`BENCH_GEMM.json`,
+//! `BENCH_STEP.json`, committed by CI on main pushes next to
+//! `BENCH_SERVE.json`), [`BenchRecords`] accumulates results as JSON
+//! rows — summary stats plus bench-specific dimensions such as thread
+//! count and GEMM shape — and [`json_out_arg`] picks up the
+//! `--json <path>` flag cargo forwards to `harness = false` targets.
 
 use std::time::{Duration, Instant};
 
+use super::json::Value;
 use super::stats::percentile;
 
 /// Configuration for a benchmark run.
@@ -126,6 +134,100 @@ pub fn bench_throughput<T, F: FnMut() -> T>(
     let mut r = bench(name, cfg, f);
     r.units_per_iter = Some((units, label));
     r
+}
+
+/// Machine-readable bench trajectory record.
+///
+/// Accumulates [`BenchResult`] rows (plus caller-supplied dimensions like
+/// `threads` / `m` / `k` / `n`) and serializes them as one deterministic
+/// JSON document:
+///
+/// ```json
+/// {
+///   "bench": "gemm_kernels",
+///   "rows": [ { "name": "...", "iters": 12, "mean_ns": ..., ... } ]
+/// }
+/// ```
+///
+/// CI runs the bench binaries with `--json BENCH_GEMM.json` /
+/// `--json BENCH_STEP.json` and commits the files on main pushes, so the
+/// repo history carries the perf trajectory of the hot loops.
+#[derive(Debug, Clone)]
+pub struct BenchRecords {
+    bench: String,
+    rows: Vec<Value>,
+}
+
+impl BenchRecords {
+    pub fn new(bench: impl Into<String>) -> BenchRecords {
+        BenchRecords { bench: bench.into(), rows: Vec::new() }
+    }
+
+    /// Append one result row. `extra` carries bench-specific dimensions
+    /// (thread count, GEMM shape, physics preset …) merged into the row
+    /// next to the summary statistics.
+    pub fn push(&mut self, r: &BenchResult, extra: Vec<(&str, Value)>) {
+        let mut pairs = vec![
+            ("name", Value::str(r.name.clone())),
+            ("iters", Value::Number(r.samples_ns.len() as f64)),
+            ("mean_ns", Value::Number(r.mean_ns())),
+            ("p50_ns", Value::Number(r.p50_ns())),
+            ("p95_ns", Value::Number(r.p95_ns())),
+            ("min_ns", Value::Number(r.min_ns())),
+        ];
+        if let Some((units, label)) = r.units_per_iter {
+            let per_sec = if r.mean_ns() > 0.0 {
+                units / (r.mean_ns() * 1e-9)
+            } else {
+                0.0
+            };
+            pairs.push(("throughput_per_s", Value::Number(per_sec)));
+            pairs.push(("throughput_unit", Value::str(label)));
+        }
+        pairs.extend(extra);
+        self.rows.push(Value::object(pairs));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("bench", Value::str(self.bench.clone())),
+            ("rows", Value::Array(self.rows.clone())),
+        ])
+    }
+
+    /// Serialize to `path` as pretty-printed JSON (plus trailing newline,
+    /// so the committed file is POSIX-clean).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.to_value().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+/// The output path from a `--json <path>` pair in this process's argv.
+///
+/// `cargo bench --bench <target> -- --json BENCH_X.json` forwards
+/// everything after `--` to the bench binary; any other flags cargo adds
+/// for `harness = false` targets (notably `--bench` itself) are ignored.
+pub fn json_out_arg() -> Option<String> {
+    json_out_from(std::env::args().skip(1))
+}
+
+fn json_out_from<I: Iterator<Item = String>>(mut args: I) -> Option<String> {
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next();
+        }
+    }
+    None
 }
 
 /// Opaque value sink preventing the optimizer from deleting the benchmark.
@@ -289,5 +391,68 @@ mod tests {
         r.units_per_iter = Some((1000.0, "MAC"));
         let line = r.report();
         assert!(line.contains("throughput=1.00G MAC/s"), "{line}");
+    }
+
+    #[test]
+    fn records_round_trip_through_json() {
+        let mut rec = BenchRecords::new("unit_test");
+        assert!(rec.is_empty());
+        let mut r = result_with(&[1000.0; 8]);
+        r.units_per_iter = Some((1000.0, "MAC"));
+        rec.push(
+            &r,
+            vec![
+                ("threads", Value::Number(4.0)),
+                ("m", Value::Number(64.0)),
+                ("kernel", Value::str("matmul")),
+            ],
+        );
+        rec.push(&result_with(&[5.0, 7.0]), vec![]);
+        assert_eq!(rec.len(), 2);
+
+        let parsed = Value::parse(&rec.to_value().to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("unit_test"));
+        let rows = parsed.get("rows").as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        let row = &rows[0];
+        assert_eq!(row.get("name").as_str(), Some("synthetic"));
+        assert_eq!(row.get("iters").as_usize(), Some(8));
+        assert_eq!(row.get("mean_ns").as_f64(), Some(1000.0));
+        assert_eq!(row.get("min_ns").as_f64(), Some(1000.0));
+        assert_eq!(row.get("threads").as_usize(), Some(4));
+        assert_eq!(row.get("kernel").as_str(), Some("matmul"));
+        // 1000 units / 1 µs = 1e9 per second
+        assert_eq!(row.get("throughput_per_s").as_f64(), Some(1e9));
+        assert_eq!(row.get("throughput_unit").as_str(), Some("MAC"));
+        // the throughput fields are optional per row
+        assert_eq!(rows[1].get("throughput_per_s"), &Value::Null);
+    }
+
+    #[test]
+    fn records_write_emits_parseable_file() {
+        let mut rec = BenchRecords::new("file_test");
+        rec.push(&result_with(&[10.0, 20.0, 30.0]), vec![]);
+        let path = std::env::temp_dir().join("benchx_records_unit_test.json");
+        let path = path.to_str().unwrap().to_string();
+        rec.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.ends_with('\n'), "committed record must end in newline");
+        let parsed = Value::parse(text.trim_end()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("file_test"));
+        assert_eq!(parsed.get("rows").as_array().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn json_out_flag_parsing() {
+        let argv = |v: &[&str]| v.iter().map(|s| s.to_string());
+        // cargo's own `--bench` flag (and anything else) is skipped
+        assert_eq!(
+            json_out_from(argv(&["--bench", "--json", "B.json"])),
+            Some("B.json".to_string())
+        );
+        assert_eq!(json_out_from(argv(&["--json"])), None); // missing value
+        assert_eq!(json_out_from(argv(&["--bench"])), None);
+        assert_eq!(json_out_from(argv(&[])), None);
     }
 }
