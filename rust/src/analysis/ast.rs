@@ -1,0 +1,438 @@
+//! Item/function scoping and pragma recovery over the token stream.
+//!
+//! [`SourceFile::parse`] finds every `fn` item (free functions, methods,
+//! nested fns, fns inside closures' parents), records its body as a
+//! token-index range, and attaches the lint pragmas written in the
+//! comment block directly above its signature. It also marks
+//! `#[cfg(test)] mod … { … }` ranges so rules can skip test code, and
+//! indexes every `// lint: …` comment by line for line-scoped pragmas.
+//!
+//! ## Pragma vocabulary
+//!
+//! Function-level (comment block above the `fn`, attributes allowed in
+//! between):
+//! * `// lint: hot-path` — the hot-path-alloc rule checks this body.
+//! * `// lint: thread-body` — the panic-free-serve rule checks this body.
+//! * `// lint: rng-region` — the keyed-rng-only rule checks this body.
+//! * `// lint: allow(<rule>)` — suppress `<rule>` in this body.
+//!
+//! Line-level (a comment on the flagged line, or the comment line(s)
+//! directly above it):
+//! * `// lint: allow(<rule>) — why` — suppress `<rule>` on the next
+//!   code line.
+//! * `// lint: timing: why` — sanction a wallclock read.
+//! * `// lint: ordering: why` — justify a non-`Relaxed` atomic ordering.
+//! * `// lint: guarded: why` — sanction an index expression in a
+//!   thread body by stating the bounds invariant.
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// One parsed `// lint: …` pragma.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    /// `hot-path`, `allow`, `timing`, `ordering`, `guarded`, ….
+    pub name: String,
+    /// `allow(arg)` argument or the text after `name:` (justification).
+    pub arg: String,
+    /// Line of the comment carrying the pragma.
+    pub line: u32,
+}
+
+/// Parse a comment's text into a pragma, if it is one. Accepts
+/// `// lint: name`, `// lint: name(arg)`, `// lint: name: free text`.
+pub fn parse_pragma(comment: &str, line: u32) -> Option<Pragma> {
+    let body = comment.trim_start_matches('/').trim_start_matches('!').trim();
+    let rest = body.strip_prefix("lint:")?.trim();
+    if rest.is_empty() {
+        return None;
+    }
+    let name_end = rest
+        .find(|c: char| c == '(' || c == ':' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    let name = rest[..name_end].to_string();
+    let tail = rest[name_end..].trim();
+    let arg = if let Some(t) = tail.strip_prefix('(') {
+        t.split(')').next().unwrap_or("").trim().to_string()
+    } else if let Some(t) = tail.strip_prefix(':') {
+        t.trim().to_string()
+    } else {
+        String::new()
+    };
+    Some(Pragma { name, arg, line })
+}
+
+/// One `fn` item: name, signature line, body token range, attached
+/// pragmas.
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token-index range of the body, braces included (`start == end`
+    /// for bodiless trait-method declarations).
+    pub body: (usize, usize),
+    pub pragmas: Vec<Pragma>,
+}
+
+impl Function {
+    pub fn has_pragma(&self, name: &str) -> bool {
+        self.pragmas.iter().any(|p| p.name == name)
+    }
+
+    pub fn allows(&self, rule: &str) -> bool {
+        self.pragmas
+            .iter()
+            .any(|p| p.name == "allow" && p.arg == rule)
+    }
+}
+
+/// A lexed + scoped source file, ready for the rules.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path with forward slashes, as the walker found it (rules match
+    /// on suffixes so the root prefix does not matter).
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub fns: Vec<Function>,
+    /// Every pragma in the file, for line-scoped lookups.
+    pub pragmas: Vec<Pragma>,
+    /// Token-index ranges of `#[cfg(test)] mod … { … }` bodies.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let pragmas = toks
+            .iter()
+            .filter(|t| t.is_comment())
+            .filter_map(|t| parse_pragma(&t.text, t.line))
+            .collect();
+        let mut f = SourceFile {
+            path: path.replace('\\', "/"),
+            toks,
+            fns: Vec::new(),
+            pragmas,
+            test_ranges: Vec::new(),
+        };
+        f.scan_items();
+        f
+    }
+
+    /// Next non-comment token index at or after `i`.
+    pub fn sig_at(&self, i: usize) -> Option<usize> {
+        (i..self.toks.len()).find(|&j| !self.toks[j].is_comment())
+    }
+
+    /// Previous non-comment token index at or before `i`.
+    pub fn sig_before(&self, i: usize) -> Option<usize> {
+        (0..=i).rev().find(|&j| !self.toks[j].is_comment())
+    }
+
+    /// The innermost function whose body contains token `i`.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&Function> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.0 <= i && i < f.body.1)
+            .min_by_key(|f| f.body.1 - f.body.0)
+    }
+
+    /// Is token `i` inside a `#[cfg(test)]` module?
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| s <= i && i < e)
+    }
+
+    /// Line-scoped pragma lookup: a pragma named `name` whose comment
+    /// sits on `line` itself, or on a comment line whose next code line
+    /// is `line` (stacked comment blocks directly above count).
+    pub fn line_pragma(&self, line: u32, name: &str) -> Option<&Pragma> {
+        self.pragmas
+            .iter()
+            .find(|p| p.name == name && self.pragma_covers(p, line))
+    }
+
+    fn pragma_covers(&self, p: &Pragma, line: u32) -> bool {
+        if p.line == line {
+            return true;
+        }
+        // the first code line after the pragma's comment block
+        let next_code = self
+            .toks
+            .iter()
+            .filter(|t| !t.is_comment())
+            .map(|t| t.line)
+            .find(|&l| l > p.line);
+        next_code == Some(line)
+    }
+
+    /// Find `fn` items and `#[cfg(test)]` modules.
+    fn scan_items(&mut self) {
+        let mut fns = Vec::new();
+        let mut tests = Vec::new();
+        let n = self.toks.len();
+        let mut i = 0;
+        while i < n {
+            let t = &self.toks[i];
+            if t.is_ident("fn") {
+                // `fn` keyword of an item (a fn-pointer type `fn(…)` has
+                // no name ident after it)
+                if let Some(ni) = self.sig_at(i + 1) {
+                    if self.toks[ni].kind == TokKind::Ident {
+                        let name = self.toks[ni].text.clone();
+                        let line = t.line;
+                        let body = self.fn_body_range(ni + 1);
+                        let pragmas = self.fn_pragmas(i);
+                        fns.push(Function { name, line, body, pragmas });
+                    }
+                }
+            } else if t.is_punct('#') && self.is_cfg_test(i) {
+                if let Some((s, e)) = self.cfg_test_mod_range(i) {
+                    tests.push((s, e));
+                }
+            }
+            i += 1;
+        }
+        self.fns = fns;
+        self.test_ranges = tests;
+    }
+
+    /// From just after the fn name: skip the signature (parens, generics,
+    /// return type, where clause) to the opening `{` of the body and
+    /// return the brace-balanced range. `;` at bracket depth 0 means a
+    /// bodiless declaration.
+    fn fn_body_range(&self, from: usize) -> (usize, usize) {
+        let n = self.toks.len();
+        let mut depth = 0i32; // () and [] nesting inside the signature
+        let mut i = from;
+        while i < n {
+            let t = &self.toks[i];
+            match t.punct() {
+                Some('(') | Some('[') => depth += 1,
+                Some(')') | Some(']') => depth -= 1,
+                Some('{') if depth == 0 => {
+                    let end = self.match_brace(i);
+                    return (i, end);
+                }
+                Some(';') if depth == 0 => return (i, i),
+                _ => {}
+            }
+            i += 1;
+        }
+        (n, n)
+    }
+
+    /// Index one past the `}` matching the `{` at `open`.
+    fn match_brace(&self, open: usize) -> usize {
+        let mut depth = 0i32;
+        for i in open..self.toks.len() {
+            match self.toks[i].punct() {
+                Some('{') => depth += 1,
+                Some('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i + 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.toks.len()
+    }
+
+    /// Pragmas attached to the fn at token `fn_idx`: comments in the
+    /// contiguous block above it, looking back across attributes and
+    /// visibility/qualifier keywords.
+    fn fn_pragmas(&self, fn_idx: usize) -> Vec<Pragma> {
+        let mut out = Vec::new();
+        let mut i = fn_idx;
+        while i > 0 {
+            i -= 1;
+            let t = &self.toks[i];
+            if t.is_comment() {
+                if let Some(p) = parse_pragma(&t.text, t.line) {
+                    out.push(p);
+                }
+                continue;
+            }
+            match (t.kind, t.text.as_str()) {
+                (TokKind::Ident, "pub" | "unsafe" | "const" | "async" | "extern" | "crate"
+                    | "super" | "self" | "in") => continue,
+                (TokKind::Str, _) => continue, // extern "C"
+                (TokKind::Punct, ")") => {
+                    // pub(crate) — walk to the matching (
+                    let mut depth = 0i32;
+                    while i > 0 {
+                        match self.toks[i].punct() {
+                            Some(')') => depth += 1,
+                            Some('(') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        i -= 1;
+                    }
+                    continue;
+                }
+                (TokKind::Punct, "]") => {
+                    // #[attr…] — walk to the matching [ and its #
+                    let mut depth = 0i32;
+                    while i > 0 {
+                        match self.toks[i].punct() {
+                            Some(']') => depth += 1,
+                            Some('[') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        i -= 1;
+                    }
+                    if i > 0 && self.toks[i - 1].is_punct('#') {
+                        i -= 1;
+                    }
+                    continue;
+                }
+                _ => break,
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    /// Does the `#` at `i` open exactly `#[cfg(test)]`?
+    fn is_cfg_test(&self, i: usize) -> bool {
+        let want = ["[", "cfg", "(", "test", ")", "]"];
+        let mut j = i + 1;
+        for w in want {
+            match self.sig_at(j) {
+                Some(k) if self.toks[k].text == w => j = k + 1,
+                _ => return false,
+            }
+        }
+        true
+    }
+
+    /// Body range of the `mod … { … }` following the `#[cfg(test)]` at
+    /// `i` (other attributes may sit in between).
+    fn cfg_test_mod_range(&self, i: usize) -> Option<(usize, usize)> {
+        let mut j = i + 1;
+        // skip to the end of this attribute
+        loop {
+            let k = self.sig_at(j)?;
+            j = k + 1;
+            if self.toks[k].is_punct(']') {
+                break;
+            }
+        }
+        // skip further attributes, then expect `mod name {`
+        loop {
+            let k = self.sig_at(j)?;
+            if self.toks[k].is_punct('#') {
+                let close = (k..self.toks.len())
+                    .find(|&x| self.toks[x].is_punct(']'))?;
+                j = close + 1;
+                continue;
+            }
+            if !self.toks[k].is_ident("mod") {
+                return None;
+            }
+            j = k + 1;
+            break;
+        }
+        let name = self.sig_at(j)?;
+        let open = self.sig_at(name + 1)?;
+        if !self.toks[open].is_punct('{') {
+            return None; // `mod tests;` out-of-line — file not walked
+        }
+        Some((open, self.match_brace(open)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_forms_parse() {
+        let p = parse_pragma("// lint: hot-path", 3).unwrap();
+        assert_eq!((p.name.as_str(), p.arg.as_str()), ("hot-path", ""));
+        let p = parse_pragma("// lint: allow(hot-path-alloc) — cold error path", 4).unwrap();
+        assert_eq!((p.name.as_str(), p.arg.as_str()), ("allow", "hot-path-alloc"));
+        let p = parse_pragma("// lint: ordering: release pairs with acquire", 5).unwrap();
+        assert_eq!(p.name, "ordering");
+        assert_eq!(p.arg, "release pairs with acquire");
+        assert!(parse_pragma("// just a comment", 1).is_none());
+        assert!(parse_pragma("// lint:", 1).is_none());
+    }
+
+    #[test]
+    fn fn_scoping_and_pragmas() {
+        let src = "\
+// lint: hot-path
+#[inline]
+pub fn fast(x: &[f32]) -> f32 { x[0] }
+
+fn plain() {}
+";
+        let f = SourceFile::parse("src/x.rs", src);
+        assert_eq!(f.fns.len(), 2);
+        assert!(f.fns[0].has_pragma("hot-path"));
+        assert_eq!(f.fns[0].name, "fast");
+        assert!(!f.fns[1].has_pragma("hot-path"));
+    }
+
+    #[test]
+    fn innermost_fn_wins() {
+        let src = "fn outer() { fn inner() { let y = 1; } let z = 2; }";
+        let f = SourceFile::parse("src/x.rs", src);
+        let yi = f.toks.iter().position(|t| t.is_ident("y")).unwrap();
+        let zi = f.toks.iter().position(|t| t.is_ident("z")).unwrap();
+        assert_eq!(f.enclosing_fn(yi).unwrap().name, "inner");
+        assert_eq!(f.enclosing_fn(zi).unwrap().name, "outer");
+    }
+
+    #[test]
+    fn cfg_test_mods_are_marked() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { let inside = 1; }
+}
+";
+        let f = SourceFile::parse("src/x.rs", src);
+        let ii = f.toks.iter().position(|t| t.is_ident("inside")).unwrap();
+        let li = f.toks.iter().position(|t| t.is_ident("live")).unwrap();
+        assert!(f.in_test(ii));
+        assert!(!f.in_test(li));
+    }
+
+    #[test]
+    fn line_pragmas_cover_their_next_code_line() {
+        let src = "\
+fn f() {
+    // lint: timing: latency metric only
+    let t = now();
+    let u = later();
+}
+";
+        let f = SourceFile::parse("src/x.rs", src);
+        assert!(f.line_pragma(3, "timing").is_some());
+        assert!(f.line_pragma(4, "timing").is_none());
+    }
+
+    #[test]
+    fn bodiless_trait_fns_do_not_swallow_items() {
+        let src = "trait T { fn a(&self); fn b(&self) { self.a() } } fn c() {}";
+        let f = SourceFile::parse("src/x.rs", src);
+        let names: Vec<_> = f.fns.iter().map(|x| x.name.as_str()).collect();
+        assert_eq!(names, ["a", "b", "c"]);
+        assert_eq!(f.fns[0].body.0, f.fns[0].body.1);
+    }
+}

@@ -1,0 +1,397 @@
+//! Minimal Rust lexer for the in-repo static-analysis pass.
+//!
+//! Produces a flat token stream — identifiers, lifetimes, literals,
+//! punctuation and (crucially) comments, each tagged with its 1-based
+//! source line — from which [`super::ast`] recovers item/function
+//! structure and lint pragmas. This is a *lexer*, not a compiler front
+//! end: it only needs to be exact about the things that can hide or
+//! fabricate rule matches, namely string literals (including raw and
+//! byte strings), character literals vs lifetimes, and line/block
+//! comments (including nesting and multi-line spans). Everything the
+//! rules match on is an identifier or punctuation token, so a banned
+//! call inside a string or comment can never fire, and a pragma inside
+//! a string can never suppress.
+//!
+//! No `syn`, no proc-macro machinery: the default build stays hermetic.
+
+/// Lexical class of one token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `Ordering`, …).
+    Ident,
+    /// Lifetime (`'a`, `'static`) — distinguished from char literals.
+    Lifetime,
+    /// Numeric literal (`0x6b`, `1e-3`, `0.28f64`, …).
+    Number,
+    /// Any string-ish literal: `"…"`, `r"…"`, `r#"…"#`, `b"…"`, `c"…"`.
+    Str,
+    /// Character or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// `// …` comment (doc comments included), text kept for pragmas.
+    LineComment,
+    /// `/* … */` comment (nesting and multi-line spans handled).
+    BlockComment,
+    /// Single punctuation character (`{`, `:`, `!`, …).
+    Punct,
+}
+
+/// One token: kind, verbatim text and the line its first byte sits on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// The token's punctuation character, if it is punctuation.
+    pub fn punct(&self) -> Option<char> {
+        match self.kind {
+            TokKind::Punct => self.text.chars().next(),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.punct() == Some(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated literals/comments are
+/// consumed to end of input (the linter must stay robust on any tree).
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { src: src.as_bytes(), pos: 0, line: 1, toks: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    toks: Vec<Tok>,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> Vec<Tok> {
+        while self.pos < self.src.len() {
+            let c = self.src[self.pos];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ if c.is_ascii_whitespace() => self.pos += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(0),
+                b'\'' => self.char_or_lifetime(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ if c == b'_' || c.is_ascii_alphabetic() || c >= 0x80 => {
+                    self.ident_or_prefixed_string()
+                }
+                _ => {
+                    self.push(TokKind::Punct, self.pos, self.pos + 1, self.line);
+                    self.pos += 1;
+                }
+            }
+        }
+        self.toks
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, end: usize, line: u32) {
+        let text = String::from_utf8_lossy(&self.src[start..end]).into_owned();
+        self.toks.push(Tok { kind, text, line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.pos;
+        while self.pos < self.src.len() && self.src[self.pos] != b'\n' {
+            self.pos += 1;
+        }
+        self.push(TokKind::LineComment, start, self.pos, self.line);
+    }
+
+    /// `/* … */` with nesting, spanning any number of lines. The token
+    /// is tagged with its *opening* line.
+    fn block_comment(&mut self) {
+        let (start, start_line) = (self.pos, self.line);
+        self.pos += 2;
+        let mut depth = 1usize;
+        while self.pos < self.src.len() && depth > 0 {
+            match self.src[self.pos] {
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.pos += 2;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.pos += 2;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ => self.pos += 1,
+            }
+        }
+        self.push(TokKind::BlockComment, start, self.pos, start_line);
+    }
+
+    /// Cooked string starting at the opening quote; `prefix_len` bytes of
+    /// `b`/`c` prefix are already consumed into the token. Multi-line
+    /// bodies and escaped quotes/backslashes are handled.
+    fn string(&mut self, prefix_len: usize) {
+        let (start, start_line) = (self.pos - prefix_len, self.line);
+        self.pos += 1; // opening quote
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'\\' => self.pos += 2, // skip the escaped byte
+                b'"' => {
+                    self.pos += 1;
+                    break;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ => self.pos += 1,
+            }
+        }
+        self.push(TokKind::Str, start, self.pos.min(self.src.len()), start_line);
+    }
+
+    /// Raw string starting at the `r`'s offset: `r"…"`, `r#"…"#` with any
+    /// number of hashes, no escapes, multi-line. `hashes` were counted by
+    /// the caller; `self.pos` sits on the opening quote.
+    fn raw_string(&mut self, start: usize, hashes: usize) {
+        let start_line = self.line;
+        self.pos += 1; // opening quote
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'"' => {
+                    let mut h = 0;
+                    while h < hashes && self.peek(1 + h) == Some(b'#') {
+                        h += 1;
+                    }
+                    self.pos += 1;
+                    if h == hashes {
+                        self.pos += hashes;
+                        break;
+                    }
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.pos += 1;
+                }
+                _ => self.pos += 1,
+            }
+        }
+        self.push(TokKind::Str, start, self.pos.min(self.src.len()), start_line);
+    }
+
+    /// `'a` (lifetime) vs `'x'` / `'\n'` (char literal). A quote followed
+    /// by an identifier char that is *not* closed by a quote right after
+    /// is a lifetime; everything else is a char literal.
+    fn char_or_lifetime(&mut self) {
+        let start = self.pos;
+        let next = self.peek(1);
+        let is_ident_start =
+            next.is_some_and(|c| c == b'_' || c.is_ascii_alphabetic());
+        if is_ident_start && self.peek(2) != Some(b'\'') {
+            self.pos += 1;
+            while self
+                .peek(0)
+                .is_some_and(|c| c == b'_' || c.is_ascii_alphanumeric())
+            {
+                self.pos += 1;
+            }
+            self.push(TokKind::Lifetime, start, self.pos, self.line);
+            return;
+        }
+        // char literal: consume escapes until the closing quote
+        self.pos += 1;
+        while self.pos < self.src.len() {
+            match self.src[self.pos] {
+                b'\\' => self.pos += 2,
+                b'\'' => {
+                    self.pos += 1;
+                    break;
+                }
+                b'\n' => break, // stray quote, not a literal — bail out
+                _ => self.pos += 1,
+            }
+        }
+        self.push(TokKind::Char, start, self.pos.min(self.src.len()), self.line);
+    }
+
+    fn number(&mut self) {
+        let start = self.pos;
+        let mut prev = 0u8;
+        while let Some(c) = self.peek(0) {
+            let take = c.is_ascii_alphanumeric()
+                || c == b'_'
+                // `1.5` yes; `0..10` and `x.method()` no
+                || (c == b'.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()))
+                // exponent sign: `1e-3`, `2E+5`
+                || ((c == b'+' || c == b'-') && (prev == b'e' || prev == b'E'));
+            if !take {
+                break;
+            }
+            prev = c;
+            self.pos += 1;
+        }
+        self.push(TokKind::Number, start, self.pos, self.line);
+    }
+
+    /// An identifier, unless it is a string-literal prefix (`r"`, `r#"`,
+    /// `b"`, `br#"`, `c"`, `b'…'`) in which case the literal is lexed.
+    fn ident_or_prefixed_string(&mut self) {
+        let start = self.pos;
+        while self.peek(0).is_some_and(|c| {
+            c == b'_' || c.is_ascii_alphanumeric() || c >= 0x80
+        }) {
+            self.pos += 1;
+        }
+        let ident = &self.src[start..self.pos];
+        let raw_prefix = matches!(ident, b"r" | b"br" | b"cr" | b"b" | b"c");
+        if raw_prefix {
+            match self.peek(0) {
+                // cooked with prefix: b"…", c"…" (escapes lex like "…")
+                Some(b'"') if ident == b"b" || ident == b"c" => {
+                    self.string(ident.len());
+                    return;
+                }
+                // raw with zero hashes: r"…", br"…", cr"…"
+                Some(b'"') => {
+                    self.raw_string(start, 0);
+                    return;
+                }
+                Some(b'#') => {
+                    // r#"…"# / br##"…"## — count hashes then expect a quote
+                    let mut hashes = 0;
+                    while self.peek(hashes) == Some(b'#') {
+                        hashes += 1;
+                    }
+                    if self.peek(hashes) == Some(b'"') {
+                        self.pos += hashes;
+                        self.raw_string(start, hashes);
+                        return;
+                    }
+                    // r#ident raw identifier: fall through, emit ident
+                }
+                // b'…' byte char literal
+                Some(b'\'') if ident == b"b" => {
+                    self.pos += 1;
+                    while self.pos < self.src.len() {
+                        match self.src[self.pos] {
+                            b'\\' => self.pos += 2,
+                            b'\'' => {
+                                self.pos += 1;
+                                break;
+                            }
+                            _ => self.pos += 1,
+                        }
+                    }
+                    self.push(
+                        TokKind::Char,
+                        start,
+                        self.pos.min(self.src.len()),
+                        self.line,
+                    );
+                    return;
+                }
+                _ => {}
+            }
+        }
+        self.push(TokKind::Ident, start, self.pos, self.line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_numbers() {
+        let ts = kinds("fn f(x: usize) -> u64 { x as u64 + 0x1f }");
+        assert_eq!(ts[0], (TokKind::Ident, "fn".into()));
+        assert_eq!(ts[1], (TokKind::Ident, "f".into()));
+        assert!(ts.iter().any(|t| *t == (TokKind::Number, "0x1f".into())));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ts = kinds(r#"let s = "Instant::now() // not code";"#);
+        assert_eq!(
+            ts.iter().filter(|t| t.0 == TokKind::Ident).count(),
+            2, // let, s
+        );
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_newlines() {
+        let src = "let s = r#\"line1 \"quoted\"\nline2 unwrap()\"#; next";
+        let ts = lex(src);
+        let s = ts.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert!(s.text.contains("line2"));
+        // the token after the raw string is on line 2
+        let next = ts.iter().find(|t| t.is_ident("next")).unwrap();
+        assert_eq!(next.line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let src = "a /* outer /* inner */ still\ncomment */ b";
+        let ts = lex(src);
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[1].kind, TokKind::BlockComment);
+        assert!(ts[1].text.contains("inner"));
+        assert_eq!(ts[2].text, "b");
+        assert_eq!(ts[2].line, 2);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let ts = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Lifetime).count(), 2);
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Char).count(), 1);
+    }
+
+    #[test]
+    fn line_comments_keep_text_for_pragmas() {
+        let ts = lex("x // lint: hot-path\ny");
+        assert_eq!(ts[1].kind, TokKind::LineComment);
+        assert_eq!(ts[1].text, "// lint: hot-path");
+        assert_eq!(ts[2].line, 2);
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let ts = lex(r#"let s = "a\"b\\"; done"#);
+        assert!(ts.iter().any(|t| t.is_ident("done")));
+        assert_eq!(ts.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn unterminated_input_never_panics() {
+        for src in ["\"abc", "/* never closed", "r#\"open", "'\\", "b'"] {
+            let _ = lex(src); // must terminate without panicking
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! In-repo static analysis: `pdfa lint`.
+//!
+//! A hermetic (zero-dependency, no `syn`) lexical analyzer that walks
+//! `rust/src/**` and enforces the repo's cross-cutting contracts as
+//! named, individually-suppressable rules — hot-path allocation
+//! freedom, keyed-RNG determinism, scoped thread-cap mutation,
+//! panic-free serve threads, wallclock containment and atomic-ordering
+//! justification. Runtime tests sample a handful of code paths; this
+//! pass checks every call site at CI time. See DESIGN.md ("Static
+//! analysis") for the rule catalogue and pragma vocabulary.
+//!
+//! Pipeline: [`lexer`] turns a source file into a line-tagged token
+//! stream (comments retained — they carry the pragmas), [`ast`] scopes
+//! items/function bodies and attaches pragmas, [`rules`] walks the
+//! result and emits [`Diag`]s. [`lint_tree`] drives the walk;
+//! [`lint_source`] is the fixture-test entry point.
+
+pub mod ast;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+use crate::{Error, Result};
+
+pub use ast::SourceFile;
+pub use rules::{Diag, RULES};
+
+/// Outcome of linting a whole tree: where we looked, how many files we
+/// parsed, and every finding (sorted by file, then line, then rule).
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: String,
+    pub files: usize,
+    pub findings: Vec<Diag>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// JSON shape consumed by CI (`.github/workflows/ci.yml` asserts
+    /// `lint == "pdfa"`, `files > 0`, six rules, empty findings).
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("lint", Value::String("pdfa".to_string())),
+            ("root", Value::String(self.root.clone())),
+            ("files", Value::Number(self.files as f64)),
+            (
+                "rules",
+                Value::Array(
+                    RULES
+                        .iter()
+                        .map(|r| Value::String(r.to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "findings",
+                Value::Array(
+                    self.findings
+                        .iter()
+                        .map(|d| {
+                            Value::object(vec![
+                                ("file", Value::String(d.file.clone())),
+                                ("line", Value::Number(d.line as f64)),
+                                ("rule", Value::String(d.rule.to_string())),
+                                ("message", Value::String(d.msg.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable `file:line: rule: message` lines.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.findings {
+            s.push_str(&format!("{}:{}: {}: {}\n", d.file, d.line, d.rule, d.msg));
+        }
+        s
+    }
+}
+
+/// Lint a single source text under a display path. Used by the fixture
+/// tests and by [`lint_tree`] per file.
+pub fn lint_source(path: &str, src: &str) -> Vec<Diag> {
+    let f = SourceFile::parse(path, src);
+    let mut out = Vec::new();
+    rules::check_file(&f, &mut out);
+    out
+}
+
+/// Recursively lint every `.rs` file under `root`, in sorted order so
+/// reports are deterministic across filesystems.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path).map_err(|e| {
+            Error::Manifest(format!("lint: read {}: {e}", path.display()))
+        })?;
+        // report paths relative to the lint root, with forward slashes
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(LintReport {
+        root: root.to_string_lossy().into_owned(),
+        files: files.len(),
+        findings,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = fs::read_dir(dir).map_err(|e| {
+        Error::Manifest(format!("lint: read dir {}: {e}", dir.display()))
+    })?;
+    for entry in entries {
+        let entry = entry
+            .map_err(|e| Error::Manifest(format!("lint: walk {}: {e}", dir.display())))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let rep = LintReport {
+            root: "rust/src".to_string(),
+            files: 3,
+            findings: vec![Diag {
+                file: "a.rs".to_string(),
+                line: 7,
+                rule: rules::HOT_PATH_ALLOC,
+                msg: "boom".to_string(),
+            }],
+        };
+        let v = rep.to_value();
+        assert_eq!(v.get("lint").as_str(), Some("pdfa"));
+        assert_eq!(v.get("files").as_usize(), Some(3));
+        assert_eq!(v.get("rules").as_array().map(|a| a.len()), Some(6));
+        let f = &v.get("findings").as_array().unwrap()[0];
+        assert_eq!(f.get("rule").as_str(), Some("hot-path-alloc"));
+        assert_eq!(f.get("line").as_usize(), Some(7));
+        assert!(rep.render().contains("a.rs:7: hot-path-alloc: boom"));
+    }
+
+    #[test]
+    fn lint_source_finds_and_suppresses() {
+        let bad = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
+"#;
+        let diags = lint_source("fixture.rs", bad);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, rules::HOT_PATH_ALLOC);
+
+        let ok = r#"
+// lint: hot-path
+// lint: allow(hot-path-alloc)
+fn hot(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
+"#;
+        assert!(lint_source("fixture.rs", ok).is_empty());
+    }
+}

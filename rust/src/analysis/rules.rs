@@ -1,0 +1,402 @@
+//! The six repo-invariant lint rules.
+//!
+//! Each rule is a named, individually-suppressable check over a
+//! [`SourceFile`]'s token stream (see DESIGN.md, "Static analysis", for
+//! the invariant each one guards). Findings inside `#[cfg(test)]`
+//! modules are skipped wholesale — test code may allocate, panic and
+//! read the clock freely. Suppression is explicit and local: a
+//! function-level `// lint: allow(<rule>)` pragma, or a line-level
+//! pragma (`allow`, `timing`, `ordering`, `guarded`) on the flagged
+//! line or the comment line(s) directly above it.
+
+use super::ast::{Function, SourceFile};
+use super::lexer::TokKind;
+
+/// One finding: file, line, rule name and a human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Every rule name, in the order they run. Fixture tests assert each
+/// one fires; `pdfa lint --json` records the list in the report.
+pub const RULES: [&str; 6] = [
+    HOT_PATH_ALLOC,
+    NO_RAW_THREAD_CAP,
+    KEYED_RNG_ONLY,
+    PANIC_FREE_SERVE,
+    NO_WALLCLOCK,
+    ATOMIC_ORDERING,
+];
+
+pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
+pub const NO_RAW_THREAD_CAP: &str = "no-raw-thread-cap";
+pub const KEYED_RNG_ONLY: &str = "keyed-rng-only";
+pub const PANIC_FREE_SERVE: &str = "panic-free-serve";
+pub const NO_WALLCLOCK: &str = "no-wallclock-in-determinism";
+pub const ATOMIC_ORDERING: &str = "atomic-ordering-audit";
+
+/// Allocating method/associated-fn idents banned in `hot-path` bodies.
+const ALLOC_CALLS: [&str; 4] = ["clone", "to_vec", "collect", "with_capacity"];
+/// Allocating macros banned in `hot-path` bodies.
+const ALLOC_MACROS: [&str; 2] = ["format", "vec"];
+/// Panicking macros banned in `thread-body` bodies.
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Atomic orderings stricter than `Relaxed` (the cmp::Ordering variants
+/// Less/Equal/Greater never collide with these names).
+const STRICT_ORDERINGS: [&str; 4] = ["Acquire", "Release", "AcqRel", "SeqCst"];
+/// Keywords that may directly precede `[` without forming an index
+/// expression (`for x in [..]`, `return [..]`, …).
+const NON_INDEX_KEYWORDS: [&str; 10] = [
+    "in", "return", "break", "if", "else", "match", "let", "mut", "ref", "box",
+];
+
+/// Run every rule over `f`, appending findings to `out`.
+pub fn check_file(f: &SourceFile, out: &mut Vec<Diag>) {
+    hot_path_alloc(f, out);
+    no_raw_thread_cap(f, out);
+    keyed_rng_only(f, out);
+    panic_free_serve(f, out);
+    no_wallclock(f, out);
+    atomic_ordering(f, out);
+}
+
+/// Shared finding constructor: drops the diag if the token is in test
+/// code or a fn/line-level suppression covers it.
+fn emit(
+    f: &SourceFile,
+    out: &mut Vec<Diag>,
+    idx: usize,
+    fnc: Option<&Function>,
+    rule: &'static str,
+    msg: String,
+) {
+    if f.in_test(idx) {
+        return;
+    }
+    let line = f.toks[idx].line;
+    if let Some(func) = fnc {
+        if func.allows(rule) {
+            return;
+        }
+    }
+    if f.line_pragma(line, "allow")
+        .is_some_and(|p| p.arg == rule)
+    {
+        return;
+    }
+    out.push(Diag { file: f.path.clone(), line, rule, msg });
+}
+
+/// Is the ident at `i` called (next significant token `(`), possibly
+/// through a turbofish/path (`::`)?
+fn is_call(f: &SourceFile, i: usize) -> bool {
+    match f.sig_at(i + 1) {
+        Some(j) => f.toks[j].is_punct('(') || f.toks[j].is_punct(':'),
+        None => false,
+    }
+}
+
+/// The path head two significant tokens back, if `i` is reached via
+/// `Head::ident` (returns the text of `Head`).
+fn path_head<'a>(f: &'a SourceFile, i: usize) -> Option<&'a str> {
+    let c1 = f.sig_before(i.checked_sub(1)?)?;
+    if !f.toks[c1].is_punct(':') {
+        return None;
+    }
+    let c2 = f.sig_before(c1.checked_sub(1)?)?;
+    if !f.toks[c2].is_punct(':') {
+        return None;
+    }
+    let h = f.sig_before(c2.checked_sub(1)?)?;
+    (f.toks[h].kind == TokKind::Ident).then(|| f.toks[h].text.as_str())
+}
+
+/// **hot-path-alloc** — no allocating calls or macros inside functions
+/// marked `// lint: hot-path`: `clone()`, `to_vec()`, `collect()`,
+/// `with_capacity()`, `Vec::new()`, `Box::new()`, `String::from()`,
+/// `format!`, `vec!`. The steady-state serve and photonic dispatch
+/// paths are allocation-free by contract (`tests/alloc_*.rs` sample
+/// them at runtime; this rule checks every call site statically).
+fn hot_path_alloc(f: &SourceFile, out: &mut Vec<Diag>) {
+    for func in f.fns.iter().filter(|x| x.has_pragma("hot-path")) {
+        for i in func.body.0..func.body.1 {
+            let t = &f.toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let name = t.text.as_str();
+            let flagged = if ALLOC_CALLS.contains(&name) && is_call(f, i) {
+                Some(name.to_string())
+            } else if ALLOC_MACROS.contains(&name)
+                && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
+            {
+                Some(format!("{name}!"))
+            } else if name == "new" && is_call(f, i) {
+                match path_head(f, i) {
+                    Some(h @ ("Vec" | "Box")) => Some(format!("{h}::new")),
+                    _ => None,
+                }
+            } else if name == "from"
+                && is_call(f, i)
+                && path_head(f, i) == Some("String")
+            {
+                Some("String::from".to_string())
+            } else {
+                None
+            };
+            if let Some(what) = flagged {
+                emit(
+                    f,
+                    out,
+                    i,
+                    Some(func),
+                    HOT_PATH_ALLOC,
+                    format!("`{what}` allocates inside hot-path fn `{}`", func.name),
+                );
+            }
+        }
+    }
+}
+
+/// **no-raw-thread-cap** — `ops::set_thread_cap` is callable only from
+/// `ThreadCapGuard` (its defining module, `tensor/ops.rs`, is exempt).
+/// Raw calls from concurrently running scopes race on the process
+/// global and leak their override; scoped guards serialize and restore.
+fn no_raw_thread_cap(f: &SourceFile, out: &mut Vec<Diag>) {
+    if f.path.ends_with("tensor/ops.rs") {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if !t.is_ident("set_thread_cap") {
+            continue;
+        }
+        // skip the declaration itself and `use` imports (no call parens)
+        if f.sig_before(i.saturating_sub(1)).is_some_and(|j| f.toks[j].is_ident("fn")) {
+            continue;
+        }
+        if !f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('(')) {
+            continue;
+        }
+        let fnc = f.enclosing_fn(i);
+        emit(
+            f,
+            out,
+            i,
+            fnc,
+            NO_RAW_THREAD_CAP,
+            "raw `set_thread_cap` call outside `ThreadCapGuard`; use a \
+             scoped guard (or `// lint: allow(no-raw-thread-cap)` with a \
+             written contract)"
+                .to_string(),
+        );
+    }
+}
+
+/// **keyed-rng-only** — inside row-parallel eval regions (functions
+/// marked `// lint: rng-region`) RNGs may only be built with
+/// `Pcg64::keyed(seed, op, lane)`: sequentially-seeded streams make
+/// results depend on which worker ran which row, breaking the
+/// bit-identical-at-any-`--threads` contract the photonic results
+/// depend on.
+fn keyed_rng_only(f: &SourceFile, out: &mut Vec<Diag>) {
+    for func in f.fns.iter().filter(|x| x.has_pragma("rng-region")) {
+        for i in func.body.0..func.body.1 {
+            let t = &f.toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let banned = matches!(
+                t.text.as_str(),
+                "new" | "seed" | "fork" | "from_state_bytes"
+            );
+            if banned && path_head(f, i) == Some("Pcg64") && is_call(f, i) {
+                emit(
+                    f,
+                    out,
+                    i,
+                    Some(func),
+                    KEYED_RNG_ONLY,
+                    format!(
+                        "`Pcg64::{}` inside rng-region fn `{}`: row-parallel \
+                         noise must come from `Pcg64::keyed`",
+                        t.text, func.name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// **panic-free-serve** — no `unwrap()`/`expect()`, panicking macros,
+/// or unguarded index expressions inside functions marked
+/// `// lint: thread-body` (the serve stack's per-connection and worker
+/// threads): a panic there kills one connection's thread and strands
+/// its peer mid-protocol instead of surfacing an error reply. Index
+/// expressions need a `// lint: guarded: <bounds invariant>` pragma.
+fn panic_free_serve(f: &SourceFile, out: &mut Vec<Diag>) {
+    for func in f.fns.iter().filter(|x| x.has_pragma("thread-body")) {
+        for i in func.body.0..func.body.1 {
+            let t = &f.toks[i];
+            match t.kind {
+                TokKind::Ident => {
+                    let name = t.text.as_str();
+                    if matches!(name, "unwrap" | "expect") && is_call(f, i) {
+                        emit(
+                            f,
+                            out,
+                            i,
+                            Some(func),
+                            PANIC_FREE_SERVE,
+                            format!(
+                                "`{}()` can panic inside thread-body fn `{}`",
+                                name, func.name
+                            ),
+                        );
+                    } else if PANIC_MACROS.contains(&name)
+                        && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
+                    {
+                        emit(
+                            f,
+                            out,
+                            i,
+                            Some(func),
+                            PANIC_FREE_SERVE,
+                            format!(
+                                "`{}!` inside thread-body fn `{}`",
+                                name, func.name
+                            ),
+                        );
+                    }
+                }
+                TokKind::Punct if t.is_punct('[') => {
+                    if !is_index_expr(f, i) {
+                        continue;
+                    }
+                    if f.line_pragma(t.line, "guarded").is_some() {
+                        continue;
+                    }
+                    emit(
+                        f,
+                        out,
+                        i,
+                        Some(func),
+                        PANIC_FREE_SERVE,
+                        format!(
+                            "index expression in thread-body fn `{}` without a \
+                             `// lint: guarded:` bounds note",
+                            func.name
+                        ),
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Is the `[` at `i` an index expression (`expr[…]`) rather than an
+/// array literal, attribute, slice pattern or type?
+fn is_index_expr(f: &SourceFile, i: usize) -> bool {
+    let Some(p) = (i.checked_sub(1)).and_then(|j| f.sig_before(j)) else {
+        return false;
+    };
+    let prev = &f.toks[p];
+    match prev.kind {
+        TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
+        TokKind::Punct => matches!(prev.punct(), Some(')') | Some(']')),
+        _ => false,
+    }
+}
+
+/// **no-wallclock-in-determinism** — `Instant::now`/`SystemTime::now`
+/// reads are banned outside `util/benchx.rs`, the `coordinator` module
+/// and explicitly pragma'd timing sites (`// lint: timing: <why>`).
+/// Wallclock anywhere near the step path is how nondeterminism sneaks
+/// into "bit-identical at any thread count" claims.
+fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>) {
+    // paths are relative to the lint root, so `coordinator/` may be the
+    // leading component
+    if f.path.ends_with("util/benchx.rs")
+        || f.path.starts_with("coordinator/")
+        || f.path.contains("/coordinator/")
+    {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if !(t.is_ident("Instant") || t.is_ident("SystemTime")) {
+            continue;
+        }
+        // flag only the `::now` read, not imports or type positions
+        let Some(c1) = f.sig_at(i + 1) else { continue };
+        if !f.toks[c1].is_punct(':') {
+            continue;
+        }
+        let Some(c2) = f.sig_at(c1 + 1) else { continue };
+        if !f.toks[c2].is_punct(':') {
+            continue;
+        }
+        let Some(m) = f.sig_at(c2 + 1) else { continue };
+        if !f.toks[m].is_ident("now") {
+            continue;
+        }
+        if f.line_pragma(t.line, "timing").is_some() {
+            continue;
+        }
+        let fnc = f.enclosing_fn(i);
+        emit(
+            f,
+            out,
+            i,
+            fnc,
+            NO_WALLCLOCK,
+            format!(
+                "`{}::now` outside the sanctioned timing modules; annotate \
+                 with `// lint: timing: <why>` if this is a legitimate \
+                 latency/throughput measurement",
+                t.text
+            ),
+        );
+    }
+}
+
+/// **atomic-ordering-audit** — every `Ordering::` stricter than
+/// `Relaxed` needs an adjacent `// lint: ordering: <why>` justification:
+/// the repo's concurrency is designed around data-parallel partitioning
+/// plus joins, so a fence-bearing ordering is either load-bearing (and
+/// its pairing must be written down) or an accident (and should be
+/// `Relaxed`).
+fn atomic_ordering(f: &SourceFile, out: &mut Vec<Diag>) {
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if t.kind != TokKind::Ident || !STRICT_ORDERINGS.contains(&t.text.as_str()) {
+            continue;
+        }
+        if path_head(f, i) != Some("Ordering") {
+            continue;
+        }
+        if f.line_pragma(t.line, "ordering")
+            .is_some_and(|p| !p.arg.is_empty())
+        {
+            continue;
+        }
+        let fnc = f.enclosing_fn(i);
+        emit(
+            f,
+            out,
+            i,
+            fnc,
+            ATOMIC_ORDERING,
+            format!(
+                "`Ordering::{}` without an adjacent `// lint: ordering: <why>` \
+                 justification",
+                t.text
+            ),
+        );
+    }
+}

@@ -455,6 +455,7 @@ impl Trainer {
         test: Arc<Dataset>,
         mut on_epoch: impl FnMut(&EpochStats),
     ) -> Result<TrainResult> {
+        // lint: timing: run wall-clock for the epoch report
         let t0 = Instant::now();
         let (sigma, bits) = self.cfg.noise.artifact_inputs().unwrap_or((0.0, 0.0));
         let noise_dims = if self.cfg.noise.needs_noise_draws() {
@@ -472,6 +473,7 @@ impl Trainer {
         let mut history = Vec::new();
         let first_epoch = self.epochs_done + 1;
         for epoch in first_epoch..=self.cfg.epochs {
+            // lint: timing: per-epoch wall-clock for the epoch report
             let e0 = Instant::now();
             let feeder = BatchFeeder::start(
                 train.clone(),
@@ -511,6 +513,7 @@ impl Trainer {
 
             let val_acc = if epoch % self.cfg.eval_every == 0 || epoch == self.cfg.epochs
             {
+                // lint: timing: eval-time metric
                 let te = Instant::now();
                 let acc = self.evaluate(&test)?;
                 self.metrics.add_time("eval_s", te.elapsed());

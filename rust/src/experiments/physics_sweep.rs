@@ -85,6 +85,7 @@ fn run_cell(
     };
     let mut trainer = Trainer::new(engine, cfg)?;
     let (train, test) = trainer.load_data()?;
+    // lint: timing: per-point wall-clock for the sweep report
     let t0 = Instant::now();
     let res = trainer.train(train, test, |_| {})?;
     crate::log_info!(

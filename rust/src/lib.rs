@@ -47,6 +47,7 @@
 //! contracts, `EXPERIMENTS.md` for the paper-figure reproduction guide,
 //! and `ROADMAP.md` for the project north star and open items.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod dfa;

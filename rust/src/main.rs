@@ -14,6 +14,7 @@
 //! pdfa report           telemetry of a recorded run vs the §5 targets
 //! pdfa gen-data         write the synthetic digit dataset as IDX files
 //! pdfa info             list artifacts and configs in the manifest
+//! pdfa lint             static-analysis pass over the repo's own sources
 //! ```
 
 use std::io::BufRead;
@@ -94,6 +95,10 @@ fn dispatch(argv: &[String]) -> Result<()> {
             &gendata_specs(), rest, wants_help, cmd_gen_data),
         "info" => run_or_help(cmd, "list manifest artifacts and configs",
             &info_specs(), rest, wants_help, cmd_info),
+        "lint" => run_or_help(cmd,
+            "enforce the repo's hot-path/determinism/panic-safety invariants \
+             statically (see DESIGN.md, \"Static analysis\")",
+            &lint_specs(), rest, wants_help, cmd_lint),
         "help" | "--help" | "-h" => {
             print_global_help();
             Ok(())
@@ -134,7 +139,8 @@ fn print_global_help() {
          \u{20}  energy             Eq. 2-4 + Fig. 6 tables\n\
          \u{20}  report             run telemetry vs the §5 targets (MAC/s, pJ/MAC)\n\
          \u{20}  gen-data           write synthetic IDX dataset\n\
-         \u{20}  info               inspect the artifact manifest\n\n\
+         \u{20}  info               inspect the artifact manifest\n\
+         \u{20}  lint               static-analysis pass over the repo's own sources\n\n\
          run `pdfa <command> --help` for options"
     );
 }
@@ -988,4 +994,38 @@ fn cmd_info(a: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn lint_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("root", "rust/src", "source tree to lint"),
+        ArgSpec::opt("json", "", "also write the JSON report to this path"),
+    ]
+}
+
+fn cmd_lint(a: &Args) -> Result<()> {
+    let root = std::path::Path::new(a.str("root"));
+    let report = photonic_dfa::analysis::lint_tree(root)?;
+    let json = a.str("json");
+    if !json.is_empty() {
+        let mut text = report.to_value().to_string_pretty();
+        text.push('\n');
+        std::fs::write(json, text)
+            .map_err(|e| Error::Cli(format!("lint: write {json}: {e}")))?;
+    }
+    print!("{}", report.render());
+    if report.clean() {
+        println!(
+            "pdfa lint: {} files clean under {} rules",
+            report.files,
+            photonic_dfa::analysis::RULES.len()
+        );
+        Ok(())
+    } else {
+        Err(Error::Cli(format!(
+            "pdfa lint: {} finding(s) across {} files",
+            report.findings.len(),
+            report.files
+        )))
+    }
 }

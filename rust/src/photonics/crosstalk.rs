@@ -54,6 +54,7 @@ impl CrosstalkModel {
     /// `weights.len()`). This is the form [`super::weight_bank::WeightBank`]
     /// drives once per row on every re-inscription — the hottest
     /// crosstalk path — so steady-state inscriptions stay heap-free.
+    // lint: hot-path
     pub fn effective_weights_into(
         &self,
         weights: &[f32],

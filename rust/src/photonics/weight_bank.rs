@@ -386,6 +386,7 @@ impl WeightBank {
     /// are written into `out` (length exactly `rows`). This is the form
     /// the photonic runtime drives from its batch-row worker pool — one
     /// reusable buffer per worker instead of one `Vec` per optical cycle.
+    // lint: hot-path
     pub fn eval_into(
         &self,
         ins: &Inscription,
@@ -398,6 +399,7 @@ impl WeightBank {
             return Err(Error::Shape("inscription geometry mismatch".into()));
         }
         if x.len() != self.cfg.cols {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "eval expects {} channel amplitudes, got {}",
                 self.cfg.cols,
@@ -406,6 +408,7 @@ impl WeightBank {
         }
         if let Some(g) = gains {
             if g.len() != self.cfg.rows {
+                // lint: allow(hot-path-alloc) — cold path, shape error
                 return Err(Error::Shape(format!(
                     "eval expects {} TIA gains, got {}",
                     self.cfg.rows,
@@ -414,6 +417,7 @@ impl WeightBank {
             }
         }
         if out.len() != self.cfg.rows {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "eval_into expects an output buffer of {} rows, got {}",
                 self.cfg.rows,
@@ -492,6 +496,7 @@ impl WeightBank {
     /// The photonic runtime keeps a pool of these per dispatcher, so
     /// snapshotting every tile of every dispatch is heap-free once the
     /// pool has warmed to the model's tile count.
+    // lint: hot-path
     pub fn snapshot_into(&self, ins: &mut Inscription) {
         ins.rows = self.cfg.rows;
         ins.cols = self.cfg.cols;
@@ -526,6 +531,7 @@ impl WeightBank {
 /// Lorentzian-slope phase jitter on the effective weights, balanced
 /// photodetection, TIA gain (programmed or overridden per cycle), optional
 /// ADC. Row readouts land in `out[..rows]` (caller-validated length).
+// lint: hot-path
 #[allow(clippy::too_many_arguments)]
 fn run_chain(
     noise: &NoiseModel,
@@ -551,6 +557,7 @@ fn run_chain(
     let amps: &mut [f64] = if n <= 128 {
         &mut amps_stack[..n]
     } else {
+        // lint: allow(hot-path-alloc) — beyond the §3 channel budget only
         amps_heap = vec![0.0f64; n];
         &mut amps_heap
     };

@@ -149,6 +149,7 @@ impl Engine {
             return Ok(hit.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
+        // lint: timing: one-shot compile-latency log line
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             spec.path

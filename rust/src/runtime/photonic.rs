@@ -364,6 +364,7 @@ impl NoiseKey {
 /// stream — is a pure function of the row index, so the result is
 /// bit-identical at any thread count; only wall-clock time changes.
 /// Returns the summed per-row optical-cycle counts.
+// lint: rng-region
 fn shard_rows<S>(
     threads: usize,
     out: &mut [f32],
@@ -445,6 +446,7 @@ impl Device {
     /// values `vals`, and accumulate the digitally rescaled result into
     /// `out[..n_rows]`. `ebuf` is the worker's reusable readout buffer
     /// (length = bank rows); returns the cycles fired.
+    // lint: hot-path
     #[allow(clippy::too_many_arguments)]
     fn drive_tile(
         &self,
@@ -621,6 +623,8 @@ impl BankDispatcher {
 
     /// [`Self::linear`] into a caller-owned `(batch, m)` output tensor —
     /// the allocation-free form.
+    // lint: hot-path
+    // lint: rng-region
     pub fn linear_into(
         &mut self,
         op: u64,
@@ -632,12 +636,14 @@ impl BankDispatcher {
         let (batch, k) = (x.rows(), x.cols());
         let m = w.cols();
         if w.rows() != k {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "bank linear: x is (_, {k}) but w is ({}, {m})",
                 w.rows()
             )));
         }
         if y.shape() != [batch, m] {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "bank linear: output must be ({batch}, {m}), got {:?}",
                 y.shape()
@@ -692,6 +698,7 @@ impl BankDispatcher {
             m,
             lin_scratch,
             // worker-local reusable buffers: (acc, ebuf)
+            // lint: allow(hot-path-alloc) — once per worker, not per row
             || (vec![0.0f32; br], vec![0.0f32; br]),
             |smp, y_row, scratch| {
                 let (acc, ebuf) = scratch;
@@ -740,6 +747,8 @@ impl BankDispatcher {
 
     /// [`Self::dfa_gradient`] into a caller-owned `(m, batch)` output
     /// tensor — the allocation-free form.
+    // lint: hot-path
+    // lint: rng-region
     pub fn dfa_gradient_into(
         &mut self,
         op: u64,
@@ -751,6 +760,7 @@ impl BankDispatcher {
         let (batch, k) = (e.rows(), e.cols());
         let m = bmat.rows();
         if bmat.cols() != k || a.rows() != batch || a.cols() != m {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "bank dfa_gradient: bmat {:?}, e {:?}, a {:?}",
                 bmat.shape(),
@@ -759,6 +769,7 @@ impl BankDispatcher {
             )));
         }
         if out.shape() != [m, batch] {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "bank dfa_gradient: output must be ({m}, {batch}), got {:?}",
                 out.shape()
@@ -808,6 +819,7 @@ impl BankDispatcher {
             m,
             grad_scratch,
             // worker-local reusable buffers: (gains, acc, ebuf)
+            // lint: allow(hot-path-alloc) — once per worker, not per row
             || (vec![0.0f32; br], vec![0.0f32; br], vec![0.0f32; br]),
             |smp, d_row, scratch| {
                 let (gains, acc, ebuf) = scratch;

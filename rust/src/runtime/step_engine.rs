@@ -167,6 +167,9 @@ pub fn open_threaded(
     backend: Backend,
     threads: usize,
 ) -> Result<Arc<dyn StepEngine>> {
+    // lint: allow(no-raw-thread-cap) — the documented process-global
+    // contract above: a persistent cap set at engine open, deliberately
+    // NOT a scoped ThreadCapGuard override
     crate::tensor::ops::set_thread_cap(threads);
     open_inner(artifacts_dir, backend, threads)
 }

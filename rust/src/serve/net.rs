@@ -54,10 +54,22 @@ use crate::{Error, Result};
 /// MNIST-sized request is ~20 KiB.
 pub const MAX_LINE_BYTES: usize = 16 << 20;
 
+/// Stop-flag poll granularity in milliseconds — single source for
+/// [`POLL_INTERVAL`] and the [`DRAIN_WINDOW`] derived from it.
+const POLL_MILLIS: u64 = 50;
+
 /// How long blocking reads wait before re-checking the stop flag; also
 /// the accept loop's poll interval. Bounds shutdown latency for idle
-/// connections.
-const POLL_INTERVAL: Duration = Duration::from_millis(50);
+/// connections: an idle front-end notices `stop()` within one interval
+/// (regression-tested in `tests/integration_net.rs`).
+pub const POLL_INTERVAL: Duration = Duration::from_millis(POLL_MILLIS);
+
+/// Lingering-close drain window (20 poll intervals): after the final
+/// reply the connection keeps discarding unread pipelined input for at
+/// most this long before closing, so the peer's receive queue is never
+/// RST away. Shares [`POLL_MILLIS`] with the read-timeout poll that
+/// paces the drain loop.
+pub const DRAIN_WINDOW: Duration = Duration::from_millis(20 * POLL_MILLIS);
 
 /// Front-end sizing knobs (the queue policy lives in the [`Server`]).
 #[derive(Debug, Clone)]
@@ -171,7 +183,7 @@ impl NetServer {
         }
         loop {
             let hs: Vec<_> = {
-                let mut g = self.conns.lock().unwrap();
+                let mut g = lock_conns(&self.conns);
                 g.drain(..).collect()
             };
             if hs.is_empty() {
@@ -197,12 +209,23 @@ impl Drop for NetServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        for h in self.conns.lock().unwrap().drain(..) {
+        for h in lock_conns(&self.conns).drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// Connection-registry lock, poison-proof: a panicking holder must not
+/// wedge shutdown — the handle list (plain data) stays usable, so
+/// `join`/`Drop` can still drain every connection (same recovery idiom
+/// as `tensor::ops::CAP_SCOPE`).
+fn lock_conns(
+    conns: &Mutex<Vec<JoinHandle<()>>>,
+) -> std::sync::MutexGuard<'_, Vec<JoinHandle<()>>> {
+    conns.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// lint: thread-body
 #[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
@@ -235,7 +258,7 @@ fn accept_loop(
                 let spawned = std::thread::Builder::new()
                     .name(format!("serve-conn-{conn_id}"))
                     .spawn(move || ctx.run(stream));
-                let mut g = conns.lock().unwrap();
+                let mut g = lock_conns(&conns);
                 if let Ok(h) = spawned {
                     g.push(h);
                 }
@@ -243,6 +266,7 @@ fn accept_loop(
                 // handle list stays proportional to live connections
                 let mut i = 0;
                 while i < g.len() {
+                    // lint: guarded: loop condition pins i < g.len()
                     if g[i].is_finished() {
                         let _ = g.swap_remove(i).join();
                     } else {
@@ -305,6 +329,8 @@ impl ConnCtx {
     /// Reader loop: owns the read half; the writer owns the write half
     /// and is joined before the connection closes, so every in-flight
     /// reply drains even when the reader stops first.
+    // lint: thread-body
+    // lint: hot-path
     fn run(self, stream: TcpStream) {
         let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
         let write_half = match stream.try_clone() {
@@ -351,6 +377,7 @@ impl ConnCtx {
             if line.len() > MAX_LINE_BYTES {
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 let _ = work_tx.send(ConnItem::Failed(
+                    // lint: allow(hot-path-alloc) — reject path closes the conn
                     format!("request line exceeds {MAX_LINE_BYTES} bytes"),
                     None,
                 ));
@@ -413,7 +440,8 @@ impl ConnCtx {
         // and could destroy replies still in the peer's receive queue.
         let _ = reader.get_ref().shutdown(std::net::Shutdown::Write);
         let mut scrap = [0u8; 4096];
-        let deadline = Instant::now() + Duration::from_secs(1);
+        // lint: timing: bounds the lingering close, not a determinism path
+        let deadline = Instant::now() + DRAIN_WINDOW;
         loop {
             use std::io::Read;
             match reader.get_mut().read(&mut scrap) {
@@ -425,6 +453,7 @@ impl ConnCtx {
                         ErrorKind::WouldBlock | ErrorKind::TimedOut
                     ) =>
                 {
+                    // lint: timing: drain-window check, see deadline above
                     if Instant::now() >= deadline {
                         break;
                     }
@@ -437,6 +466,8 @@ impl ConnCtx {
 
 /// Writer loop: replies strictly in request order; flushes only when the
 /// queue runs dry so pipelined bursts coalesce into one syscall.
+// lint: thread-body
+// lint: hot-path
 fn writer_loop(
     stream: TcpStream,
     rx: mpsc::Receiver<ConnItem>,
@@ -491,9 +522,12 @@ fn writer_loop(
     }
 }
 
+// lint: thread-body
+// lint: hot-path
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in xs.iter().enumerate() {
+        // lint: guarded: best is always a previously yielded index
         if v > xs[best] {
             best = i;
         }
@@ -594,6 +628,7 @@ pub fn drive(
     if cfg.clients == 0 || cfg.requests_per_client == 0 {
         return Err(Error::Config("traffic: clients and requests must be >= 1".into()));
     }
+    // lint: timing: wall-clock throughput measurement (req/s)
     let start = Instant::now();
     let results: Vec<Result<ClientStats>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..cfg.clients)
@@ -660,6 +695,7 @@ fn client_run(
             let x: Vec<f32> =
                 (0..cfg.d_in).map(|_| rng.uniform() as f32).collect();
             json_stream::write_request(&mut line_out, Some(next_id), &x);
+            // lint: timing: per-request latency sample
             let t0 = Instant::now();
             w.write_all(line_out.as_bytes())?;
             pending.push_back((next_id, t0, x));

@@ -295,6 +295,7 @@ impl Server {
             workers,
             d_in: dims.d_in,
             d_out: dims.d_out,
+            // lint: timing: anchors the wall_s throughput stat
             started: Instant::now(),
             engine: engine.clone(),
             tel_base: engine.telemetry(),
@@ -346,6 +347,7 @@ impl Server {
             )));
         }
         let (tx, rx) = mpsc::channel();
+        // lint: timing: per-request latency sample, not a compute path
         self.queue.push(Request { x, out, tx, enqueued: Instant::now() })?;
         Ok(Ticket { rx })
     }
@@ -357,7 +359,7 @@ impl Server {
 
     /// Snapshot the serving statistics so far.
     pub fn stats(&self) -> ServeStats {
-        let s = self.stats.lock().unwrap();
+        let s = lock_stats(&self.stats);
         let q = self.queue.stats();
         ServeStats {
             completed: s.completed,
@@ -404,6 +406,14 @@ impl Drop for Server {
     }
 }
 
+/// Stats lock, poison-proof: the counters are plain data, so one
+/// panicking holder must not wedge every other worker's bookkeeping or
+/// the final [`Server::stats`] snapshot (same recovery idiom as
+/// `tensor::ops::CAP_SCOPE`).
+fn lock_stats(stats: &Mutex<StatsInner>) -> std::sync::MutexGuard<'_, StatsInner> {
+    stats.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Per-worker state: one artifact replica + reusable input slots.
 struct WorkerCtx {
     fwd: Arc<dyn Artifact>,
@@ -415,11 +425,13 @@ struct WorkerCtx {
 }
 
 impl WorkerCtx {
+    // lint: thread-body
     fn run(self) {
         // input layout of fwd_<cfg>: [w1, b1, w2, b2, w3, b3, x]; the x
         // slot is rewritten per chunk, parameters stay in place.
         let mut inputs = self.params.clone();
         inputs.push(Tensor::zeros(&[self.batch, self.d_in]));
+        let xi = inputs.len() - 1;
         while let Some((mut reqs, _cause)) = self.queue.next_batch() {
             let total = reqs.len() as u64;
             let mut executes = 0u64;
@@ -428,7 +440,8 @@ impl WorkerCtx {
             // ride the Reply back to the client for recycling
             while !reqs.is_empty() {
                 let n = reqs.len().min(self.batch);
-                let x = inputs.last_mut().expect("x slot");
+                // lint: guarded: xi indexes the x slot pushed above
+                let x = &mut inputs[xi];
                 for (i, r) in reqs.iter().take(n).enumerate() {
                     x.row_mut(i).copy_from_slice(&r.x);
                 }
@@ -440,9 +453,11 @@ impl WorkerCtx {
                 match self.fwd.execute(&inputs) {
                     Ok(out) => {
                         executes += 1;
+                        // lint: timing: completion stamp for latency stats
                         let done = Instant::now();
+                        // lint: guarded: artifact contract — >= 1 output
                         let logits = &out[0];
-                        let mut s = self.stats.lock().unwrap();
+                        let mut s = lock_stats(&self.stats);
                         for (i, r) in reqs.drain(..n).enumerate() {
                             let Request { x, mut out, tx, enqueued } = r;
                             out.clear();
@@ -454,7 +469,7 @@ impl WorkerCtx {
                     }
                     Err(e) => {
                         let msg = e.to_string();
-                        let mut s = self.stats.lock().unwrap();
+                        let mut s = lock_stats(&self.stats);
                         for r in reqs.drain(..n) {
                             let Request { x, out, tx, .. } = r;
                             let _ = tx.send(Reply {
@@ -467,7 +482,7 @@ impl WorkerCtx {
                     }
                 }
             }
-            let mut s = self.stats.lock().unwrap();
+            let mut s = lock_stats(&self.stats);
             s.batches += 1;
             s.fill_sum += total;
             s.executes += executes;

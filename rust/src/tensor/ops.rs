@@ -155,6 +155,7 @@ fn matmul_blocked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
 /// identical to the pre-register-blocked kernel, so results are
 /// bit-for-bit unchanged; the zero-skip keeps the [`matmul_into`]
 /// left-zero semantics.
+// lint: hot-path
 #[inline]
 fn microkernel_row(a_row: &[f32], b: &[f32], c_row: &mut [f32], k0: usize, k1: usize, n: usize) {
     let mut j0 = 0;
@@ -272,6 +273,7 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 /// Skips a-zero terms, pinning the [`matmul_into`] left-zero semantics
 /// on this route too (pre-fix it accumulated them, so `0 × NaN`
 /// poisoned here while vanishing on the blocked kernels).
+// lint: hot-path
 fn matmul_bt_rows(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize) {
     for (a_row, c_row) in a.chunks(k.max(1)).zip(c.chunks_mut(n)) {
         for (j, cv) in c_row.iter_mut().enumerate() {

@@ -40,13 +40,17 @@ where
     prop(&mut Pcg64::seed(seed))
 }
 
-/// Assert two f32 slices agree elementwise within `atol`.
+/// Assert two f32 slices agree elementwise within `atol`. A NaN on
+/// either side fails the comparison (a silently-passing NaN is how a
+/// poisoned kernel output slips through a tolerance check).
 pub fn assert_close(got: &[f32], want: &[f32], atol: f32) -> CaseResult {
     if got.len() != want.len() {
         return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
     }
     for (i, (g, w)) in got.iter().zip(want).enumerate() {
-        if (g - w).abs() > atol {
+        // negated <= so a NaN diff (NaN on either side) fails, rather
+        // than sailing through an always-false `> atol`
+        if !((g - w).abs() <= atol) {
             return Err(format!(
                 "element {i}: got {g}, want {w} (|diff| {} > atol {atol})",
                 (g - w).abs()
@@ -111,5 +115,67 @@ mod tests {
         assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
         assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
         assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn assert_close_boundary_and_empty() {
+        // exactly-atol differences pass (<=, not <)
+        assert!(assert_close(&[1.0], &[1.5], 0.5).is_ok());
+        assert!(assert_close(&[1.0], &[1.5], 0.49).is_err());
+        // empty slices trivially agree
+        assert!(assert_close(&[], &[], 0.0).is_ok());
+    }
+
+    #[test]
+    fn assert_close_rejects_nan_on_either_side() {
+        assert!(assert_close(&[f32::NAN], &[1.0], 1e9).is_err());
+        assert!(assert_close(&[1.0], &[f32::NAN], 1e9).is_err());
+        assert!(assert_close(&[f32::NAN], &[f32::NAN], 1e9).is_err());
+        // infinities behave like ordinary out-of-tolerance values
+        assert!(assert_close(&[f32::INFINITY], &[1.0], 1e9).is_err());
+    }
+
+    #[test]
+    fn distinct_property_names_draw_distinct_streams() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("stream-a", 4, |rng| {
+            a.push(rng.next_u64());
+            Ok(())
+        });
+        check("stream-b", 4, |rng| {
+            b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_ne!(a, b, "independently named properties must not share inputs");
+        // and re-running the same name reproduces the same inputs
+        let mut a2 = Vec::new();
+        check("stream-a", 4, |rng| {
+            a2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn check_reports_case_index_in_panic_message() {
+        let caught = std::panic::catch_unwind(|| {
+            let mut n = 0u64;
+            check("fail-on-third", 8, move |_| {
+                n += 1;
+                if n == 3 {
+                    Err("third case".into())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let err = caught.expect_err("property must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("failed on case 2/8"), "got: {msg}");
+        assert!(msg.contains("replay"), "got: {msg}");
     }
 }

@@ -72,6 +72,7 @@ impl Lexer {
     /// Lex one complete JSON document, calling `visit` for every event.
     /// Trailing non-whitespace is an error (NDJSON: one value per line).
     /// An `Err` from `visit` aborts the walk and is returned verbatim.
+    // lint: hot-path
     pub fn lex(
         &mut self,
         src: &str,
@@ -132,6 +133,7 @@ impl Lex<'_, '_> {
         }
     }
 
+    // lint: hot-path
     fn value(&mut self, depth: usize) -> Result<()> {
         if depth >= MAX_DEPTH {
             return Err(self.err("nesting too deep"));
@@ -196,6 +198,7 @@ impl Lex<'_, '_> {
                 (self.visit)(Event::Null)
             }
             Some(b'-' | b'0'..=b'9') => self.number_event(),
+            // lint: allow(hot-path-alloc) — cold path, only on malformed input
             Some(c) => Err(self.err(format!("unexpected byte '{}'", c as char))),
             None => Err(self.err("unexpected end of input")),
         }
@@ -204,6 +207,7 @@ impl Lex<'_, '_> {
     /// Emit `Key`/`Str`. Escape-free strings are borrowed straight from
     /// the input; escaped ones decode into the persistent scratch buffer
     /// (no allocation once its capacity is warm).
+    // lint: hot-path
     fn string_event(&mut self, key: bool) -> Result<()> {
         if self.bump() != Some(b'"') {
             self.pos = self.pos.saturating_sub(1);
@@ -242,6 +246,7 @@ impl Lex<'_, '_> {
 
     /// Continue an escaped string from `pos` into `scratch`, consuming
     /// the closing quote.
+    // lint: hot-path
     fn decode_escaped_tail(&mut self) -> Result<()> {
         loop {
             match self.bump() {
@@ -317,6 +322,7 @@ impl Lex<'_, '_> {
 
     /// Syntax-check a number token against the RFC 8259 grammar and emit
     /// it as a raw slice; the visitor chooses the numeric type to parse.
+    // lint: hot-path
     fn number_event(&mut self) -> Result<()> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
@@ -360,6 +366,7 @@ fn utf8_len(first: u8) -> usize {
 /// design: unknown keys, duplicate keys, non-numeric features and
 /// anything but a top-level object are errors, so client bugs surface as
 /// error replies instead of silently skewed inputs.
+// lint: hot-path
 pub fn parse_request(lexer: &mut Lexer, line: &str, x: &mut Vec<f32>) -> Result<Option<u64>> {
     #[derive(Clone, Copy, PartialEq)]
     enum St {
@@ -391,6 +398,7 @@ pub fn parse_request(lexer: &mut Lexer, line: &str, x: &mut Vec<f32>) -> Result<
                 st = St::WantId;
             }
             (St::Top, Event::Key(k)) => {
+                // lint: allow(hot-path-alloc) — cold path, malformed request
                 return Err(Error::msg(format!("request: unknown key \"{k}\"")))
             }
             (St::Top, Event::EndObject) => st = St::Done,
@@ -408,6 +416,7 @@ pub fn parse_request(lexer: &mut Lexer, line: &str, x: &mut Vec<f32>) -> Result<
             }
             (St::WantId, Event::Num(s)) => {
                 id = Some(s.parse::<u64>().map_err(|_| {
+                    // lint: allow(hot-path-alloc) — cold path, malformed request
                     Error::msg(format!("request: \"id\" must be an unsigned integer, got '{s}'"))
                 })?);
                 st = St::Top;
@@ -438,6 +447,7 @@ pub struct ReplyHead {
 /// `logits` is filled; on an error reply `error` carries the message and
 /// `is_error` is set. A `null` logit (the JSON spelling of a non-finite
 /// float) decodes as NaN.
+// lint: hot-path
 pub fn parse_reply(
     lexer: &mut Lexer,
     line: &str,
@@ -469,17 +479,20 @@ pub fn parse_reply(
             (St::Top, Event::Key("logits")) => st = St::WantLogits,
             (St::Top, Event::Key("error")) => st = St::WantError,
             (St::Top, Event::Key(k)) => {
+                // lint: allow(hot-path-alloc) — cold path, malformed reply
                 return Err(Error::msg(format!("reply: unknown key \"{k}\"")))
             }
             (St::Top, Event::EndObject) => st = St::Done,
             (St::WantId, Event::Num(s)) => {
                 head.id = Some(s.parse::<u64>().map_err(|_| {
+                    // lint: allow(hot-path-alloc) — cold path, malformed reply
                     Error::msg(format!("reply: bad id '{s}'"))
                 })?);
                 st = St::Top;
             }
             (St::WantPred, Event::Num(s)) => {
                 head.pred = Some(s.parse::<u64>().map_err(|_| {
+                    // lint: allow(hot-path-alloc) — cold path, malformed reply
                     Error::msg(format!("reply: bad pred '{s}'"))
                 })?);
                 st = St::Top;
@@ -506,11 +519,14 @@ pub fn parse_reply(
     Ok(head)
 }
 
+// lint: hot-path
 fn parse_f32(s: &str) -> Result<f32> {
     s.parse::<f32>()
+        // lint: allow(hot-path-alloc) — cold path, malformed number
         .map_err(|_| Error::msg(format!("bad number '{s}'")))
 }
 
+// lint: hot-path
 fn push_f32(out: &mut String, v: f32) {
     if v.is_finite() {
         // shortest-round-trip Display: parses back to the same bits
@@ -520,6 +536,7 @@ fn push_f32(out: &mut String, v: f32) {
     }
 }
 
+// lint: hot-path
 fn push_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -540,6 +557,7 @@ fn push_escaped(out: &mut String, s: &str) {
 
 /// Serialize a request line (client side) into `out` (cleared first),
 /// trailing newline included.
+// lint: hot-path
 pub fn write_request(out: &mut String, id: Option<u64>, x: &[f32]) {
     out.clear();
     out.push('{');
@@ -558,6 +576,7 @@ pub fn write_request(out: &mut String, id: Option<u64>, x: &[f32]) {
 
 /// Serialize a success reply into `out` (cleared first), trailing
 /// newline included.
+// lint: hot-path
 pub fn write_reply(out: &mut String, id: Option<u64>, pred: usize, logits: &[f32]) {
     out.clear();
     out.push('{');
@@ -576,6 +595,7 @@ pub fn write_reply(out: &mut String, id: Option<u64>, pred: usize, logits: &[f32
 
 /// Serialize an error reply into `out` (cleared first), trailing newline
 /// included.
+// lint: hot-path
 pub fn write_error(out: &mut String, id: Option<u64>, msg: &str) {
     out.clear();
     out.push('{');

@@ -51,6 +51,7 @@ pub fn init() {
 /// Set the maximum emitted level directly (tests, embedding).
 pub fn set_level(level: Level) {
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    // lint: timing: log-line timestamps only, never feeds computation
     let _ = START.get_or_init(Instant::now);
 }
 
@@ -64,6 +65,7 @@ pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
+    // lint: timing: log-line timestamps only, never feeds computation
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     eprintln!(
         "[{t:9.3}s {:5} {}] {args}",

@@ -209,6 +209,38 @@ fn request_budget_drains_gracefully() {
     assert_eq!(stats.failed, 0);
 }
 
+/// Stop latency is bounded by the accept loop's poll interval: an idle
+/// front-end must notice `stop()` within one [`net::POLL_INTERVAL`]
+/// sleep (plus scheduling slack), not hang until the next connection.
+/// Regression guard for the interval staying a shared named constant —
+/// if the sleep and the check ever drift apart, this test times out.
+#[test]
+fn stop_latency_is_bounded_by_one_poll_interval() {
+    let (server, _state, _dims) = tiny_server(109, 4);
+    let netsrv =
+        NetServer::start(server.clone(), bind_loopback(), NetConfig::default())
+            .unwrap();
+    // let the accept loop settle into its idle poll sleep
+    std::thread::sleep(net::POLL_INTERVAL / 2);
+
+    let t0 = std::time::Instant::now();
+    netsrv.stop();
+    let stats = netsrv.join();
+    let elapsed = t0.elapsed();
+
+    // one full poll sleep + generous scheduling slack for loaded CI
+    let budget = net::POLL_INTERVAL + Duration::from_millis(200);
+    assert!(
+        elapsed < budget,
+        "idle front-end took {elapsed:?} to stop (budget {budget:?}, \
+         poll interval {:?})",
+        net::POLL_INTERVAL
+    );
+    assert_eq!(stats.accepted, 0);
+    let server_stats = shutdown_server(server);
+    assert_eq!(server_stats.completed, 0);
+}
+
 /// Oversized driver shapes are rejected cleanly, not served garbage.
 #[test]
 fn traffic_driver_validates_its_config() {

@@ -1,0 +1,425 @@
+//! Fixture tests for `pdfa lint` (`photonic_dfa::analysis`).
+//!
+//! Every rule gets at least one positive fixture (the violation is
+//! flagged, by name) and one negative fixture (compliant or suppressed
+//! code stays quiet), plus lexer edge cases — multi-line strings, raw
+//! strings and block comments that *contain* banned spellings must not
+//! trip the rules. The final test self-hosts: the crate's own
+//! `rust/src/**` tree must lint clean, which is exactly what CI
+//! enforces via `pdfa lint --json LINT.json`.
+
+use photonic_dfa::analysis::rules::{
+    ATOMIC_ORDERING, HOT_PATH_ALLOC, KEYED_RNG_ONLY, NO_RAW_THREAD_CAP,
+    NO_WALLCLOCK, PANIC_FREE_SERVE,
+};
+use photonic_dfa::analysis::{lint_source, lint_tree, Diag, RULES};
+
+/// Lint `src` under a neutral path (no allowlisted suffixes).
+fn lint(src: &str) -> Vec<Diag> {
+    lint_source("src/fixture.rs", src)
+}
+
+fn rule_names(diags: &[Diag]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.rule).collect()
+}
+
+// ---------------------------------------------------------------- hot-path-alloc
+
+#[test]
+fn hot_path_alloc_flags_every_banned_form() {
+    let src = r#"
+// lint: hot-path
+fn hot(xs: &[f32], n: usize) -> Vec<f32> {
+    let a = xs.to_vec();
+    let b = a.clone();
+    let c: Vec<f32> = b.iter().copied().collect();
+    let d = Vec::with_capacity(n);
+    let e: Vec<f32> = Vec::new();
+    let f = Box::new(0.0f32);
+    let g = String::from("x");
+    let h = format!("{n}");
+    let i = vec![0.0f32; n];
+    e
+}
+"#;
+    let diags = lint(src);
+    let rules = rule_names(&diags);
+    assert_eq!(rules.len(), 9, "{diags:?}");
+    assert!(rules.iter().all(|r| *r == HOT_PATH_ALLOC), "{diags:?}");
+    // findings carry the offending spelling and the fn name
+    assert!(diags.iter().any(|d| d.msg.contains("`vec!`")), "{diags:?}");
+    assert!(diags.iter().all(|d| d.msg.contains("`hot`")), "{diags:?}");
+}
+
+#[test]
+fn hot_path_alloc_ignores_unmarked_fns_and_lookalike_idents() {
+    // same body, no `// lint: hot-path` pragma → out of scope
+    let unmarked = r#"
+fn cold(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
+"#;
+    assert!(lint(unmarked).is_empty());
+
+    // `clone`/`new`/`from` only count as the banned call forms:
+    // `try_clone`, `Pcg64::new`, `f32::from` and a bare `new` field are
+    // different tokens or path heads
+    let lookalike = r#"
+// lint: hot-path
+fn hot(s: &Sock, x: u16) -> f32 {
+    let _dup = s.try_clone();
+    let _rng = Pcg64::new(1, 2);
+    let _v = f32::from(x);
+    let _s = String::new();
+    0.0
+}
+"#;
+    assert!(lint(lookalike).is_empty(), "{:?}", lint(lookalike));
+}
+
+// ---------------------------------------------------------------- no-raw-thread-cap
+
+#[test]
+fn raw_thread_cap_call_is_flagged_anywhere() {
+    let src = r#"
+fn sneaky(n: usize) {
+    crate::tensor::ops::set_thread_cap(Some(n));
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [NO_RAW_THREAD_CAP], "{diags:?}");
+    assert_eq!(diags[0].line, 3);
+}
+
+#[test]
+fn thread_cap_declaration_import_and_home_module_are_exempt() {
+    // the declaration and a `use` import carry no call parens
+    let decl = r#"
+use crate::tensor::ops::set_thread_cap;
+pub fn set_thread_cap(cap: Option<usize>) { CAP.store(pack(cap)); }
+"#;
+    assert!(lint(decl).is_empty(), "{:?}", lint(decl));
+
+    // the defining module may call it (ThreadCapGuard lives there)
+    let home = r#"
+fn guard_drop() { set_thread_cap(self.prev); }
+"#;
+    assert!(lint_source("rust/src/tensor/ops.rs", home).is_empty());
+}
+
+// ---------------------------------------------------------------- keyed-rng-only
+
+#[test]
+fn seeded_rng_in_rng_region_is_flagged() {
+    let src = r#"
+// lint: rng-region
+fn shard(row: usize, seed: u64) -> f32 {
+    let mut a = Pcg64::seed(seed + row as u64);
+    let mut b = Pcg64::new(seed, row as u64);
+    let mut c = Pcg64::fork(7);
+    a.uniform()
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(
+        rule_names(&diags),
+        [KEYED_RNG_ONLY, KEYED_RNG_ONLY, KEYED_RNG_ONLY],
+        "{diags:?}"
+    );
+    assert!(diags[0].msg.contains("Pcg64::seed"), "{diags:?}");
+}
+
+#[test]
+fn keyed_rng_and_out_of_region_seeding_stay_quiet() {
+    // `Pcg64::keyed` is the sanctioned constructor inside a region
+    let keyed = r#"
+// lint: rng-region
+fn shard(row: usize, seed: u64) -> f32 {
+    let mut rng = Pcg64::keyed(seed, 0, row as u64);
+    rng.uniform()
+}
+"#;
+    assert!(lint(keyed).is_empty(), "{:?}", lint(keyed));
+
+    // sequential seeding outside any rng-region fn is fine (e.g. the
+    // trainer's top-level init)
+    let outside = r#"
+fn init(seed: u64) -> Pcg64 { Pcg64::seed(seed) }
+"#;
+    assert!(lint(outside).is_empty());
+}
+
+// ---------------------------------------------------------------- panic-free-serve
+
+#[test]
+fn thread_body_panics_and_unguarded_indexing_are_flagged() {
+    let src = r#"
+// lint: thread-body
+fn conn_loop(q: &Queue, xs: &[f32], i: usize) {
+    let job = q.pop().unwrap();
+    let slot = q.slot().expect("slot");
+    if xs.is_empty() { panic!("empty"); }
+    let x = xs[i];
+    match job { _ => unreachable!() }
+}
+"#;
+    let diags = lint(src);
+    let rules = rule_names(&diags);
+    assert_eq!(rules.len(), 5, "{diags:?}");
+    assert!(rules.iter().all(|r| *r == PANIC_FREE_SERVE), "{diags:?}");
+    assert!(diags.iter().any(|d| d.msg.contains("index expression")), "{diags:?}");
+}
+
+#[test]
+fn guarded_indexing_and_non_index_brackets_stay_quiet() {
+    let src = r#"
+// lint: thread-body
+fn conn_loop(xs: &[f32], i: usize) -> f32 {
+    // array literals, slice patterns and `for … in [..]` are not
+    // index expressions
+    let ys = [0.0f32; 4];
+    for _v in [1, 2, 3] { }
+    // lint: guarded: loop condition pins i < xs.len()
+    let x = xs[i];
+    x + ys.iter().sum::<f32>()
+}
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+
+    // unwrap outside any thread-body fn is out of scope
+    let outside = "fn main_path(v: Option<u32>) -> u32 { v.unwrap() }\n";
+    assert!(lint(outside).is_empty());
+}
+
+// ---------------------------------------------------------------- no-wallclock-in-determinism
+
+#[test]
+fn wallclock_reads_are_flagged_without_a_timing_pragma() {
+    let src = r#"
+fn step() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _wall = std::time::SystemTime::now();
+    t0.elapsed().as_secs_f64()
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [NO_WALLCLOCK, NO_WALLCLOCK], "{diags:?}");
+    assert!(diags[0].msg.contains("Instant::now"), "{diags:?}");
+    assert!(diags[1].msg.contains("SystemTime::now"), "{diags:?}");
+}
+
+#[test]
+fn timing_pragma_type_positions_and_benchx_are_exempt() {
+    let pragma = r#"
+fn step() -> f64 {
+    // lint: timing: epoch wall-clock for the report line
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+"#;
+    assert!(lint(pragma).is_empty(), "{:?}", lint(pragma));
+
+    // `Instant` in type position (no `::now` after it) is not a read
+    let typed = "fn wait_until(deadline: Instant) -> bool { later(deadline) }\n";
+    assert!(lint(typed).is_empty());
+
+    // the bench harness and coordinator own wallclock wholesale
+    let raw = "fn t() -> Instant { Instant::now() }\n";
+    assert!(lint_source("rust/src/util/benchx.rs", raw).is_empty());
+    assert!(lint_source("rust/src/coordinator/loops.rs", raw).is_empty());
+    // …but the same code elsewhere is flagged
+    assert_eq!(lint_source("rust/src/dfa/x.rs", raw).len(), 1);
+}
+
+// ---------------------------------------------------------------- atomic-ordering-audit
+
+#[test]
+fn strict_orderings_need_a_written_justification() {
+    let src = r#"
+fn publish(flag: &AtomicBool) {
+    flag.store(true, Ordering::SeqCst);
+    let _seen = flag.load(Ordering::Acquire);
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(
+        rule_names(&diags),
+        [ATOMIC_ORDERING, ATOMIC_ORDERING],
+        "{diags:?}"
+    );
+    assert!(diags[0].msg.contains("SeqCst"), "{diags:?}");
+}
+
+#[test]
+fn justified_and_relaxed_orderings_stay_quiet() {
+    let src = r#"
+fn publish(flag: &AtomicBool, n: &AtomicU64) {
+    // lint: ordering: release-publishes the queue write; pairs with
+    // the Acquire load in the consumer
+    flag.store(true, Ordering::Release);
+    n.fetch_add(1, Ordering::Relaxed);
+}
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+
+    // a bare `// lint: ordering` with no written reason does NOT count
+    let bare = r#"
+fn publish(flag: &AtomicBool) {
+    // lint: ordering
+    flag.store(true, Ordering::Release);
+}
+"#;
+    assert_eq!(rule_names(&lint(bare)), [ATOMIC_ORDERING]);
+}
+
+// ---------------------------------------------------------------- suppression mechanics
+
+#[test]
+fn fn_level_allow_suppresses_only_the_named_rule() {
+    let src = r#"
+// lint: hot-path
+// lint: thread-body
+// lint: allow(hot-path-alloc)
+fn mixed(xs: &[f32]) -> Vec<f32> {
+    let v = xs.to_vec();
+    v.first().copied().unwrap();
+    v
+}
+"#;
+    // the alloc is allowed; the unwrap is still a panic-free-serve hit
+    assert_eq!(rule_names(&lint(src)), [PANIC_FREE_SERVE]);
+}
+
+#[test]
+fn line_level_allow_covers_its_line_and_the_next_code_line() {
+    // pragma on the comment line directly above (with a free-text reason)
+    let above = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    // lint: allow(hot-path-alloc) — cold path, runs once at startup
+    let v = xs.to_vec();
+    v
+}
+"#;
+    assert!(lint(above).is_empty(), "{:?}", lint(above));
+
+    // trailing pragma on the flagged line itself
+    let trailing = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    xs.to_vec() // lint: allow(hot-path-alloc) — cold path
+}
+"#;
+    assert!(lint(trailing).is_empty(), "{:?}", lint(trailing));
+
+    // a line allow does NOT leak past the next code line
+    let leak = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    // lint: allow(hot-path-alloc) — covers only the next line
+    let a = xs.to_vec();
+    let b = xs.to_vec();
+    b
+}
+"#;
+    let diags = lint(leak);
+    assert_eq!(rule_names(&diags), [HOT_PATH_ALLOC], "{diags:?}");
+    assert_eq!(diags[0].line, 6);
+
+    // allow(<other-rule>) does not suppress this rule
+    let wrong = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    // lint: allow(keyed-rng-only) — wrong rule name
+    xs.to_vec()
+}
+"#;
+    assert_eq!(rule_names(&lint(wrong)), [HOT_PATH_ALLOC]);
+}
+
+#[test]
+fn cfg_test_modules_are_exempt_from_every_rule() {
+    let src = r#"
+fn live() {}
+
+#[cfg(test)]
+mod tests {
+    // lint: hot-path
+    // lint: thread-body
+    fn helper(xs: &[f32], i: usize) -> f32 {
+        let t0 = Instant::now();
+        crate::tensor::ops::set_thread_cap(Some(1));
+        let v = xs.to_vec();
+        v.first().unwrap();
+        xs[i]
+    }
+}
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+// ---------------------------------------------------------------- lexer edge cases
+
+#[test]
+fn banned_spellings_inside_strings_are_not_code() {
+    let src = r##"
+// lint: hot-path
+// lint: thread-body
+fn hot() -> &'static str {
+    let _multi = "line one
+        Instant::now() panic!(oops) xs.to_vec()
+        line three";
+    let _raw = r#"format!("{}") Ordering::SeqCst set_thread_cap(4)"#;
+    let _esc = "escaped \" quote then unwrap() and vec![0; 4]";
+    "ok"
+}
+"##;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+#[test]
+fn banned_spellings_inside_block_comments_are_not_code() {
+    let src = r#"
+// lint: hot-path
+fn hot() -> f32 {
+    /* a block comment spanning lines:
+       xs.to_vec(); Vec::new(); panic!("no");
+       /* nested: Instant::now() still a comment */
+       Ordering::SeqCst
+    */
+    0.0
+}
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+#[test]
+fn multiline_strings_do_not_desync_line_numbers() {
+    // the violation sits *after* a 3-line string; its reported line
+    // must account for the newlines inside the literal
+    let src = r#"
+// lint: hot-path
+fn hot(xs: &[f32]) -> Vec<f32> {
+    let _banner = "one
+two
+three";
+    xs.to_vec()
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [HOT_PATH_ALLOC], "{diags:?}");
+    assert_eq!(diags[0].line, 7, "{diags:?}");
+}
+
+// ---------------------------------------------------------------- self-hosting
+
+#[test]
+fn the_crates_own_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = lint_tree(&root).unwrap();
+    assert!(report.files > 30, "walked only {} files", report.files);
+    assert_eq!(RULES.len(), 6);
+    assert!(
+        report.clean(),
+        "`pdfa lint` findings on the crate's own sources:\n{}",
+        report.render()
+    );
+}
