@@ -34,6 +34,7 @@ fn main() {
         ("ideal", PhysicsConfig::ideal()),
         ("paper", PhysicsConfig::paper()),
     ] {
+        // lint: timing: wall-clock is the measurement itself
         let t0 = std::time::Instant::now();
         let engine = PhotonicEngine::open("artifacts", physics).unwrap();
         let fwd = engine.load("fwd_tiny").unwrap();

@@ -60,6 +60,7 @@ fn main() {
 
     // artifact load cost (for PJRT: HLO compile, amortised once per
     // process by the executable cache)
+    // lint: timing: wall-clock is the measurement itself
     let t0 = std::time::Instant::now();
     let fresh = runtime::open("artifacts", Backend::Auto).unwrap();
     fresh.load("dfa_step_small").unwrap();

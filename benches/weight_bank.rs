@@ -12,6 +12,7 @@ fn main() {
     let mut rng = Pcg64::seed(1);
 
     // bank construction includes per-ring fabrication + calibration
+    // lint: timing: wall-clock is the measurement itself
     let t0 = std::time::Instant::now();
     let mut bank = WeightBank::new(BankConfig::paper(BpdMode::OffChip)).unwrap();
     println!(

@@ -11,35 +11,49 @@
 //!
 //! Function-level (comment block above the `fn`, attributes allowed in
 //! between):
-//! * `// lint: hot-path` — the hot-path-alloc rule checks this body.
-//! * `// lint: thread-body` — the panic-free-serve rule checks this body.
+//! * `// lint: hot-path` — the hot-path-alloc rule roots its closure here.
+//! * `// lint: thread-body` — the panic-free-serve rule roots its
+//!   closure here.
 //! * `// lint: rng-region` — the keyed-rng-only rule checks this body.
-//! * `// lint: allow(<rule>)` — suppress `<rule>` in this body.
+//! * `// lint: allow(<rule>) — why` — suppress `<rule>` in this body.
+//!   The written contract after the `)` is mandatory: a bare `allow`
+//!   suppresses nothing.
+//! * `// lint: boundary(<rule>) — why` — stop `<rule>`'s transitive
+//!   closure at this fn: neither its body nor anything reachable only
+//!   through it is checked. Requires a written contract; counted as
+//!   suppression debt.
 //!
 //! Line-level (a comment on the flagged line, or the comment line(s)
 //! directly above it):
 //! * `// lint: allow(<rule>) — why` — suppress `<rule>` on the next
-//!   code line.
+//!   code line. On a call-site line this also prunes that call edge
+//!   from `<rule>`'s transitive closure.
 //! * `// lint: timing: why` — sanction a wallclock read.
 //! * `// lint: ordering: why` — justify a non-`Relaxed` atomic ordering.
 //! * `// lint: guarded: why` — sanction an index expression in a
 //!   thread body by stating the bounds invariant.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::lexer::{lex, Tok, TokKind};
 
 /// One parsed `// lint: …` pragma.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Pragma {
-    /// `hot-path`, `allow`, `timing`, `ordering`, `guarded`, ….
+    /// `hot-path`, `allow`, `boundary`, `timing`, `ordering`, ….
     pub name: String,
     /// `allow(arg)` argument or the text after `name:` (justification).
     pub arg: String,
+    /// Written contract: the text after `name(arg)`, dashes/colons
+    /// stripped. For the `name: free text` form it equals `arg` — the
+    /// free text is its own justification.
+    pub note: String,
     /// Line of the comment carrying the pragma.
     pub line: u32,
 }
 
 /// Parse a comment's text into a pragma, if it is one. Accepts
-/// `// lint: name`, `// lint: name(arg)`, `// lint: name: free text`.
+/// `// lint: name`, `// lint: name(arg) — why`, `// lint: name: free text`.
 pub fn parse_pragma(comment: &str, line: u32) -> Option<Pragma> {
     let body = comment.trim_start_matches('/').trim_start_matches('!').trim();
     let rest = body.strip_prefix("lint:")?.trim();
@@ -51,18 +65,27 @@ pub fn parse_pragma(comment: &str, line: u32) -> Option<Pragma> {
         .unwrap_or(rest.len());
     let name = rest[..name_end].to_string();
     let tail = rest[name_end..].trim();
-    let arg = if let Some(t) = tail.strip_prefix('(') {
-        t.split(')').next().unwrap_or("").trim().to_string()
+    let (arg, note) = if let Some(t) = tail.strip_prefix('(') {
+        let arg = t.split(')').next().unwrap_or("").trim().to_string();
+        let after = t.split_once(')').map(|(_, a)| a).unwrap_or("");
+        let note = after
+            .trim_start_matches(|c: char| {
+                c.is_whitespace() || c == '—' || c == '-' || c == ':'
+            })
+            .trim()
+            .to_string();
+        (arg, note)
     } else if let Some(t) = tail.strip_prefix(':') {
-        t.trim().to_string()
+        let why = t.trim().to_string();
+        (why.clone(), why)
     } else {
-        String::new()
+        (String::new(), String::new())
     };
-    Some(Pragma { name, arg, line })
+    Some(Pragma { name, arg, note, line })
 }
 
 /// One `fn` item: name, signature line, body token range, attached
-/// pragmas.
+/// pragmas, owning `impl` type (methods/associated fns) if any.
 #[derive(Debug, Clone)]
 pub struct Function {
     pub name: String,
@@ -72,6 +95,19 @@ pub struct Function {
     /// for bodiless trait-method declarations).
     pub body: (usize, usize),
     pub pragmas: Vec<Pragma>,
+    /// Base type name of the innermost enclosing `impl` block (`None`
+    /// for free fns; trait methods in `trait` blocks are also `None`).
+    pub owner: Option<String>,
+    /// Parameter name → last type-forming ident of its annotation
+    /// (`xs: &[Tile]` → `Tile`). Receiver-typing hints for the graph.
+    pub params: BTreeMap<String, String>,
+    /// Last type-forming ident of the return type, if any.
+    pub ret_ty: Option<String>,
+    /// Does the return type mention a `*Guard*` ident? Lock-order uses
+    /// this: only guard-returning callees leak held locks to callers.
+    pub ret_guard: bool,
+    /// Does the fn take a `self` receiver (i.e. is it dot-callable)?
+    pub has_self: bool,
 }
 
 impl Function {
@@ -79,11 +115,34 @@ impl Function {
         self.pragmas.iter().any(|p| p.name == name)
     }
 
+    /// Effective fn-level suppression: an `allow(rule)` pragma with a
+    /// non-empty written contract. Bare allows are inert by design —
+    /// the acceptance bar is "every suppression carries a contract".
     pub fn allows(&self, rule: &str) -> bool {
         self.pragmas
             .iter()
-            .any(|p| p.name == "allow" && p.arg == rule)
+            .any(|p| p.name == "allow" && p.arg == rule && !p.note.is_empty())
     }
+
+    /// Transitive-closure boundary for `rule` (written contract
+    /// required, same as `allows`).
+    pub fn boundary(&self, rule: &str) -> bool {
+        self.pragmas
+            .iter()
+            .any(|p| p.name == "boundary" && p.arg == rule && !p.note.is_empty())
+    }
+}
+
+/// One `impl` block: the base name of the implemented type, the trait
+/// being implemented (for `impl Trait for Type`), and the token range
+/// of the block body.
+#[derive(Debug, Clone)]
+pub struct ImplBlock {
+    pub ty: String,
+    /// `Some(trait_name)` for trait impls — the graph uses this to
+    /// expand trait-typed receivers to their implementors.
+    pub trait_of: Option<String>,
+    pub range: (usize, usize),
 }
 
 /// A lexed + scoped source file, ready for the rules.
@@ -98,6 +157,16 @@ pub struct SourceFile {
     pub pragmas: Vec<Pragma>,
     /// Token-index ranges of `#[cfg(test)] mod … { … }` bodies.
     pub test_ranges: Vec<(usize, usize)>,
+    /// Every `impl` block, for method-owner attribution.
+    pub impls: Vec<ImplBlock>,
+    /// Struct field name → declared type idents (`snaps: Vec<Snapshot>`
+    /// records `Vec`'s inner ident heuristically as the *last* type
+    /// ident, `Snapshot`). Aggregated crate-wide by the graph.
+    pub fields: BTreeMap<String, BTreeSet<String>>,
+    /// `static NAME: Type` declarations (name → last type ident).
+    pub statics: BTreeMap<String, String>,
+    /// `struct`/`enum` names declared in this file.
+    pub types: BTreeSet<String>,
 }
 
 impl SourceFile {
@@ -114,6 +183,10 @@ impl SourceFile {
             fns: Vec::new(),
             pragmas,
             test_ranges: Vec::new(),
+            impls: Vec::new(),
+            fields: BTreeMap::new(),
+            statics: BTreeMap::new(),
+            types: BTreeSet::new(),
         };
         f.scan_items();
         f
@@ -165,15 +238,35 @@ impl SourceFile {
         next_code == Some(line)
     }
 
-    /// Find `fn` items and `#[cfg(test)]` modules.
+    /// Find `impl` blocks, `struct`/`enum`/`static` type facts, `fn`
+    /// items and `#[cfg(test)]` modules.
     fn scan_items(&mut self) {
+        let mut impls = Vec::new();
         let mut fns = Vec::new();
         let mut tests = Vec::new();
+        let mut fields: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        let mut statics: BTreeMap<String, String> = BTreeMap::new();
+        let mut types: BTreeSet<String> = BTreeSet::new();
         let n = self.toks.len();
         let mut i = 0;
         while i < n {
             let t = &self.toks[i];
-            if t.is_ident("fn") {
+            if t.is_ident("impl") {
+                if let Some(b) = self.impl_block(i) {
+                    impls.push(b);
+                }
+            } else if t.is_ident("struct") || t.is_ident("enum") {
+                if let Some(nm) = self.sig_at(i + 1) {
+                    if self.toks[nm].kind == TokKind::Ident {
+                        types.insert(self.toks[nm].text.clone());
+                    }
+                }
+                if t.is_ident("struct") {
+                    self.struct_fields(i, &mut fields);
+                }
+            } else if t.is_ident("static") {
+                self.static_ty(i, &mut statics);
+            } else if t.is_ident("fn") {
                 // `fn` keyword of an item (a fn-pointer type `fn(…)` has
                 // no name ident after it)
                 if let Some(ni) = self.sig_at(i + 1) {
@@ -182,7 +275,24 @@ impl SourceFile {
                         let line = t.line;
                         let body = self.fn_body_range(ni + 1);
                         let pragmas = self.fn_pragmas(i);
-                        fns.push(Function { name, line, body, pragmas });
+                        let owner = impls
+                            .iter()
+                            .filter(|b: &&ImplBlock| b.range.0 <= i && i < b.range.1)
+                            .min_by_key(|b| b.range.1 - b.range.0)
+                            .map(|b| b.ty.clone());
+                        let (params, has_self) = self.param_types(ni);
+                        let (ret_ty, ret_guard) = self.ret_info(ni, body.0);
+                        fns.push(Function {
+                            name,
+                            line,
+                            body,
+                            pragmas,
+                            owner,
+                            params,
+                            ret_ty,
+                            ret_guard,
+                            has_self,
+                        });
                     }
                 }
             } else if t.is_punct('#') && self.is_cfg_test(i) {
@@ -194,6 +304,331 @@ impl SourceFile {
         }
         self.fns = fns;
         self.test_ranges = tests;
+        self.impls = impls;
+        self.fields = fields;
+        self.statics = statics;
+        self.types = types;
+    }
+
+    /// Last type-forming ident from `frm` until a stop punct at depth
+    /// zero. `stops` are punct chars that end the run when angle and
+    /// paren/bracket depth are both zero (closing `)`/`]` stops are
+    /// honored at paren depth zero regardless of angle depth — a return
+    /// type inside a param list ends at the list's `)`). Returns the
+    /// ident and the index *of* the stopping token.
+    pub(crate) fn type_run_last_ident(
+        &self,
+        frm: usize,
+        stops: &str,
+    ) -> (Option<String>, usize) {
+        let mut angle = 0i32;
+        let mut paren = 0i32;
+        let mut last: Option<String> = None;
+        let mut i = frm;
+        let n = self.toks.len();
+        while i < n {
+            let t = &self.toks[i];
+            if let Some(p) = t.punct() {
+                match p {
+                    '<' => angle += 1,
+                    '>' if i > 0 && self.toks[i - 1].is_punct('-') => {}
+                    '>' => angle = (angle - 1).max(0),
+                    '(' | '[' => paren += 1,
+                    ')' | ']' => {
+                        if paren == 0 && stops.contains(p) {
+                            return (last, i);
+                        }
+                        paren = (paren - 1).max(0);
+                    }
+                    _ if angle == 0 && paren == 0 && stops.contains(p) => {
+                        return (last, i);
+                    }
+                    _ => {}
+                }
+            } else if t.kind == TokKind::Ident
+                && !matches!(
+                    t.text.as_str(),
+                    "mut" | "dyn" | "impl" | "ref" | "const" | "as" | "where"
+                        | "pub" | "crate" | "super" | "self"
+                )
+            {
+                last = Some(t.text.clone());
+            }
+            i += 1;
+        }
+        (last, i)
+    }
+
+    /// Record `field: Type` pairs of the `struct` starting at `i`
+    /// (brace-bodied structs only; tuple structs carry no named fields).
+    fn struct_fields(&self, i: usize, fields: &mut BTreeMap<String, BTreeSet<String>>) {
+        let Some(ni) = self.sig_at(i + 1) else { return };
+        if self.toks[ni].kind != TokKind::Ident {
+            return;
+        }
+        let mut j = self.sig_at(ni + 1);
+        if j.is_some_and(|x| self.toks[x].is_punct('<')) {
+            j = self.skip_angles(j.unwrap()).and_then(|nj| self.sig_at(nj));
+        }
+        let Some(j) = j.filter(|&x| self.toks[x].is_punct('{')) else { return };
+        let end = self.match_brace(j);
+        let mut depth = 0i32;
+        let mut k = j;
+        while k < end {
+            match self.toks[k].punct() {
+                Some('{') => depth += 1,
+                Some('}') => depth -= 1,
+                Some(':') if depth == 1 => {
+                    // skip `::` path separators inside field types
+                    if self.sig_at(k + 1).is_some_and(|x| self.toks[x].is_punct(':')) {
+                        k = self.sig_at(k + 1).unwrap() + 1;
+                        continue;
+                    }
+                    let prev = k.checked_sub(1).and_then(|x| self.sig_before(x));
+                    if let Some(p) = prev.filter(|&x| self.toks[x].kind == TokKind::Ident) {
+                        let fname = self.toks[p].text.clone();
+                        let (ty, after) = self.type_run_last_ident(k + 1, ",}");
+                        if let Some(ty) = ty {
+                            fields.entry(fname).or_default().insert(ty);
+                        }
+                        k = after;
+                        continue;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+
+    /// Record the `static NAME: Type` declaration starting at `i`.
+    fn static_ty(&self, i: usize, statics: &mut BTreeMap<String, String>) {
+        let mut j = self.sig_at(i + 1);
+        if j.is_some_and(|x| self.toks[x].is_ident("mut")) {
+            j = self.sig_at(j.unwrap() + 1);
+        }
+        let Some(j) = j.filter(|&x| self.toks[x].kind == TokKind::Ident) else {
+            return;
+        };
+        let name = self.toks[j].text.clone();
+        if !self.sig_at(j + 1).is_some_and(|c| self.toks[c].is_punct(':')) {
+            return;
+        }
+        let c = self.sig_at(j + 1).unwrap();
+        let (ty, _) = self.type_run_last_ident(c + 1, "=;");
+        if let Some(ty) = ty {
+            statics.insert(name, ty);
+        }
+    }
+
+    /// Parameter name → type ident for the fn whose name sits at
+    /// `name_idx`, plus whether the fn takes a `self` receiver.
+    fn param_types(&self, name_idx: usize) -> (BTreeMap<String, String>, bool) {
+        let mut j = self.sig_at(name_idx + 1);
+        if j.is_some_and(|x| self.toks[x].is_punct('<')) {
+            j = self.skip_angles(j.unwrap()).and_then(|nj| self.sig_at(nj));
+        }
+        let Some(j) = j.filter(|&x| self.toks[x].is_punct('(')) else {
+            return (BTreeMap::new(), false);
+        };
+        let mut out = BTreeMap::new();
+        let mut has_self = false;
+        let mut k = j + 1;
+        let mut depth = 1i32;
+        let n = self.toks.len();
+        while k < n && depth > 0 {
+            let t = &self.toks[k];
+            if t.is_ident("self") && depth == 1 {
+                has_self = true;
+            }
+            match t.punct() {
+                Some('(') | Some('[') => depth += 1,
+                Some(')') | Some(']') => depth -= 1,
+                Some(':') if depth == 1 => {
+                    if self.sig_at(k + 1).is_some_and(|x| self.toks[x].is_punct(':')) {
+                        k = self.sig_at(k + 1).unwrap() + 1;
+                        continue;
+                    }
+                    let prev = k.checked_sub(1).and_then(|x| self.sig_before(x));
+                    let named = prev.filter(|&x| {
+                        self.toks[x].kind == TokKind::Ident
+                            && !self.toks[x].is_ident("self")
+                    });
+                    if let Some(p) = named {
+                        let pname = self.toks[p].text.clone();
+                        let (ty, after) = self.type_run_last_ident(k + 1, ",)");
+                        if let Some(ty) = ty {
+                            out.insert(pname, ty);
+                        }
+                        k = after;
+                        continue;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        (out, has_self)
+    }
+
+    /// Return-type facts for the fn whose name sits at `name_idx`: the
+    /// last type-forming ident after `->`, and whether any return-type
+    /// token names a `*Guard*` type.
+    fn ret_info(&self, name_idx: usize, body_start: usize) -> (Option<String>, bool) {
+        let mut k = name_idx;
+        while k + 1 < body_start {
+            if self.toks[k].is_punct('-') && self.toks[k + 1].is_punct('>') {
+                let (ty, _) = self.type_run_last_ident(k + 2, "{;");
+                let guard = (k + 2..body_start).any(|x| {
+                    self.toks[x].kind == TokKind::Ident
+                        && self.toks[x].text.contains("Guard")
+                });
+                return (ty, guard);
+            }
+            k += 1;
+        }
+        (None, false)
+    }
+
+    /// Index of the `]` matching the `[` at `open` (forward walk).
+    pub(crate) fn match_bracket_fwd(&self, open: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        for i in open..self.toks.len() {
+            match self.toks[i].punct() {
+                Some('[') => depth += 1,
+                Some(']') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Index of the `{` matching the `}` at `close` (backward walk).
+    pub(crate) fn match_brace_back(&self, close: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        let mut i = close as isize;
+        while i >= 0 {
+            match self.toks[i as usize].punct() {
+                Some('}') => depth += 1,
+                Some('{') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i as usize);
+                    }
+                }
+                _ => {}
+            }
+            i -= 1;
+        }
+        None
+    }
+
+    /// Index of the `[` matching the `]` at `close` (backward walk).
+    pub(crate) fn match_bracket_back(&self, close: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        let mut i = close as isize;
+        while i >= 0 {
+            match self.toks[i as usize].punct() {
+                Some(']') => depth += 1,
+                Some('[') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i as usize);
+                    }
+                }
+                _ => {}
+            }
+            i -= 1;
+        }
+        None
+    }
+
+    /// Index of the `(` matching the `)` at `close` (backward walk).
+    pub(crate) fn match_paren_back(&self, close: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        let mut i = close as isize;
+        while i >= 0 {
+            match self.toks[i as usize].punct() {
+                Some(')') => depth += 1,
+                Some('(') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i as usize);
+                    }
+                }
+                _ => {}
+            }
+            i -= 1;
+        }
+        None
+    }
+
+    /// Parse the `impl` starting at `i`: skip generics, read the
+    /// implemented type's base name (the type after `for` when the
+    /// block is a trait impl), and return its brace-balanced range.
+    fn impl_block(&self, i: usize) -> Option<ImplBlock> {
+        let mut j = self.sig_at(i + 1)?;
+        // generic parameter list on the impl itself
+        if self.toks[j].is_punct('<') {
+            j = self.skip_angles(j)?;
+        }
+        // walk the head: idents form candidate type names; `for` resets
+        // to the implemented type (what came before it was the trait);
+        // `<…>` generic args are skipped; stop at the block's `{`.
+        let mut ty = String::new();
+        let mut trait_of: Option<String> = None;
+        loop {
+            let k = self.sig_at(j)?;
+            let t = &self.toks[k];
+            if t.is_punct('{') {
+                if ty.is_empty() {
+                    return None;
+                }
+                return Some(ImplBlock { ty, trait_of, range: (i, self.match_brace(k)) });
+            } else if t.is_punct('<') {
+                j = self.skip_angles(k)?;
+            } else if t.is_ident("for") {
+                trait_of = (!ty.is_empty()).then(|| ty.clone());
+                ty.clear();
+                j = k + 1;
+            } else if t.kind == TokKind::Ident {
+                // path segments overwrite (keep the last: `fmt::Display`
+                // → `Display`), keywords like dyn/mut are harmless here
+                ty = t.text.clone();
+                j = k + 1;
+            } else {
+                j = k + 1; // `::`, `&`, lifetimes, `(`/`)` in fn traits
+            }
+        }
+    }
+
+    /// Index one past the `>` matching the `<` at `open`, treating the
+    /// `>` of a `->` arrow as plain punctuation. Shared with the call
+    /// graph's turbofish handling.
+    pub(crate) fn skip_angles(&self, open: usize) -> Option<usize> {
+        let mut depth = 0i32;
+        let mut i = open;
+        while i < self.toks.len() {
+            let t = &self.toks[i];
+            match t.punct() {
+                Some('<') => depth += 1,
+                Some('>') if i > 0 && self.toks[i - 1].is_punct('-') => {}
+                Some('>') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i + 1);
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        None
     }
 
     /// From just after the fn name: skip the signature (parens, generics,
@@ -363,11 +798,59 @@ mod tests {
         assert_eq!((p.name.as_str(), p.arg.as_str()), ("hot-path", ""));
         let p = parse_pragma("// lint: allow(hot-path-alloc) — cold error path", 4).unwrap();
         assert_eq!((p.name.as_str(), p.arg.as_str()), ("allow", "hot-path-alloc"));
+        assert_eq!(p.note, "cold error path");
         let p = parse_pragma("// lint: ordering: release pairs with acquire", 5).unwrap();
         assert_eq!(p.name, "ordering");
         assert_eq!(p.arg, "release pairs with acquire");
+        assert_eq!(p.note, p.arg);
+        let bare = parse_pragma("// lint: allow(lock-order)", 6).unwrap();
+        assert_eq!(bare.note, "");
+        let b = parse_pragma("// lint: boundary(panic-free-serve): engine contract", 7).unwrap();
+        assert_eq!((b.name.as_str(), b.arg.as_str()), ("boundary", "panic-free-serve"));
+        assert_eq!(b.note, "engine contract");
         assert!(parse_pragma("// just a comment", 1).is_none());
         assert!(parse_pragma("// lint:", 1).is_none());
+    }
+
+    #[test]
+    fn bare_allow_is_inert() {
+        let src = "\
+// lint: allow(hot-path-alloc)
+fn bare() {}
+// lint: allow(hot-path-alloc) — contract text
+fn noted() {}
+";
+        let f = SourceFile::parse("src/x.rs", src);
+        assert!(!f.fns[0].allows("hot-path-alloc"));
+        assert!(f.fns[1].allows("hot-path-alloc"));
+    }
+
+    #[test]
+    fn impl_owners_attach_to_methods() {
+        let src = "\
+struct Bank;
+impl Bank {
+    fn eval(&self) {}
+}
+impl std::fmt::Display for Bank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { Ok(()) }
+}
+impl<T: Clone> Iterator for Wrapper<T> {
+    fn next(&mut self) -> Option<T> { None }
+}
+fn free() {}
+";
+        let f = SourceFile::parse("src/x.rs", src);
+        let owner = |name: &str| {
+            f.fns
+                .iter()
+                .find(|x| x.name == name)
+                .and_then(|x| x.owner.clone())
+        };
+        assert_eq!(owner("eval").as_deref(), Some("Bank"));
+        assert_eq!(owner("fmt").as_deref(), Some("Bank"));
+        assert_eq!(owner("next").as_deref(), Some("Wrapper"));
+        assert_eq!(owner("free"), None);
     }
 
     #[test]

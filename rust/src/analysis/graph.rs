@@ -1,0 +1,1497 @@
+//! Crate-wide call graph over the lexed/scoped sources.
+//!
+//! [`CallGraph::build`] extracts per-fn call sites and Mutex
+//! acquisition sites, resolves call targets, and exposes reachability
+//! closures so the rules in [`super::rules`] can check contracts
+//! *transitively* — a helper three calls below a `// lint: hot-path`
+//! root is held to the same standard as the root.
+//!
+//! ## Resolution strategy (conservative over-approximation)
+//!
+//! Rust name resolution needs types; a lexical pass does not have them.
+//! The graph therefore over-approximates — every call edge that *could*
+//! bind to a crate fn is added — but first tries to *narrow* method
+//! calls with lexical type facts:
+//!
+//! * `recv.name(…)` (method call) — the receiver's candidate types are
+//!   recovered from `self` (impl owner), fn parameter annotations,
+//!   `let` bindings (type annotations, `Type { … }` / `Type::assoc(…)`
+//!   initializers, `vec!`, free-fn return types, method-call chains),
+//!   struct-field declarations (`self.field`, `x.field`, struct
+//!   destructuring `let Self { field, .. } = …`), `static` types,
+//!   for-loop iterables, indexing (`xs[i].name(…)`) and call chains
+//!   (`a.b(…).name(…)` via `b`'s declared return type). Trait-typed
+//!   candidates expand to their crate implementors. Known crate types
+//!   narrow the fan-out to their own impls; receivers that resolve to
+//!   std-only types contribute **no** edge; untypable receivers keep
+//!   the conservative every-same-named-method fan-out. Dot calls only
+//!   ever bind fns that take a `self` receiver, and a method name no
+//!   crate impl defines dot-callably is std-opaque even on an
+//!   untypable receiver. Turbofish on an untypable receiver
+//!   (`x.parse::<u32>()`) adds no edge: crate methods are monomorphic.
+//! * `Type::name(…)` (capitalized qualifier) → every method named
+//!   `name` whose impl owner is `Type`; `Self::name(…)` uses the
+//!   caller's own impl owner.
+//! * `a::b::name(…)` (lowercase qualifier) → every *free* fn named
+//!   `name` in a module whose path ends with `a::b` (leading `crate`
+//!   is stripped; a bare `self::name` resolves within the caller's
+//!   module).
+//! * `name(…)` (bare) → every free fn named `name`, in any module.
+//!
+//! Calls that resolve to nothing (std/foreign fns) add no edge: the
+//! analysis is whole-crate, not whole-program. Call sites inside
+//! closures attribute to the innermost enclosing `fn`. Fns inside
+//! `#[cfg(test)]` modules are excluded from the graph entirely so test
+//! helpers neither shadow nor inherit production contracts.
+//!
+//! The remaining cost of over-approximation is spurious membership on
+//! genuinely untypable receivers; the escape hatch is a written
+//! contract — a line-level `// lint: allow(<rule>) — why` on the call
+//! site prunes that edge from `<rule>`'s closure, and
+//! `// lint: boundary(<rule>) — why` on a fn stops descent at it. Both
+//! count toward the suppression-debt baseline in `LINT.json`.
+//!
+//! ## Lock sites
+//!
+//! `recv.lock()` with *empty* parens is recorded as a Mutex acquisition
+//! (an argument-taking `.lock(x)` is an ordinary method call, e.g. the
+//! photonic `FeedbackController::lock`). Mutex identity is lexical:
+//! `SCREAMING_CASE` receivers (statics) are global; `self.field.lock()`
+//! is keyed `Owner.field`; anything else is keyed `module.receiver`.
+//! Direct acquisitions are assumed held until the end of the fn (no
+//! drop tracking). A callee's transitive acquisitions order *after*
+//! whatever the caller already holds (momentary edges), but they stay
+//! in the caller's held set only when the callee's return type names a
+//! `*Guard*` type — a lock-and-release helper does not leak its locks
+//! into every caller, while a guard-returning accessor does.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::ast::{Function, SourceFile};
+use super::lexer::TokKind;
+
+/// One graph node: a production `fn` item.
+#[derive(Debug)]
+pub struct Node {
+    /// Index into the file slice the graph was built over.
+    pub file: usize,
+    /// Index into that file's `fns`.
+    pub func: usize,
+    /// `module::path::Owner::name` display name.
+    pub qual: String,
+}
+
+/// One body event, in token order. The order matters only for the
+/// lock-order rule; call edges ignore it.
+#[derive(Debug)]
+pub enum Event {
+    /// `mutex.lock()` with the lexical mutex identity and source line.
+    Acquire { mutex: String, line: u32 },
+    /// A resolved call edge. One call site with `k` candidates emits
+    /// `k` events on the same line.
+    Call { callee: usize, line: u32 },
+}
+
+/// The crate call graph plus per-node lock/call event streams.
+#[derive(Debug)]
+pub struct CallGraph {
+    pub nodes: Vec<Node>,
+    /// Per node: token-ordered acquire/call events.
+    pub events: Vec<Vec<Event>>,
+    /// Distinct (caller, callee) pairs.
+    pub edge_count: usize,
+    /// Per file, per token: the node whose fn innermost-encloses the
+    /// token (`None` for top-level tokens and test code).
+    tok_node: Vec<Vec<Option<usize>>>,
+}
+
+/// A reachability closure for one rule, with parent pointers for
+/// via-path diagnostics and the suppressions spent building it.
+#[derive(Debug)]
+pub struct Closure {
+    pub member: Vec<bool>,
+    parent: Vec<usize>,
+    pub roots: Vec<usize>,
+    /// Nodes whose `boundary(<rule>)` pragma stopped descent.
+    pub boundaries: BTreeSet<usize>,
+    /// Call-site lines whose `allow(<rule>)` pragma pruned an edge:
+    /// (caller node, line).
+    pub pruned: BTreeSet<(usize, u32)>,
+}
+
+/// A potential lock-ordering constraint: somewhere, `a` is held while
+/// `b` is acquired.
+#[derive(Debug)]
+pub struct OrderEdge {
+    pub a: String,
+    pub b: String,
+    /// Witness: the fn and line of the second acquisition.
+    pub node: usize,
+    pub line: u32,
+}
+
+const NO_PARENT: usize = usize::MAX;
+
+/// Rust keywords that may precede `(` without being a call.
+const KEYWORDS: [&str; 22] = [
+    "if", "else", "while", "match", "return", "in", "for", "loop", "move", "box",
+    "ref", "mut", "as", "let", "fn", "impl", "use", "pub", "where", "unsafe",
+    "await", "dyn",
+];
+
+/// Well-known std type names: receivers narrowing to these (and only
+/// these) contribute no call edge — the crate defines no methods on
+/// them.
+const STD_TYPES: [&str; 59] = [
+    "String", "Vec", "VecDeque", "HashMap", "HashSet", "BTreeMap", "BTreeSet",
+    "Box", "Arc", "Rc", "RefCell", "Cell", "Mutex", "RwLock", "Condvar",
+    "MutexGuard", "Option", "Result", "Some", "Ok", "Err", "Instant",
+    "Duration", "SystemTime", "PathBuf", "Path", "File", "TcpStream",
+    "TcpListener", "UdpSocket", "BufReader", "BufWriter", "AtomicBool",
+    "AtomicUsize", "AtomicU32", "AtomicU64", "AtomicI64", "JoinHandle",
+    "Sender", "Receiver", "SyncSender", "Ordering", "Range", "Builder",
+    "Command", "Child", "Stdio", "Output", "Error", "ErrorKind", "OsString",
+    "ExitStatus", "IpAddr", "SocketAddr", "Iterator", "Cow", "Wrapping",
+    "Thread", "Barrier",
+];
+
+/// Is `name` a std-ish type for narrowing purposes? Primitives and
+/// generic parameters lex as lowercase/short idents; `__std` is the
+/// opaque marker for std method-chain results.
+fn std_like(name: &str) -> bool {
+    name == "__std"
+        || STD_TYPES.contains(&name)
+        || name.chars().next().map_or(true, |c| c.is_lowercase())
+}
+
+/// A `let`/`for`/destructuring binding inside one fn body: where the
+/// name was bound and the lexical type hint attached to it.
+#[derive(Debug, Clone)]
+struct Binding {
+    pos: usize,
+    name: String,
+    hint: Hint,
+}
+
+/// Lexical type hint for a binding, resolved lazily (and recursively,
+/// depth-capped) by [`Resolver::hint_types`].
+#[derive(Debug, Clone)]
+enum Hint {
+    /// A concrete type name (`let x: Tile = …`, `let x = Tile { … }`).
+    Ty(String),
+    /// The declared type(s) of a struct field with this name.
+    FieldRef(String),
+    /// Another local/param name bound before `pos`.
+    Var(String, usize),
+    /// `base(.field)*[i]*.meth(…)`: the return type of `meth` on the
+    /// receiver's hinted type. `(base, fields, meth, pos)`.
+    MCall(String, Vec<String>, String, usize),
+    /// A free-fn call initializer: the union of its return types.
+    FreeFn(String),
+    /// `Type::assoc(…)`: `assoc`'s return type on `Type` (falls back to
+    /// `Type` itself — constructors conventionally return `Self`).
+    Assoc(String, String),
+    Unknown,
+}
+
+impl CallGraph {
+    pub fn build(files: &[SourceFile]) -> CallGraph {
+        let mod_paths: Vec<Vec<String>> =
+            files.iter().map(|f| module_path(&f.path)).collect();
+
+        // Nodes: every non-test fn, keyed for name lookup.
+        let mut nodes = Vec::new();
+        let mut free: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (fi, f) in files.iter().enumerate() {
+            for (gi, func) in f.fns.iter().enumerate() {
+                if f.in_test(func.body.0) {
+                    continue;
+                }
+                let idx = nodes.len();
+                let mut qual = mod_paths[fi].join("::");
+                if let Some(o) = &func.owner {
+                    if !qual.is_empty() {
+                        qual.push_str("::");
+                    }
+                    qual.push_str(o);
+                }
+                if !qual.is_empty() {
+                    qual.push_str("::");
+                }
+                qual.push_str(&func.name);
+                match &func.owner {
+                    Some(_) => methods.entry(func.name.clone()).or_default().push(idx),
+                    None => free.entry(func.name.clone()).or_default().push(idx),
+                }
+                nodes.push(Node { file: fi, func: gi, qual });
+            }
+        }
+
+        // Crate-wide type knowledge for receiver narrowing.
+        let mut fields: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        let mut statics: BTreeMap<String, String> = BTreeMap::new();
+        let mut traits: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        let mut owners: BTreeSet<String> = BTreeSet::new();
+        let mut crate_types: BTreeSet<String> = BTreeSet::new();
+        for f in files {
+            for (k, v) in &f.fields {
+                fields.entry(k.clone()).or_default().extend(v.iter().cloned());
+            }
+            for (k, v) in &f.statics {
+                statics.insert(k.clone(), v.clone());
+            }
+            crate_types.extend(f.types.iter().cloned());
+            for b in &f.impls {
+                owners.insert(b.ty.clone());
+                if let Some(tr) = &b.trait_of {
+                    traits.entry(tr.clone()).or_default().insert(b.ty.clone());
+                }
+            }
+        }
+
+        // Innermost-fn attribution per token, mapped to node indices.
+        let mut tok_node: Vec<Vec<Option<usize>>> = Vec::with_capacity(files.len());
+        let mut fn_to_node: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for (ni, n) in nodes.iter().enumerate() {
+            fn_to_node.insert((n.file, n.func), ni);
+        }
+        for (fi, f) in files.iter().enumerate() {
+            let mut stamp: Vec<Option<usize>> = vec![None; f.toks.len()];
+            // widest ranges first so the innermost stamp wins
+            let mut order: Vec<usize> = (0..f.fns.len()).collect();
+            order.sort_by_key(|&gi| {
+                std::cmp::Reverse(f.fns[gi].body.1 - f.fns[gi].body.0)
+            });
+            for gi in order {
+                let node = fn_to_node.get(&(fi, gi)).copied();
+                let (s, e) = f.fns[gi].body;
+                for t in stamp.iter_mut().take(e).skip(s) {
+                    *t = node;
+                }
+            }
+            tok_node.push(stamp);
+        }
+
+        // Per-node binding extraction (pure per-file, so precomputed).
+        let bindings: Vec<Vec<Binding>> = nodes
+            .iter()
+            .map(|n| fn_bindings(&files[n.file], &files[n.file].fns[n.func]))
+            .collect();
+
+        let resolver = Resolver {
+            files,
+            mod_paths: &mod_paths,
+            nodes: &nodes,
+            free,
+            methods,
+            fields,
+            statics,
+            traits,
+            owners,
+            crate_types,
+            bindings,
+        };
+
+        // Event extraction.
+        let mut events: Vec<Vec<Event>> = (0..nodes.len()).map(|_| Vec::new()).collect();
+        let mut edges: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for (fi, f) in files.iter().enumerate() {
+            for i in 0..f.toks.len() {
+                let Some(ni) = tok_node[fi][i] else { continue };
+                let t = &f.toks[i];
+                if t.kind != TokKind::Ident {
+                    continue;
+                }
+                if let Some(mutex) = lock_acquire(f, i, &nodes[ni], &mod_paths[fi]) {
+                    events[ni].push(Event::Acquire { mutex, line: t.line });
+                    continue;
+                }
+                if !call_parens_follow(f, i) {
+                    continue;
+                }
+                for c in resolver.resolve(f, i, ni) {
+                    edges.insert((ni, c));
+                    events[ni].push(Event::Call { callee: c, line: t.line });
+                }
+            }
+        }
+
+        CallGraph { nodes, events, edge_count: edges.len(), tok_node }
+    }
+
+    /// Node attribution for token `i` of file `fi`.
+    pub fn node_at(&self, fi: usize, i: usize) -> Option<usize> {
+        self.tok_node[fi].get(i).copied().flatten()
+    }
+
+    /// Every distinct mutex identity the graph observed being acquired.
+    pub fn mutexes(&self) -> BTreeSet<String> {
+        self.events
+            .iter()
+            .flatten()
+            .filter_map(|e| match e {
+                Event::Acquire { mutex, .. } => Some(mutex.clone()),
+                Event::Call { .. } => None,
+            })
+            .collect()
+    }
+
+    /// BFS reachability from `roots`, honoring `boundary(rule)` fn
+    /// pragmas and call-site `allow(rule)` line pragmas (written
+    /// contract required for both).
+    pub fn closure(
+        &self,
+        files: &[SourceFile],
+        roots: &[usize],
+        rule: &str,
+    ) -> Closure {
+        let n = self.nodes.len();
+        let mut c = Closure {
+            member: vec![false; n],
+            parent: vec![NO_PARENT; n],
+            roots: Vec::new(),
+            boundaries: BTreeSet::new(),
+            pruned: BTreeSet::new(),
+        };
+        let mut queue = VecDeque::new();
+        for &r in roots {
+            if !c.member[r] {
+                c.member[r] = true;
+                c.roots.push(r);
+                queue.push_back(r);
+            }
+        }
+        while let Some(ni) = queue.pop_front() {
+            let caller_file = &files[self.nodes[ni].file];
+            for ev in &self.events[ni] {
+                let Event::Call { callee, line } = ev else { continue };
+                let suppressed = caller_file
+                    .line_pragma(*line, "allow")
+                    .is_some_and(|p| p.arg == rule && !p.note.is_empty());
+                if suppressed {
+                    c.pruned.insert((ni, *line));
+                    continue;
+                }
+                if c.member[*callee] {
+                    continue;
+                }
+                let cn = &self.nodes[*callee];
+                if files[cn.file].fns[cn.func].boundary(rule) {
+                    c.boundaries.insert(*callee);
+                    continue;
+                }
+                c.member[*callee] = true;
+                c.parent[*callee] = ni;
+                queue.push_back(*callee);
+            }
+        }
+        c
+    }
+
+    /// All mutexes each node may acquire, directly or transitively
+    /// (fixpoint iteration — cycle-safe).
+    pub fn lock_sets(&self) -> Vec<BTreeSet<String>> {
+        let n = self.nodes.len();
+        let mut sets: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+        for (ni, evs) in self.events.iter().enumerate() {
+            for ev in evs {
+                if let Event::Acquire { mutex, .. } = ev {
+                    sets[ni].insert(mutex.clone());
+                }
+            }
+        }
+        loop {
+            let mut changed = false;
+            for ni in 0..n {
+                let mut add: Vec<String> = Vec::new();
+                for ev in &self.events[ni] {
+                    if let Event::Call { callee, .. } = ev {
+                        for m in &sets[*callee] {
+                            if !sets[ni].contains(m) {
+                                add.push(m.clone());
+                            }
+                        }
+                    }
+                }
+                for m in add {
+                    sets[ni].insert(m);
+                    changed = true;
+                }
+            }
+            if !changed {
+                return sets;
+            }
+        }
+    }
+
+    /// Every "holds `a`, acquires `b`" pair, with its first witness.
+    /// A `// lint: allow(lock-order) — why` on the second acquisition's
+    /// line drops the pair (the suppression is counted by the caller).
+    ///
+    /// A callee's acquisitions order after the caller's held set at the
+    /// call site, but join the held set only when the callee *returns a
+    /// guard* (its return type names a `*Guard*` ident): plain helpers
+    /// release their locks on return.
+    pub fn order_edges(
+        &self,
+        files: &[SourceFile],
+        suppressed: &mut usize,
+    ) -> Vec<OrderEdge> {
+        let sets = self.lock_sets();
+        let mut first: BTreeMap<(String, String), (usize, u32)> = BTreeMap::new();
+        for (ni, evs) in self.events.iter().enumerate() {
+            let f = &files[self.nodes[ni].file];
+            let mut held: BTreeSet<String> = BTreeSet::new();
+            for ev in evs {
+                let (acquired, line, escapes): (Vec<String>, u32, bool) = match ev {
+                    Event::Acquire { mutex, line } => {
+                        (vec![mutex.clone()], *line, true)
+                    }
+                    Event::Call { callee, line } => {
+                        let cn = &self.nodes[*callee];
+                        (
+                            sets[*callee].iter().cloned().collect(),
+                            *line,
+                            files[cn.file].fns[cn.func].ret_guard,
+                        )
+                    }
+                };
+                if acquired.is_empty() {
+                    continue;
+                }
+                let allowed = f
+                    .line_pragma(line, "allow")
+                    .is_some_and(|p| p.arg == "lock-order" && !p.note.is_empty());
+                if allowed && !held.is_empty() {
+                    *suppressed += 1;
+                }
+                if !allowed {
+                    for a in &held {
+                        for b in &acquired {
+                            if a != b {
+                                first
+                                    .entry((a.clone(), b.clone()))
+                                    .or_insert((ni, line));
+                            }
+                        }
+                    }
+                }
+                if escapes {
+                    held.extend(acquired);
+                }
+            }
+        }
+        first
+            .into_iter()
+            .map(|((a, b), (node, line))| OrderEdge { a, b, node, line })
+            .collect()
+    }
+}
+
+impl Closure {
+    /// Root-to-`n` path (inclusive) for via-path messages.
+    pub fn trail(&self, mut n: usize) -> Vec<usize> {
+        let mut path = vec![n];
+        while self.parent[n] != NO_PARENT {
+            n = self.parent[n];
+            path.push(n);
+        }
+        path.reverse();
+        path
+    }
+}
+
+/// `serve/net.rs` → `["serve", "net"]`; `mod.rs`/`lib.rs`/`main.rs`
+/// collapse into their parent.
+fn module_path(path: &str) -> Vec<String> {
+    let trimmed = path.strip_suffix(".rs").unwrap_or(path);
+    let mut segs: Vec<String> =
+        trimmed.split('/').filter(|s| !s.is_empty()).map(String::from).collect();
+    if matches!(segs.last().map(String::as_str), Some("mod" | "lib" | "main")) {
+        segs.pop();
+    }
+    segs
+}
+
+/// Does a call-argument list follow the ident at `i` (directly or via
+/// turbofish `::<…>(`)?
+fn call_parens_follow(f: &SourceFile, i: usize) -> bool {
+    let Some(j) = f.sig_at(i + 1) else { return false };
+    if f.toks[j].is_punct('(') {
+        return true;
+    }
+    if !f.toks[j].is_punct(':') {
+        return false;
+    }
+    let Some(j2) = f.sig_at(j + 1) else { return false };
+    if !f.toks[j2].is_punct(':') {
+        return false;
+    }
+    let Some(j3) = f.sig_at(j2 + 1) else { return false };
+    if !f.toks[j3].is_punct('<') {
+        return false;
+    }
+    match f.skip_angles(j3) {
+        Some(k) => f.sig_at(k).is_some_and(|x| f.toks[x].is_punct('(')),
+        None => false,
+    }
+}
+
+/// If the ident at `i` is a `recv.lock()` acquisition (empty parens),
+/// return the lexical mutex identity.
+fn lock_acquire(
+    f: &SourceFile,
+    i: usize,
+    node: &Node,
+    mod_path: &[String],
+) -> Option<String> {
+    if !f.toks[i].is_ident("lock") {
+        return None;
+    }
+    let open = f.sig_at(i + 1)?;
+    if !f.toks[open].is_punct('(') {
+        return None;
+    }
+    let close = f.sig_at(open + 1)?;
+    if !f.toks[close].is_punct(')') {
+        return None;
+    }
+    let dot = f.sig_before(i.checked_sub(1)?)?;
+    if !f.toks[dot].is_punct('.') {
+        return None;
+    }
+    let r = f.sig_before(dot.checked_sub(1)?)?;
+    if f.toks[r].kind != TokKind::Ident {
+        return None; // `expr().lock()` — receiver not nameable, skip
+    }
+    let recv = f.toks[r].text.as_str();
+    if recv
+        .chars()
+        .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+    {
+        return Some(recv.to_string()); // a static: globally named
+    }
+    // `self.field.lock()` keys by the impl owner; otherwise by module.
+    let self_field = f
+        .sig_before(r.checked_sub(1).unwrap_or(0))
+        .filter(|&d| f.toks[d].is_punct('.'))
+        .and_then(|d| f.sig_before(d.checked_sub(1)?))
+        .is_some_and(|s| f.toks[s].is_ident("self"));
+    let scope = if self_field {
+        node.qual
+            .rsplit("::")
+            .nth(1)
+            .unwrap_or("crate")
+            .to_string()
+    } else {
+        mod_path.last().cloned().unwrap_or_else(|| "crate".to_string())
+    };
+    Some(format!("{scope}.{recv}"))
+}
+
+/// The path head two significant tokens back, if `i` is reached via
+/// `Head::ident` (returns the text of `Head`).
+fn path_head<'a>(f: &'a SourceFile, i: usize) -> Option<&'a str> {
+    let c1 = f.sig_before(i.checked_sub(1)?)?;
+    if !f.toks[c1].is_punct(':') {
+        return None;
+    }
+    let c2 = f.sig_before(c1.checked_sub(1)?)?;
+    if !f.toks[c2].is_punct(':') {
+        return None;
+    }
+    let h = f.sig_before(c2.checked_sub(1)?)?;
+    (f.toks[h].kind == TokKind::Ident).then(|| f.toks[h].text.as_str())
+}
+
+// ------------------------------------------------------------ bindings
+
+/// Every `let`/`for`/destructuring binding in `func`'s body, in token
+/// order, with its lexical type hint.
+fn fn_bindings(f: &SourceFile, func: &Function) -> Vec<Binding> {
+    let (s, e) = func.body;
+    let mut out = Vec::new();
+    let mut k = s;
+    while k < e {
+        if f.toks[k].is_ident("for") {
+            if let Some(b) = for_binding(f, k) {
+                out.push(b);
+            }
+            k += 1;
+            continue;
+        }
+        if !f.toks[k].is_ident("let") {
+            k += 1;
+            continue;
+        }
+        let mut j = f.sig_at(k + 1);
+        if j.is_some_and(|x| f.toks[x].is_ident("mut")) {
+            j = f.sig_at(j.unwrap() + 1);
+        }
+        let Some(j) = j.filter(|&x| f.toks[x].kind == TokKind::Ident) else {
+            k += 1;
+            continue;
+        };
+        let name = f.toks[j].text.clone();
+        let nxt = f.sig_at(j + 1);
+        // `let Type { a, b: c, .. } = …` struct destructuring: each
+        // bound name carries its source field's declared type —
+        // `let Self { snaps, .. } = self` types `snaps` exactly like
+        // `self.snaps`
+        if nxt.is_some_and(|x| f.toks[x].is_punct('{'))
+            && (name == "Self"
+                || name.chars().next().is_some_and(|c| c.is_uppercase()))
+        {
+            k = destructure_bindings(f, nxt.unwrap(), &mut out);
+            continue;
+        }
+        // `let Some(x) =` tuple-pattern destructuring: no hint
+        if nxt.is_some_and(|x| f.toks[x].is_punct('(') || f.toks[x].is_punct('{')) {
+            k += 1;
+            continue;
+        }
+        if nxt.is_some_and(|x| f.toks[x].is_punct(':')) {
+            let colon = nxt.unwrap();
+            if f.sig_at(colon + 1).is_some_and(|x| f.toks[x].is_punct(':')) {
+                k += 1; // `let X::Variant` pattern — not a binding
+                continue;
+            }
+            let (ty, after) = f.type_run_last_ident(colon + 1, "=;");
+            out.push(Binding {
+                pos: j,
+                name,
+                hint: ty.map(Hint::Ty).unwrap_or(Hint::Unknown),
+            });
+            k = after;
+            continue;
+        }
+        let Some(eq) = nxt.filter(|&x| f.toks[x].is_punct('=')) else {
+            k = j + 1;
+            continue;
+        };
+        let hint = init_hint(f, eq);
+        out.push(Binding { pos: j, name, hint });
+        k = eq + 1;
+    }
+    out
+}
+
+/// Bind the names of a `Type { a, b: c, .. }` destructuring pattern
+/// whose `{` sits at `brace`; returns the resume index past the `}`.
+fn destructure_bindings(f: &SourceFile, brace: usize, out: &mut Vec<Binding>) -> usize {
+    let mut segs: Vec<Vec<Option<usize>>> = Vec::new();
+    let mut cur: Vec<Option<usize>> = Vec::new();
+    let mut kk = brace + 1;
+    let mut depth = 1i32;
+    let n = f.toks.len();
+    while kk < n && depth > 0 {
+        let t = &f.toks[kk];
+        match t.punct() {
+            Some('(') | Some('{') | Some('[') => {
+                depth += 1;
+                cur.push(None);
+            }
+            Some(')') | Some('}') | Some(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+                cur.push(None);
+            }
+            Some(',') if depth == 1 => segs.push(std::mem::take(&mut cur)),
+            _ => {
+                if !t.is_comment() {
+                    cur.push(Some(kk));
+                }
+            }
+        }
+        kk += 1;
+    }
+    segs.push(cur);
+    for seg in segs {
+        let seg: Vec<usize> = seg
+            .into_iter()
+            .flatten()
+            .filter(|&x| {
+                !(f.toks[x].kind == TokKind::Ident
+                    && matches!(f.toks[x].text.as_str(), "ref" | "mut"))
+            })
+            .collect();
+        if seg.len() == 1 && f.toks[seg[0]].kind == TokKind::Ident {
+            out.push(Binding {
+                pos: seg[0],
+                name: f.toks[seg[0]].text.clone(),
+                hint: Hint::FieldRef(f.toks[seg[0]].text.clone()),
+            });
+        } else if seg.len() == 3
+            && f.toks[seg[0]].kind == TokKind::Ident
+            && f.toks[seg[1]].is_punct(':')
+            && f.toks[seg[2]].kind == TokKind::Ident
+        {
+            out.push(Binding {
+                pos: seg[2],
+                name: f.toks[seg[2]].text.clone(),
+                hint: Hint::FieldRef(f.toks[seg[0]].text.clone()),
+            });
+        }
+    }
+    kk + 1
+}
+
+/// `for name in iterable` — bind `name` to the iterable's hint
+/// (`self.field` → field types; a plain local → that local's hint).
+fn for_binding(f: &SourceFile, k: usize) -> Option<Binding> {
+    let j = f.sig_at(k + 1)?;
+    if f.toks[j].kind != TokKind::Ident {
+        return None;
+    }
+    let name = f.toks[j].text.clone();
+    let kw = f.sig_at(j + 1)?;
+    if !f.toks[kw].is_ident("in") {
+        return None;
+    }
+    let mut v = f.sig_at(kw + 1);
+    while v.is_some_and(|x| f.toks[x].is_punct('&') || f.toks[x].is_ident("mut")) {
+        v = f.sig_at(v.unwrap() + 1);
+    }
+    let v = v.filter(|&x| f.toks[x].kind == TokKind::Ident)?;
+    if f.toks[v].is_ident("self") {
+        let fld = f
+            .sig_at(v + 1)
+            .filter(|&d| f.toks[d].is_punct('.'))
+            .and_then(|d| f.sig_at(d + 1))
+            .filter(|&x| f.toks[x].kind == TokKind::Ident);
+        if let Some(fl) = fld {
+            return Some(Binding {
+                pos: j,
+                name,
+                hint: Hint::FieldRef(f.toks[fl].text.clone()),
+            });
+        }
+        return Some(Binding { pos: j, name, hint: Hint::Unknown });
+    }
+    Some(Binding {
+        pos: j,
+        name,
+        hint: Hint::Var(f.toks[v].text.clone(), v),
+    })
+}
+
+/// Type hint from the tokens after `=` in a `let` initializer.
+fn init_hint(f: &SourceFile, eq: usize) -> Hint {
+    let Some(v) = f.sig_at(eq + 1) else { return Hint::Unknown };
+    let t = &f.toks[v];
+    if t.is_ident("vec") {
+        return Hint::Ty("Vec".to_string());
+    }
+    if t.kind != TokKind::Ident || KEYWORDS.contains(&t.text.as_str()) {
+        return Hint::Unknown;
+    }
+    let name = t.text.clone();
+    if name.chars().next().is_some_and(|c| c.is_uppercase()) {
+        // `Type::assoc(…)` — the associated fn's return type; every
+        // other `Type…` initializer (struct literal, tuple ctor, plain
+        // path) hints the type itself
+        let assoc = f
+            .sig_at(v + 1)
+            .filter(|&x| f.toks[x].is_punct(':'))
+            .and_then(|x| f.sig_at(x + 1))
+            .filter(|&x| f.toks[x].is_punct(':'))
+            .and_then(|x| f.sig_at(x + 1))
+            .filter(|&m| f.toks[m].kind == TokKind::Ident && call_parens_follow(f, m));
+        if let Some(m) = assoc {
+            return Hint::Assoc(name, f.toks[m].text.clone());
+        }
+        return Hint::Ty(name);
+    }
+    if call_parens_follow(f, v) {
+        return Hint::FreeFn(name);
+    }
+    chain_hint(f, v)
+}
+
+/// Hint for `base(.field)*[i]*.method(…)` initializers: the method's
+/// return type on the receiver's hinted type.
+fn chain_hint(f: &SourceFile, v: usize) -> Hint {
+    let base = f.toks[v].text.clone();
+    let mut j = v;
+    let mut flds: Vec<String> = Vec::new();
+    loop {
+        let Some(nxt) = f.sig_at(j + 1) else { return Hint::Unknown };
+        let t = &f.toks[nxt];
+        if t.is_punct('[') {
+            match f.match_bracket_fwd(nxt) {
+                Some(close) => {
+                    j = close;
+                    continue;
+                }
+                None => return Hint::Unknown,
+            }
+        }
+        if !t.is_punct('.') {
+            return Hint::Unknown;
+        }
+        let Some(m) =
+            f.sig_at(nxt + 1).filter(|&x| f.toks[x].kind == TokKind::Ident)
+        else {
+            return Hint::Unknown;
+        };
+        if f.sig_at(m + 1).is_some_and(|x| f.toks[x].is_punct('(')) {
+            return Hint::MCall(base, flds, f.toks[m].text.clone(), v);
+        }
+        flds.push(f.toks[m].text.clone());
+        j = m;
+    }
+}
+
+// ------------------------------------------------------------ resolver
+
+/// Build-time resolution context: crate-wide name tables plus the
+/// per-node binding hints.
+struct Resolver<'a> {
+    files: &'a [SourceFile],
+    mod_paths: &'a [Vec<String>],
+    nodes: &'a [Node],
+    free: BTreeMap<String, Vec<usize>>,
+    methods: BTreeMap<String, Vec<usize>>,
+    fields: BTreeMap<String, BTreeSet<String>>,
+    statics: BTreeMap<String, String>,
+    /// Trait name → crate types implementing it.
+    traits: BTreeMap<String, BTreeSet<String>>,
+    /// Every impl-block base type name.
+    owners: BTreeSet<String>,
+    /// Every `struct`/`enum` name declared in the crate.
+    crate_types: BTreeSet<String>,
+    /// Per node: the bindings of its fn body.
+    bindings: Vec<Vec<Binding>>,
+}
+
+fn set1(name: String) -> BTreeSet<String> {
+    let mut s = BTreeSet::new();
+    s.insert(name);
+    s
+}
+
+impl Resolver<'_> {
+    fn func(&self, ni: usize) -> &Function {
+        let n = &self.nodes[ni];
+        &self.files[n.file].fns[n.func]
+    }
+
+    fn method_cands(&self, name: &str) -> &[usize] {
+        self.methods.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Candidate receiver types expanded through the trait map: a
+    /// trait-named candidate becomes its implementors.
+    fn trait_owners(&self, cands: &BTreeSet<String>) -> BTreeSet<String> {
+        let mut owners = BTreeSet::new();
+        for c in cands {
+            match self.traits.get(c) {
+                Some(impls) => owners.extend(impls.iter().cloned()),
+                None => {
+                    owners.insert(c.clone());
+                }
+            }
+        }
+        owners
+    }
+
+    /// A candidate's declared return type, with `Self` mapped to its
+    /// impl owner.
+    fn ret_of(&self, c: usize) -> Option<String> {
+        let func = self.func(c);
+        if func.ret_ty.as_deref() == Some("Self") {
+            return func.owner.clone();
+        }
+        func.ret_ty.clone()
+    }
+
+    /// Impl fns named `name` that take a `self` receiver: dot syntax
+    /// can only ever invoke those, so associated constructors
+    /// (`Type::new`) never join a method-call fan-out.
+    fn dot_methods(&self, name: &str) -> Vec<usize> {
+        self.method_cands(name)
+            .iter()
+            .copied()
+            .filter(|&c| self.func(c).has_self)
+            .collect()
+    }
+
+    /// Result type(s) of calling `meth` on a receiver whose candidate
+    /// types are `cands`. `__std` marks a std-opaque result.
+    fn method_ret(
+        &self,
+        cands: Option<&BTreeSet<String>>,
+        meth: &str,
+        depth: u32,
+    ) -> Option<BTreeSet<String>> {
+        if depth > 4 {
+            return None;
+        }
+        if self.dot_methods(meth).is_empty() {
+            // no crate impl defines a self-taking `meth`: whatever the
+            // receiver is, the call resolves to std (or a derived
+            // trait), so the chain result is std-opaque even with an
+            // untypable base
+            return Some(set1("__std".to_string()));
+        }
+        let cands = cands?;
+        let owners = self.trait_owners(cands);
+        let mut tys = BTreeSet::new();
+        for &c in self.method_cands(meth) {
+            if self.func(c).owner.as_ref().is_some_and(|o| owners.contains(o)) {
+                if let Some(r) = self.ret_of(c) {
+                    tys.insert(r);
+                }
+            }
+        }
+        if !tys.is_empty() {
+            return Some(tys);
+        }
+        if meth == "clone" {
+            return Some(cands.clone());
+        }
+        if owners
+            .iter()
+            .all(|c| std_like(c) || self.crate_types.contains(c))
+        {
+            // std (or derived) method on a known type: std-opaque
+            return Some(set1("__std".to_string()));
+        }
+        None
+    }
+
+    /// Resolve a binding hint to a set of type names (`None` when
+    /// untypable). Depth-capped: hints chain through other bindings.
+    fn hint_types(
+        &self,
+        caller: Option<usize>,
+        hint: &Hint,
+        depth: u32,
+    ) -> Option<BTreeSet<String>> {
+        if depth > 4 {
+            return None;
+        }
+        match hint {
+            Hint::Ty(t) => Some(set1(t.clone())),
+            Hint::FieldRef(fname) => self.fields.get(fname).cloned(),
+            Hint::Var(name, pos) => {
+                let caller = caller?;
+                for b in self.bindings[caller].iter().rev() {
+                    if &b.name == name && b.pos < *pos {
+                        return self.hint_types(Some(caller), &b.hint, depth + 1);
+                    }
+                }
+                self.func(caller).params.get(name).map(|ty| set1(ty.clone()))
+            }
+            Hint::MCall(base, flds, meth, pos) => {
+                let mut cands = if base == "self" && caller.is_some() {
+                    self.func(caller.unwrap()).owner.clone().map(set1)
+                } else {
+                    self.hint_types(
+                        caller,
+                        &Hint::Var(base.clone(), *pos),
+                        depth + 1,
+                    )
+                };
+                for fld in flds {
+                    cands = if cands.is_some() {
+                        self.fields.get(fld).cloned()
+                    } else {
+                        None
+                    };
+                }
+                self.method_ret(cands.as_ref(), meth, depth)
+            }
+            Hint::FreeFn(name) => {
+                let mut tys = BTreeSet::new();
+                for &c in
+                    self.free.get(name).map(Vec::as_slice).unwrap_or(&[]).iter()
+                {
+                    if let Some(r) = self.ret_of(c) {
+                        tys.insert(r);
+                    }
+                }
+                (!tys.is_empty()).then_some(tys)
+            }
+            Hint::Assoc(ty, meth) => {
+                let mut tys = BTreeSet::new();
+                for &c in self.method_cands(meth) {
+                    if self.func(c).owner.as_deref() == Some(ty.as_str()) {
+                        if let Some(r) = self.ret_of(c) {
+                            tys.insert(r);
+                        }
+                    }
+                }
+                if tys.is_empty() {
+                    Some(set1(ty.clone()))
+                } else {
+                    Some(tys)
+                }
+            }
+            Hint::Unknown => None,
+        }
+    }
+
+    /// Candidate type names for the receiver ending just before the
+    /// `.` at `dot`, or `None` when untypable.
+    fn recv_types(
+        &self,
+        f: &SourceFile,
+        dot: usize,
+        caller: usize,
+    ) -> Option<BTreeSet<String>> {
+        let r = dot.checked_sub(1).and_then(|j| f.sig_before(j))?;
+        let t = &f.toks[r];
+        if t.kind == TokKind::Ident {
+            let name = t.text.as_str();
+            if name == "self" {
+                return self.func(caller).owner.clone().map(set1);
+            }
+            let prev = r.checked_sub(1).and_then(|j| f.sig_before(j));
+            if prev.is_some_and(|p| f.toks[p].is_punct('.')) {
+                // `anything.field.meth()` — the field's declared types
+                return self.fields.get(name).cloned();
+            }
+            if name
+                .chars()
+                .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+            {
+                return self.statics.get(name).map(|ty| set1(ty.clone()));
+            }
+            for b in self.bindings[caller].iter().rev() {
+                if b.name == name && b.pos < dot {
+                    return self.hint_types(Some(caller), &b.hint, 0);
+                }
+            }
+            return self.func(caller).params.get(name).map(|ty| set1(ty.clone()));
+        }
+        if t.is_punct('}') {
+            // `Type { … }.meth()` — struct-literal receiver
+            let open = f.match_brace_back(r)?;
+            let h = open.checked_sub(1).and_then(|j| f.sig_before(j))?;
+            let ht = &f.toks[h];
+            if ht.kind == TokKind::Ident
+                && ht.text.chars().next().is_some_and(|c| c.is_uppercase())
+            {
+                return Some(set1(ht.text.clone()));
+            }
+            return None;
+        }
+        if t.is_punct(']') {
+            // `base[i].meth()` — index into a container: hint from the
+            // container's binding/field (the *element* ident is what
+            // the field map records for `Vec<T>` fields)
+            let open = f.match_bracket_back(r)?;
+            let b = open.checked_sub(1).and_then(|j| f.sig_before(j))?;
+            let bt = &f.toks[b];
+            if bt.kind != TokKind::Ident || bt.is_ident("self") {
+                return None;
+            }
+            let prev2 = b.checked_sub(1).and_then(|j| f.sig_before(j));
+            if prev2.is_some_and(|p| f.toks[p].is_punct('.')) {
+                return self.fields.get(bt.text.as_str()).cloned();
+            }
+            return self.hint_types(
+                Some(caller),
+                &Hint::Var(bt.text.clone(), b),
+                1,
+            );
+        }
+        if t.is_punct(')') {
+            let open = f.match_paren_back(r)?;
+            let m = open.checked_sub(1).and_then(|j| f.sig_before(j))?;
+            if f.toks[m].kind != TokKind::Ident {
+                return None;
+            }
+            let pd = m.checked_sub(1).and_then(|j| f.sig_before(j));
+            if pd.is_some_and(|p| f.toks[p].is_punct('.')) {
+                // `recv.meth(…).method()`: the receiver is the inner
+                // call's result — recurse on the inner receiver, then
+                // map through `meth`'s return type
+                let inner = self.recv_types(f, pd.unwrap(), caller);
+                return self.method_ret(inner.as_ref(), &f.toks[m].text, 1);
+            }
+            if let Some(h) = path_head(f, m) {
+                if h.chars().next().is_some_and(|c| c.is_uppercase()) {
+                    // `Type::assoc(…).method()`
+                    let hint =
+                        Hint::Assoc(h.to_string(), f.toks[m].text.clone());
+                    return self.hint_types(None, &hint, 0);
+                }
+            }
+            return None;
+        }
+        None
+    }
+
+    /// Methods named `name` compatible with candidate receiver types.
+    ///
+    /// `None` candidates (or candidates naming an unknown non-std type,
+    /// e.g. a generic parameter) keep the conservative
+    /// every-same-named-method fan-out; known crate types narrow to
+    /// their own impls, and pure std types contribute no edge at all.
+    fn narrow_methods(
+        &self,
+        name: &str,
+        cands: Option<&BTreeSet<String>>,
+    ) -> Vec<usize> {
+        let Some(cands) = cands else { return self.dot_methods(name) };
+        let owners = self.trait_owners(cands);
+        if owners.iter().any(|o| self.owners.contains(o)) {
+            return self
+                .dot_methods(name)
+                .into_iter()
+                .filter(|&c| {
+                    self.func(c).owner.as_ref().is_some_and(|o| owners.contains(o))
+                })
+                .collect();
+        }
+        if owners
+            .iter()
+            .all(|c| std_like(c) || self.crate_types.contains(c))
+        {
+            return Vec::new();
+        }
+        self.dot_methods(name)
+    }
+
+    fn filter_methods(&self, name: &str, keep: impl Fn(&str) -> bool) -> Vec<usize> {
+        self.method_cands(name)
+            .iter()
+            .copied()
+            .filter(|&c| self.func(c).owner.as_deref().is_some_and(&keep))
+            .collect()
+    }
+
+    /// Resolve the called ident at `i` to candidate node indices, per
+    /// the module-level resolution strategy.
+    fn resolve(&self, f: &SourceFile, i: usize, caller: usize) -> Vec<usize> {
+        let name = f.toks[i].text.as_str();
+        if KEYWORDS.contains(&name) {
+            return Vec::new();
+        }
+        let prev = i.checked_sub(1).and_then(|j| f.sig_before(j));
+        let prev_tok = prev.map(|p| &f.toks[p]);
+
+        // declaration site: `fn name(`
+        if prev_tok.is_some_and(|t| t.is_ident("fn")) {
+            return Vec::new();
+        }
+        // method call: `recv.name(`
+        if prev_tok.is_some_and(|t| t.is_punct('.')) {
+            let cands = self.recv_types(f, prev.unwrap(), caller);
+            if cands.is_none()
+                && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct(':'))
+            {
+                // turbofish on an untypable receiver: a std generic
+                // method (str::parse, Iterator::sum/collect) — crate
+                // methods are monomorphic, so no edge
+                return Vec::new();
+            }
+            return self.narrow_methods(name, cands.as_ref());
+        }
+        // qualified path: walk `seg::…::name(` backwards
+        if prev_tok.is_some_and(|t| t.is_punct(':')) {
+            let mut segs: Vec<String> = Vec::new();
+            let mut j = prev.unwrap();
+            loop {
+                // expect `::` then an ident (or `>` from `<T as Tr>::`)
+                let Some(c2) = f.sig_before(match j.checked_sub(1) {
+                    Some(x) => x,
+                    None => break,
+                }) else {
+                    break;
+                };
+                if !f.toks[c2].is_punct(':') {
+                    break;
+                }
+                let Some(s) = f.sig_before(match c2.checked_sub(1) {
+                    Some(x) => x,
+                    None => break,
+                }) else {
+                    break;
+                };
+                if f.toks[s].kind != TokKind::Ident {
+                    // `<Type as Trait>::name(` — fall back to method fan-out
+                    if f.toks[s].is_punct('>') {
+                        return self.method_cands(name).to_vec();
+                    }
+                    break;
+                }
+                segs.push(f.toks[s].text.clone());
+                match s.checked_sub(1).and_then(|x| f.sig_before(x)) {
+                    Some(p) if f.toks[p].is_punct(':') => j = p,
+                    _ => break,
+                }
+            }
+            segs.reverse();
+            let Some(qualifier) = segs.last() else {
+                return Vec::new();
+            };
+            if qualifier == "Self" {
+                let owner = self.func(caller).owner.clone();
+                return self.filter_methods(name, |o| Some(o) == owner.as_deref());
+            }
+            if qualifier.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                return self.filter_methods(name, |o| o == qualifier);
+            }
+            // module path: strip crate/self/super qualifiers, suffix-match
+            let want: Vec<&String> = segs
+                .iter()
+                .filter(|s| {
+                    !matches!(s.as_str(), "crate" | "self" | "super" | "photonic_dfa")
+                })
+                .collect();
+            let caller_mod = &self.mod_paths[self.nodes[caller].file];
+            return self
+                .free
+                .get(name)
+                .map(|cands| {
+                    cands
+                        .iter()
+                        .copied()
+                        .filter(|&c| {
+                            let m = &self.mod_paths[self.nodes[c].file];
+                            if want.is_empty() {
+                                return m == caller_mod; // `self::name(`
+                            }
+                            m.len() >= want.len()
+                                && m[m.len() - want.len()..]
+                                    .iter()
+                                    .zip(&want)
+                                    .all(|(a, b)| a == *b)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+        }
+        // bare call: every free fn with this name
+        self.free.get(name).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_of(sources: &[(&str, &str)]) -> (Vec<SourceFile>, CallGraph) {
+        let files: Vec<SourceFile> = sources
+            .iter()
+            .map(|(p, s)| SourceFile::parse(p, s))
+            .collect();
+        let g = CallGraph::build(&files);
+        (files, g)
+    }
+
+    fn idx(g: &CallGraph, qual: &str) -> usize {
+        g.nodes.iter().position(|n| n.qual == qual).unwrap()
+    }
+
+    #[test]
+    fn bare_and_qualified_calls_resolve_by_module() {
+        let (files, g) = graph_of(&[
+            ("a.rs", "pub fn helper() {} pub fn top() { helper(); }"),
+            ("b.rs", "pub fn helper() {} pub fn other() { crate::a::helper(); }"),
+        ]);
+        let top = idx(&g, "a::top");
+        let cl = g.closure(&files, &[top], "hot-path-alloc");
+        // bare call fans out to both same-named free fns
+        assert!(cl.member[idx(&g, "a::helper")]);
+        assert!(cl.member[idx(&g, "b::helper")]);
+        // qualified call binds only the matching module
+        let other = idx(&g, "b::other");
+        let cl2 = g.closure(&files, &[other], "hot-path-alloc");
+        assert!(cl2.member[idx(&g, "a::helper")]);
+        assert!(!cl2.member[idx(&g, "b::helper")]);
+    }
+
+    #[test]
+    fn method_calls_fan_out_to_methods_only() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct A; impl A { fn go(&self) {} }
+             fn go() {}
+             fn call(a: &A) { a.go(); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::call")], "x");
+        assert!(cl.member[idx(&g, "m::A::go")]);
+        assert!(!cl.member[idx(&g, "m::go")]);
+    }
+
+    #[test]
+    fn typed_receivers_narrow_to_their_impl() {
+        // two crate types share a method name; a param-typed receiver
+        // binds only its own impl
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct A; struct B;
+             impl A { fn go(&self) {} }
+             impl B { fn go(&self) {} }
+             fn call(a: &A) { a.go(); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::call")], "x");
+        assert!(cl.member[idx(&g, "m::A::go")]);
+        assert!(!cl.member[idx(&g, "m::B::go")]);
+    }
+
+    #[test]
+    fn let_bindings_and_fields_type_receivers() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct A; struct B;
+             struct Holder { item: A }
+             impl A { fn go(&self) {} }
+             impl B { fn go(&self) {} }
+             impl Holder {
+                 fn via_field(&self) { self.item.go(); }
+                 fn via_let(&self) { let a: A = mk(); a.go(); }
+             }
+             fn mk() -> A { A }",
+        )]);
+        for root in ["m::Holder::via_field", "m::Holder::via_let"] {
+            let cl = g.closure(&files, &[idx(&g, root)], "x");
+            assert!(cl.member[idx(&g, "m::A::go")], "{root}");
+            assert!(!cl.member[idx(&g, "m::B::go")], "{root}");
+        }
+    }
+
+    #[test]
+    fn std_only_receivers_add_no_edge() {
+        // `v` is a Vec: `.push(…)` must not bind the crate's `push`
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct Stack; impl Stack { fn push(&mut self) {} }
+             fn call() { let mut v = vec![1]; v.push(2); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::call")], "x");
+        assert!(!cl.member[idx(&g, "m::Stack::push")]);
+    }
+
+    #[test]
+    fn dot_calls_skip_associated_fns_without_self() {
+        // `g.set(…)` on an untypable receiver fans out to self-taking
+        // methods only — `Guardish::set` has no receiver
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct Guardish; impl Guardish { fn set(n: usize) {} }
+             fn call(g: &G) { g.set(1); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::call")], "x");
+        assert!(!cl.member[idx(&g, "m::Guardish::set")]);
+    }
+
+    #[test]
+    fn std_method_chains_are_opaque() {
+        // `.iter().map(…)` — no crate impl defines `iter` dot-callably,
+        // so the chain result is std-opaque and `map` binds nothing
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct T; impl T { fn map(&self) {} }
+             fn call(xs: &[f32]) { let _s: f32 = xs.iter().map(|x| x).sum(); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::call")], "x");
+        assert!(!cl.member[idx(&g, "m::T::map")]);
+    }
+
+    #[test]
+    fn struct_destructuring_types_bound_names() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct A; struct B;
+             impl A { fn go(&self) {} }
+             impl B { fn go(&self) {} }
+             struct S { item: A }
+             impl S { fn call(&self) { let Self { item } = self; item.go(); } }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::S::call")], "x");
+        assert!(cl.member[idx(&g, "m::A::go")]);
+        assert!(!cl.member[idx(&g, "m::B::go")]);
+    }
+
+    #[test]
+    fn closures_attribute_to_enclosing_fn_and_cycles_terminate() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "fn a() { let f = || b(); f(); }
+             fn b() { a(); }",
+        )]);
+        let cl = g.closure(&files, &[idx(&g, "m::a")], "x");
+        assert!(cl.member[idx(&g, "m::b")]);
+        assert_eq!(cl.trail(idx(&g, "m::b")), vec![idx(&g, "m::a"), idx(&g, "m::b")]);
+    }
+
+    #[test]
+    fn lock_sites_and_order_edges() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "struct S; impl S {
+                 fn ab(&self) { let a = self.m1.lock(); let b = self.m2.lock(); }
+                 fn ba(&self) { let b = self.m2.lock(); let a = self.m1.lock(); }
+             }",
+        )]);
+        let mut debt = 0;
+        let edges = g.order_edges(&files, &mut debt);
+        let pairs: Vec<(&str, &str)> =
+            edges.iter().map(|e| (e.a.as_str(), e.b.as_str())).collect();
+        assert!(pairs.contains(&("S.m1", "S.m2")));
+        assert!(pairs.contains(&("S.m2", "S.m1")));
+        assert_eq!(debt, 0);
+    }
+
+    #[test]
+    fn callee_locks_order_after_held_locks() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "fn inner_lock(q: &Q) { q.mx.lock(); }
+             fn outer(s: &S, q: &Q) { s.other.lock(); inner_lock(q); }",
+        )]);
+        let sets = g.lock_sets();
+        let outer = idx(&g, "m::outer");
+        assert!(sets[outer].contains("m.mx"));
+        assert!(sets[outer].contains("m.other"));
+        let mut debt = 0;
+        let edges = g.order_edges(&files, &mut debt);
+        assert!(edges.iter().any(|e| e.a == "m.other" && e.b == "m.mx"));
+    }
+
+    #[test]
+    fn lock_and_release_helpers_do_not_leak_into_callers() {
+        // `helper` locks and releases (no guard in its return type), so
+        // after the call the caller holds nothing: acquiring `m2` next
+        // must NOT create a `m.m1 -> m.m2` edge through the call.
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "fn helper(q: &Q) { q.m1.lock(); }
+             fn caller(q: &Q) { helper(q); q.m2.lock(); }",
+        )]);
+        let mut debt = 0;
+        let edges = g.order_edges(&files, &mut debt);
+        assert!(!edges.iter().any(|e| e.a == "m.m1" && e.b == "m.m2"), "{edges:?}");
+    }
+
+    #[test]
+    fn guard_returning_callees_extend_the_held_set() {
+        let (files, g) = graph_of(&[(
+            "m.rs",
+            "fn acquire(q: &Q) -> QGuard<'_> { q.m1.lock() }
+             fn caller(q: &Q) { let g = acquire(q); q.m2.lock(); }",
+        )]);
+        let mut debt = 0;
+        let edges = g.order_edges(&files, &mut debt);
+        assert!(edges.iter().any(|e| e.a == "m.m1" && e.b == "m.m2"), "{edges:?}");
+    }
+
+    #[test]
+    fn test_mod_fns_are_not_nodes() {
+        let (_, g) = graph_of(&[(
+            "m.rs",
+            "fn live() {}
+             #[cfg(test)]
+             mod tests { fn live() {} }",
+        )]);
+        assert_eq!(g.nodes.len(), 1);
+    }
+}

@@ -4,18 +4,22 @@
 //! `rust/src/**` and enforces the repo's cross-cutting contracts as
 //! named, individually-suppressable rules — hot-path allocation
 //! freedom, keyed-RNG determinism, scoped thread-cap mutation,
-//! panic-free serve threads, wallclock containment and atomic-ordering
-//! justification. Runtime tests sample a handful of code paths; this
-//! pass checks every call site at CI time. See DESIGN.md ("Static
-//! analysis") for the rule catalogue and pragma vocabulary.
+//! panic-free serve threads, wallclock containment, atomic-ordering
+//! justification, determinism taint and lock ordering. Runtime tests
+//! sample a handful of code paths; this pass checks every call site at
+//! CI time. See DESIGN.md ("Static analysis") for the rule catalogue
+//! and pragma vocabulary.
 //!
 //! Pipeline: [`lexer`] turns a source file into a line-tagged token
 //! stream (comments retained — they carry the pragmas), [`ast`] scopes
-//! items/function bodies and attaches pragmas, [`rules`] walks the
-//! result and emits [`Diag`]s. [`lint_tree`] drives the walk;
-//! [`lint_source`] is the fixture-test entry point.
+//! items/function bodies and attaches pragmas, [`graph`] builds the
+//! crate-wide call graph, [`rules`] walks files and reachability
+//! closures and emits [`Diag`]s. [`lint_repo`] drives the full walk
+//! (source tree plus `benches/`/`tests/` under the relaxed subset);
+//! [`lint_source`]/[`lint_sources`] are the fixture-test entry points.
 
 pub mod ast;
+pub mod graph;
 pub mod lexer;
 pub mod rules;
 
@@ -26,15 +30,36 @@ use crate::util::json::Value;
 use crate::{Error, Result};
 
 pub use ast::SourceFile;
+pub use graph::CallGraph;
 pub use rules::{Diag, RULES};
 
+/// Call-graph shape + per-rule transitive root sets, as recorded in
+/// `LINT.json`.
+#[derive(Debug, Default)]
+pub struct GraphSummary {
+    pub nodes: usize,
+    pub edges: usize,
+    /// Rule name → sorted root display names (for lock-order: the
+    /// mutex identities the graph observed).
+    pub roots: Vec<(&'static str, Vec<String>)>,
+}
+
 /// Outcome of linting a whole tree: where we looked, how many files we
-/// parsed, and every finding (sorted by file, then line, then rule).
+/// parsed, every finding (sorted by file, then line, then rule), the
+/// graph summary, and the suppression debt spent keeping the findings
+/// list empty.
 #[derive(Debug)]
 pub struct LintReport {
     pub root: String,
     pub files: usize,
     pub findings: Vec<Diag>,
+    pub graph: GraphSummary,
+    /// Per-rule count of suppressions that fired (allow/boundary
+    /// contracts). CI caps this against the committed baseline — debt
+    /// may shrink, never grow.
+    pub debt: rules::Debt,
+    /// DOT rendering of the hot-path closure (`pdfa lint --graph`).
+    pub hot_path_dot: String,
 }
 
 impl LintReport {
@@ -43,7 +68,8 @@ impl LintReport {
     }
 
     /// JSON shape consumed by CI (`.github/workflows/ci.yml` asserts
-    /// `lint == "pdfa"`, `files > 0`, six rules, empty findings).
+    /// `lint == "pdfa"`, `files > 0`, eight rules, empty findings,
+    /// well-formed `graph` + `suppressed` maps).
     pub fn to_value(&self) -> Value {
         Value::object(vec![
             ("lint", Value::String("pdfa".to_string())),
@@ -74,6 +100,42 @@ impl LintReport {
                         .collect(),
                 ),
             ),
+            (
+                "graph",
+                Value::object(vec![
+                    ("nodes", Value::Number(self.graph.nodes as f64)),
+                    ("edges", Value::Number(self.graph.edges as f64)),
+                    (
+                        "roots",
+                        Value::object(
+                            self.graph
+                                .roots
+                                .iter()
+                                .map(|(rule, names)| {
+                                    (
+                                        *rule,
+                                        Value::Array(
+                                            names
+                                                .iter()
+                                                .map(|n| Value::String(n.clone()))
+                                                .collect(),
+                                        ),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "suppressed",
+                Value::object(
+                    self.debt
+                        .iter()
+                        .map(|(rule, n)| (*rule, Value::Number(*n as f64)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -87,23 +149,128 @@ impl LintReport {
     }
 }
 
-/// Lint a single source text under a display path. Used by the fixture
-/// tests and by [`lint_tree`] per file.
-pub fn lint_source(path: &str, src: &str) -> Vec<Diag> {
-    let f = SourceFile::parse(path, src);
-    let mut out = Vec::new();
-    rules::check_file(&f, &mut out);
-    out
+/// Compare this run's suppression debt against a previously committed
+/// `LINT.json`: per rule, debt may only shrink or hold. Contracts are
+/// paid down, never silently accumulated.
+pub fn check_baseline(report: &LintReport, baseline: &Value) -> Result<()> {
+    let Some(base) = baseline.get("suppressed").as_object() else {
+        return Err(Error::Manifest(
+            "lint baseline: no `suppressed` map (regenerate LINT.json)".to_string(),
+        ));
+    };
+    let mut over = Vec::new();
+    for (rule, n) in &report.debt {
+        let cap = base.get(*rule).and_then(|v| v.as_usize()).unwrap_or(0);
+        if *n > cap {
+            over.push(format!("{rule}: {n} suppression(s) > baseline {cap}"));
+        }
+    }
+    if over.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::Manifest(format!(
+            "lint suppression debt above committed baseline — pay one down or \
+             update LINT.json deliberately: {}",
+            over.join("; ")
+        )))
+    }
 }
 
-/// Recursively lint every `.rs` file under `root`, in sorted order so
-/// reports are deterministic across filesystems.
-pub fn lint_tree(root: &Path) -> Result<LintReport> {
-    let mut files = Vec::new();
-    collect_rs(root, &mut files)?;
-    files.sort();
+/// The full crate pass over already-parsed files.
+fn analyze(files: Vec<SourceFile>, root: String, extra_files: usize) -> LintReport {
+    let g = CallGraph::build(&files);
     let mut findings = Vec::new();
-    for path in &files {
+    let mut debt = rules::new_debt();
+    rules::check_crate(&files, &g, &mut findings, &mut debt);
+    let mut roots = rules::rule_roots(&files, &g);
+    for (_, names) in &mut roots {
+        names.sort();
+    }
+    let hot_path_dot = hot_path_dot(&files, &g);
+    sort_findings(&mut findings);
+    LintReport {
+        root,
+        files: files.len() + extra_files,
+        findings,
+        graph: GraphSummary { nodes: g.nodes.len(), edges: g.edge_count, roots },
+        debt,
+        hot_path_dot,
+    }
+}
+
+/// DOT rendering of the hot-path closure: member fns as nodes (roots
+/// boxed), member-to-member call edges.
+fn hot_path_dot(files: &[SourceFile], g: &CallGraph) -> String {
+    let roots: Vec<usize> = g
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| files[n.file].fns[n.func].has_pragma("hot-path"))
+        .map(|(i, _)| i)
+        .collect();
+    let cl = g.closure(files, &roots, rules::HOT_PATH_ALLOC);
+    let mut s = String::from("digraph hot_path_closure {\n");
+    s.push_str("  rankdir=LR;\n  node [fontname=\"monospace\"];\n");
+    for (ni, node) in g.nodes.iter().enumerate() {
+        if !cl.member[ni] {
+            continue;
+        }
+        let shape = if roots.contains(&ni) { " [shape=box]" } else { "" };
+        s.push_str(&format!("  \"{}\"{shape};\n", node.qual));
+    }
+    let mut edges = std::collections::BTreeSet::new();
+    for (ni, evs) in g.events.iter().enumerate() {
+        if !cl.member[ni] {
+            continue;
+        }
+        for ev in evs {
+            if let graph::Event::Call { callee, .. } = ev {
+                if cl.member[*callee] {
+                    edges.insert((
+                        g.nodes[ni].qual.clone(),
+                        g.nodes[*callee].qual.clone(),
+                    ));
+                }
+            }
+        }
+    }
+    for (a, b) in edges {
+        s.push_str(&format!("  \"{a}\" -> \"{b}\";\n"));
+    }
+    s.push_str("}\n");
+    s
+}
+
+fn sort_findings(findings: &mut [Diag]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+/// Lint a single source text under a display path (fixture-test entry
+/// point; the call graph covers just this file).
+pub fn lint_source(path: &str, src: &str) -> Vec<Diag> {
+    lint_sources(&[(path, src)])
+}
+
+/// Lint several in-memory sources as one crate — fixtures exercising
+/// cross-module call-graph resolution use this.
+pub fn lint_sources(sources: &[(&str, &str)]) -> Vec<Diag> {
+    let files: Vec<SourceFile> = sources
+        .iter()
+        .map(|(p, s)| SourceFile::parse(p, s))
+        .collect();
+    analyze(files, "<memory>".to_string(), 0).findings
+}
+
+/// Recursively lint every `.rs` file under `root` as one crate, in
+/// sorted order so reports are deterministic across filesystems.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::new();
+    for path in &paths {
         let src = fs::read_to_string(path).map_err(|e| {
             Error::Manifest(format!("lint: read {}: {e}", path.display()))
         })?;
@@ -113,16 +280,52 @@ pub fn lint_tree(root: &Path) -> Result<LintReport> {
             .unwrap_or(path)
             .to_string_lossy()
             .replace('\\', "/");
-        findings.extend(lint_source(&rel, &src));
+        files.push(SourceFile::parse(&rel, &src));
     }
-    findings.sort_by(|a, b| {
-        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
-    });
-    Ok(LintReport {
-        root: root.to_string_lossy().into_owned(),
-        files: files.len(),
-        findings,
-    })
+    Ok(analyze(files, root.to_string_lossy().into_owned(), 0))
+}
+
+/// [`lint_tree`] over the source root, plus the sibling `benches/` and
+/// `tests/` trees under the relaxed rule subset (no-raw-thread-cap and
+/// no-wallclock-in-determinism): bench/test code may allocate and
+/// panic, but must not reintroduce raw `set_thread_cap` calls or
+/// unsanctioned wallclock reads.
+pub fn lint_repo(src_root: &Path) -> Result<LintReport> {
+    let mut report = lint_tree(src_root)?;
+    for anc in [src_root.parent(), src_root.parent().and_then(|p| p.parent())]
+        .into_iter()
+        .flatten()
+    {
+        let aux: Vec<PathBuf> = ["benches", "tests"]
+            .iter()
+            .map(|d| anc.join(d))
+            .filter(|p| p.is_dir())
+            .collect();
+        if aux.is_empty() {
+            continue;
+        }
+        for dir in aux {
+            let mut paths = Vec::new();
+            collect_rs(&dir, &mut paths)?;
+            paths.sort();
+            for path in &paths {
+                let src = fs::read_to_string(path).map_err(|e| {
+                    Error::Manifest(format!("lint: read {}: {e}", path.display()))
+                })?;
+                let rel = path
+                    .strip_prefix(anc)
+                    .unwrap_or(path)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let f = SourceFile::parse(&rel, &src);
+                rules::check_file_relaxed(&f, &mut report.findings, &mut report.debt);
+                report.files += 1;
+            }
+        }
+        break; // nearest ancestor with aux trees wins
+    }
+    sort_findings(&mut report.findings);
+    Ok(report)
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
@@ -157,14 +360,27 @@ mod tests {
                 rule: rules::HOT_PATH_ALLOC,
                 msg: "boom".to_string(),
             }],
+            graph: GraphSummary {
+                nodes: 10,
+                edges: 4,
+                roots: vec![(rules::HOT_PATH_ALLOC, vec!["a::hot".to_string()])],
+            },
+            debt: rules::new_debt(),
+            hot_path_dot: String::new(),
         };
         let v = rep.to_value();
         assert_eq!(v.get("lint").as_str(), Some("pdfa"));
         assert_eq!(v.get("files").as_usize(), Some(3));
-        assert_eq!(v.get("rules").as_array().map(|a| a.len()), Some(6));
+        assert_eq!(v.get("rules").as_array().map(|a| a.len()), Some(8));
         let f = &v.get("findings").as_array().unwrap()[0];
         assert_eq!(f.get("rule").as_str(), Some("hot-path-alloc"));
         assert_eq!(f.get("line").as_usize(), Some(7));
+        assert_eq!(v.get("graph").get("nodes").as_usize(), Some(10));
+        assert_eq!(v.get("graph").get("edges").as_usize(), Some(4));
+        let roots = v.get("graph").get("roots").get("hot-path-alloc");
+        assert_eq!(roots.as_array().map(|a| a.len()), Some(1));
+        let sup = v.get("suppressed").as_object().unwrap();
+        assert_eq!(sup.len(), RULES.len());
         assert!(rep.render().contains("a.rs:7: hot-path-alloc: boom"));
     }
 
@@ -180,9 +396,56 @@ fn hot(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
 
         let ok = r#"
 // lint: hot-path
-// lint: allow(hot-path-alloc)
+// lint: allow(hot-path-alloc) — scratch reuse lands in the next pass
 fn hot(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
 "#;
         assert!(lint_source("fixture.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn transitive_findings_name_the_path() {
+        let src = r#"
+// lint: hot-path
+fn root() { helper(); }
+fn helper() { let v = vec![1]; }
+"#;
+        let diags = lint_source("fixture.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert!(
+            diags[0].msg.contains("reachable from `fixture::root`"),
+            "{}",
+            diags[0].msg
+        );
+    }
+
+    #[test]
+    fn baseline_caps_suppression_debt() {
+        let mut rep = LintReport {
+            root: String::new(),
+            files: 1,
+            findings: Vec::new(),
+            graph: GraphSummary::default(),
+            debt: rules::new_debt(),
+            hot_path_dot: String::new(),
+        };
+        rep.debt.insert(rules::HOT_PATH_ALLOC, 2);
+        let base = rep.to_value();
+        assert!(check_baseline(&rep, &base).is_ok());
+        rep.debt.insert(rules::HOT_PATH_ALLOC, 3);
+        assert!(check_baseline(&rep, &base).is_err());
+        rep.debt.insert(rules::HOT_PATH_ALLOC, 1);
+        assert!(check_baseline(&rep, &base).is_ok());
+    }
+
+    #[test]
+    fn dot_contains_closure_edges() {
+        let files = vec![SourceFile::parse(
+            "m.rs",
+            "// lint: hot-path\nfn root() { helper(); }\nfn helper() {}",
+        )];
+        let g = CallGraph::build(&files);
+        let dot = hot_path_dot(&files, &g);
+        assert!(dot.contains("\"m::root\" [shape=box]"), "{dot}");
+        assert!(dot.contains("\"m::root\" -> \"m::helper\""), "{dot}");
     }
 }

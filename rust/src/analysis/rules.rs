@@ -1,15 +1,27 @@
-//! The six repo-invariant lint rules.
+//! The eight repo-invariant lint rules.
 //!
-//! Each rule is a named, individually-suppressable check over a
-//! [`SourceFile`]'s token stream (see DESIGN.md, "Static analysis", for
-//! the invariant each one guards). Findings inside `#[cfg(test)]`
-//! modules are skipped wholesale — test code may allocate, panic and
-//! read the clock freely. Suppression is explicit and local: a
-//! function-level `// lint: allow(<rule>)` pragma, or a line-level
-//! pragma (`allow`, `timing`, `ordering`, `guarded`) on the flagged
-//! line or the comment line(s) directly above it.
+//! Each rule is a named, individually-suppressable check (see
+//! DESIGN.md, "Static analysis", for the invariant each one guards).
+//! Four rules are *fn-local* token scans; four are *transitive* — they
+//! walk the [`CallGraph`] closure from annotated roots so an
+//! un-annotated helper three calls down is held to the same contract
+//! as the root. Findings inside `#[cfg(test)]` modules are skipped
+//! wholesale — test code may allocate, panic and read the clock
+//! freely.
+//!
+//! Suppression is explicit, local and *written*: a fn-level
+//! `// lint: allow(<rule>) — why`, a line-level pragma (`allow`,
+//! `timing`, `ordering`, `guarded`), or a fn-level
+//! `// lint: boundary(<rule>) — why` that stops a closure's descent.
+//! An `allow`/`boundary` without a contract note suppresses nothing.
+//! Every suppression that fires is tallied into the per-rule
+//! suppression-debt map that `LINT.json` carries and CI caps against
+//! the committed baseline.
+
+use std::collections::BTreeMap;
 
 use super::ast::{Function, SourceFile};
+use super::graph::{CallGraph, Closure};
 use super::lexer::TokKind;
 
 /// One finding: file, line, rule name and a human-readable message.
@@ -23,13 +35,15 @@ pub struct Diag {
 
 /// Every rule name, in the order they run. Fixture tests assert each
 /// one fires; `pdfa lint --json` records the list in the report.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 8] = [
     HOT_PATH_ALLOC,
     NO_RAW_THREAD_CAP,
     KEYED_RNG_ONLY,
     PANIC_FREE_SERVE,
     NO_WALLCLOCK,
     ATOMIC_ORDERING,
+    DETERMINISM_TAINT,
+    LOCK_ORDER,
 ];
 
 pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
@@ -38,13 +52,23 @@ pub const KEYED_RNG_ONLY: &str = "keyed-rng-only";
 pub const PANIC_FREE_SERVE: &str = "panic-free-serve";
 pub const NO_WALLCLOCK: &str = "no-wallclock-in-determinism";
 pub const ATOMIC_ORDERING: &str = "atomic-ordering-audit";
+pub const DETERMINISM_TAINT: &str = "determinism-taint";
+pub const LOCK_ORDER: &str = "lock-order";
 
-/// Allocating method/associated-fn idents banned in `hot-path` bodies.
+/// Fn names that root the determinism-taint closure: the photonic
+/// dispatch entry points whose results must be bit-identical at any
+/// `--threads` (PR 4's contract).
+pub const DETERMINISM_ROOTS: [&str; 3] =
+    ["bank_linear", "bank_dfa_gradient", "eval_into"];
+
+/// Allocating method/associated-fn idents banned in hot-path closures.
 const ALLOC_CALLS: [&str; 4] = ["clone", "to_vec", "collect", "with_capacity"];
-/// Allocating macros banned in `hot-path` bodies.
+/// Allocating macros banned in hot-path closures.
 const ALLOC_MACROS: [&str; 2] = ["format", "vec"];
-/// Panicking macros banned in `thread-body` bodies.
+/// Panicking macros banned in serve-thread closures.
 const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+/// Non-`keyed` `Pcg64` constructors banned in determinism closures.
+const RNG_CTORS: [&str; 4] = ["new", "seed", "fork", "from_state_bytes"];
 /// Atomic orderings stricter than `Relaxed` (the cmp::Ordering variants
 /// Less/Equal/Greater never collide with these names).
 const STRICT_ORDERINGS: [&str; 4] = ["Acquire", "Release", "AcqRel", "SeqCst"];
@@ -54,21 +78,78 @@ const NON_INDEX_KEYWORDS: [&str; 10] = [
     "in", "return", "break", "if", "else", "match", "let", "mut", "ref", "box",
 ];
 
-/// Run every rule over `f`, appending findings to `out`.
-pub fn check_file(f: &SourceFile, out: &mut Vec<Diag>) {
-    hot_path_alloc(f, out);
-    no_raw_thread_cap(f, out);
-    keyed_rng_only(f, out);
-    panic_free_serve(f, out);
-    no_wallclock(f, out);
-    atomic_ordering(f, out);
+/// Per-rule count of suppressions that actually fired (allow pragmas
+/// that swallowed a finding, pruned call edges, boundary stops).
+pub type Debt = BTreeMap<&'static str, usize>;
+
+pub fn new_debt() -> Debt {
+    RULES.iter().map(|r| (*r, 0usize)).collect()
 }
 
-/// Shared finding constructor: drops the diag if the token is in test
-/// code or a fn/line-level suppression covers it.
+fn spend(debt: &mut Debt, rule: &'static str, n: usize) {
+    *debt.entry(rule).or_insert(0) += n;
+}
+
+/// Run the whole-crate pass: fn-local rules per file, then the four
+/// transitive rules over `graph`.
+pub fn check_crate(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+) {
+    for f in files {
+        no_raw_thread_cap(f, out, debt);
+        keyed_rng_only(f, out, debt);
+        no_wallclock(f, out, debt);
+        atomic_ordering(f, out, debt);
+    }
+    hot_path_alloc(files, graph, out, debt);
+    panic_free_serve(files, graph, out, debt);
+    determinism_taint(files, graph, out, debt);
+    lock_order(files, graph, out, debt);
+}
+
+/// The relaxed subset for `benches/` and `tests/`: bench/test code may
+/// allocate, panic and lock freely, but must not reintroduce raw
+/// thread-cap mutation or unsanctioned wallclock reads.
+pub fn check_file_relaxed(f: &SourceFile, out: &mut Vec<Diag>, debt: &mut Debt) {
+    no_raw_thread_cap(f, out, debt);
+    no_wallclock(f, out, debt);
+}
+
+/// Per-rule transitive root sets for the `LINT.json` graph summary.
+/// Lock-order's "roots" are the mutexes the graph observed.
+pub fn rule_roots(
+    files: &[SourceFile],
+    graph: &CallGraph,
+) -> Vec<(&'static str, Vec<String>)> {
+    let quals = |pred: &dyn Fn(&Function) -> bool| -> Vec<String> {
+        graph
+            .nodes
+            .iter()
+            .filter(|n| pred(&files[n.file].fns[n.func]))
+            .map(|n| n.qual.clone())
+            .collect()
+    };
+    vec![
+        (HOT_PATH_ALLOC, quals(&|f| f.has_pragma("hot-path"))),
+        (PANIC_FREE_SERVE, quals(&|f| f.has_pragma("thread-body"))),
+        (
+            DETERMINISM_TAINT,
+            quals(&|f| DETERMINISM_ROOTS.contains(&f.name.as_str())),
+        ),
+        (LOCK_ORDER, graph.mutexes().into_iter().collect()),
+    ]
+}
+
+/// Shared finding sink: drops the diag (and tallies the debt) if the
+/// token is in test code or a written fn/line-level suppression covers
+/// it.
 fn emit(
     f: &SourceFile,
     out: &mut Vec<Diag>,
+    debt: &mut Debt,
     idx: usize,
     fnc: Option<&Function>,
     rule: &'static str,
@@ -77,15 +158,26 @@ fn emit(
     if f.in_test(idx) {
         return;
     }
-    let line = f.toks[idx].line;
-    if let Some(func) = fnc {
-        if func.allows(rule) {
-            return;
-        }
+    emit_at_line(f, out, debt, f.toks[idx].line, fnc, rule, msg);
+}
+
+fn emit_at_line(
+    f: &SourceFile,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+    line: u32,
+    fnc: Option<&Function>,
+    rule: &'static str,
+    msg: String,
+) {
+    if fnc.is_some_and(|func| func.allows(rule)) {
+        spend(debt, rule, 1);
+        return;
     }
     if f.line_pragma(line, "allow")
-        .is_some_and(|p| p.arg == rule)
+        .is_some_and(|p| p.arg == rule && !p.note.is_empty())
     {
+        spend(debt, rule, 1);
         return;
     }
     out.push(Diag { file: f.path.clone(), line, rule, msg });
@@ -115,58 +207,120 @@ fn path_head<'a>(f: &'a SourceFile, i: usize) -> Option<&'a str> {
     (f.toks[h].kind == TokKind::Ident).then(|| f.toks[h].text.as_str())
 }
 
-/// **hot-path-alloc** — no allocating calls or macros inside functions
-/// marked `// lint: hot-path`: `clone()`, `to_vec()`, `collect()`,
-/// `with_capacity()`, `Vec::new()`, `Box::new()`, `String::from()`,
-/// `format!`, `vec!`. The steady-state serve and photonic dispatch
-/// paths are allocation-free by contract (`tests/alloc_*.rs` sample
-/// them at runtime; this rule checks every call site statically).
-fn hot_path_alloc(f: &SourceFile, out: &mut Vec<Diag>) {
-    for func in f.fns.iter().filter(|x| x.has_pragma("hot-path")) {
+/// "reachable from `root` via `a` → `b`" suffix for transitive
+/// findings (empty for findings in the root itself).
+fn via(graph: &CallGraph, cl: &Closure, ni: usize) -> String {
+    let chain = cl.trail(ni);
+    if chain.len() < 2 {
+        return String::new();
+    }
+    let names: Vec<&str> =
+        chain.iter().map(|&x| graph.nodes[x].qual.as_str()).collect();
+    format!(
+        " (reachable from `{}` via {})",
+        names[0],
+        names[1..]
+            .iter()
+            .map(|n| format!("`{n}`"))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    )
+}
+
+/// Walk every member of `cl`, calling `scan` with the member's node
+/// index, file, fn and the token indices attributed to it (innermost
+/// enclosing fn wins, so nested fns are visited once, as themselves).
+fn for_member_tokens(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    cl: &Closure,
+    mut scan: impl FnMut(usize, &SourceFile, &Function, usize),
+) {
+    for (ni, node) in graph.nodes.iter().enumerate() {
+        if !cl.member[ni] {
+            continue;
+        }
+        let f = &files[node.file];
+        let func = &f.fns[node.func];
         for i in func.body.0..func.body.1 {
-            let t = &f.toks[i];
-            if t.kind != TokKind::Ident {
-                continue;
-            }
-            let name = t.text.as_str();
-            let flagged = if ALLOC_CALLS.contains(&name) && is_call(f, i) {
-                Some(name.to_string())
-            } else if ALLOC_MACROS.contains(&name)
-                && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
-            {
-                Some(format!("{name}!"))
-            } else if name == "new" && is_call(f, i) {
-                match path_head(f, i) {
-                    Some(h @ ("Vec" | "Box")) => Some(format!("{h}::new")),
-                    _ => None,
-                }
-            } else if name == "from"
-                && is_call(f, i)
-                && path_head(f, i) == Some("String")
-            {
-                Some("String::from".to_string())
-            } else {
-                None
-            };
-            if let Some(what) = flagged {
-                emit(
-                    f,
-                    out,
-                    i,
-                    Some(func),
-                    HOT_PATH_ALLOC,
-                    format!("`{what}` allocates inside hot-path fn `{}`", func.name),
-                );
+            if graph.node_at(node.file, i) == Some(ni) {
+                scan(ni, f, func, i);
             }
         }
     }
+}
+
+/// Collect node indices by fn predicate (closure roots).
+fn roots_where(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    pred: impl Fn(&Function) -> bool,
+) -> Vec<usize> {
+    graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| pred(&files[n.file].fns[n.func]))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// **hot-path-alloc** (transitive) — no allocating calls or macros
+/// anywhere in the closure of functions marked `// lint: hot-path`:
+/// `clone()`, `to_vec()`, `collect()`, `with_capacity()`, `Vec::new()`,
+/// `Box::new()`, `String::from()`, `format!`, `vec!`. The steady-state
+/// serve and photonic dispatch paths are allocation-free by contract
+/// (`tests/alloc_*.rs` sample them at runtime; this rule checks every
+/// call site statically, including helpers the roots reach).
+fn hot_path_alloc(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+) {
+    let roots = roots_where(files, graph, |x| x.has_pragma("hot-path"));
+    let cl = graph.closure(files, &roots, HOT_PATH_ALLOC);
+    spend(debt, HOT_PATH_ALLOC, cl.boundaries.len() + cl.pruned.len());
+    for_member_tokens(files, graph, &cl, |ni, f, func, i| {
+        let t = &f.toks[i];
+        if t.kind != TokKind::Ident {
+            return;
+        }
+        let name = t.text.as_str();
+        let flagged = if ALLOC_CALLS.contains(&name) && is_call(f, i) {
+            Some(name.to_string())
+        } else if ALLOC_MACROS.contains(&name)
+            && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
+        {
+            Some(format!("{name}!"))
+        } else if name == "new" && is_call(f, i) {
+            match path_head(f, i) {
+                Some(h @ ("Vec" | "Box")) => Some(format!("{h}::new")),
+                _ => None,
+            }
+        } else if name == "from" && is_call(f, i) && path_head(f, i) == Some("String")
+        {
+            Some("String::from".to_string())
+        } else {
+            None
+        };
+        if let Some(what) = flagged {
+            let suffix = via(graph, &cl, ni);
+            let msg = if suffix.is_empty() {
+                format!("`{what}` allocates inside hot-path fn `{}`", func.name)
+            } else {
+                format!("`{what}` allocates in `{}`{suffix}", func.name)
+            };
+            emit(f, out, debt, i, Some(func), HOT_PATH_ALLOC, msg);
+        }
+    });
 }
 
 /// **no-raw-thread-cap** — `ops::set_thread_cap` is callable only from
 /// `ThreadCapGuard` (its defining module, `tensor/ops.rs`, is exempt).
 /// Raw calls from concurrently running scopes race on the process
 /// global and leak their override; scoped guards serialize and restore.
-fn no_raw_thread_cap(f: &SourceFile, out: &mut Vec<Diag>) {
+fn no_raw_thread_cap(f: &SourceFile, out: &mut Vec<Diag>, debt: &mut Debt) {
     if f.path.ends_with("tensor/ops.rs") {
         return;
     }
@@ -186,6 +340,7 @@ fn no_raw_thread_cap(f: &SourceFile, out: &mut Vec<Diag>) {
         emit(
             f,
             out,
+            debt,
             i,
             fnc,
             NO_RAW_THREAD_CAP,
@@ -202,22 +357,21 @@ fn no_raw_thread_cap(f: &SourceFile, out: &mut Vec<Diag>) {
 /// `Pcg64::keyed(seed, op, lane)`: sequentially-seeded streams make
 /// results depend on which worker ran which row, breaking the
 /// bit-identical-at-any-`--threads` contract the photonic results
-/// depend on.
-fn keyed_rng_only(f: &SourceFile, out: &mut Vec<Diag>) {
+/// depend on. (The determinism-taint rule extends this transitively
+/// from the dispatch roots.)
+fn keyed_rng_only(f: &SourceFile, out: &mut Vec<Diag>, debt: &mut Debt) {
     for func in f.fns.iter().filter(|x| x.has_pragma("rng-region")) {
         for i in func.body.0..func.body.1 {
             let t = &f.toks[i];
             if t.kind != TokKind::Ident {
                 continue;
             }
-            let banned = matches!(
-                t.text.as_str(),
-                "new" | "seed" | "fork" | "from_state_bytes"
-            );
+            let banned = RNG_CTORS.contains(&t.text.as_str());
             if banned && path_head(f, i) == Some("Pcg64") && is_call(f, i) {
                 emit(
                     f,
                     out,
+                    debt,
                     i,
                     Some(func),
                     KEYED_RNG_ONLY,
@@ -232,71 +386,75 @@ fn keyed_rng_only(f: &SourceFile, out: &mut Vec<Diag>) {
     }
 }
 
-/// **panic-free-serve** — no `unwrap()`/`expect()`, panicking macros,
-/// or unguarded index expressions inside functions marked
+/// **panic-free-serve** (transitive) — no `unwrap()`/`expect()` or
+/// panicking macros anywhere in the closure of functions marked
 /// `// lint: thread-body` (the serve stack's per-connection and worker
 /// threads): a panic there kills one connection's thread and strands
-/// its peer mid-protocol instead of surfacing an error reply. Index
-/// expressions need a `// lint: guarded: <bounds invariant>` pragma.
-fn panic_free_serve(f: &SourceFile, out: &mut Vec<Diag>) {
-    for func in f.fns.iter().filter(|x| x.has_pragma("thread-body")) {
-        for i in func.body.0..func.body.1 {
-            let t = &f.toks[i];
-            match t.kind {
-                TokKind::Ident => {
-                    let name = t.text.as_str();
-                    if matches!(name, "unwrap" | "expect") && is_call(f, i) {
-                        emit(
-                            f,
-                            out,
-                            i,
-                            Some(func),
-                            PANIC_FREE_SERVE,
-                            format!(
-                                "`{}()` can panic inside thread-body fn `{}`",
-                                name, func.name
-                            ),
-                        );
-                    } else if PANIC_MACROS.contains(&name)
-                        && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
-                    {
-                        emit(
-                            f,
-                            out,
-                            i,
-                            Some(func),
-                            PANIC_FREE_SERVE,
-                            format!(
-                                "`{}!` inside thread-body fn `{}`",
-                                name, func.name
-                            ),
-                        );
-                    }
+/// its peer mid-protocol instead of surfacing an error reply.
+///
+/// Unguarded index expressions are checked in the *root* fns only —
+/// the `// lint: guarded: <bounds invariant>` contract is written
+/// against a fn's own locals and does not compose across calls, and
+/// flagging every slice index in the compute kernels the workers reach
+/// would drown the signal. Callee indexing is covered by the kernels'
+/// own tier-1 tests.
+fn panic_free_serve(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+) {
+    let roots = roots_where(files, graph, |x| x.has_pragma("thread-body"));
+    let cl = graph.closure(files, &roots, PANIC_FREE_SERVE);
+    spend(debt, PANIC_FREE_SERVE, cl.boundaries.len() + cl.pruned.len());
+    for_member_tokens(files, graph, &cl, |ni, f, func, i| {
+        let t = &f.toks[i];
+        match t.kind {
+            TokKind::Ident => {
+                let name = t.text.as_str();
+                let what = if matches!(name, "unwrap" | "expect") && is_call(f, i) {
+                    Some(format!("`{name}()` can panic"))
+                } else if PANIC_MACROS.contains(&name)
+                    && f.sig_at(i + 1).is_some_and(|j| f.toks[j].is_punct('!'))
+                {
+                    Some(format!("`{name}!`"))
+                } else {
+                    None
+                };
+                if let Some(what) = what {
+                    let suffix = via(graph, &cl, ni);
+                    let msg = if suffix.is_empty() {
+                        format!("{what} inside thread-body fn `{}`", func.name)
+                    } else {
+                        format!("{what} in `{}`{suffix}", func.name)
+                    };
+                    emit(f, out, debt, i, Some(func), PANIC_FREE_SERVE, msg);
                 }
-                TokKind::Punct if t.is_punct('[') => {
-                    if !is_index_expr(f, i) {
-                        continue;
-                    }
-                    if f.line_pragma(t.line, "guarded").is_some() {
-                        continue;
-                    }
-                    emit(
-                        f,
-                        out,
-                        i,
-                        Some(func),
-                        PANIC_FREE_SERVE,
-                        format!(
-                            "index expression in thread-body fn `{}` without a \
-                             `// lint: guarded:` bounds note",
-                            func.name
-                        ),
-                    );
-                }
-                _ => {}
             }
+            TokKind::Punct if t.is_punct('[') => {
+                if !func.has_pragma("thread-body") || !is_index_expr(f, i) {
+                    return;
+                }
+                if f.line_pragma(t.line, "guarded").is_some() {
+                    return;
+                }
+                emit(
+                    f,
+                    out,
+                    debt,
+                    i,
+                    Some(func),
+                    PANIC_FREE_SERVE,
+                    format!(
+                        "index expression in thread-body fn `{}` without a \
+                         `// lint: guarded:` bounds note",
+                        func.name
+                    ),
+                );
+            }
+            _ => {}
         }
-    }
+    });
 }
 
 /// Is the `[` at `i` an index expression (`expr[…]`) rather than an
@@ -318,7 +476,7 @@ fn is_index_expr(f: &SourceFile, i: usize) -> bool {
 /// and explicitly pragma'd timing sites (`// lint: timing: <why>`).
 /// Wallclock anywhere near the step path is how nondeterminism sneaks
 /// into "bit-identical at any thread count" claims.
-fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>) {
+fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>, debt: &mut Debt) {
     // paths are relative to the lint root, so `coordinator/` may be the
     // leading component
     if f.path.ends_with("util/benchx.rs")
@@ -329,20 +487,7 @@ fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>) {
     }
     for i in 0..f.toks.len() {
         let t = &f.toks[i];
-        if !(t.is_ident("Instant") || t.is_ident("SystemTime")) {
-            continue;
-        }
-        // flag only the `::now` read, not imports or type positions
-        let Some(c1) = f.sig_at(i + 1) else { continue };
-        if !f.toks[c1].is_punct(':') {
-            continue;
-        }
-        let Some(c2) = f.sig_at(c1 + 1) else { continue };
-        if !f.toks[c2].is_punct(':') {
-            continue;
-        }
-        let Some(m) = f.sig_at(c2 + 1) else { continue };
-        if !f.toks[m].is_ident("now") {
+        if wallclock_now(f, i).is_none() {
             continue;
         }
         if f.line_pragma(t.line, "timing").is_some() {
@@ -352,6 +497,7 @@ fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>) {
         emit(
             f,
             out,
+            debt,
             i,
             fnc,
             NO_WALLCLOCK,
@@ -365,13 +511,32 @@ fn no_wallclock(f: &SourceFile, out: &mut Vec<Diag>) {
     }
 }
 
+/// Is the token at `i` the `Instant`/`SystemTime` head of a `::now`
+/// read (not an import or type position)? Returns the clock name.
+fn wallclock_now<'a>(f: &'a SourceFile, i: usize) -> Option<&'a str> {
+    let t = &f.toks[i];
+    if !(t.is_ident("Instant") || t.is_ident("SystemTime")) {
+        return None;
+    }
+    let c1 = f.sig_at(i + 1)?;
+    if !f.toks[c1].is_punct(':') {
+        return None;
+    }
+    let c2 = f.sig_at(c1 + 1)?;
+    if !f.toks[c2].is_punct(':') {
+        return None;
+    }
+    let m = f.sig_at(c2 + 1)?;
+    f.toks[m].is_ident("now").then(|| t.text.as_str())
+}
+
 /// **atomic-ordering-audit** — every `Ordering::` stricter than
 /// `Relaxed` needs an adjacent `// lint: ordering: <why>` justification:
 /// the repo's concurrency is designed around data-parallel partitioning
 /// plus joins, so a fence-bearing ordering is either load-bearing (and
 /// its pairing must be written down) or an accident (and should be
 /// `Relaxed`).
-fn atomic_ordering(f: &SourceFile, out: &mut Vec<Diag>) {
+fn atomic_ordering(f: &SourceFile, out: &mut Vec<Diag>, debt: &mut Debt) {
     for i in 0..f.toks.len() {
         let t = &f.toks[i];
         if t.kind != TokKind::Ident || !STRICT_ORDERINGS.contains(&t.text.as_str()) {
@@ -389,6 +554,7 @@ fn atomic_ordering(f: &SourceFile, out: &mut Vec<Diag>) {
         emit(
             f,
             out,
+            debt,
             i,
             fnc,
             ATOMIC_ORDERING,
@@ -396,6 +562,146 @@ fn atomic_ordering(f: &SourceFile, out: &mut Vec<Diag>) {
                 "`Ordering::{}` without an adjacent `// lint: ordering: <why>` \
                  justification",
                 t.text
+            ),
+        );
+    }
+}
+
+/// **determinism-taint** (transitive) — nothing reachable from the
+/// photonic dispatch roots (`bank_linear`, `bank_dfa_gradient`,
+/// `eval_into`) may read the wallclock or build a non-`keyed` `Pcg64`:
+/// those are exactly the two ways a result could depend on scheduling
+/// rather than on `(seed, op, lane)`. Stricter than the fn-local
+/// rules it overlaps: a `// lint: timing:` pragma does *not* exempt a
+/// site here — inside the dispatch closure there is no legitimate
+/// latency measurement, only an `allow(determinism-taint)` contract.
+fn determinism_taint(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+) {
+    let roots = roots_where(files, graph, |x| {
+        DETERMINISM_ROOTS.contains(&x.name.as_str())
+    });
+    let cl = graph.closure(files, &roots, DETERMINISM_TAINT);
+    spend(debt, DETERMINISM_TAINT, cl.boundaries.len() + cl.pruned.len());
+    for_member_tokens(files, graph, &cl, |ni, f, func, i| {
+        let t = &f.toks[i];
+        if t.kind != TokKind::Ident {
+            return;
+        }
+        let what = if let Some(clock) = wallclock_now(f, i) {
+            Some(format!("`{clock}::now` read"))
+        } else if RNG_CTORS.contains(&t.text.as_str())
+            && path_head(f, i) == Some("Pcg64")
+            && is_call(f, i)
+        {
+            Some(format!("non-keyed `Pcg64::{}`", t.text))
+        } else {
+            None
+        };
+        if let Some(what) = what {
+            let suffix = via(graph, &cl, ni);
+            emit(
+                f,
+                out,
+                debt,
+                i,
+                Some(func),
+                DETERMINISM_TAINT,
+                format!(
+                    "{what} in `{}` taints the photonic dispatch \
+                     determinism contract{suffix}",
+                    func.name
+                ),
+            );
+        }
+    });
+}
+
+/// **lock-order** — build the "holds `a`, acquires `b`" digraph over
+/// lexical mutex identities (directly and through calls, see
+/// [`CallGraph::order_edges`]) and flag every set of mutexes that can
+/// be acquired in inconsistent order — a potential deadlock no test
+/// run may ever hit. One finding per cycle, anchored at the first
+/// witness site; suppress with `allow(lock-order)` on that line or fn.
+fn lock_order(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    out: &mut Vec<Diag>,
+    debt: &mut Debt,
+) {
+    let mut lock_debt = 0usize;
+    let edges = graph.order_edges(files, &mut lock_debt);
+    spend(debt, LOCK_ORDER, lock_debt);
+
+    // mutually-reachable mutexes = an acquisition-order cycle
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for e in &edges {
+        adj.entry(e.a.as_str()).or_default().push(e.b.as_str());
+    }
+    let reach = |from: &str| -> std::collections::BTreeSet<&str> {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut stack = vec![from];
+        while let Some(x) = stack.pop() {
+            for &y in adj.get(x).map(Vec::as_slice).unwrap_or(&[]) {
+                if seen.insert(y) {
+                    stack.push(y);
+                }
+            }
+        }
+        seen
+    };
+    let mutexes: Vec<&str> = adj.keys().copied().collect();
+    let reachable: BTreeMap<&str, _> =
+        mutexes.iter().map(|&m| (m, reach(m))).collect();
+    let mut seen_components: Vec<Vec<&str>> = Vec::new();
+    for &m in &mutexes {
+        let comp: Vec<&str> = mutexes
+            .iter()
+            .copied()
+            .filter(|&x| {
+                (x == m || reachable[m].contains(x)) && reachable[x].contains(m)
+            })
+            .collect();
+        if comp.len() < 2 || seen_components.contains(&comp) {
+            continue;
+        }
+        seen_components.push(comp.clone());
+        // the cycle's witness edges, in deterministic order
+        let mut witnesses: Vec<&super::graph::OrderEdge> = edges
+            .iter()
+            .filter(|e| comp.contains(&e.a.as_str()) && comp.contains(&e.b.as_str()))
+            .collect();
+        witnesses.sort_by_key(|e| {
+            (&files[graph.nodes[e.node].file].path, e.line, &e.a, &e.b)
+        });
+        let Some(first) = witnesses.first() else { continue };
+        let f = &files[graph.nodes[first.node].file];
+        let func = &f.fns[graph.nodes[first.node].func];
+        let detail = witnesses
+            .iter()
+            .map(|e| {
+                let nf = &files[graph.nodes[e.node].file];
+                format!(
+                    "{} -> {} ({}:{} in `{}`)",
+                    e.a, e.b, nf.path, e.line, graph.nodes[e.node].qual
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        emit_at_line(
+            f,
+            out,
+            debt,
+            first.line,
+            Some(func),
+            LOCK_ORDER,
+            format!(
+                "inconsistent lock acquisition order among {{{}}}: {detail}; \
+                 pick one order or write an `allow(lock-order)` contract",
+                comp.join(", ")
             ),
         );
     }

@@ -47,6 +47,8 @@ impl Tiling {
         if bank_rows == 0 || bank_cols == 0 {
             return Err(Error::Gemm("bank dims must be positive".into()));
         }
+        // lint: allow(hot-path-alloc) — cold: tilings are computed once
+        // per (m, k) shape and cached by the dispatcher
         let mut tiles = Vec::new();
         let mut row0 = 0;
         while row0 < m {

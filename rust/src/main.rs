@@ -569,7 +569,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
             // external clients (and the CI smoke test) scrape this line
             // for the ephemeral port
             println!("listening on {}", netsrv.local_addr());
-            let net_stats = netsrv.join();
+            let net_stats = netsrv.join_all();
             println!(
                 "tcp front-end: {} accepted / {} rejected over {} connections",
                 net_stats.accepted, net_stats.rejected, net_stats.connections
@@ -1000,12 +1000,27 @@ fn lint_specs() -> Vec<ArgSpec> {
     vec![
         ArgSpec::opt("root", "rust/src", "source tree to lint"),
         ArgSpec::opt("json", "", "also write the JSON report to this path"),
+        ArgSpec::opt("graph", "", "write a DOT rendering of the hot-path closure"),
+        ArgSpec::opt(
+            "baseline",
+            "",
+            "LINT.json whose per-rule suppression counts cap this run",
+        ),
     ]
 }
 
 fn cmd_lint(a: &Args) -> Result<()> {
     let root = std::path::Path::new(a.str("root"));
-    let report = photonic_dfa::analysis::lint_tree(root)?;
+    // read the baseline before any writes: --json may overwrite it
+    let baseline = match a.str("baseline") {
+        "" => None,
+        p => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| Error::Cli(format!("lint: read baseline {p}: {e}")))?;
+            Some(photonic_dfa::util::json::Value::parse(&text)?)
+        }
+    };
+    let report = photonic_dfa::analysis::lint_repo(root)?;
     let json = a.str("json");
     if !json.is_empty() {
         let mut text = report.to_value().to_string_pretty();
@@ -1013,12 +1028,25 @@ fn cmd_lint(a: &Args) -> Result<()> {
         std::fs::write(json, text)
             .map_err(|e| Error::Cli(format!("lint: write {json}: {e}")))?;
     }
+    let dot = a.str("graph");
+    if !dot.is_empty() {
+        std::fs::write(dot, &report.hot_path_dot)
+            .map_err(|e| Error::Cli(format!("lint: write {dot}: {e}")))?;
+    }
     print!("{}", report.render());
+    if let Some(base) = &baseline {
+        photonic_dfa::analysis::check_baseline(&report, base)?;
+    }
     if report.clean() {
+        let spent: usize = report.debt.values().sum();
         println!(
-            "pdfa lint: {} files clean under {} rules",
+            "pdfa lint: {} files clean under {} rules ({} nodes, {} edges, \
+             {} written suppression(s))",
             report.files,
-            photonic_dfa::analysis::RULES.len()
+            photonic_dfa::analysis::RULES.len(),
+            report.graph.nodes,
+            report.graph.edges,
+            spent,
         );
         Ok(())
     } else {

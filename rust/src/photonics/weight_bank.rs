@@ -217,6 +217,7 @@ impl WeightBank {
 
     fn check_tile_shape(&self, weights: &Tensor) -> Result<()> {
         if weights.shape() != [self.cfg.rows, self.cfg.cols] {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "inscribe expects ({}, {}), got {:?}",
                 self.cfg.rows,
@@ -606,6 +607,8 @@ pub struct Inscription {
 impl Inscription {
     /// An empty pool slot for [`WeightBank::snapshot_into`] to fill. Not
     /// a valid inscription until then (geometry 0×0 fails every eval).
+    // lint: allow(hot-path-alloc) — pool warm-up: slots are created until
+    // the snapshot pool covers the tiling, then reused on every dispatch
     pub fn empty() -> Inscription {
         Inscription {
             rows: 0,

@@ -135,6 +135,16 @@ struct Inner {
     stats: QueueStats,
 }
 
+/// Recover the guard from a poisoned lock/condvar result. Every mutation
+/// under [`Queue::inner`] is a single non-panicking statement (`push_back`,
+/// `drain`, flag/counter writes), so a poisoning panic elsewhere in a
+/// holder's frame cannot leave `Inner` half-updated — recovering is sound,
+/// and it keeps one crashed connection thread from cascading panics into
+/// every other producer and consumer of the queue.
+fn recover<T>(r: std::result::Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(|p| p.into_inner())
+}
+
 /// The shared queue (one per [`crate::serve::Server`]).
 pub struct Queue {
     policy: BatchPolicy,
@@ -171,9 +181,9 @@ impl Queue {
     /// Enqueue a request, blocking while the queue is at capacity.
     /// Errors once the queue has been shut down.
     pub fn push(&self, req: Request) -> Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = recover(self.inner.lock());
         while !g.shutdown && g.q.len() >= self.policy.queue_cap {
-            g = self.space.wait(g).unwrap();
+            g = recover(self.space.wait(g));
         }
         if g.shutdown {
             return Err(Error::msg("serve: queue is shut down"));
@@ -186,7 +196,7 @@ impl Queue {
     /// Block until a micro-batch is ready under the flush policy. Returns
     /// `None` only after [`Self::shutdown`] once the queue is drained.
     pub fn next_batch(&self) -> Option<(Vec<Request>, FlushCause)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = recover(self.inner.lock());
         loop {
             if g.q.len() >= self.policy.max_batch {
                 g.stats.flush_full += 1;
@@ -206,11 +216,12 @@ impl Queue {
                         g.stats.flush_timeout += 1;
                         return Some((self.drain(&mut g), FlushCause::Timeout));
                     }
-                    let (g2, _) =
-                        self.work.wait_timeout(g, self.policy.max_wait - age).unwrap();
+                    let (g2, _) = recover(
+                        self.work.wait_timeout(g, self.policy.max_wait - age),
+                    );
                     g = g2;
                 }
-                None => g = self.work.wait(g).unwrap(),
+                None => g = recover(self.work.wait(g)),
             }
         }
     }
@@ -225,18 +236,18 @@ impl Queue {
     /// Stop accepting requests and wake everyone; queued requests still
     /// drain through [`Self::next_batch`].
     pub fn shutdown(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = recover(self.inner.lock());
         g.shutdown = true;
         self.work.notify_all();
         self.space.notify_all();
     }
 
     pub fn stats(&self) -> QueueStats {
-        self.inner.lock().unwrap().stats.clone()
+        recover(self.inner.lock()).stats.clone()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        recover(self.inner.lock()).q.len()
     }
 
     pub fn is_empty(&self) -> bool {

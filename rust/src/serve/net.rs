@@ -177,7 +177,7 @@ impl NetServer {
     /// or [`Self::stop`] is called — then join every connection thread.
     /// When this returns, every accepted request's reply has been
     /// written (graceful drain).
-    pub fn join(mut self) -> NetStats {
+    pub fn join_all(mut self) -> NetStats {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -196,10 +196,10 @@ impl NetServer {
         self.stats()
     }
 
-    /// [`Self::stop`] + [`Self::join`].
+    /// [`Self::stop`] + [`Self::join_all`].
     pub fn shutdown(self) -> NetStats {
         self.stop();
-        self.join()
+        self.join_all()
     }
 }
 

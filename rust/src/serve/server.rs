@@ -340,6 +340,7 @@ impl Server {
     /// beyond the oneshot reply channel.
     pub fn submit_with(&self, x: Vec<f32>, out: Vec<f32>) -> Result<Ticket> {
         if x.len() != self.d_in {
+            // lint: allow(hot-path-alloc) — cold path, shape error
             return Err(Error::Shape(format!(
                 "serve: request has {} features, network wants {}",
                 x.len(),

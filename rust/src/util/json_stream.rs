@@ -129,6 +129,7 @@ impl Lex<'_, '_> {
             self.pos += lit.len();
             Ok(())
         } else {
+            // lint: allow(hot-path-alloc) — cold path, only on malformed input
             Err(self.err(format!("invalid literal, expected '{lit}'")))
         }
     }

@@ -202,7 +202,7 @@ fn request_budget_drains_gracefully() {
 
     drop(w);
     drop(reader);
-    let net_stats = netsrv.join(); // budget exhaustion stops the front-end
+    let net_stats = netsrv.join_all(); // budget exhaustion stops the front-end
     assert_eq!(net_stats.accepted, 16);
     let stats = shutdown_server(server);
     assert_eq!(stats.completed, 16);
@@ -223,9 +223,10 @@ fn stop_latency_is_bounded_by_one_poll_interval() {
     // let the accept loop settle into its idle poll sleep
     std::thread::sleep(net::POLL_INTERVAL / 2);
 
+    // lint: timing: asserts shutdown latency, not a compute input
     let t0 = std::time::Instant::now();
     netsrv.stop();
-    let stats = netsrv.join();
+    let stats = netsrv.join_all();
     let elapsed = t0.elapsed();
 
     // one full poll sleep + generous scheduling slack for loaded CI

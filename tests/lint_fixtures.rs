@@ -4,15 +4,20 @@
 //! flagged, by name) and one negative fixture (compliant or suppressed
 //! code stays quiet), plus lexer edge cases — multi-line strings, raw
 //! strings and block comments that *contain* banned spellings must not
-//! trip the rules. The final test self-hosts: the crate's own
-//! `rust/src/**` tree must lint clean, which is exactly what CI
-//! enforces via `pdfa lint --json LINT.json`.
+//! trip the rules. The call-graph sections pin the resolution contract:
+//! shadowed names bind by module, dot calls bind methods (never free
+//! fns), closures attribute to their enclosing fn, recursion
+//! terminates, `boundary`/call-site `allow` pragmas stop transitive
+//! descent, and lock-order cycles are caught across call edges. The
+//! final test self-hosts: the crate's own tree (sources plus the
+//! relaxed `benches/`/`tests/` walk) must lint clean, which is exactly
+//! what CI enforces via `pdfa lint --json LINT.json --baseline LINT.json`.
 
 use photonic_dfa::analysis::rules::{
-    ATOMIC_ORDERING, HOT_PATH_ALLOC, KEYED_RNG_ONLY, NO_RAW_THREAD_CAP,
-    NO_WALLCLOCK, PANIC_FREE_SERVE,
+    ATOMIC_ORDERING, DETERMINISM_TAINT, HOT_PATH_ALLOC, KEYED_RNG_ONLY,
+    LOCK_ORDER, NO_RAW_THREAD_CAP, NO_WALLCLOCK, PANIC_FREE_SERVE,
 };
-use photonic_dfa::analysis::{lint_source, lint_tree, Diag, RULES};
+use photonic_dfa::analysis::{lint_repo, lint_source, lint_sources, Diag, RULES};
 
 /// Lint `src` under a neutral path (no allowlisted suffixes).
 fn lint(src: &str) -> Vec<Diag> {
@@ -277,7 +282,7 @@ fn fn_level_allow_suppresses_only_the_named_rule() {
     let src = r#"
 // lint: hot-path
 // lint: thread-body
-// lint: allow(hot-path-alloc)
+// lint: allow(hot-path-alloc) — fixture: exercises selective fn allow
 fn mixed(xs: &[f32]) -> Vec<f32> {
     let v = xs.to_vec();
     v.first().copied().unwrap();
@@ -286,6 +291,16 @@ fn mixed(xs: &[f32]) -> Vec<f32> {
 "#;
     // the alloc is allowed; the unwrap is still a panic-free-serve hit
     assert_eq!(rule_names(&lint(src)), [PANIC_FREE_SERVE]);
+}
+
+#[test]
+fn bare_fn_allow_without_a_written_contract_is_inert() {
+    let src = r#"
+// lint: hot-path
+// lint: allow(hot-path-alloc)
+fn hot(xs: &[f32]) -> Vec<f32> { xs.to_vec() }
+"#;
+    assert_eq!(rule_names(&lint(src)), [HOT_PATH_ALLOC]);
 }
 
 #[test]
@@ -409,14 +424,246 @@ three";
     assert_eq!(diags[0].line, 7, "{diags:?}");
 }
 
+// ---------------------------------------------------------------- call-graph resolution
+
+#[test]
+fn transitive_hot_path_findings_name_the_root() {
+    let src = r#"
+// lint: hot-path
+fn root(xs: &[f32]) -> f32 { helper(xs) }
+fn helper(xs: &[f32]) -> f32 { xs.to_vec(); 0.0 }
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [HOT_PATH_ALLOC], "{diags:?}");
+    assert!(
+        diags[0].msg.contains("reachable from `src::fixture::root`"),
+        "{}",
+        diags[0].msg
+    );
+}
+
+#[test]
+fn shadowed_fn_names_bind_by_module_path() {
+    // `crate::b::helper()` must bind b's clean helper, not a's
+    // allocating one of the same name
+    let same_module = [
+        ("a.rs", "pub fn helper() { let v = vec![1]; }\n"),
+        (
+            "b.rs",
+            "pub fn helper() {}\n\
+             // lint: hot-path\n\
+             pub fn root() { crate::b::helper(); }\n",
+        ),
+    ];
+    assert!(lint_sources(&same_module).is_empty(), "{:?}", lint_sources(&same_module));
+
+    // …and a qualified call INTO the allocating module is flagged
+    let cross_module = [
+        ("a.rs", "pub fn helper() { let v = vec![1]; }\n"),
+        (
+            "b.rs",
+            "// lint: hot-path\n\
+             pub fn root() { crate::a::helper(); }\n",
+        ),
+    ];
+    assert_eq!(rule_names(&lint_sources(&cross_module)), [HOT_PATH_ALLOC]);
+}
+
+#[test]
+fn dot_calls_bind_methods_and_bare_calls_bind_free_fns() {
+    // `w.helper()` reaches the impl method (which allocates), never the
+    // clean free fn of the same name
+    let dotted = r#"
+struct W;
+impl W { fn helper(&self) { let v = vec![1]; } }
+fn helper() {}
+// lint: hot-path
+fn root(w: &W) { w.helper(); }
+"#;
+    assert_eq!(rule_names(&lint(dotted)), [HOT_PATH_ALLOC]);
+
+    // the bare call binds the free fn only — the method is unreachable
+    let bare = r#"
+struct W;
+impl W { fn helper(&self) { let v = vec![1]; } }
+fn helper() {}
+// lint: hot-path
+fn root() { helper(); }
+"#;
+    assert!(lint(bare).is_empty(), "{:?}", lint(bare));
+}
+
+#[test]
+fn calls_inside_closures_attribute_to_the_enclosing_fn() {
+    let src = r#"
+// lint: hot-path
+fn root() { let f = || helper(); f(); }
+fn helper() { let v = vec![1]; }
+"#;
+    assert_eq!(rule_names(&lint(src)), [HOT_PATH_ALLOC]);
+}
+
+#[test]
+fn mutual_recursion_terminates_and_flags_once() {
+    let src = r#"
+// lint: hot-path
+fn ping(n: u32) { if n > 0 { pong(n - 1); } let v = vec![n]; }
+fn pong(n: u32) { ping(n); }
+"#;
+    assert_eq!(rule_names(&lint(src)), [HOT_PATH_ALLOC]);
+}
+
+// ---------------------------------------------------------------- transitive closures & suppression
+
+#[test]
+fn panic_free_serve_descends_into_callees() {
+    let src = r#"
+// lint: thread-body
+fn worker(q: &Q) { helper(q); }
+fn helper(q: &Q) { q.pop().unwrap(); }
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [PANIC_FREE_SERVE], "{diags:?}");
+    assert!(diags[0].msg.contains("`unwrap()` can panic"), "{}", diags[0].msg);
+}
+
+#[test]
+fn boundary_pragma_stops_transitive_descent() {
+    let contracted = r#"
+// lint: thread-body
+fn worker(q: &Q) { helper(q); }
+// lint: boundary(panic-free-serve) — helper validated by its own suite
+fn helper(q: &Q) { q.pop().unwrap(); }
+"#;
+    assert!(lint(contracted).is_empty(), "{:?}", lint(contracted));
+
+    // a boundary with no written contract does NOT stop the walk
+    let bare = r#"
+// lint: thread-body
+fn worker(q: &Q) { helper(q); }
+// lint: boundary(panic-free-serve)
+fn helper(q: &Q) { q.pop().unwrap(); }
+"#;
+    assert_eq!(rule_names(&lint(bare)), [PANIC_FREE_SERVE]);
+}
+
+#[test]
+fn call_site_allow_prunes_the_edge() {
+    let src = r#"
+// lint: thread-body
+fn worker(q: &Q) {
+    // lint: allow(panic-free-serve) — verified cold path, edge pruned
+    helper(q);
+}
+fn helper(q: &Q) { q.pop().unwrap(); }
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+// ---------------------------------------------------------------- determinism taint
+
+#[test]
+fn wallclock_reachable_from_a_dispatch_root_is_taint() {
+    let src = r#"
+fn bank_linear(x: &[f32]) -> f32 { noise() }
+fn noise() -> f32 { let t = std::time::Instant::now(); 0.0 }
+"#;
+    let diags = lint(src);
+    assert_eq!(
+        rule_names(&diags),
+        [DETERMINISM_TAINT, NO_WALLCLOCK],
+        "{diags:?}"
+    );
+    assert!(
+        diags.iter().any(|d| d.msg.contains("taints the photonic dispatch")),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn keyed_rng_below_a_dispatch_root_is_clean() {
+    let src = r#"
+fn bank_dfa_gradient(seed: u64, row: u64) -> f32 { sample(seed, row) }
+fn sample(seed: u64, row: u64) -> f32 { let r = Pcg64::keyed(seed, 1, row); 0.0 }
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+#[test]
+fn non_keyed_rng_ctor_below_a_dispatch_root_is_taint() {
+    let src = r#"
+fn eval_into(seed: u64) -> f32 { sample(seed) }
+fn sample(seed: u64) -> f32 { let r = Pcg64::seed(seed); 0.0 }
+"#;
+    assert_eq!(rule_names(&lint(src)), [DETERMINISM_TAINT]);
+}
+
+// ---------------------------------------------------------------- lock order
+
+#[test]
+fn inconsistent_lock_acquisition_order_is_a_cycle() {
+    let src = r#"
+struct S;
+impl S {
+    fn ab(&self) { let a = self.m1.lock(); let b = self.m2.lock(); }
+    fn ba(&self) { let b = self.m2.lock(); let a = self.m1.lock(); }
+}
+"#;
+    let diags = lint(src);
+    assert_eq!(rule_names(&diags), [LOCK_ORDER], "{diags:?}");
+    assert!(
+        diags[0].msg.contains("inconsistent lock acquisition order"),
+        "{}",
+        diags[0].msg
+    );
+}
+
+#[test]
+fn consistent_lock_order_stays_quiet() {
+    let src = r#"
+struct S;
+impl S {
+    fn ab(&self) { let a = self.m1.lock(); let b = self.m2.lock(); }
+    fn ab2(&self) { let a = self.m1.lock(); let b = self.m2.lock(); }
+}
+"#;
+    assert!(lint(src).is_empty(), "{:?}", lint(src));
+}
+
+#[test]
+fn lock_order_cycles_are_caught_across_call_edges() {
+    // `ab` holds m1 and calls `inner`, which takes m2 → order m1<m2;
+    // `ba` takes m2 then m1 → cycle, even though no single fn inverts
+    let src = r#"
+struct S;
+impl S {
+    fn inner(&self) { self.m2.lock(); }
+    fn ab(&self) { let a = self.m1.lock(); self.inner(); }
+    fn ba(&self) { let b = self.m2.lock(); let a = self.m1.lock(); }
+}
+"#;
+    assert_eq!(rule_names(&lint(src)), [LOCK_ORDER]);
+}
+
 // ---------------------------------------------------------------- self-hosting
 
 #[test]
 fn the_crates_own_tree_lints_clean() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
-    let report = lint_tree(&root).unwrap();
-    assert!(report.files > 30, "walked only {} files", report.files);
-    assert_eq!(RULES.len(), 6);
+    let report = lint_repo(&root).unwrap();
+    // the repo walk covers rust/src plus the relaxed benches/ + tests/
+    assert!(report.files > 40, "walked only {} files", report.files);
+    assert_eq!(RULES.len(), 8);
+    // a real crate produces a non-trivial graph, and the transitive
+    // rules carry standing suppression debt (each with a written
+    // contract) — CI caps that debt against the committed LINT.json
+    assert!(report.graph.nodes > 300, "only {} graph nodes", report.graph.nodes);
+    assert!(report.graph.edges > 500, "only {} call edges", report.graph.edges);
+    assert!(
+        report.debt.get(HOT_PATH_ALLOC).copied().unwrap_or(0) > 0,
+        "hot-path closure should carry contracted allows: {:?}",
+        report.debt
+    );
     assert!(
         report.clean(),
         "`pdfa lint` findings on the crate's own sources:\n{}",
