@@ -1,0 +1,96 @@
+//! Device-lifetime bench: what drift tracking and online recalibration
+//! cost per dispatch.
+//!
+//! Times the `fwd` artifact of the tiny config on a multi-tile photonic
+//! bank under three lifetime regimes:
+//!
+//! * `static`      — drift disabled: the pre-lifetime baseline
+//! * `tracking`    — thermal walk active but always under the threshold:
+//!                   pays the per-dispatch advance + phase refresh only
+//! * `recalibrate` — walk hot enough to cross the threshold every drift
+//!                   tick: the steady-state amortized cost of the online
+//!                   recalibration scheduler (the §4 sweep + probe lock)
+//!
+//! Writes the machine-readable record CI commits on main pushes:
+//!
+//! ```text
+//! cargo bench --bench drift_overhead -- --json BENCH_DRIFT.json
+//! ```
+
+use photonic_dfa::dfa::params::NetState;
+use photonic_dfa::runtime::{PhotonicEngine, PhysicsConfig, StepEngine};
+use photonic_dfa::tensor::Tensor;
+use photonic_dfa::util::benchx::{bench, json_out_arg, BenchConfig, BenchRecords};
+use photonic_dfa::util::json::Value;
+use photonic_dfa::util::rng::Pcg64;
+
+fn main() {
+    let mut records = BenchRecords::new("drift_overhead");
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 20,
+        max_time: std::time::Duration::from_secs(2),
+    };
+
+    // multi-tile bank so the dispatch itself does real tiling work; the
+    // drift knobs are the only difference between the arms
+    let base = PhysicsConfig {
+        bank_rows: 16,
+        bank_cols: 12,
+        ..PhysicsConfig::ideal()
+    };
+    let arms = [
+        ("static", 0.0, 0.0),
+        // weight err ≈ 1e-7·122·√ticks: never reaches the threshold even
+        // over millions of in-bench dispatches
+        ("tracking", 1e-7, 0.05),
+        // err/tick ≈ 1.2: every drift tick fires the full recal protocol
+        ("recalibrate", 1e-2, 0.05),
+    ];
+    for (label, rate, threshold) in arms {
+        let physics = PhysicsConfig {
+            drift_rate: rate,
+            recal_threshold: threshold,
+            ..base
+        };
+        let engine = PhotonicEngine::open("artifacts", physics).unwrap();
+        let fwd = engine.load("fwd_tiny").unwrap();
+        let dims = engine.net_dims("tiny").unwrap();
+        let mut rng = Pcg64::seed(1);
+        let state = NetState::init(&dims, &mut rng);
+        let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        inputs.push(Tensor::rand_uniform(
+            &[dims.batch, dims.d_in],
+            0.0,
+            1.0,
+            &mut rng,
+        ));
+
+        let r = bench(&format!("drift/fwd_tiny_{label}"), &cfg, || {
+            fwd.execute(&inputs).unwrap()
+        });
+        println!("{}", r.report());
+        let t = engine.telemetry();
+        println!(
+            "drift/telemetry_{label}: {} cycles, {} recals ({} recal cycles), \
+             weight err {:.4}",
+            t.cycles, t.recal_events, t.recal_cycles, t.drift_err,
+        );
+        records.push(
+            &r,
+            vec![
+                ("net", Value::str("tiny")),
+                ("regime", Value::str(label)),
+                ("drift_rate", Value::Number(rate)),
+                ("recal_events", Value::Number(t.recal_events as f64)),
+                ("recal_cycles", Value::Number(t.recal_cycles as f64)),
+                ("threads", Value::Number(1.0)),
+            ],
+        );
+    }
+
+    if let Some(path) = json_out_arg() {
+        records.write(&path).unwrap();
+        println!("wrote {path}");
+    }
+}

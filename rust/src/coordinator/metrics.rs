@@ -119,6 +119,7 @@ mod tests {
             cycles: 7,
             bank_ops: 2,
             energy_j: 1e-9,
+            ..Telemetry::default()
         };
         m.add_telemetry(&t);
         m.add_telemetry(&t);

@@ -19,6 +19,14 @@
 //! |              |       | hyperparameters ([`protocol_string`])           |
 //! | rng          | 41    | [`Pcg64`] snapshot (state, inc, Gaussian spare) |
 //! | state        | 8 + n | u64 byte length + [`NetState::to_bytes`] layout |
+//! | device       | 1 (+ 8 + n) | presence flag; if 1: u64 byte length + the  |
+//! |              |       | engine's opaque device blob (v2)                |
+//!
+//! The `device` field (new in version 2) carries
+//! [`crate::runtime::StepEngine::device_state`] — for the photonic
+//! backend, the drift model, telemetry tallies and bank-op sequence that
+//! make a resumed run on an aging device bit-identical to an
+//! uninterrupted one. Digital backends write no device blob (flag 0).
 //!
 //! The state layout is the artifact-manifest order
 //! `[w1, b1, w2, b2, w3, b3, vw1, vb1, vw2, vb2, vw3, vb3]`, each tensor a
@@ -41,8 +49,11 @@ use crate::{Error, Result};
 
 /// File magic (first 8 bytes of the decompressed payload).
 pub const MAGIC: [u8; 8] = *b"PDFACKPT";
-/// Current payload version.
-pub const VERSION: u32 = 1;
+/// Current payload version. Version 2 added the `device` field; version
+/// 1 checkpoints are rejected like any other unknown version (they
+/// predate the device-lifetime machinery, and resuming one as if the
+/// device were factory-fresh would silently change the experiment).
+pub const VERSION: u32 = 2;
 
 /// Everything needed to serve a trained network or resume its run.
 #[derive(Debug, Clone)]
@@ -63,6 +74,11 @@ pub struct Checkpoint {
     pub rng: Pcg64,
     /// Parameter + momentum state in manifest order.
     pub state: NetState,
+    /// Opaque engine device state
+    /// ([`crate::runtime::StepEngine::device_state`]): `Some` when the
+    /// backend carries resumable device physics (the photonic drift
+    /// model + telemetry tallies), `None` on digital backends.
+    pub device: Option<Vec<u8>>,
 }
 
 fn bad(msg: impl Into<String>) -> Error {
@@ -123,6 +139,14 @@ impl Checkpoint {
         p.extend_from_slice(&self.rng.to_state_bytes());
         p.extend_from_slice(&(state.len() as u64).to_le_bytes());
         p.extend_from_slice(&state);
+        match &self.device {
+            Some(d) => {
+                p.push(1);
+                p.extend_from_slice(&(d.len() as u64).to_le_bytes());
+                p.extend_from_slice(d);
+            }
+            None => p.push(0),
+        }
         gzip::compress(&p)
     }
 
@@ -181,13 +205,31 @@ impl Checkpoint {
         let state_bytes = c.take(state_len, "parameter state")?;
         let state = NetState::from_bytes(&dims, state_bytes)
             .map_err(|e| bad(format!("state does not match dims ({e})")))?;
+        let device = match c.take(1, "device flag")?[0] {
+            0 => None,
+            1 => {
+                let n = c.u64("device length")? as usize;
+                Some(c.take(n, "device state")?.to_vec())
+            }
+            other => return Err(bad(format!("invalid device flag {other}"))),
+        };
         if c.pos != payload.len() {
             return Err(bad(format!(
                 "{} trailing bytes after state",
                 payload.len() - c.pos
             )));
         }
-        Ok(Checkpoint { config, dims, epoch, total_steps, seed, protocol, rng, state })
+        Ok(Checkpoint {
+            config,
+            dims,
+            epoch,
+            total_steps,
+            seed,
+            protocol,
+            rng,
+            state,
+            device,
+        })
     }
 
     /// Write to `path` atomically: the bytes land in a sibling `.tmp`
@@ -231,6 +273,7 @@ mod tests {
             protocol: "lr=0.05;momentum=0.9".into(),
             rng,
             state,
+            device: None,
         }
     }
 
@@ -292,17 +335,41 @@ mod tests {
         let payload = gzip::decompress(&good).unwrap();
         expect_format(Checkpoint::from_bytes(&gzip::compress(&payload[..40])));
         // future version
-        let mut v2 = payload.clone();
-        v2[8] = 2;
-        expect_format(Checkpoint::from_bytes(&gzip::compress(&v2)));
+        let mut v3 = payload.clone();
+        v3[8] = 3;
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&v3)));
+        // the retired pre-device version is rejected too, not guessed at
+        let mut v1 = payload.clone();
+        v1[8] = 1;
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&v1)));
         // trailing garbage
         let mut long = payload.clone();
         long.extend_from_slice(&[0u8; 4]);
         expect_format(Checkpoint::from_bytes(&gzip::compress(&long)));
+        // invalid device presence flag
+        let mut flag = payload.clone();
+        let at = flag.len() - 1;
+        flag[at] = 9;
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&flag)));
         // state shorter than dims demand
         let mut short = payload;
-        let cut = short.len() - 8;
+        let cut = short.len() - 9; // device flag byte + 8 state bytes
         short.truncate(cut);
         expect_format(Checkpoint::from_bytes(&gzip::compress(&short)));
+    }
+
+    #[test]
+    fn device_blob_round_trips_and_truncation_is_rejected() {
+        let mut ckpt = sample();
+        ckpt.device = Some(vec![0xAB; 37]);
+        let bytes = ckpt.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.device.as_deref(), Some(&[0xAB; 37][..]));
+        // determinism holds with the device field present
+        assert_eq!(back.to_bytes(), bytes);
+        // a truncated device blob is a clean format error
+        let payload = gzip::decompress(&bytes).unwrap();
+        let cut = payload.len() - 5;
+        expect_format(Checkpoint::from_bytes(&gzip::compress(&payload[..cut])));
     }
 }

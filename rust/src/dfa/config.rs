@@ -225,6 +225,9 @@ mod tests {
             |p| p.crosstalk = true,
             |p| p.lock = true,
             |p| p.seed = 99,
+            |p| p.drift_rate = 1e-3,
+            |p| p.drift_aging = 1e-5,
+            |p| p.recal_threshold = 0.1,
         ] {
             let mut physics = PhysicsConfig::ideal();
             mutate(&mut physics);

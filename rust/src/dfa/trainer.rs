@@ -231,8 +231,12 @@ impl Trainer {
 
     /// Snapshot the run for [`Checkpoint::save`]. Taken between epochs the
     /// snapshot is exact: restoring reproduces the uninterrupted loss
-    /// trajectory bit-for-bit in simulation mode (the run RNG is the only
-    /// stochastic state; device mode re-seeds its photonic bank instead).
+    /// trajectory bit-for-bit. The run RNG covers the coordinator's
+    /// stochastic state; backends with device-side state (the photonic
+    /// engine's op sequence, counters, and drift model) contribute an
+    /// opaque [`StepEngine::device_state`] blob so a drifting run resumes
+    /// mid-lifetime rather than on a freshly calibrated chip. (Legacy
+    /// device mode still re-seeds its photonic bank instead.)
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             config: self.cfg.config.clone(),
@@ -243,6 +247,7 @@ impl Trainer {
             protocol: self.run_protocol(),
             rng: self.rng.clone(),
             state: self.state.clone(),
+            device: self.engine.device_state(),
         }
     }
 
@@ -285,12 +290,21 @@ impl Trainer {
                 ckpt.protocol
             )));
         }
-        if self.device.is_some() || self.engine.platform_name() == "photonic" {
-            crate::log_warn!(
-                "resuming with device-level physics in the loop: photonic-bank \
-                 noise streams restart from their seed, so the trajectory is \
-                 statistical, not bit-exact"
-            );
+        match &ckpt.device {
+            // the engine rewinds its op sequence, counters, and drift model
+            // to the snapshot, so the resumed trajectory is bit-exact even
+            // with device physics (noise, drift, recalibration) in the loop
+            Some(blob) => self.engine.restore_device_state(blob)?,
+            None if self.device.is_some()
+                || self.engine.platform_name() == "photonic" =>
+            {
+                crate::log_warn!(
+                    "checkpoint carries no device state (pre-lifetime format): \
+                     photonic noise streams restart from their seed, so the \
+                     resumed trajectory is statistical, not bit-exact"
+                );
+            }
+            None => {}
         }
         self.state = ckpt.state.clone();
         self.rng = ckpt.rng.clone();

@@ -11,5 +11,8 @@ pub mod training;
 
 pub use characterization::{fig3b_curve, fig3c_multiply, fig5a_inner_products, MeasuredError};
 pub use energy_tables::{fig6_rows, headline_summary};
-pub use physics_sweep::{physics_sweep, render_table, PhysicsPoint, SweepSettings};
+pub use physics_sweep::{
+    drift_sweep, physics_sweep, render_drift_table, render_table, DriftPoint,
+    PhysicsPoint, SweepSettings,
+};
 pub use training::{fig5b_run, fig5c_sweep, SweepPoint};

@@ -7,6 +7,13 @@
 //! gradient-readout noise σ are overridden, trains a network end to end
 //! on the bank, and records the final test accuracy. `pdfa sweep-physics`
 //! renders the table via the [`crate::util::benchx`] formatting helpers.
+//!
+//! The lifetime axis ([`drift_sweep`], `pdfa sweep-physics --drift-rates`)
+//! reuses the same cell machinery over thermal drift rate × recalibration
+//! scheduler {on, off}: each cell trains under live drift and records
+//! accuracy plus the scheduler's telemetry (recalibrations fired, cycles
+//! spent), quantifying what the §4 protocol's accuracy costs on an aging
+//! device.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,6 +21,7 @@ use std::time::Instant;
 use crate::dfa::config::{Algorithm, TrainConfig};
 use crate::dfa::noise_model::NoiseMode;
 use crate::dfa::trainer::Trainer;
+use crate::runtime::photonic::RECAL_THRESHOLD_DEFAULT;
 use crate::runtime::{PhotonicEngine, PhysicsConfig, StepEngine};
 use crate::util::benchx::fmt_ns;
 use crate::Result;
@@ -25,6 +33,21 @@ pub struct PhysicsPoint {
     pub adc_bits: u32,
     pub sigma: f64,
     pub test_acc: f64,
+    pub train_wall_s: f64,
+}
+
+/// One grid point of the lifetime (drift) sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftPoint {
+    /// Thermal walk rate (rad/√tick) this cell trained under.
+    pub drift_rate: f64,
+    /// Whether the online recalibration scheduler was armed.
+    pub recal: bool,
+    pub test_acc: f64,
+    /// Recalibrations the scheduler fired during the run.
+    pub recal_events: u64,
+    /// Optical cycles spent inside those recalibrations.
+    pub recal_cycles: u64,
     pub train_wall_s: f64,
 }
 
@@ -50,18 +73,21 @@ pub struct SweepSettings {
     pub threads: usize,
 }
 
-/// One independent grid cell: open a fresh photonic engine under the
-/// overridden physics and train end to end.
-fn run_cell(
+/// One cell's training outcome: final accuracy, the run's telemetry
+/// delta, and wall-clock seconds.
+struct CellRun {
+    test_acc: f64,
+    telemetry: crate::telemetry::Telemetry,
+    wall_s: f64,
+}
+
+/// Open a fresh photonic engine under `physics` and train end to end —
+/// the body shared by every sweep cell.
+fn train_under(
     settings: &SweepSettings,
-    bits: u32,
-    sigma: f64,
+    physics: PhysicsConfig,
     engine_threads: usize,
-) -> Result<PhysicsPoint> {
-    let mut physics = settings.base;
-    physics.dac_bits = bits;
-    physics.adc_bits = bits;
-    physics.sigma = sigma;
+) -> Result<CellRun> {
     // open the engine directly (not through runtime::open_threaded): the
     // sweep already set the process-wide GEMM cap to the per-cell plan,
     // and a cell worker must not override it mid-flight
@@ -88,17 +114,55 @@ fn run_cell(
     // lint: timing: per-point wall-clock for the sweep report
     let t0 = Instant::now();
     let res = trainer.train(train, test, |_| {})?;
-    crate::log_info!(
-        "physics point dac/adc={bits} sigma={sigma}: test acc {:.4}",
-        res.test_acc
-    );
-    Ok(PhysicsPoint {
-        dac_bits: bits,
-        adc_bits: bits,
-        sigma,
+    Ok(CellRun {
         test_acc: res.test_acc,
-        train_wall_s: t0.elapsed().as_secs_f64(),
+        telemetry: res.telemetry,
+        wall_s: t0.elapsed().as_secs_f64(),
     })
+}
+
+/// Shard independent grid cells across [`SweepSettings::threads`] workers
+/// in deterministic input order. With more than one cell worker, each
+/// cell's engine runs single-threaded (no oversubscription); every cell's
+/// result is bit-identical at any worker count, so only wall-clock time
+/// changes. `ThreadCapGuard` serializes this scope against every other
+/// cap-scoped user of the process-global GEMM cap and restores the exact
+/// prior value on every exit path, including a panicking cell.
+fn shard_cells<C: Copy + Send + Sync, P: Send>(
+    cells: &[C],
+    threads: usize,
+    run: impl Fn(C, usize) -> Result<P> + Sync,
+) -> Result<Vec<P>> {
+    if cells.is_empty() {
+        return Ok(Vec::new());
+    }
+    let workers = crate::util::threads::resolve(threads).min(cells.len()).max(1);
+    // one worker: let the cell's engine use the full thread budget instead
+    let engine_threads = if workers > 1 { 1 } else { threads };
+    let _restore_cap = crate::tensor::ops::ThreadCapGuard::set(engine_threads);
+    let mut results: Vec<Option<Result<P>>> =
+        (0..cells.len()).map(|_| None).collect();
+    if workers == 1 {
+        for (slot, &cell) in results.iter_mut().zip(cells) {
+            *slot = Some(run(cell, engine_threads));
+        }
+    } else {
+        let per = cells.len().div_ceil(workers);
+        let run = &run;
+        std::thread::scope(|scope| {
+            for (t, chunk) in results.chunks_mut(per).enumerate() {
+                scope.spawn(move || {
+                    for (i, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(run(cells[t * per + i], engine_threads));
+                    }
+                });
+            }
+        });
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every grid cell ran"))
+        .collect()
 }
 
 /// Train one network per (bits, sigma) grid point on the photonic backend
@@ -116,46 +180,71 @@ pub fn physics_sweep(
         .iter()
         .flat_map(|&b| sigma_list.iter().map(move |&s| (b, s)))
         .collect();
-    if cells.is_empty() {
-        return Ok(Vec::new());
-    }
-    let workers = crate::util::threads::resolve(settings.threads)
-        .min(cells.len())
-        .max(1);
-    // one worker: let the cell's engine use the full thread budget instead
-    let engine_threads = if workers > 1 { 1 } else { settings.threads };
-    // cap the digital GEMM kernels to the same per-cell plan for the
-    // duration of the sweep (workers x engine_threads ≈ the budget);
-    // results are unaffected either way — this is purely an
-    // oversubscription guard. `ThreadCapGuard` serializes this scope
-    // against every other cap-scoped user of the process-global cap and
-    // restores the exact prior value on every exit path, including a
-    // panicking cell.
-    let _restore_cap = crate::tensor::ops::ThreadCapGuard::set(engine_threads);
-    let mut results: Vec<Option<Result<PhysicsPoint>>> =
-        (0..cells.len()).map(|_| None).collect();
-    if workers == 1 {
-        for (slot, &(bits, sigma)) in results.iter_mut().zip(&cells) {
-            *slot = Some(run_cell(settings, bits, sigma, engine_threads));
-        }
-    } else {
-        let per = cells.len().div_ceil(workers);
-        let cells = &cells;
-        std::thread::scope(|scope| {
-            for (t, chunk) in results.chunks_mut(per).enumerate() {
-                scope.spawn(move || {
-                    for (i, slot) in chunk.iter_mut().enumerate() {
-                        let (bits, sigma) = cells[t * per + i];
-                        *slot = Some(run_cell(settings, bits, sigma, engine_threads));
-                    }
-                });
-            }
-        });
-    }
-    results
-        .into_iter()
-        .map(|r| r.expect("every grid cell ran"))
-        .collect()
+    shard_cells(&cells, settings.threads, |(bits, sigma), engine_threads| {
+        let mut physics = settings.base;
+        physics.dac_bits = bits;
+        physics.adc_bits = bits;
+        physics.sigma = sigma;
+        let run = train_under(settings, physics, engine_threads)?;
+        crate::log_info!(
+            "physics point dac/adc={bits} sigma={sigma}: test acc {:.4}",
+            run.test_acc
+        );
+        Ok(PhysicsPoint {
+            dac_bits: bits,
+            adc_bits: bits,
+            sigma,
+            test_acc: run.test_acc,
+            train_wall_s: run.wall_s,
+        })
+    })
+}
+
+/// Recalibration threshold that disarms the scheduler: finite (so
+/// [`PhysicsConfig::validate`] accepts it) but beyond any reachable
+/// telemetry-estimated weight error.
+const RECAL_OFF: f64 = 1e30;
+
+/// Train one network per drift rate × recalibration-scheduler {on, off}
+/// and report final test accuracy plus the scheduler's telemetry — the
+/// device-lifetime ablation. The recal-ON arm uses the base physics'
+/// threshold (or [`RECAL_THRESHOLD_DEFAULT`] if the base never set one);
+/// the OFF arm raises it out of reach so drift goes uncompensated.
+/// Sharded and ordered like [`physics_sweep`] (rate-major, ON before OFF).
+pub fn drift_sweep(
+    settings: &SweepSettings,
+    rate_list: &[f64],
+) -> Result<Vec<DriftPoint>> {
+    let cells: Vec<(f64, bool)> = rate_list
+        .iter()
+        .flat_map(|&r| [(r, true), (r, false)])
+        .collect();
+    shard_cells(&cells, settings.threads, |(rate, recal), engine_threads| {
+        let mut physics = settings.base;
+        physics.drift_rate = rate;
+        physics.recal_threshold = if !recal {
+            RECAL_OFF
+        } else if settings.base.recal_threshold > 0.0 {
+            settings.base.recal_threshold
+        } else {
+            RECAL_THRESHOLD_DEFAULT
+        };
+        let run = train_under(settings, physics, engine_threads)?;
+        crate::log_info!(
+            "drift point rate={rate} recal={}: test acc {:.4} ({} recals)",
+            if recal { "on" } else { "off" },
+            run.test_acc,
+            run.telemetry.recal_events,
+        );
+        Ok(DriftPoint {
+            drift_rate: rate,
+            recal,
+            test_acc: run.test_acc,
+            recal_events: run.telemetry.recal_events,
+            recal_cycles: run.telemetry.recal_cycles,
+            train_wall_s: run.wall_s,
+        })
+    })
 }
 
 /// Render the sweep as the paper-style fixed-width table (one row per
@@ -172,6 +261,26 @@ pub fn render_table(points: &[PhysicsPoint]) -> String {
             "{bits:>12}   {:<7.4}   {:<8.4}   {}\n",
             p.sigma,
             p.test_acc,
+            fmt_ns(p.train_wall_s * 1e9),
+        ));
+    }
+    s
+}
+
+/// Render the drift sweep as a fixed-width table (one row per grid
+/// point): walk rate, scheduler arm, accuracy, recal count + cycle cost.
+pub fn render_drift_table(points: &[DriftPoint]) -> String {
+    let mut s = String::from(
+        "drift_rate   recal   test_acc   recals   recal_cycles   train_wall\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{:<10}   {:<5}   {:<8.4}   {:>6}   {:>12}   {}\n",
+            p.drift_rate,
+            if p.recal { "on" } else { "off" },
+            p.test_acc,
+            p.recal_events,
+            p.recal_cycles,
             fmt_ns(p.train_wall_s * 1e9),
         ));
     }
@@ -236,6 +345,63 @@ mod tests {
                 p.test_acc
             );
         }
+    }
+
+    #[test]
+    fn drift_sweep_ablates_the_recalibration_scheduler() {
+        // enough dispatches to cross several drift ticks even on the
+        // small per-cell budget
+        let s = SweepSettings { epochs: 2, ..settings() };
+        let pts = drift_sweep(&s, &[0.0, 0.05]).unwrap();
+        assert_eq!(pts.len(), 4, "two rates x (recal on, off)");
+        // deterministic order: rate-major, scheduler ON before OFF
+        let arms: Vec<(f64, bool)> =
+            pts.iter().map(|p| (p.drift_rate, p.recal)).collect();
+        assert_eq!(
+            arms,
+            [(0.0, true), (0.0, false), (0.05, true), (0.05, false)]
+        );
+        for p in &pts {
+            assert!(p.test_acc.is_finite() && (0.0..=1.0).contains(&p.test_acc));
+        }
+        // a drift-free device never recalibrates, and the scheduler arm
+        // is inert: both cells run the identical trajectory
+        assert_eq!(pts[0].recal_events, 0);
+        assert_eq!(pts[1].recal_events, 0);
+        assert_eq!(pts[0].test_acc.to_bits(), pts[1].test_acc.to_bits());
+        // a drift of 0.05 rad/√tick is ~6 in weight units: the armed
+        // scheduler must fire (and charge cycles), the disarmed one not
+        assert!(pts[2].recal_events > 0, "scheduler never fired");
+        assert!(pts[2].recal_cycles > 0);
+        assert_eq!(pts[3].recal_events, 0);
+        assert_eq!(pts[3].recal_cycles, 0);
+    }
+
+    #[test]
+    fn drift_table_renders_one_row_per_point() {
+        let pts = [
+            DriftPoint {
+                drift_rate: 0.0,
+                recal: true,
+                test_acc: 0.97,
+                recal_events: 0,
+                recal_cycles: 0,
+                train_wall_s: 1.0,
+            },
+            DriftPoint {
+                drift_rate: 1e-4,
+                recal: false,
+                test_acc: 0.42,
+                recal_events: 0,
+                recal_cycles: 0,
+                train_wall_s: 1.0,
+            },
+        ];
+        let t = render_drift_table(&pts);
+        assert_eq!(t.lines().count(), 3, "{t}");
+        assert!(t.contains("off"), "{t}");
+        assert!(t.contains("0.4200"), "{t}");
+        assert!(t.contains("recal_cycles"), "{t}");
     }
 
     #[test]

@@ -68,7 +68,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
             "Fig. 5(c): accuracy vs gradient effective resolution",
             &sweep_specs(), rest, wants_help, cmd_sweep),
         "sweep-physics" => run_or_help(cmd,
-            "in-situ photonic training accuracy vs DAC/ADC bits x read-noise sigma",
+            "in-situ photonic training accuracy vs DAC/ADC bits x read-noise \
+             sigma, or vs thermal drift with --drift-rates",
             &sweep_physics_specs(), rest, wants_help, cmd_sweep_physics),
         "characterize" => run_or_help(cmd,
             "Fig. 3(b,c): MRR transmission profile + single-MRR multiplies",
@@ -174,7 +175,7 @@ const BACKEND_SPEC: ArgSpec = ArgSpec::opt(
 const PHYSICS_SPEC: ArgSpec = ArgSpec::opt(
     "physics",
     "paper",
-    "photonic-backend device physics: ideal | paper, with optional key=value overrides bank=RxC, dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N (e.g. 'ideal,dac=6,sigma=0.05'); ignored by the other backends",
+    "photonic-backend device physics: ideal | paper (alias: static) | drifty, with optional key=value overrides bank=RxC, dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N, drift:rate=R (thermal walk, rad/\u{221a}tick), drift:aging=A (calibration aging, rad/tick), drift:recal=T (online recalibration threshold in weight units; drives the scheduler) (e.g. 'drifty,drift:rate=1e-3'); ignored by the other backends",
 );
 
 const THREADS_SPEC: ArgSpec = ArgSpec::opt(
@@ -770,6 +771,14 @@ fn sweep_physics_specs() -> Vec<ArgSpec> {
             "0,0.05,0.1,0.2",
             "comma-separated read-noise sigmas (normalised domain)",
         ),
+        ArgSpec::opt(
+            "drift-rates",
+            "",
+            "comma-separated thermal drift rates (rad/\u{221a}tick): when set, \
+             sweeps the device-lifetime axis instead — each rate trains with \
+             the recalibration scheduler on AND off (bits/sigmas come from \
+             --physics)",
+        ),
         ArgSpec::opt("epochs", "2", "epochs per grid point"),
         ArgSpec::opt("seed", "1", "master seed"),
         ArgSpec::opt("n-train", "512", "training examples per point"),
@@ -811,6 +820,25 @@ fn cmd_sweep_physics(a: &Args) -> Result<()> {
         },
         threads: a.usize("threads")?,
     };
+    let drift_rates = a.f64_list("drift-rates")?;
+    for r in &drift_rates {
+        if !(*r >= 0.0 && r.is_finite()) {
+            return Err(Error::Cli(format!(
+                "--drift-rates: expected finite non-negative rates, got '{r}'"
+            )));
+        }
+    }
+    if !drift_rates.is_empty() {
+        // lifetime axis: drift rate x recalibration scheduler {on, off}
+        let pts = experiments::drift_sweep(&settings, &drift_rates)?;
+        println!(
+            "device-lifetime ablation on '{}' (base physics {}):",
+            settings.config,
+            base.describe()
+        );
+        print!("{}", experiments::render_drift_table(&pts));
+        return Ok(());
+    }
     let pts = experiments::physics_sweep(&settings, &bits, &sigmas)?;
     println!(
         "in-situ photonic DFA on '{}' (base physics {}):",

@@ -1,0 +1,605 @@
+//! Device-lifetime physics: thermal phase drift, calibration aging, fault
+//! injection, and the online recalibration scheduler.
+//!
+//! The §4 testbed only stays usable because its MRR weight bank is
+//! continuously re-locked against thermal drift and calibration decay
+//! (refs 34–36; Launay et al., arXiv:2006.01475 keep a drifting analog
+//! co-processor inside a production training loop the same way). The
+//! static bank of the earlier engine revisions never exercised that
+//! machinery: this module makes the device's physics a function of *device
+//! time* and gives the runtime a scheduler that buys the calibration back.
+//!
+//! ## Device-time contract
+//!
+//! Drift advances in **ticks** of [`DRIFT_TICK_CYCLES`] optical cycles,
+//! derived from the engine's telemetry cycle counter — never from
+//! wall-clock time. Two consequences, both load-bearing:
+//!
+//! * runs are bit-reproducible: the same dispatch sequence produces the
+//!   same tick sequence at any `--threads` value (per-dispatch cycle
+//!   tallies are thread-invariant), and every per-tick increment is drawn
+//!   from a counter-keyed stream ([`Pcg64::keyed`] over
+//!   `(seed, tick, ring)`) — a pure function of the coordinates, not of
+//!   how the run was scheduled or resumed;
+//! * between ticks the device is frozen, so a serving process answers
+//!   bit-identically within a calibration epoch, and an idle device does
+//!   not age (only fired cycles advance its clock).
+//!
+//! Recalibration cycles are tallied separately ([`DriftModel::recal_cycles`])
+//! and deliberately do **not** advance device time: charging them into the
+//! drift clock would make each recalibration re-drift the bank it just
+//! fixed, a runaway feedback with no physical counterpart (the lock loop
+//! runs concurrently with compute on the real chip).
+//!
+//! ## Model
+//!
+//! Each ring accumulates an uncompensated phase error `δᵣ` relative to the
+//! calibration it was last locked against:
+//!
+//! ```text
+//!   δᵣ(t+1) = δᵣ(t) + rate · 𝒩(seed, t, r) + aging · dirᵣ
+//! ```
+//!
+//! `rate` is a per-√tick random-walk amplitude (ambient thermal wander);
+//! `aging` is a deterministic per-tick creep along a per-ring direction
+//! `dirᵣ` redrawn each calibration epoch (LUT decay: the stored inverse
+//! slowly walks away from the device). The weight-domain error estimate
+//! the scheduler watches is `rms(δ) · slope`, with `slope` the
+//! steep-flank weight-per-radian scale of the ring design
+//! ([`weight_slope`]) — the same first-order sensitivity the §4 lock loop
+//! observes on its monitor photodiode.
+//!
+//! When the estimate crosses the configured threshold the runtime re-runs
+//! the §4 calibration protocol ([`super::calibration::CalibrationTable`]
+//! sweep + a [`super::calibration::FeedbackController`] verification
+//! lock), zeroes `δ`, and charges the protocol's readout cycles to the
+//! recalibration tally so `pdfa report` prices the true lifetime cost.
+
+use crate::util::rng::Pcg64;
+use crate::{Error, Result};
+
+use super::mrr::MrrDesign;
+
+/// Optical cycles per device-time tick. Chosen so one training step on a
+/// small bank advances device time by O(1) ticks: drift is slow against
+/// the 10 GHz cycle clock (thermal τ ≈ 170 µs ≈ 1.7 M cycles), but a
+/// coarser tick would quantise the fault schedules of the test harness.
+pub const DRIFT_TICK_CYCLES: u64 = 1_000;
+
+/// Domain separators: the thermal walk, the aging directions and the
+/// recalibration protocol draw from disjoint keyed-stream families even
+/// when `(tick, ring)` coordinates collide.
+const DOMAIN_THERMAL: u64 = 0x7d1f_7e12_0d41_c3a7;
+const DOMAIN_AGING: u64 = 0xa91e_55b6_21f0_9d04;
+const DOMAIN_RECAL: u64 = 0x3ec4_1bb0_57ad_66e9;
+
+/// Serialized drift-state header (versioned independently of the
+/// checkpoint container so the engine blob can evolve on its own).
+const STATE_MAGIC: [u8; 4] = *b"DRF1";
+
+/// First-order weight-per-radian sensitivity of a ring design's locking
+/// flank: the full weight swing (≈ 2) happens over about one FWHM of
+/// detuning, so `2 / FWHM` is the scale that converts an uncompensated
+/// phase error into the weight error the lock monitor would read.
+pub fn weight_slope(design: &MrrDesign) -> f64 {
+    2.0 / design.fwhm_phase()
+}
+
+/// One scripted fault of the injection harness (`tests/integration_drift.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A sudden uniform phase jump on every ring (e.g. a package
+    /// temperature step): adds `phase` radians to all accumulated errors.
+    StepDrift { phase: f64 },
+    /// Ambient drift accelerates: adds `rate` to the per-√tick walk
+    /// amplitude from the fault tick onward.
+    RampDrift { rate: f64 },
+    /// Ring `ring` dies with its weight stuck at `weight` — recalibration
+    /// cannot recover it, so the scheduler excludes it from the error
+    /// estimate (a dead ring must degrade accuracy, not trigger an
+    /// endless recalibration loop).
+    DeadRing { ring: usize, weight: f64 },
+}
+
+/// A fault scheduled at a device-time tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_tick: u64,
+    pub kind: FaultKind,
+}
+
+/// Per-ring drift state + the online recalibration scheduler.
+///
+/// Owned by the photonic engine behind a mutex (one physical chip per
+/// engine) and advanced by every artifact dispatch; see the module docs
+/// for the device-time and determinism contracts. Fault schedules are
+/// test-harness inputs and are *not* part of the serialized state — a
+/// resumed run replays them from its own script, while the accumulated
+/// consequences (phases, stuck rings, ramp rate) are restored exactly.
+#[derive(Debug)]
+pub struct DriftModel {
+    rate: f64,
+    aging: f64,
+    threshold: f64,
+    seed: u64,
+    rings: usize,
+    /// Weight-per-radian scale of the bank's ring design.
+    slope: f64,
+    /// Device time (ticks) the state below is valid at.
+    tick: u64,
+    /// Tick of the last (re)calibration: the epoch the aging directions
+    /// are keyed by.
+    cal_tick: u64,
+    /// Accumulated uncompensated phase error per ring (radians).
+    phases: Vec<f64>,
+    /// Per-epoch aging direction per ring (refreshed on recalibration).
+    aging_dir: Vec<f64>,
+    /// Extra walk amplitude accumulated from `RampDrift` faults.
+    extra_rate: f64,
+    /// Dead rings: `(ring index, stuck weight)`.
+    stuck: Vec<(usize, f64)>,
+    /// Pending scripted faults, sorted by tick ascending.
+    faults: Vec<FaultEvent>,
+    /// Index of the next unapplied fault.
+    next_fault: usize,
+    /// Completed recalibrations.
+    pub recal_events: u64,
+    /// Readout cycles charged by those recalibrations (priced by the
+    /// energy model next to the compute cycles, but kept out of the
+    /// device-time clock — see the module docs).
+    pub recal_cycles: u64,
+}
+
+impl DriftModel {
+    /// Model for a `rows × cols` bank of `design`-shaped rings. `rate` is
+    /// the thermal walk amplitude (radians/√tick), `aging` the epoch-keyed
+    /// creep (radians/tick), `threshold` the weight-domain error estimate
+    /// past which the scheduler fires (0 disables recalibration).
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        rate: f64,
+        aging: f64,
+        threshold: f64,
+        seed: u64,
+        design: &MrrDesign,
+    ) -> DriftModel {
+        let rings = rows * cols;
+        let mut m = DriftModel {
+            rate,
+            aging,
+            threshold,
+            seed,
+            rings,
+            slope: weight_slope(design),
+            tick: 0,
+            cal_tick: 0,
+            phases: vec![0.0; rings],
+            aging_dir: vec![0.0; rings],
+            extra_rate: 0.0,
+            stuck: Vec::new(),
+            faults: Vec::new(),
+            next_fault: 0,
+            recal_events: 0,
+            recal_cycles: 0,
+        };
+        m.refresh_aging_dirs();
+        m
+    }
+
+    /// Whether any mechanism can change the device state over time. Used
+    /// by the runtime to skip the per-tick work entirely for static
+    /// configurations (the pre-lifetime engine behaviour, bit-exactly).
+    pub fn is_active(&self) -> bool {
+        self.rate > 0.0
+            || self.aging > 0.0
+            || self.extra_rate > 0.0
+            || self.next_fault < self.faults.len()
+            || self.phases.iter().any(|&p| p != 0.0)
+            || !self.stuck.is_empty()
+    }
+
+    /// Device time in ticks.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Per-ring accumulated phase errors (radians), row-major.
+    pub fn phases(&self) -> &[f64] {
+        &self.phases
+    }
+
+    /// Dead rings as `(ring, stuck weight)` pairs.
+    pub fn stuck(&self) -> &[(usize, f64)] {
+        &self.stuck
+    }
+
+    /// Schedule scripted faults (test harness). Events may be passed in
+    /// any order; events at or before the current tick apply on the next
+    /// advance. `DeadRing` indices must address the bank.
+    pub fn inject(&mut self, events: &[FaultEvent]) -> Result<()> {
+        for ev in events {
+            if let FaultKind::DeadRing { ring, .. } = ev.kind {
+                if ring >= self.rings {
+                    return Err(Error::Photonics(format!(
+                        "fault injection: ring {ring} outside the {}-ring bank",
+                        self.rings
+                    )));
+                }
+            }
+        }
+        self.faults.truncate(self.next_fault);
+        self.faults.extend_from_slice(events);
+        self.faults[self.next_fault..].sort_by_key(|e| e.at_tick);
+        Ok(())
+    }
+
+    fn refresh_aging_dirs(&mut self) {
+        for (r, d) in self.aging_dir.iter_mut().enumerate() {
+            *d = Pcg64::keyed(self.seed ^ DOMAIN_AGING, self.cal_tick, r as u64)
+                .gaussian();
+        }
+    }
+
+    fn apply_faults_through(&mut self, t: u64) {
+        while self.next_fault < self.faults.len()
+            && self.faults[self.next_fault].at_tick <= t
+        {
+            match self.faults[self.next_fault].kind {
+                FaultKind::StepDrift { phase } => {
+                    let p = if phase.is_finite() { phase } else { 0.0 };
+                    for d in &mut self.phases {
+                        *d += p;
+                    }
+                }
+                FaultKind::RampDrift { rate } => {
+                    if rate.is_finite() {
+                        self.extra_rate += rate.max(0.0);
+                    }
+                }
+                FaultKind::DeadRing { ring, weight } => {
+                    let w = if weight.is_finite() { weight } else { 0.0 };
+                    if let Some(s) = self.stuck.iter_mut().find(|s| s.0 == ring) {
+                        s.1 = w;
+                    } else {
+                        self.stuck.push((ring, w));
+                    }
+                }
+            }
+            self.next_fault += 1;
+        }
+    }
+
+    /// Advance device time to `tick` (monotone; earlier ticks are a
+    /// no-op). Each elapsed tick applies its scheduled faults and one
+    /// keyed walk/creep increment per ring. The result is a pure function
+    /// of `(seed, fault schedule, cal_tick, tick)` — independent of how
+    /// the interval was partitioned across calls, which is what makes
+    /// resumed and differently-threaded runs bit-identical.
+    pub fn advance_to(&mut self, tick: u64) {
+        while self.tick < tick {
+            let t = self.tick + 1;
+            self.apply_faults_through(t);
+            let walk = self.rate + self.extra_rate;
+            if walk > 0.0 || self.aging > 0.0 {
+                for (r, d) in self.phases.iter_mut().enumerate() {
+                    if walk > 0.0 {
+                        *d += walk
+                            * Pcg64::keyed(self.seed ^ DOMAIN_THERMAL, t, r as u64)
+                                .gaussian();
+                    }
+                    *d += self.aging * self.aging_dir[r];
+                }
+            }
+            self.tick = t;
+        }
+    }
+
+    /// Telemetry-facing weight-domain error estimate: `rms(δ) · slope`
+    /// over the live (non-stuck) rings. Dead rings are excluded — no
+    /// amount of recalibration recovers them, and counting them would
+    /// latch the scheduler into a permanent recalibration loop.
+    pub fn estimated_weight_error(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (r, &d) in self.phases.iter().enumerate() {
+            if self.stuck.iter().any(|s| s.0 == r) {
+                continue;
+            }
+            sum += d * d;
+            n += 1;
+        }
+        if n == 0 {
+            return 0.0;
+        }
+        (sum / n as f64).sqrt() * self.slope
+    }
+
+    /// Scheduler predicate: fire when a threshold is configured and the
+    /// estimate has crossed it.
+    pub fn should_recalibrate(&self) -> bool {
+        self.threshold > 0.0 && self.estimated_weight_error() >= self.threshold
+    }
+
+    /// The keyed measurement stream for the next recalibration's §4
+    /// protocol rerun: a pure function of `(seed, completed recals)`, so
+    /// every bank replica and every resumption re-derives the same
+    /// protocol trajectory.
+    pub fn recal_rng(&self) -> Pcg64 {
+        Pcg64::keyed(self.seed ^ DOMAIN_RECAL, self.recal_events, 0)
+    }
+
+    /// Book a completed recalibration: the accumulated compensable error
+    /// is re-locked away, the aging directions re-key to the new epoch,
+    /// and `cycles` readout cycles join the lifetime tally.
+    pub fn complete_recalibration(&mut self, cycles: u64) {
+        self.phases.fill(0.0);
+        self.cal_tick = self.tick;
+        self.recal_events += 1;
+        self.recal_cycles = self.recal_cycles.saturating_add(cycles);
+        self.refresh_aging_dirs();
+    }
+
+    /// Serialize the resumable state (everything except the scripted
+    /// fault schedule — see the struct docs). Format: `DRF1`, then
+    /// little-endian `tick, cal_tick, recal_events, recal_cycles: u64`,
+    /// `extra_rate: f64`, `n_phases: u64` + phases, `n_stuck: u64` +
+    /// `(ring: u64, weight: f64)` pairs.
+    pub fn state_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + 8 * (6 + self.phases.len()) + 16 * self.stuck.len());
+        out.extend_from_slice(&STATE_MAGIC);
+        for v in [self.tick, self.cal_tick, self.recal_events, self.recal_cycles] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.extra_rate.to_le_bytes());
+        out.extend_from_slice(&(self.phases.len() as u64).to_le_bytes());
+        for p in &self.phases {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.stuck.len() as u64).to_le_bytes());
+        for &(r, w) in &self.stuck {
+            out.extend_from_slice(&(r as u64).to_le_bytes());
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Restore a [`Self::state_bytes`] blob into this model. The model
+    /// must describe the same bank geometry the blob was taken from.
+    pub fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut cur = StateCursor { bytes, pos: 0 };
+        let magic = cur.take(4)?;
+        if magic != STATE_MAGIC {
+            return Err(Error::Format("drift state: bad magic".into()));
+        }
+        let tick = cur.u64()?;
+        let cal_tick = cur.u64()?;
+        let recal_events = cur.u64()?;
+        let recal_cycles = cur.u64()?;
+        let extra_rate = cur.f64()?;
+        let n = cur.u64()? as usize;
+        if n != self.phases.len() {
+            return Err(Error::Format(format!(
+                "drift state: {n} rings in blob, bank has {}",
+                self.phases.len()
+            )));
+        }
+        let mut phases = vec![0.0f64; n];
+        for p in phases.iter_mut() {
+            *p = cur.f64()?;
+        }
+        let n_stuck = cur.u64()? as usize;
+        let mut stuck = Vec::with_capacity(n_stuck);
+        for _ in 0..n_stuck {
+            let r = cur.u64()? as usize;
+            let w = cur.f64()?;
+            if r >= self.rings {
+                return Err(Error::Format(format!(
+                    "drift state: stuck ring {r} outside the {}-ring bank",
+                    self.rings
+                )));
+            }
+            stuck.push((r, w));
+        }
+        if cur.pos != bytes.len() {
+            return Err(Error::Format("drift state: trailing bytes".into()));
+        }
+        self.tick = tick;
+        self.cal_tick = cal_tick;
+        self.recal_events = recal_events;
+        self.recal_cycles = recal_cycles;
+        self.extra_rate = extra_rate;
+        self.phases = phases;
+        self.stuck = stuck;
+        self.refresh_aging_dirs();
+        Ok(())
+    }
+}
+
+/// Bounds-checked little-endian reader for [`DriftModel::restore_state`].
+struct StateCursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StateCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            return Err(Error::Format("drift state: truncated".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(rate: f64, aging: f64, threshold: f64) -> DriftModel {
+        DriftModel::new(4, 3, rate, aging, threshold, 7, &MrrDesign::high_finesse())
+    }
+
+    #[test]
+    fn advance_is_partition_invariant() {
+        // one jump vs many small steps must land on identical state: the
+        // increments are keyed by (tick, ring), not by call pattern
+        let mut a = model(1e-3, 1e-5, 0.0);
+        let mut b = model(1e-3, 1e-5, 0.0);
+        a.advance_to(37);
+        for t in 0..=37 {
+            b.advance_to(t);
+        }
+        assert_eq!(a.phases(), b.phases());
+        assert_eq!(a.tick(), b.tick());
+        // earlier ticks are a no-op
+        a.advance_to(10);
+        assert_eq!(a.tick(), 37);
+    }
+
+    #[test]
+    fn error_estimate_grows_and_recal_resets_it() {
+        let mut m = model(1e-3, 0.0, 0.05);
+        assert_eq!(m.estimated_weight_error(), 0.0);
+        assert!(!m.should_recalibrate());
+        m.advance_to(200);
+        let e1 = m.estimated_weight_error();
+        assert!(e1 > 0.0, "{e1}");
+        m.advance_to(800);
+        let e2 = m.estimated_weight_error();
+        assert!(e2 > e1, "walk rms should grow: {e1} -> {e2}");
+        assert!(m.should_recalibrate(), "estimate {e2} vs threshold 0.05");
+        m.complete_recalibration(1234);
+        assert_eq!(m.estimated_weight_error(), 0.0);
+        assert_eq!(m.recal_events, 1);
+        assert_eq!(m.recal_cycles, 1234);
+        // the walk resumes from zero in a fresh epoch
+        m.advance_to(900);
+        assert!(m.estimated_weight_error() > 0.0);
+        assert!(m.estimated_weight_error() < e2);
+    }
+
+    #[test]
+    fn weight_slope_matches_flank_scale() {
+        let d = MrrDesign::high_finesse();
+        let s = weight_slope(&d);
+        assert!((s - 2.0 / d.fwhm_phase()).abs() < 1e-12);
+        // finesse ~368 -> FWHM ~0.017 rad -> slope in the ~100/rad decade
+        assert!(s > 50.0 && s < 500.0, "{s}");
+        // low-finesse rings are gentler
+        assert!(weight_slope(&MrrDesign::default()) < s);
+    }
+
+    #[test]
+    fn faults_apply_at_their_ticks() {
+        let mut m = model(0.0, 0.0, 0.0);
+        m.inject(&[
+            FaultEvent { at_tick: 5, kind: FaultKind::StepDrift { phase: 0.01 } },
+            FaultEvent { at_tick: 10, kind: FaultKind::DeadRing { ring: 2, weight: 0.4 } },
+            FaultEvent { at_tick: 3, kind: FaultKind::RampDrift { rate: 1e-3 } },
+        ])
+        .unwrap();
+        assert!(m.is_active(), "pending faults make the model active");
+        m.advance_to(2);
+        assert!(m.phases().iter().all(|&p| p == 0.0));
+        m.advance_to(4); // ramp live at t=3, step not yet
+        assert!(m.phases().iter().all(|&p| p.abs() < 0.009));
+        m.advance_to(6);
+        // every ring carries the 0.01 step plus the small ramp walk
+        assert!(m.phases().iter().all(|&p| (p - 0.01).abs() < 0.01));
+        assert!(m.stuck().is_empty());
+        m.advance_to(10);
+        assert_eq!(m.stuck(), &[(2, 0.4)]);
+        // dead ring is excluded from the estimate
+        let with_dead = m.estimated_weight_error();
+        assert!(with_dead.is_finite());
+        // out-of-range ring is rejected up front
+        let err = m
+            .inject(&[FaultEvent {
+                at_tick: 99,
+                kind: FaultKind::DeadRing { ring: 99, weight: 0.0 },
+            }])
+            .unwrap_err();
+        assert!(err.to_string().contains("ring 99"), "{err}");
+        // non-finite stuck weight sanitizes to a dark ring, not a NaN
+        let mut m2 = model(0.0, 0.0, 0.0);
+        m2.inject(&[FaultEvent {
+            at_tick: 1,
+            kind: FaultKind::DeadRing { ring: 0, weight: f64::NAN },
+        }])
+        .unwrap();
+        m2.advance_to(1);
+        assert_eq!(m2.stuck(), &[(0, 0.0)]);
+    }
+
+    #[test]
+    fn inactive_model_is_free() {
+        let mut m = model(0.0, 0.0, 0.05);
+        assert!(!m.is_active());
+        m.advance_to(1_000_000);
+        assert_eq!(m.estimated_weight_error(), 0.0);
+        assert!(!m.should_recalibrate());
+    }
+
+    #[test]
+    fn state_round_trips_exactly() {
+        let mut m = model(1e-3, 1e-5, 0.05);
+        m.inject(&[
+            FaultEvent { at_tick: 3, kind: FaultKind::RampDrift { rate: 5e-4 } },
+            FaultEvent { at_tick: 8, kind: FaultKind::DeadRing { ring: 1, weight: -0.2 } },
+        ])
+        .unwrap();
+        m.advance_to(50);
+        m.complete_recalibration(777);
+        m.advance_to(90);
+        let blob = m.state_bytes();
+
+        let mut fresh = model(1e-3, 1e-5, 0.05);
+        fresh.restore_state(&blob).unwrap();
+        assert_eq!(fresh.tick(), m.tick());
+        assert_eq!(fresh.phases(), m.phases());
+        assert_eq!(fresh.stuck(), m.stuck());
+        assert_eq!(fresh.recal_events, m.recal_events);
+        assert_eq!(fresh.recal_cycles, m.recal_cycles);
+        // restored and original continue identically: same keyed streams
+        let mut orig = m;
+        orig.advance_to(120);
+        fresh.advance_to(120);
+        assert_eq!(fresh.phases(), orig.phases());
+
+        // malformed blobs fail cleanly
+        assert!(fresh.restore_state(&blob[..blob.len() - 1]).is_err());
+        let mut trailing = blob.clone();
+        trailing.push(0);
+        assert!(fresh.restore_state(&trailing).is_err());
+        let mut bad_magic = blob.clone();
+        bad_magic[0] = b'X';
+        assert!(fresh.restore_state(&bad_magic).is_err());
+        // geometry mismatch is rejected
+        let mut small =
+            DriftModel::new(2, 2, 1e-3, 0.0, 0.0, 7, &MrrDesign::high_finesse());
+        assert!(small.restore_state(&blob).is_err());
+    }
+
+    #[test]
+    fn recal_rng_is_epoch_keyed() {
+        let mut m = model(1e-3, 0.0, 0.01);
+        let a1 = m.recal_rng().gaussian();
+        let a2 = m.recal_rng().gaussian();
+        assert_eq!(a1, a2, "same epoch, same protocol stream");
+        m.complete_recalibration(1);
+        let b = m.recal_rng().gaussian();
+        assert_ne!(a1, b, "next epoch re-keys the protocol stream");
+    }
+}

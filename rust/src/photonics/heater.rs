@@ -173,6 +173,52 @@ mod tests {
     }
 
     #[test]
+    fn step_converges_to_steady_state_for_both_actuators() {
+        // device-lifetime property: the first-order transient of either
+        // technology contracts monotonically onto steady_state_phase, and
+        // settle_time(frac) really is the time after which the residual
+        // is below frac of the commanded swing
+        for (act, dt) in [
+            (Actuator::thermal(), THERMAL_TAU_S / 3.0),
+            (Actuator::carrier_depletion(), 25e-12 / 3.0),
+        ] {
+            for drive in [0.25, 0.6, 1.0] {
+                let mut a = act.clone();
+                let target = a.steady_state_phase(drive);
+                a.set_drive(drive);
+                let mut prev = (a.phase() - target).abs();
+                assert!(prev > 0.0, "{:?} starts away from target", a.kind);
+                let mut steps = 0usize;
+                while (a.phase() - target).abs() > 1e-9 * target.max(1e-12) {
+                    a.step(dt);
+                    let err = (a.phase() - target).abs();
+                    assert!(
+                        err < prev || err == 0.0,
+                        "{:?} drive={drive}: error grew {prev} -> {err}",
+                        a.kind
+                    );
+                    prev = err;
+                    steps += 1;
+                    assert!(steps < 10_000, "{:?} failed to converge", a.kind);
+                }
+                // settle_time contract: after t99 of stepping, within 1%
+                let mut b = act.clone();
+                b.set_drive(drive);
+                let t99 = b.settle_time(0.01);
+                let n = (t99 / dt).ceil() as usize;
+                for _ in 0..n {
+                    b.step(dt);
+                }
+                assert!(
+                    (b.phase() - target).abs() <= 0.011 * target,
+                    "{:?} drive={drive}: not settled after t99",
+                    b.kind
+                );
+            }
+        }
+    }
+
+    #[test]
     fn settle_time_is_tau_scaled() {
         let act = Actuator::thermal();
         let t99 = act.settle_time(0.01);

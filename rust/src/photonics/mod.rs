@@ -18,12 +18,15 @@
 //! * [`crosstalk`]  — inter-channel crosstalk from MRR finesse/spacing
 //! * [`weight_bank`]— the full M×N photonic weight bank (Figs. 3(d), 4(b))
 //! * [`noise`]      — shared noise-source model
+//! * [`drift`]      — device-lifetime physics: thermal drift, calibration
+//!   aging, fault injection and the online recalibration scheduler
 
 pub mod bpd;
 pub mod calibration;
 pub mod constants;
 pub mod converters;
 pub mod crosstalk;
+pub mod drift;
 pub mod heater;
 pub mod laser;
 pub mod mrr;

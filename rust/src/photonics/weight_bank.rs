@@ -19,7 +19,7 @@
 //! the identical convention on the L1 side).
 
 use super::bpd::Bpd;
-use super::calibration::{CalibrationTable, FeedbackController};
+use super::calibration::{sweep_cost, CalibrationTable, FeedbackController};
 use super::converters::Quantizer;
 use super::crosstalk::CrosstalkModel;
 use super::heater::Actuator;
@@ -120,8 +120,7 @@ struct Ring {
 /// A device-level weight bank.
 pub struct WeightBank {
     pub cfg: BankConfig,
-    /// Device identity (retained for drift modelling / diagnostics).
-    #[allow(dead_code)]
+    /// Device identity (drift modelling / diagnostics).
     design: MrrDesign,
     actuator: Actuator,
     rings: Vec<Ring>, // row-major rows × cols
@@ -139,6 +138,15 @@ pub struct WeightBank {
     scratch_row_w: Vec<f32>,
     scratch_phis: Vec<f64>,
     rng: Pcg64,
+    /// Per-ring thermal drift phase (radians, row-major), applied on top of
+    /// whatever the actuator reaches at inscription time. Fed by the
+    /// runtime's [`crate::photonics::drift::DriftModel`] via
+    /// [`Self::set_drift`]; all zeros on a fresh (or just-recalibrated)
+    /// device.
+    drift: Vec<f64>,
+    /// Injected dead-ring faults: (ring index, stuck weight). Applied after
+    /// inscription, overriding whatever the lock achieved.
+    stuck: Vec<(usize, f64)>,
     /// Count of bank operational cycles performed (for energy/speed roll-up).
     pub cycles: u64,
 }
@@ -183,6 +191,8 @@ impl WeightBank {
             w_eff: vec![0.0; n_total],
             scratch_row_w: Vec::with_capacity(cfg.cols),
             scratch_phis: Vec::with_capacity(cfg.cols),
+            drift: vec![0.0; n_total],
+            stuck: Vec::new(),
             design,
             actuator,
             rings,
@@ -259,7 +269,27 @@ impl WeightBank {
     /// every ring onto its target, then refresh the crosstalk-effective
     /// weights. Weights outside the achievable range are clamped by the
     /// lock (as on the real chip).
+    ///
+    /// Lock-readout noise is drawn from the bank's own stream; prefer
+    /// [`Self::inscribe_keyed`] when the caller needs the inscription to be
+    /// a pure function of its inputs (the runtime dispatcher keys the
+    /// stream per operation so drifting runs stay thread-count invariant
+    /// and resumable bit-exactly).
     pub fn inscribe(&mut self, weights: &Tensor) -> Result<()> {
+        let mut rng = self.rng.clone();
+        let out = self.inscribe_keyed(weights, &mut rng);
+        self.rng = rng;
+        out
+    }
+
+    /// [`Self::inscribe`] with a caller-owned lock-noise stream: the
+    /// inscription becomes a pure function of (device physics, drift state,
+    /// `weights`, `rng`). Any pending per-ring drift phases
+    /// ([`Self::set_drift`]) deflect the achieved weights — the lock closes
+    /// on its calibration-table view of the ring, then the ring drifts out
+    /// from under it, exactly the §4 failure mode the recalibration
+    /// scheduler watches for. Stuck-ring faults override their cells last.
+    pub fn inscribe_keyed(&mut self, weights: &Tensor, rng: &mut Pcg64) -> Result<()> {
         self.check_tile_shape(weights)?;
         let fb = FeedbackController::default();
         let lock_readout = self.noise.thermal * 0.25;
@@ -271,16 +301,24 @@ impl WeightBank {
                 &ring.table,
                 target,
                 lock_readout,
-                &mut self.rng,
+                rng,
             );
             ring.drive = lock.drive;
-            ring.w_actual = lock.achieved_weight;
-            // numerical slope dw/dφ at the operating point
-            let phase = self.actuator.steady_state_phase(lock.drive);
+            // the feedback loop settles the actuator, then the slow thermal
+            // drift phase shifts the resonance out from under the lock
+            let d = self.drift[idx];
+            let phase = self.actuator.steady_state_phase(lock.drive) + d;
+            ring.w_actual = if d != 0.0 {
+                ring.mrr.weight_at(phase)
+            } else {
+                lock.achieved_weight
+            };
+            // numerical slope dw/dφ at the (drifted) operating point
             let h = 1e-4;
             ring.slope =
                 (ring.mrr.weight_at(phase + h) - ring.mrr.weight_at(phase - h)) / (2.0 * h);
         }
+        self.apply_stuck();
         self.refresh_effective();
         Ok(())
     }
@@ -299,9 +337,19 @@ impl WeightBank {
             // NaN targets park the ring at zero (clamp would keep the NaN)
             let t = weights.data()[idx] as f64;
             ring.drive = 0.0;
-            ring.w_actual = if t.is_nan() { 0.0 } else { t.clamp(-1.0, 1.0) };
+            let w = if t.is_nan() { 0.0 } else { t.clamp(-1.0, 1.0) };
+            let d = self.drift[idx];
+            ring.w_actual = if d != 0.0 {
+                // even a perfectly calibrated inscription sits on a physical
+                // resonance: map the target to its design detuning and let
+                // the drift phase deflect it along the Lorentzian flank
+                self.design.weight(self.design.detuning_for_weight(w) + d)
+            } else {
+                w
+            };
             ring.slope = 0.0;
         }
+        self.apply_stuck();
         if with_crosstalk {
             self.refresh_effective();
         } else {
@@ -310,6 +358,82 @@ impl WeightBank {
             }
         }
         Ok(())
+    }
+
+    /// Load the device-lifetime state for subsequent inscriptions: per-ring
+    /// drift phases (radians, row-major, one per ring) and stuck-ring
+    /// faults. Allocation-free at steady state (the fault list reuses its
+    /// capacity), so the dispatcher can refresh it on every drift tick.
+    /// Takes effect at the next inscribe; already-inscribed weights and
+    /// snapshots are untouched (drift moves the device, not the memory).
+    pub fn set_drift(&mut self, phases: &[f64], stuck: &[(usize, f64)]) -> Result<()> {
+        if phases.len() != self.drift.len() {
+            return Err(Error::Shape(format!(
+                "set_drift expects {} ring phases, got {}",
+                self.drift.len(),
+                phases.len()
+            )));
+        }
+        self.drift.copy_from_slice(phases);
+        self.stuck.clear();
+        self.stuck.extend_from_slice(stuck);
+        Ok(())
+    }
+
+    /// Override the stuck-ring cells after an inscription: a dead ring
+    /// holds its fault weight with zero phase-jitter sensitivity (its
+    /// resonance no longer tracks the actuator at all).
+    fn apply_stuck(&mut self) {
+        for &(idx, w) in &self.stuck {
+            if let Some(ring) = self.rings.get_mut(idx) {
+                ring.w_actual = w;
+                ring.slope = 0.0;
+            }
+        }
+    }
+
+    /// Re-run the §4 calibration protocol on every ring — the full
+    /// feed-forward sweep (256 points, 3× averaged) through the same noisy
+    /// readout used at fabrication time — then verify the refreshed tables
+    /// close the loop with one probe lock. Returns the total readout cycles
+    /// consumed (charged to the energy roll-up by the scheduler) and the
+    /// probe's residual weight error.
+    ///
+    /// Recalibration measures the *physical* ring, so the refreshed LUTs
+    /// absorb whatever the current thermal state is; the caller (the
+    /// runtime's recalibration scheduler) zeroes its drift model at the
+    /// same time, which is what makes the pair a calibration epoch.
+    pub fn recalibrate(&mut self, rng: &mut Pcg64) -> Result<(u64, f64)> {
+        let cal_noise = self.noise.thermal * 0.5;
+        for ring in &mut self.rings {
+            ring.table = CalibrationTable::calibrate(
+                &ring.mrr,
+                &self.actuator,
+                256,
+                cal_noise,
+                3,
+                rng,
+            )?;
+        }
+        let mut cycles = self.rings.len() as u64 * sweep_cost(256, 3);
+        // probe lock on ring (0, 0): the §4 protocol's post-calibration
+        // verification that the feedback loop still closes
+        let fb = FeedbackController::default();
+        let lock_readout = self.noise.thermal * 0.25;
+        let probe = {
+            let (w_lo, w_hi) = self.rings[0].table.weight_range();
+            0.5 * (w_lo + w_hi)
+        };
+        let lock = fb.lock(
+            &self.rings[0].mrr,
+            &self.actuator,
+            &self.rings[0].table,
+            probe,
+            lock_readout,
+            rng,
+        );
+        cycles += lock.iterations as u64;
+        Ok((cycles, (lock.achieved_weight - probe).abs()))
     }
 
     /// Program the per-row TIA gains with g'(a) (Hadamard product, §3).
@@ -961,6 +1085,107 @@ mod tests {
         assert_eq!((pooled.ring_state.capacity(), pooled.w_eff.capacity()), cap);
         // an unfilled pool slot is not a valid inscription
         assert!(bank.eval(&Inscription::empty(), &x, None, &mut rng1).is_err());
+    }
+
+    #[test]
+    fn drift_deflects_inscribed_weights_along_the_flank() {
+        let mut bank = ideal_bank(2, 3);
+        let w = Tensor::full(&[2, 3], 0.5);
+        bank.inscribe(&w).unwrap();
+        let clean: Vec<f64> = bank.rings.iter().map(|r| r.w_actual).collect();
+        // a small phase drift deflects every ring by ~slope · phase
+        let d = 1e-4;
+        bank.set_drift(&[d; 6], &[]).unwrap();
+        bank.inscribe(&w).unwrap();
+        for (ring, &w0) in bank.rings.iter().zip(&clean) {
+            let moved = ring.w_actual - w0;
+            assert!(moved.abs() > 1e-6, "drift must move the weight");
+            assert!(
+                moved.signum() == (ring.slope * d).signum()
+                    && moved.abs() < ring.slope.abs() * d * 2.0 + 1e-6,
+                "deflection {moved} inconsistent with slope {}",
+                ring.slope
+            );
+        }
+        // zeroed drift restores the clean inscription bit-exactly (the
+        // ideal-mode lock is deterministic)
+        bank.set_drift(&[0.0; 6], &[]).unwrap();
+        bank.inscribe(&w).unwrap();
+        let back: Vec<f64> = bank.rings.iter().map(|r| r.w_actual).collect();
+        assert_eq!(back, clean);
+        // the perfect-calibration path drifts too (it still sits on a
+        // physical resonance)
+        bank.inscribe_exact(&w, false).unwrap();
+        let exact_clean: Vec<f64> = bank.rings.iter().map(|r| r.w_actual).collect();
+        bank.set_drift(&[d; 6], &[]).unwrap();
+        bank.inscribe_exact(&w, false).unwrap();
+        for (ring, &w0) in bank.rings.iter().zip(&exact_clean) {
+            assert!((ring.w_actual - w0).abs() > 1e-6);
+        }
+        // geometry validated
+        assert!(bank.set_drift(&[0.0; 3], &[]).is_err());
+    }
+
+    #[test]
+    fn stuck_ring_holds_its_fault_weight() {
+        let mut bank = ideal_bank(2, 3);
+        bank.set_drift(&[0.0; 6], &[(1, 0.25)]).unwrap();
+        let w = Tensor::full(&[2, 3], -0.8);
+        bank.inscribe(&w).unwrap();
+        assert_eq!(bank.rings[1].w_actual, 0.25);
+        assert_eq!(bank.rings[1].slope, 0.0);
+        // the dead ring degrades the row readout but never produces NaN
+        let out = bank.matvec(&[1.0, 1.0, 1.0]).unwrap();
+        assert!(out.iter().all(|v| v.is_finite()), "{out:?}");
+        // exact path honours the fault too, straight into w_eff
+        bank.inscribe_exact(&w, false).unwrap();
+        assert_eq!(bank.rings[1].w_actual, 0.25);
+        assert_eq!(bank.w_eff[1], 0.25);
+        // out-of-range fault indices are ignored, not a panic
+        bank.set_drift(&[0.0; 6], &[(99, 0.5)]).unwrap();
+        bank.inscribe(&w).unwrap();
+    }
+
+    #[test]
+    fn recalibrate_reprices_but_preserves_a_quiet_ideal_device() {
+        // BpdMode::Ideal has zero readout noise, so re-running the §4
+        // sweep reproduces the fabrication-time tables exactly: the
+        // scheduler's table swap is a numerical no-op on a quiet device
+        // while still charging the full protocol cost
+        let mut bank = ideal_bank(2, 3);
+        let w = Tensor::new(&[2, 3], vec![0.5, -0.3, 0.8, 0.1, -0.6, 0.2]).unwrap();
+        bank.inscribe(&w).unwrap();
+        let before: Vec<f64> = bank.rings.iter().map(|r| r.w_actual).collect();
+        let mut rng = Pcg64::keyed(7, 0, 0);
+        let (cycles, residual) = bank.recalibrate(&mut rng).unwrap();
+        assert!(
+            cycles > 6 * sweep_cost(256, 3),
+            "6 ring sweeps + probe lock, got {cycles}"
+        );
+        assert!(residual < 2e-3, "probe residual {residual}");
+        bank.inscribe(&w).unwrap();
+        let after: Vec<f64> = bank.rings.iter().map(|r| r.w_actual).collect();
+        assert_eq!(after, before);
+    }
+
+    #[test]
+    fn inscribe_keyed_is_a_pure_function_of_its_stream() {
+        // the thread-invariance contract: lock-readout noise comes only
+        // from the caller's keyed stream, never from bank-internal state
+        let mut bank = WeightBank::new(BankConfig::testbed(BpdMode::OffChip)).unwrap();
+        let w = Tensor::new(&[1, 4], vec![0.3, -0.2, 0.6, 0.1]).unwrap();
+        let weights_of = |bank: &WeightBank| -> Vec<f64> {
+            bank.rings.iter().map(|r| r.w_actual).collect()
+        };
+        let mut r1 = Pcg64::keyed(42, 9, 1);
+        bank.inscribe_keyed(&w, &mut r1).unwrap();
+        let a = weights_of(&bank);
+        let mut r2 = Pcg64::keyed(42, 9, 1);
+        bank.inscribe_keyed(&w, &mut r2).unwrap();
+        assert_eq!(a, weights_of(&bank), "same key must be bit-identical");
+        let mut r3 = Pcg64::keyed(42, 10, 1);
+        bank.inscribe_keyed(&w, &mut r3).unwrap();
+        assert_ne!(a, weights_of(&bank), "a fresh op draws fresh lock noise");
     }
 
     #[test]

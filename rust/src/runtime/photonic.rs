@@ -50,6 +50,20 @@
 //! and the optical-cycle tally live in atomics, so [`PhotonicArtifact::cycles`]
 //! never takes the bank lock.
 //!
+//! Device lifetime: the engine owns one [`DriftModel`] (thermal phase
+//! walk + calibration aging, advanced in *device time* — ticks of
+//! [`DRIFT_TICK_CYCLES`] telemetry cycles, never wall-clock) shared by
+//! all of its artifacts. Every dispatch advances it under the dispatcher
+//! lock, loads the drifted phases into the bank, and lets the online
+//! recalibration scheduler re-run the §4 calibration protocol when the
+//! estimated weight error crosses `--physics drift:recal`; the
+//! recalibration readout cycles are priced by the same §5 energy model,
+//! so `pdfa report` shows the true lifetime cost.
+//! [`StepEngine::device_state`] serializes drift state + telemetry
+//! tallies + the bank-op sequence, which is what makes a resumed
+//! drifting run bit-identical to an uninterrupted one
+//! (`tests/integration_drift.rs`).
+//!
 //! All per-dispatch state — the tile staging tensor, the inscription
 //! snapshot pool, the tiling plans, the row-worker buffers — lives in a
 //! reusable [`BankDispatcher`], so a steady-state dispatch performs zero
@@ -67,6 +81,7 @@ use crate::dfa::reference;
 use crate::energy::{EnergyModel, MrrTuning};
 use crate::gemm::tiler::Tiling;
 use crate::photonics::converters::Quantizer;
+use crate::photonics::drift::{DriftModel, FaultEvent, DRIFT_TICK_CYCLES};
 use crate::photonics::mrr::MrrDesign;
 use crate::photonics::weight_bank::{BankConfig, BpdMode, Inscription, WeightBank};
 use crate::runtime::manifest::{ArtifactSpec, NetDims};
@@ -110,9 +125,40 @@ pub struct PhysicsConfig {
     /// (residual lock error, phase-jitter sensitivity). `false`: the
     /// perfect-calibration limit ([`WeightBank::inscribe_exact`]).
     pub lock: bool,
+    /// Thermal drift: per-ring phase random-walk amplitude in
+    /// radians/√tick of device time (`drift:rate`). 0 = thermally
+    /// stable bank (the pre-lifetime engine behaviour).
+    pub drift_rate: f64,
+    /// Calibration aging: deterministic per-tick phase creep along a
+    /// per-calibration-epoch direction (`drift:aging`). 0 = the stored
+    /// LUT inverses never decay.
+    pub drift_aging: f64,
+    /// Online recalibration threshold on the telemetry-estimated weight
+    /// error (`drift:recal`). 0 disables the scheduler, so drift
+    /// accumulates unchecked — the ablation arm of
+    /// `tests/integration_drift.rs`.
+    pub recal_threshold: f64,
     /// Device seed: fabrication offsets + intrinsic noise streams.
     pub seed: u64,
 }
+
+/// Default `drifty`-preset thermal walk amplitude (radians/√tick).
+/// With the high-finesse ring design's flank slope (≈ 117 weight/rad,
+/// [`crate::photonics::drift::weight_slope`]) the walk's rms weight error
+/// is ≈ 0.0117·√ticks, crossing [`RECAL_THRESHOLD_DEFAULT`] after ~18
+/// ticks (~18k optical cycles): a training run re-locks every few dozen
+/// steps, the cadence of the continuously locked testbeds (refs 34–36).
+pub const DRIFT_RATE_DEFAULT: f64 = 1e-4;
+
+/// Default `drifty`-preset calibration-aging creep (radians/tick):
+/// negligible between recalibrations, but ≈ 0.23 weight error after
+/// 1000 unrecalibrated ticks — the slow decay that ruins the ablation
+/// arm with the scheduler off.
+pub const DRIFT_AGING_DEFAULT: f64 = 2e-6;
+
+/// Default `drifty`-preset scheduler threshold on the estimated weight
+/// error (≈ half the §4 lock tolerance budget over a 50-ring column).
+pub const RECAL_THRESHOLD_DEFAULT: f64 = 0.05;
 
 impl Default for PhysicsConfig {
     fn default() -> Self {
@@ -134,6 +180,9 @@ impl PhysicsConfig {
             sigma: 0.0,
             crosstalk: false,
             lock: false,
+            drift_rate: 0.0,
+            drift_aging: 0.0,
+            recal_threshold: 0.0,
             seed: 7,
         }
     }
@@ -151,7 +200,24 @@ impl PhysicsConfig {
             sigma: crate::photonics::constants::SIGMA_OFFCHIP_BPD,
             crosstalk: true,
             lock: true,
+            drift_rate: 0.0,
+            drift_aging: 0.0,
+            recal_threshold: 0.0,
             seed: 7,
+        }
+    }
+
+    /// The `drifty` preset: the paper operating point on a device that
+    /// ages — default thermal walk, LUT decay, and an armed
+    /// recalibration scheduler. The `static` preset is the explicit
+    /// alias for [`Self::paper`], which models a freshly calibrated,
+    /// thermally stable bank.
+    pub fn drifty() -> PhysicsConfig {
+        PhysicsConfig {
+            drift_rate: DRIFT_RATE_DEFAULT,
+            drift_aging: DRIFT_AGING_DEFAULT,
+            recal_threshold: RECAL_THRESHOLD_DEFAULT,
+            ..Self::paper()
         }
     }
 
@@ -161,7 +227,8 @@ impl PhysicsConfig {
     /// value equality).
     pub fn describe(&self) -> String {
         format!(
-            "bank={}x{};dac={};adc={};sigma={};xtalk={};lock={};seed={}",
+            "bank={}x{};dac={};adc={};sigma={};xtalk={};lock={};seed={};\
+             drift={};aging={};recal={}",
             self.bank_rows,
             self.bank_cols,
             self.dac_bits,
@@ -170,23 +237,30 @@ impl PhysicsConfig {
             if self.crosstalk { "on" } else { "off" },
             if self.lock { "on" } else { "off" },
             self.seed,
+            self.drift_rate,
+            self.drift_aging,
+            self.recal_threshold,
         )
     }
 
-    /// Parse the `--physics` CLI value: a preset name (`ideal` | `paper`)
-    /// optionally followed by comma-separated `key=value` overrides, e.g.
-    /// `ideal,dac=6,adc=6,sigma=0.05,bank=50x20,xtalk=on,lock=off,seed=9`.
+    /// Parse the `--physics` CLI value: a preset name (`ideal` | `paper`
+    /// | `static` | `drifty`) optionally followed by comma-separated
+    /// `key=value` overrides, e.g.
+    /// `drifty,dac=6,sigma=0.05,drift:rate=2e-4,drift:recal=0.03`.
     pub fn parse(s: &str) -> Result<PhysicsConfig> {
         let mut parts = s.split(',');
         let head = parts.next().unwrap_or("").trim();
         let mut cfg = match head {
             "ideal" => Self::ideal(),
-            "paper" | "" => Self::paper(),
+            "paper" | "static" | "" => Self::paper(),
+            "drifty" => Self::drifty(),
             other => {
                 return Err(Error::Cli(format!(
-                    "unknown physics preset '{other}' (valid: ideal | paper, \
-                     optionally followed by key=value overrides: bank=RxC, \
-                     dac=N, adc=N, sigma=S, xtalk=on|off, lock=on|off, seed=N)"
+                    "unknown physics preset '{other}' (valid: ideal | paper | \
+                     static | drifty, optionally followed by key=value \
+                     overrides: bank=RxC, dac=N, adc=N, sigma=S, xtalk=on|off, \
+                     lock=on|off, seed=N, drift:rate=R, drift:aging=A, \
+                     drift:recal=T)"
                 )))
             }
         };
@@ -230,6 +304,11 @@ impl PhysicsConfig {
                 "sigma" => cfg.sigma = num("a noise std")?,
                 "xtalk" => cfg.crosstalk = on_off(k, v)?,
                 "lock" => cfg.lock = on_off(k, v)?,
+                "drift:rate" => cfg.drift_rate = num("a thermal walk rate")?,
+                "drift:aging" => cfg.drift_aging = num("an aging rate")?,
+                "drift:recal" => {
+                    cfg.recal_threshold = num("a recalibration threshold")?
+                }
                 "seed" => {
                     cfg.seed = v.parse::<u64>().map_err(|_| {
                         Error::Cli(format!(
@@ -240,7 +319,8 @@ impl PhysicsConfig {
                 other => {
                     return Err(Error::Cli(format!(
                         "unknown physics key '{other}' (valid: bank, dac, adc, \
-                         sigma, xtalk, lock, seed)"
+                         sigma, xtalk, lock, seed, drift:rate, drift:aging, \
+                         drift:recal)"
                     )))
                 }
             }
@@ -280,7 +360,24 @@ impl PhysicsConfig {
                 self.sigma
             )));
         }
+        for (k, v) in [
+            ("drift:rate", self.drift_rate),
+            ("drift:aging", self.drift_aging),
+            ("drift:recal", self.recal_threshold),
+        ] {
+            if !(v >= 0.0 && v.is_finite()) {
+                return Err(Error::Config(format!(
+                    "physics: {k} must be finite and >= 0, got {v}"
+                )));
+            }
+        }
         Ok(())
+    }
+
+    /// Whether this physics ever changes the device over time (the
+    /// lifetime machinery engages; resume messaging keys off this too).
+    pub fn drifting(&self) -> bool {
+        self.drift_rate > 0.0 || self.drift_aging > 0.0
     }
 
     /// The §5 energy model sized to this bank: heater-locked MRRs (the
@@ -437,10 +534,22 @@ impl Device {
         self.adc.quantize(v) as f32
     }
 
-    /// Inscribe one bank-sized tile per the configured fidelity.
-    fn inscribe(&mut self, physics: &PhysicsConfig, tile_w: &Tensor) -> Result<()> {
+    /// Inscribe one bank-sized tile per the configured fidelity. The
+    /// locked path draws its lock-loop measurement noise from a stream
+    /// keyed by `(device seed, bank op, tile)`, so an inscription is a
+    /// pure function of those coordinates — what makes locked runs
+    /// resumable and replica-identical. Tiles key the lane space above
+    /// `2^32`, disjoint from the batch-row readout lanes of [`NoiseKey`].
+    fn inscribe(
+        &mut self,
+        physics: &PhysicsConfig,
+        tile_w: &Tensor,
+        op: u64,
+        tile: u64,
+    ) -> Result<()> {
         if physics.lock {
-            self.bank.inscribe(tile_w)
+            let mut rng = Pcg64::keyed(physics.seed, op, (1u64 << 32) | tile);
+            self.bank.inscribe_keyed(tile_w, &mut rng)
         } else {
             self.bank.inscribe_exact(tile_w, physics.crosstalk)
         }
@@ -590,6 +699,21 @@ impl BankDispatcher {
         self.threads
     }
 
+    /// Load the device-lifetime state into the bank: subsequent
+    /// inscriptions land on the drifted flanks, and dead rings hold
+    /// their stuck weights. Allocation-free in steady state (the bank
+    /// reuses its drift buffers).
+    pub fn set_drift(&mut self, phases: &[f64], stuck: &[(usize, f64)]) -> Result<()> {
+        self.device.bank.set_drift(phases, stuck)
+    }
+
+    /// Re-run the §4 calibration protocol on every ring (LUT sweep plus
+    /// a verification lock); returns the charged readout cycles and the
+    /// probe residual. See [`WeightBank::recalibrate`].
+    pub fn recalibrate(&mut self, rng: &mut Pcg64) -> Result<(u64, f64)> {
+        self.device.bank.recalibrate(rng)
+    }
+
     /// The tiling plan for an `(m, k)` weight matrix on this bank,
     /// planned once and cached (returned by index to keep `self`
     /// borrowable afterwards).
@@ -673,7 +797,7 @@ impl BankDispatcher {
         while snaps.len() < tiling.tiles.len() {
             snaps.push(Inscription::empty());
         }
-        for (tile, snap) in tiling.tiles.iter().zip(snaps.iter_mut()) {
+        for (t, (tile, snap)) in tiling.tiles.iter().zip(snaps.iter_mut()).enumerate() {
             tile_w.data_mut().fill(0.0);
             for r in 0..tile.rows() {
                 for c in 0..tile.cols() {
@@ -681,7 +805,7 @@ impl BankDispatcher {
                     tile_w.set(r, c, w.at(tile.col0 + c, tile.row0 + r) / amp);
                 }
             }
-            device.inscribe(physics, tile_w)?;
+            device.inscribe(physics, tile_w, op, t as u64)?;
             device.bank.snapshot_into(snap);
         }
         match b {
@@ -798,14 +922,14 @@ impl BankDispatcher {
         while snaps.len() < tiling.tiles.len() {
             snaps.push(Inscription::empty());
         }
-        for (tile, snap) in tiling.tiles.iter().zip(snaps.iter_mut()) {
+        for (t, (tile, snap)) in tiling.tiles.iter().zip(snaps.iter_mut()).enumerate() {
             tile_w.data_mut().fill(0.0);
             for r in 0..tile.rows() {
                 for c in 0..tile.cols() {
                     tile_w.set(r, c, bmat.at(tile.row0 + r, tile.col0 + c) / amp);
                 }
             }
-            device.inscribe(physics, tile_w)?;
+            device.inscribe(physics, tile_w, op, t as u64)?;
             device.bank.snapshot_into(snap);
         }
         // row-parallel phase into the pooled (batch, m) staging buffer —
@@ -896,8 +1020,11 @@ pub struct PhotonicArtifact {
     /// scratch pools hold no cross-dispatch state either — every buffer
     /// is refilled before it is read.
     dispatcher: Mutex<BankDispatcher>,
-    /// Bank operations dispatched so far; keys the per-row noise streams.
-    op: AtomicU64,
+    /// The engine's shared device-lifetime state (one physical chip per
+    /// engine: every artifact advances the same clock). Always locked
+    /// *inside* the dispatcher lock — `dispatcher → drift` is the
+    /// registered lock order.
+    drift: Arc<Mutex<DriftModel>>,
     /// Optical cycles fired; atomic so [`Self::cycles`] never takes the
     /// bank lock.
     cycles: AtomicU64,
@@ -923,12 +1050,41 @@ impl PhotonicArtifact {
         self.cycles.load(Ordering::Relaxed)
     }
 
-    /// Claim the next bank-operation id. Sequential callers (the trainer
-    /// executes steps one by one) observe a deterministic sequence, which
-    /// makes every noise draw of a run reproducible; concurrent `execute`
-    /// calls on one artifact stay safe but interleave op ids.
+    /// Claim the next bank-operation id from the engine-shared sequence
+    /// ([`Counters::next_op`] — checkpointed by
+    /// [`StepEngine::device_state`], so a resumed run continues the very
+    /// same noise streams). Sequential callers (the trainer executes
+    /// steps one by one) observe a deterministic sequence, which makes
+    /// every noise draw of a run reproducible; concurrent `execute`
+    /// calls stay safe but interleave op ids.
     fn next_op(&self) -> u64 {
-        self.op.fetch_add(1, Ordering::Relaxed)
+        self.counters.next_op()
+    }
+
+    /// Advance device time to the engine's cycle tally and run the
+    /// online recalibration scheduler before the dispatch fires: when
+    /// the drift model's weight-error estimate crosses the configured
+    /// threshold, the §4 calibration protocol re-runs on the bank, its
+    /// readout cycles are charged to the lifetime tally (priced by the
+    /// §5 energy model, but *not* added to the device-time clock — see
+    /// the drift module docs), and the compensable error is re-locked
+    /// away. Called with the dispatcher lock held; inactive models
+    /// return after one branch, keeping static configurations on the
+    /// pre-lifetime fast path.
+    fn advance_device_time(&self, disp: &mut BankDispatcher) -> Result<()> {
+        let mut drift = self.drift.lock().unwrap_or_else(|p| p.into_inner());
+        if !drift.is_active() {
+            return Ok(());
+        }
+        drift.advance_to(self.counters.cycles() / DRIFT_TICK_CYCLES);
+        if drift.should_recalibrate() {
+            let mut rng = drift.recal_rng();
+            let (cost, _residual) = disp.recalibrate(&mut rng)?;
+            drift.complete_recalibration(cost);
+            self.counters.add_recal(cost);
+        }
+        self.counters.set_drift_err(drift.estimated_weight_error());
+        disp.set_drift(drift.phases(), drift.stuck())
     }
 
     /// One bank linear dispatch; tallies the fired cycles on the
@@ -985,6 +1141,7 @@ impl Artifact for PhotonicArtifact {
         self.spec.validate_inputs(inputs)?;
         // see the `dispatcher` field docs for the poisoned-lock recovery story
         let mut disp = self.dispatcher.lock().unwrap_or_else(|p| p.into_inner());
+        self.advance_device_time(&mut disp)?;
         let (out, fired) = match self.kind {
             Kind::Fwd => {
                 let (f, fired) = self.forward(&mut disp, &inputs[..6], &inputs[6])?;
@@ -1038,7 +1195,15 @@ pub struct PhotonicEngine {
     /// §5 energy model sized to the configured bank; prices the cycle
     /// tally in every [`StepEngine::telemetry`] snapshot.
     energy: EnergyModel,
+    /// The device-lifetime state: one physical chip per engine, shared
+    /// by every loaded artifact (they advance one clock and trigger one
+    /// scheduler between them).
+    drift: Arc<Mutex<DriftModel>>,
 }
+
+/// Header of the engine's opaque [`StepEngine::device_state`] blob
+/// (checkpointed as the `device` field of a v2 training checkpoint).
+const DEVICE_STATE_MAGIC: [u8; 4] = *b"PDV1";
 
 impl PhotonicEngine {
     /// Engine over `artifacts_dir` (same config resolution as the native
@@ -1060,12 +1225,22 @@ impl PhotonicEngine {
         physics.validate()?;
         let native = NativeEngine::open(artifacts_dir)?;
         let counters = native.counters();
+        let drift = Arc::new(Mutex::new(DriftModel::new(
+            physics.bank_rows,
+            physics.bank_cols,
+            physics.drift_rate,
+            physics.drift_aging,
+            physics.recal_threshold,
+            physics.seed,
+            &physics.bank_config().design,
+        )));
         Ok(PhotonicEngine {
             native,
             physics,
             threads: crate::util::threads::resolve(threads),
             counters,
             energy: physics.energy_model(),
+            drift,
         })
     }
 
@@ -1081,6 +1256,13 @@ impl PhotonicEngine {
     /// The resolved batch-row worker count (>= 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Schedule scripted device faults (the fault-injection harness of
+    /// `tests/integration_drift.rs`): they apply when device time
+    /// reaches their tick. See [`DriftModel::inject`].
+    pub fn inject_faults(&self, events: &[FaultEvent]) -> Result<()> {
+        self.drift.lock().unwrap_or_else(|p| p.into_inner()).inject(events)
     }
 }
 
@@ -1139,7 +1321,7 @@ impl StepEngine for PhotonicEngine {
             spec,
             kind,
             dispatcher: Mutex::new(BankDispatcher::new(self.physics, self.threads)?),
-            op: AtomicU64::new(0),
+            drift: self.drift.clone(),
             cycles: AtomicU64::new(0),
             counters: self.counters.clone(),
             bank_macs,
@@ -1150,6 +1332,67 @@ impl StepEngine for PhotonicEngine {
 
     fn telemetry(&self) -> Telemetry {
         self.counters.snapshot(Some(&self.energy))
+    }
+
+    fn device_state(&self) -> Option<Vec<u8>> {
+        let drift = self.drift.lock().unwrap_or_else(|p| p.into_inner());
+        let t = self.counters.snapshot(None);
+        let blob = drift.state_bytes();
+        let mut out = Vec::with_capacity(4 + 8 * 8 + blob.len());
+        out.extend_from_slice(&DEVICE_STATE_MAGIC);
+        for v in [
+            self.counters.op_seq(),
+            t.macs,
+            t.photonic_macs,
+            t.cycles,
+            t.bank_ops,
+            t.recal_events,
+            t.recal_cycles,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(blob.len() as u64).to_le_bytes());
+        out.extend_from_slice(&blob);
+        Some(out)
+    }
+
+    fn restore_device_state(&self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() < 4 + 8 * 8 || bytes[..4] != DEVICE_STATE_MAGIC {
+            return Err(Error::Format(
+                "photonic device state: bad magic or truncated header".into(),
+            ));
+        }
+        let word = |i: usize| {
+            u64::from_le_bytes(
+                bytes[4 + 8 * i..4 + 8 * (i + 1)].try_into().expect("8 bytes"),
+            )
+        };
+        if bytes.len() - (4 + 8 * 8) != word(7) as usize {
+            return Err(Error::Format(format!(
+                "photonic device state: drift blob length {} recorded, {} present",
+                word(7),
+                bytes.len() - (4 + 8 * 8)
+            )));
+        }
+        // geometry and format are checked by the drift model before any
+        // state is overwritten; the counters only change after it accepts
+        self.drift
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .restore_state(&bytes[4 + 8 * 8..])?;
+        self.counters.restore(
+            &Telemetry {
+                macs: word(1),
+                photonic_macs: word(2),
+                cycles: word(3),
+                bank_ops: word(4),
+                recal_events: word(5),
+                recal_cycles: word(6),
+                ..Telemetry::default()
+            },
+            word(0),
+        );
+        Ok(())
     }
 }
 
@@ -1207,6 +1450,24 @@ mod tests {
         // seeds parse as u64 directly: no f64 rounding above 2^53
         let p = PhysicsConfig::parse("ideal,seed=9007199254740993").unwrap();
         assert_eq!(p.seed, 9_007_199_254_740_993);
+        // lifetime presets: `static` is the explicit paper alias (zero
+        // drift), `drifty` arms the full lifetime machinery
+        assert_eq!(PhysicsConfig::parse("static").unwrap(), PhysicsConfig::paper());
+        assert!(!PhysicsConfig::paper().drifting());
+        let d = PhysicsConfig::parse("drifty").unwrap();
+        assert_eq!(d, PhysicsConfig::drifty());
+        assert!(d.drifting());
+        assert_eq!(d.drift_rate, DRIFT_RATE_DEFAULT);
+        assert_eq!(d.drift_aging, DRIFT_AGING_DEFAULT);
+        assert_eq!(d.recal_threshold, RECAL_THRESHOLD_DEFAULT);
+        let p = PhysicsConfig::parse(
+            "ideal,drift:rate=2e-4,drift:aging=1e-6,drift:recal=0.03",
+        )
+        .unwrap();
+        assert_eq!(
+            (p.drift_rate, p.drift_aging, p.recal_threshold),
+            (2e-4, 1e-6, 0.03)
+        );
         for bad in [
             "bogus",
             "ideal,dac",
@@ -1222,6 +1483,10 @@ mod tests {
             "ideal,sigma=-1",
             "ideal,bank=0x4",
             "ideal,bank=10x200",
+            "ideal,drift:rate=-1",
+            "ideal,drift:aging=-2e-6",
+            "ideal,drift:recal=x",
+            "drifty,drift:rate=nan",
         ] {
             assert!(PhysicsConfig::parse(bad).is_err(), "{bad} should fail");
         }
@@ -1238,6 +1503,15 @@ mod tests {
         let mut p = PhysicsConfig::ideal();
         p.sigma = 0.125;
         assert_ne!(a, p.describe());
+        // the lifetime knobs join the checkpoint protocol string too: a
+        // drifting device is a different experiment
+        let mut p = PhysicsConfig::ideal();
+        p.drift_rate = 1e-4;
+        assert_ne!(a, p.describe());
+        assert_ne!(
+            PhysicsConfig::paper().describe(),
+            PhysicsConfig::drifty().describe()
+        );
     }
 
     #[test]
@@ -1528,7 +1802,15 @@ mod tests {
             spec,
             kind: Kind::DfaStep,
             dispatcher: Mutex::new(BankDispatcher::new(phys, 2).unwrap()),
-            op: AtomicU64::new(0),
+            drift: Arc::new(Mutex::new(DriftModel::new(
+                16,
+                12,
+                0.0,
+                0.0,
+                0.0,
+                phys.seed,
+                &MrrDesign::high_finesse(),
+            ))),
             cycles: AtomicU64::new(0),
             counters: Arc::new(Counters::default()),
             bank_macs: telemetry::macs_forward(&dims) + telemetry::macs_feedback(&dims),
@@ -1538,7 +1820,9 @@ mod tests {
         assert_eq!(art.cycles(), 0);
         Artifact::execute(&art, &inputs).unwrap();
         assert!(art.cycles() > 0, "dispatch must tally optical cycles");
-        assert!(art.op.load(Ordering::Relaxed) >= 5, "3 fwd + 2 gradient ops");
+        // the op sequence now lives in the engine-shared counters (it is
+        // checkpointed with the device state)
+        assert_eq!(art.counters.op_seq(), 5, "3 fwd + 2 gradient ops");
         // the engine-shared counters saw the same dispatch: identical
         // cycle tally, analytic MAC split, one energy-priced snapshot
         let t = art.counters.snapshot(Some(&phys.energy_model()));
@@ -1620,5 +1904,148 @@ mod tests {
         let out = art.execute(&inputs).unwrap();
         assert_eq!(out.len(), 14);
         assert!(out[12].item().is_finite());
+    }
+
+    /// Forward-artifact inputs for the lifetime tests: 6 params + x.
+    fn fwd_inputs(dims: &crate::runtime::manifest::NetDims) -> Vec<Tensor> {
+        let mut rng = Pcg64::seed(11);
+        let state = NetState::init(dims, &mut rng);
+        let mut inputs: Vec<Tensor> = state.tensors[..6].to_vec();
+        inputs.push(Tensor::randn(&[dims.batch, dims.d_in], 0.7, &mut rng));
+        inputs
+    }
+
+    #[test]
+    fn drift_faults_fire_the_recalibration_scheduler() {
+        use crate::photonics::drift::FaultKind;
+        // a scripted package-temperature step at tick 1 knocks every ring
+        // off its calibration; the armed scheduler must buy the device
+        // back (and charge for it), the disarmed one must keep serving
+        // degraded outputs
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let dims = PhotonicEngine::open(&dir, PhysicsConfig::ideal())
+            .unwrap()
+            .net_dims("tiny")
+            .unwrap();
+        let inputs = fwd_inputs(&dims);
+        let phys_at = |threshold: f64| PhysicsConfig {
+            bank_rows: 16,
+            bank_cols: 12,
+            recal_threshold: threshold,
+            ..PhysicsConfig::ideal()
+        };
+        let run = |threshold: f64, threads: usize| {
+            let engine =
+                PhotonicEngine::open_threaded(&dir, phys_at(threshold), threads).unwrap();
+            engine
+                .inject_faults(&[FaultEvent {
+                    at_tick: 1,
+                    kind: FaultKind::StepDrift { phase: 0.05 },
+                }])
+                .unwrap();
+            let art = engine.load("fwd_tiny").unwrap();
+            // device time starts at tick 0: the first dispatch sees the
+            // factory-calibrated bank
+            let clean = art.execute(&inputs).unwrap();
+            // the loop condition reads the (thread-invariant) cycle
+            // tally, so every thread count executes the same schedule
+            for _ in 0..200 {
+                if engine.telemetry().cycles >= 2 * DRIFT_TICK_CYCLES {
+                    break;
+                }
+                art.execute(&inputs).unwrap();
+            }
+            let tel = engine.telemetry();
+            assert!(tel.cycles >= 2 * DRIFT_TICK_CYCLES, "loop cap too low: {tel:?}");
+            // device time has certainly passed the fault tick by now
+            let out = art.execute(&inputs).unwrap();
+            (clean, out, engine.telemetry())
+        };
+        let (clean, recovered, tel_on) = run(0.01, 1);
+        assert!(tel_on.recal_events >= 1, "{tel_on:?}");
+        assert!(tel_on.recal_cycles > 0, "{tel_on:?}");
+        assert_eq!(tel_on.drift_err, 0.0, "recal re-locked the error away");
+        // the §5 model prices the recalibration readouts with the compute
+        assert_eq!(
+            tel_on.energy_j,
+            phys_at(0.01).energy_model().joules(tel_on.cycles + tel_on.recal_cycles)
+        );
+        assert_eq!(
+            clean.iter().zip(&recovered).filter(|(c, r)| c != r).count(),
+            0,
+            "recalibration must restore the clean outputs bit-exactly"
+        );
+        // threshold 0 disarms the scheduler: the fault persists
+        let (clean_off, degraded, tel_off) = run(0.0, 1);
+        assert_eq!(tel_off.recal_events, 0, "{tel_off:?}");
+        assert!(tel_off.drift_err > 0.0, "{tel_off:?}");
+        assert_eq!(clean_off.len(), clean.len());
+        assert!(
+            clean.iter().zip(&degraded).any(|(c, d)| c != d),
+            "an unrecalibrated 0.05 rad step must show up in the outputs"
+        );
+        // the whole lifetime machinery is thread-count invariant
+        let (_, recovered4, tel_on4) = run(0.01, 4);
+        assert_eq!(recovered4, recovered, "outputs diverged across thread counts");
+        assert_eq!(tel_on4, tel_on, "telemetry diverged across thread counts");
+    }
+
+    #[test]
+    fn device_state_round_trips_for_bit_exact_resume() {
+        // the checkpoint contract: device_state() after N steps, restored
+        // into a fresh engine, continues bit-identically — locked
+        // inscription noise, read noise, drift walk and telemetry alike
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let phys = PhysicsConfig {
+            bank_rows: 16,
+            bank_cols: 12,
+            sigma: 0.1,
+            dac_bits: 6,
+            adc_bits: 6,
+            lock: true,
+            drift_rate: 1e-3,
+            drift_aging: 1e-5,
+            recal_threshold: 0.5,
+            ..PhysicsConfig::ideal()
+        };
+        let engine = PhotonicEngine::open(&dir, phys).unwrap();
+        let dims = engine.net_dims("tiny").unwrap();
+        let inputs = fwd_inputs(&dims);
+        let art = engine.load("fwd_tiny").unwrap();
+        for _ in 0..25 {
+            art.execute(&inputs).unwrap();
+        }
+        let blob = engine.device_state().expect("photonic engines checkpoint");
+        let want_next = art.execute(&inputs).unwrap();
+        let tel_a = engine.telemetry();
+        assert!(tel_a.drift_err > 0.0, "the walk must have engaged: {tel_a:?}");
+
+        let resumed = PhotonicEngine::open(&dir, phys).unwrap();
+        resumed.restore_device_state(&blob).unwrap();
+        let got_next = resumed.load("fwd_tiny").unwrap().execute(&inputs).unwrap();
+        assert_eq!(got_next.len(), want_next.len());
+        for (i, (g, w)) in got_next.iter().zip(&want_next).enumerate() {
+            assert_eq!(g, w, "output {i}: resumed run diverged");
+        }
+        assert_eq!(resumed.telemetry(), tel_a, "telemetry diverged after resume");
+
+        // malformed blobs are rejected before any state is overwritten
+        assert!(resumed.restore_device_state(&blob[..10]).is_err());
+        let mut bad = blob.clone();
+        bad[0] = b'X';
+        assert!(resumed.restore_device_state(&bad).is_err());
+        let mut truncated = blob.clone();
+        truncated.pop();
+        assert!(resumed.restore_device_state(&truncated).is_err());
+        // a different bank geometry is a different device
+        let other = PhotonicEngine::open(
+            &dir,
+            PhysicsConfig { bank_rows: 8, bank_cols: 6, ..phys },
+        )
+        .unwrap();
+        assert!(other.restore_device_state(&blob).is_err());
+        // digital backends have no device state
+        assert!(NativeEngine::open(&dir).unwrap().device_state().is_none());
+        assert!(NativeEngine::open(&dir).unwrap().restore_device_state(&blob).is_err());
     }
 }

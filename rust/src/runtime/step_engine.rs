@@ -92,6 +92,26 @@ pub trait StepEngine: Send + Sync {
     fn telemetry(&self) -> Telemetry {
         Telemetry::default()
     }
+
+    /// Opaque resumable device state, checkpointed as the `device` field
+    /// of a v2 training checkpoint. The photonic engine serializes its
+    /// drift model, telemetry tallies and bank-op sequence — everything
+    /// a resumed run needs to continue bit-identically to an
+    /// uninterrupted one. Stateless digital backends return `None`.
+    fn device_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore a [`Self::device_state`] blob taken from an engine with
+    /// the same physics. Backends without device state refuse: silently
+    /// dropping a checkpointed device would resume a *different* device.
+    fn restore_device_state(&self, _bytes: &[u8]) -> Result<()> {
+        Err(Error::Config(format!(
+            "backend '{}' has no device state to restore (the checkpoint \
+             was taken on a photonic engine)",
+            self.platform_name()
+        )))
+    }
 }
 
 /// Which backend [`open`] should construct.

@@ -148,6 +148,12 @@ impl ServeStats {
                     fmt_joules(t.energy_j / self.completed as f64),
                 ));
             }
+            if t.recal_events > 0 {
+                line.push_str(&format!(
+                    " | recal {}x ({} cycles)",
+                    t.recal_events, t.recal_cycles,
+                ));
+            }
         }
         line
     }
@@ -650,6 +656,88 @@ mod tests {
     }
 
     #[test]
+    fn drifting_photonic_serve_is_exact_within_a_calibration_epoch() {
+        use crate::photonics::drift::DRIFT_TICK_CYCLES;
+        use crate::runtime::photonic::{PhotonicEngine, PhysicsConfig};
+
+        let dir = std::env::temp_dir().join("pdfa_no_artifacts_here");
+        let (dims, state) = tiny_params(23);
+        let x: Vec<f32> =
+            (0..dims.d_in).map(|j| (j as f32 * 0.07).sin() * 0.5).collect();
+        // drift of 0.01 rad/√tick is ~1.2 in weight units on the high-
+        // finesse flank — far over the 0.05 threshold at every tick
+        let serve = |threshold: f64| {
+            let phys = PhysicsConfig {
+                bank_rows: 16,
+                bank_cols: 12,
+                drift_rate: 0.01,
+                recal_threshold: threshold,
+                ..PhysicsConfig::ideal()
+            };
+            let engine: Arc<dyn StepEngine> =
+                Arc::new(PhotonicEngine::open(&dir, phys).unwrap());
+            let server = Server::start(
+                &engine,
+                "tiny",
+                state.params(),
+                ServeConfig { workers: 1, ..cfg(1, 1) },
+            )
+            .unwrap();
+            (engine, server)
+        };
+
+        // scheduler OFF (threshold unreachably high): replies are bit-
+        // exact only while the device stays inside one calibration epoch
+        let (engine, server) = serve(1e9);
+        let r0 = server.infer(x.clone()).unwrap();
+        let per_exec = engine.telemetry().cycles;
+        assert!(per_exec > 0, "photonic serve must fire optical cycles");
+        let mut in_epoch = 0;
+        while engine.telemetry().cycles + per_exec < DRIFT_TICK_CYCLES {
+            assert_eq!(
+                server.infer(x.clone()).unwrap(),
+                r0,
+                "replies inside the first drift tick must be bit-exact"
+            );
+            in_epoch += 1;
+        }
+        assert!(in_epoch > 0, "bank too slow: no request fit in one tick");
+        let mut last = r0.clone();
+        for _ in 0..200 {
+            last = server.infer(x.clone()).unwrap();
+            if engine.telemetry().cycles >= 2 * DRIFT_TICK_CYCLES {
+                break;
+            }
+        }
+        assert_ne!(last, r0, "uncompensated drift must move the logits");
+        let stats = server.shutdown();
+        assert_eq!(stats.telemetry.recal_events, 0);
+        assert!(!stats.report().contains("recal"), "{}", stats.report());
+
+        // scheduler ON: every tick crosses the threshold, so the device is
+        // recalibrated before each dispatch and all replies match the
+        // freshly calibrated logits — including across epochs
+        let (engine, server) = serve(0.05);
+        let first = server.infer(x.clone()).unwrap();
+        assert_eq!(first, r0, "fresh calibration must match the other bank");
+        for i in 0..200 {
+            let r = server.infer(x.clone()).unwrap();
+            assert_eq!(r, r0, "recalibrated reply {i} diverged");
+            if engine.telemetry().cycles >= 3 * DRIFT_TICK_CYCLES {
+                break;
+            }
+        }
+        assert!(
+            engine.telemetry().cycles >= 3 * DRIFT_TICK_CYCLES,
+            "soak did not cross enough drift ticks"
+        );
+        let stats = server.shutdown();
+        assert!(stats.failed == 0 && stats.telemetry.recal_events >= 2);
+        assert!(stats.telemetry.recal_cycles > 0);
+        assert!(stats.report().contains("recal"), "{}", stats.report());
+    }
+
+    #[test]
     fn from_checkpoint_round_trips_params() {
         let engine = engine();
         let (dims, state) = tiny_params(13);
@@ -662,6 +750,7 @@ mod tests {
             protocol: String::new(), // inference never checks the protocol
             rng: Pcg64::seed(13),
             state: state.clone(),
+            device: None,
         };
         let server = Server::from_checkpoint(&engine, &ckpt, cfg(4, 1)).unwrap();
         let x = vec![0.5f32; dims.d_in];

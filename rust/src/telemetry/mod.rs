@@ -30,16 +30,26 @@
 //! thread counts. Only *rates* (MAC/s) depend on wall-clock time, and
 //! they are kept out of the counter snapshot for exactly that reason.
 //!
+//! The device-lifetime work adds two recalibration tallies (`recal_events`,
+//! `recal_cycles` — fired by the drift scheduler, priced by the same §5
+//! model as compute cycles) and one gauge (`drift_err`, the drift model's
+//! latest weight-error estimate). The gauge is excluded from the
+//! determinism contract's *tally* semantics but is still a pure function
+//! of executed dispatches, so it too is thread-count invariant.
+//!
 //! ```
 //! use photonic_dfa::telemetry::Counters;
 //!
 //! let c = Counters::default();
 //! c.add_macs(1_000); // a digital dispatch
 //! c.add_bank(500, 4, 2); // a bank dispatch: 500 MACs over 4 cycles, 2 ops
+//! c.add_recal(300); // one scheduler-fired recalibration, 300 readout cycles
 //! let t = c.snapshot(None);
 //! assert_eq!(t.macs, 1_500);
 //! assert_eq!(t.photonic_macs, 500);
 //! assert_eq!(t.cycles, 4);
+//! assert_eq!(t.recal_events, 1);
+//! assert_eq!(t.recal_cycles, 300);
 //! assert_eq!(t.energy_j, 0.0); // no energy model attached
 //! ```
 
@@ -86,6 +96,15 @@ pub struct Telemetry {
     pub cycles: u64,
     /// Bank operations: inscribe-and-evaluate dispatches (0 on digital).
     pub bank_ops: u64,
+    /// Recalibration events fired by the drift scheduler (0 on digital
+    /// backends and on a static device).
+    pub recal_events: u64,
+    /// Calibration-readout cycles those recalibrations consumed; priced
+    /// into `energy_j` alongside the compute cycles.
+    pub recal_cycles: u64,
+    /// Latest drift-model weight-error estimate (a gauge, not a tally;
+    /// 0 on digital backends and before the first drift tick).
+    pub drift_err: f64,
     /// Modeled wall-plug energy in joules (0 without an energy model).
     pub energy_j: f64,
 }
@@ -99,6 +118,10 @@ impl Telemetry {
             photonic_macs: self.photonic_macs.saturating_sub(earlier.photonic_macs),
             cycles: self.cycles.saturating_sub(earlier.cycles),
             bank_ops: self.bank_ops.saturating_sub(earlier.bank_ops),
+            recal_events: self.recal_events.saturating_sub(earlier.recal_events),
+            recal_cycles: self.recal_cycles.saturating_sub(earlier.recal_cycles),
+            // a gauge: the window's value is the latest reading, not a sum
+            drift_err: self.drift_err,
             energy_j: (self.energy_j - earlier.energy_j).max(0.0),
         }
     }
@@ -137,6 +160,9 @@ impl Telemetry {
             ("photonic_macs", Value::Number(self.photonic_macs as f64)),
             ("cycles", Value::Number(self.cycles as f64)),
             ("bank_ops", Value::Number(self.bank_ops as f64)),
+            ("recal_events", Value::Number(self.recal_events as f64)),
+            ("recal_cycles", Value::Number(self.recal_cycles as f64)),
+            ("drift_err", Value::Number(self.drift_err)),
             ("energy_j", Value::Number(self.energy_j)),
         ])
     }
@@ -148,6 +174,12 @@ impl Telemetry {
             photonic_macs: v.get("photonic_macs").as_f64()? as u64,
             cycles: v.get("cycles").as_f64()? as u64,
             bank_ops: v.get("bank_ops").as_f64()? as u64,
+            // lifetime counters postdate the first run-record format:
+            // absent keys read as a static device, keeping old records
+            // loadable
+            recal_events: v.get("recal_events").as_f64().unwrap_or(0.0) as u64,
+            recal_cycles: v.get("recal_cycles").as_f64().unwrap_or(0.0) as u64,
+            drift_err: v.get("drift_err").as_f64().unwrap_or(0.0),
             energy_j: v.get("energy_j").as_f64()?,
         })
     }
@@ -164,6 +196,15 @@ pub struct Counters {
     photonic_macs: AtomicU64,
     cycles: AtomicU64,
     bank_ops: AtomicU64,
+    recal_events: AtomicU64,
+    recal_cycles: AtomicU64,
+    /// `f64::to_bits` of the latest drift-error estimate (a gauge).
+    drift_err: AtomicU64,
+    /// Engine-global operation sequence: one draw per bank dispatch, used
+    /// to key the dispatch's noise streams. Engine-level (not per
+    /// artifact) so a run's op numbering is a pure function of its
+    /// dispatch order — and therefore checkpointable.
+    op_seq: AtomicU64,
 }
 
 impl Counters {
@@ -181,17 +222,67 @@ impl Counters {
         self.bank_ops.fetch_add(ops, Ordering::Relaxed);
     }
 
-    /// Snapshot the counters; `energy` converts the cycle tally into
+    /// Record one scheduler-fired recalibration of `cycles` readout
+    /// cycles. Kept out of the main `cycles` tally so device time (which
+    /// drives the drift model) never advances while the device is being
+    /// recalibrated — re-drifting during recalibration would make the
+    /// scheduler chase its own tail.
+    pub fn add_recal(&self, cycles: u64) {
+        self.recal_events.fetch_add(1, Ordering::Relaxed);
+        self.recal_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+
+    /// Publish the drift model's latest weight-error estimate.
+    pub fn set_drift_err(&self, err: f64) {
+        self.drift_err.store(err.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Optical cycles fired so far — the device-time base the drift model
+    /// advances against.
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// Draw the next operation number (post-increment).
+    pub fn next_op(&self) -> u64 {
+        self.op_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Current operation-sequence value (for checkpointing).
+    pub fn op_seq(&self) -> u64 {
+        self.op_seq.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the tallies from a checkpointed snapshot (bit-exact
+    /// resume of a photonic device). `energy_j` and `drift_err` are
+    /// derived values and are ignored.
+    pub fn restore(&self, t: &Telemetry, op_seq: u64) {
+        self.macs.store(t.macs, Ordering::Relaxed);
+        self.photonic_macs.store(t.photonic_macs, Ordering::Relaxed);
+        self.cycles.store(t.cycles, Ordering::Relaxed);
+        self.bank_ops.store(t.bank_ops, Ordering::Relaxed);
+        self.recal_events.store(t.recal_events, Ordering::Relaxed);
+        self.recal_cycles.store(t.recal_cycles, Ordering::Relaxed);
+        self.op_seq.store(op_seq, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters; `energy` converts the cycle tallies into
     /// modeled joules (the photonic engine passes its §5 model, the
-    /// digital engines pass `None`).
+    /// digital engines pass `None`). Recalibration readout cycles are
+    /// priced exactly like compute cycles — the §5 budget does not care
+    /// why the bank fired.
     pub fn snapshot(&self, energy: Option<&EnergyModel>) -> Telemetry {
         let cycles = self.cycles.load(Ordering::Relaxed);
+        let recal_cycles = self.recal_cycles.load(Ordering::Relaxed);
         Telemetry {
             macs: self.macs.load(Ordering::Relaxed),
             photonic_macs: self.photonic_macs.load(Ordering::Relaxed),
             cycles,
             bank_ops: self.bank_ops.load(Ordering::Relaxed),
-            energy_j: energy.map_or(0.0, |e| e.joules(cycles)),
+            recal_events: self.recal_events.load(Ordering::Relaxed),
+            recal_cycles,
+            drift_err: f64::from_bits(self.drift_err.load(Ordering::Relaxed)),
+            energy_j: energy.map_or(0.0, |e| e.joules(cycles + recal_cycles)),
         }
     }
 }
@@ -276,13 +367,30 @@ mod tests {
         c.add_macs(100);
         c.add_bank(50, 7, 2);
         c.add_bank(50, 3, 1);
+        c.add_recal(1_000);
+        c.add_recal(2_000);
+        c.set_drift_err(0.125);
         let t = c.snapshot(None);
         assert_eq!(t.macs, 200);
         assert_eq!(t.photonic_macs, 100);
         assert_eq!(t.cycles, 10);
         assert_eq!(t.bank_ops, 3);
+        assert_eq!(t.recal_events, 2);
+        assert_eq!(t.recal_cycles, 3_000);
+        assert_eq!(t.drift_err, 0.125);
         assert_eq!(t.energy_j, 0.0);
         assert!(!t.is_empty());
+        // recalibration never advances device time
+        assert_eq!(c.cycles(), 10);
+        // op sequence: post-increment draws
+        assert_eq!(c.next_op(), 0);
+        assert_eq!(c.next_op(), 1);
+        assert_eq!(c.op_seq(), 2);
+        // restore overwrites tallies bit-exactly
+        let fresh = Counters::default();
+        fresh.restore(&t, 7);
+        assert_eq!(fresh.snapshot(None).recal_cycles, 3_000);
+        assert_eq!(fresh.op_seq(), 7);
     }
 
     #[test]
@@ -297,6 +405,10 @@ mod tests {
         // pJ/MAC = energy / on-bank MACs
         let pj = t.pj_per_mac().unwrap();
         assert!((pj - t.energy_j * 1e12 / 1_000.0).abs() < 1e-12);
+        // recalibration readouts are priced like compute cycles
+        c.add_recal(5);
+        let t = c.snapshot(Some(&model));
+        assert_eq!(t.energy_j, model.joules(15));
     }
 
     #[test]
@@ -333,6 +445,9 @@ mod tests {
             photonic_macs: 98_765,
             cycles: 4_321,
             bank_ops: 17,
+            recal_events: 3,
+            recal_cycles: 9_300,
+            drift_err: 0.03125,
             energy_j: 1.25e-6,
         };
         let v = t.to_json();
@@ -343,5 +458,13 @@ mod tests {
         assert_eq!(Telemetry::from_json(&reparsed), Some(t));
         assert!(!text.contains("mac_per_s"), "rates must stay out: {text}");
         assert_eq!(Telemetry::from_json(&Value::Null), None);
+        // pre-lifetime run records (no recal keys) still load, as a
+        // static device
+        let old = Value::parse(
+            r#"{"macs":10,"photonic_macs":5,"cycles":2,"bank_ops":1,"energy_j":0.5}"#,
+        )
+        .unwrap();
+        let t = Telemetry::from_json(&old).unwrap();
+        assert_eq!((t.recal_events, t.recal_cycles, t.drift_err), (0, 0, 0.0));
     }
 }

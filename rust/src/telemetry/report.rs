@@ -148,6 +148,23 @@ pub fn render_run(r: &RunSummary) -> String {
     row(&mut out, "optical cycles", &t.cycles.to_string(), "—");
     row(&mut out, "bank operations", &t.bank_ops.to_string(), "—");
 
+    // device-lifetime rows: only for runs where the drift scheduler was
+    // live (a static device records no recalibration work)
+    if t.recal_events > 0 || t.recal_cycles > 0 {
+        row(&mut out, "recalibrations", &t.recal_events.to_string(), "— (drift scheduler)");
+        let fired = (t.cycles + t.recal_cycles) as f64;
+        let pct = if fired > 0.0 { 100.0 * t.recal_cycles as f64 / fired } else { 0.0 };
+        row(
+            &mut out,
+            "recal cycles",
+            &format!("{} ({pct:.1} % of fired)", t.recal_cycles),
+            "—",
+        );
+    }
+    if t.drift_err > 0.0 {
+        row(&mut out, "drift error (est.)", &format!("{:.4}", t.drift_err), "< drift:recal");
+    }
+
     let dims = r.physics.as_deref().and_then(bank_dims);
     if let Some((rows, cols)) = dims {
         if t.cycles > 0 {
@@ -173,7 +190,8 @@ pub fn render_run(r: &RunSummary) -> String {
             row(&mut out, "pJ/MAC heater-locked", &format!("{pj:.2}"), &nominal_target);
             if let Some((rows, cols)) = dims {
                 let trimmed = EnergyModel::for_bank(rows, cols, MrrTuning::Trimmed);
-                let pj_t = trimmed.joules(t.cycles) * 1e12 / t.photonic_macs as f64;
+                let pj_t =
+                    trimmed.joules(t.cycles + t.recal_cycles) * 1e12 / t.photonic_macs as f64;
                 row(&mut out, "pJ/MAC trimmed", &format!("{pj_t:.2}"), &trimmed_target);
             }
         }
@@ -281,6 +299,7 @@ mod tests {
             bank_ops: 40,
             energy_j: EnergyModel::for_bank(16, 12, crate::energy::MrrTuning::HeaterLocked)
                 .joules(1_000),
+            ..Telemetry::default()
         };
         let text = render_run(&summary(t, Some("bank=16x12;dac=6;adc=6;sigma=0.1")));
         for needle in [
@@ -299,6 +318,32 @@ mod tests {
         }
         // utilisation: 150k MACs over 1000 cycles x 192 cells = 78.1 %
         assert!(text.contains("78.1 %"), "{text}");
+    }
+
+    #[test]
+    fn drifty_run_report_shows_lifetime_rows() {
+        let model = EnergyModel::for_bank(16, 12, crate::energy::MrrTuning::HeaterLocked);
+        let t = Telemetry {
+            macs: 200_000,
+            photonic_macs: 150_000,
+            cycles: 1_000,
+            bank_ops: 40,
+            recal_events: 3,
+            recal_cycles: 1_000, // 50 % of all fired cycles
+            drift_err: 0.0421,
+            energy_j: model.joules(2_000),
+        };
+        let text = render_run(&summary(t, Some("bank=16x12;dac=6;adc=6;sigma=0.1")));
+        for needle in
+            ["recalibrations", "drift scheduler", "(50.0 % of fired)", "drift error (est.)", "0.0421"]
+        {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+        // a static device keeps the lifetime rows out entirely
+        let quiet = Telemetry { recal_events: 0, recal_cycles: 0, drift_err: 0.0, ..t };
+        let text = render_run(&summary(quiet, Some("bank=16x12;dac=6")));
+        assert!(!text.contains("recalibrations"), "{text}");
+        assert!(!text.contains("drift error"), "{text}");
     }
 
     #[test]
@@ -324,6 +369,7 @@ mod tests {
             protocol: "backend=native;lr=0.05;algorithm=Dfa".into(),
             rng: Pcg64::seed(3),
             state: NetState::init(&dims, &mut rng),
+            device: None,
         };
         let text = render_checkpoint(Path::new("x.ckpt"), &ckpt);
         // dfa step on tiny: 13312 + 2048 + 13312 = 28672; x10 steps
@@ -344,6 +390,7 @@ mod tests {
             cycles: 77,
             bank_ops: 5,
             energy_j: 1.5e-7,
+            ..Telemetry::default()
         };
         let config = Value::object(vec![
             ("backend", Value::str("photonic")),

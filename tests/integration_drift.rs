@@ -1,0 +1,343 @@
+//! Integration: device-lifetime robustness under injected faults.
+//!
+//! The fault-injection harness of the drift subsystem: scripts thermal
+//! faults (temperature steps, drift ramps, dead rings) into a photonic
+//! engine's [`DriftModel`] and trains through them, pinning the
+//! recalibration scheduler's contract —
+//!
+//! * with the scheduler armed, a faulted run recovers to the clean
+//!   trajectory (bit-exactly, for faults the §4 recalibration protocol
+//!   can null) and the recovery cost lands in the telemetry;
+//! * with the scheduler disarmed, the same fault degrades accuracy;
+//! * a dead ring degrades gracefully — finite numbers, no NaNs, and no
+//!   endless recalibration storm chasing an unfixable error;
+//! * drifting trajectories stay bit-identical across `--threads`, and a
+//!   drifting run resumes bit-exactly from its checkpoint (the device
+//!   blob carries the drift state across the restart).
+
+use std::sync::Arc;
+
+use photonic_dfa::dfa::checkpoint::Checkpoint;
+use photonic_dfa::dfa::config::TrainConfig;
+use photonic_dfa::dfa::trainer::{TrainResult, Trainer};
+use photonic_dfa::photonics::drift::{FaultEvent, FaultKind};
+use photonic_dfa::runtime::photonic::{
+    PhotonicEngine, DRIFT_RATE_DEFAULT, RECAL_THRESHOLD_DEFAULT,
+};
+use photonic_dfa::runtime::{PhysicsConfig, StepEngine};
+
+/// Recalibration threshold that disarms the scheduler (finite, so
+/// `PhysicsConfig::validate` accepts it, but never reachable).
+const RECAL_OFF: f64 = 1e30;
+
+/// The noise-free lifetime testbed: ideal converters on a multi-tile
+/// bank, so any trajectory difference is attributable to the injected
+/// fault alone.
+fn quiet_physics() -> PhysicsConfig {
+    PhysicsConfig {
+        bank_rows: 16,
+        bank_cols: 12,
+        recal_threshold: RECAL_THRESHOLD_DEFAULT,
+        ..PhysicsConfig::ideal()
+    }
+}
+
+fn tiny_cfg(physics: PhysicsConfig) -> TrainConfig {
+    TrainConfig {
+        config: "tiny".into(),
+        epochs: 3,
+        lr: 0.05,
+        n_train: 256,
+        n_test: 64,
+        seed: 3,
+        physics: Some(physics),
+        ..TrainConfig::default()
+    }
+}
+
+/// Train tiny end to end on a fresh engine under `physics`, with `faults`
+/// scripted into the device before the first dispatch. Returns the run
+/// result and the final network state bytes (the bit-exactness witness).
+fn train_with_faults(
+    physics: PhysicsConfig,
+    faults: &[FaultEvent],
+) -> (TrainResult, Vec<u8>) {
+    let engine = PhotonicEngine::open("artifacts", physics).unwrap();
+    engine.inject_faults(faults).unwrap();
+    let engine: Arc<dyn StepEngine> = Arc::new(engine);
+    let mut t = Trainer::new(engine, tiny_cfg(physics)).unwrap();
+    let (train, test) = t.load_data().unwrap();
+    let res = t.train(train, test, |_| {}).unwrap();
+    (res, t.state.to_bytes())
+}
+
+#[test]
+fn step_drift_fault_recovers_with_recal_and_degrades_without() {
+    // a package temperature step knocks every ring 0.05 rad off its
+    // locking point — ~6 weight units on the high-finesse flank, far
+    // over the 0.05 recalibration threshold
+    let step = [FaultEvent {
+        at_tick: 1,
+        kind: FaultKind::StepDrift { phase: 0.05 },
+    }];
+    let (clean, clean_state) = train_with_faults(quiet_physics(), &[]);
+    assert!(clean.test_acc > 0.6, "clean sanity: {}", clean.test_acc);
+    assert_eq!(clean.telemetry.recal_events, 0);
+
+    // scheduler armed: the recalibration fires at the very tick the step
+    // lands, so no dispatch ever sees the fault — the trajectory is
+    // bit-identical to the clean run, and the recovery cost is charged
+    let (on, on_state) = train_with_faults(quiet_physics(), &step);
+    assert!(on.telemetry.recal_events >= 1, "{:?}", on.telemetry);
+    assert!(on.telemetry.recal_cycles > 0);
+    assert_eq!(on_state, clean_state, "recovered trajectory diverged");
+    assert_eq!(on.test_acc.to_bits(), clean.test_acc.to_bits());
+    for (a, b) in on.history.iter().zip(&clean.history) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+    }
+    assert!(
+        on.telemetry.energy_j > clean.telemetry.energy_j,
+        "recalibration must cost modeled energy: {} vs {}",
+        on.telemetry.energy_j,
+        clean.telemetry.energy_j
+    );
+    assert_eq!(on.telemetry.drift_err, 0.0, "recal must null the estimate");
+
+    // scheduler disarmed: the step goes uncompensated and wrecks both
+    // the forward pass and the photonic gradient readout
+    let off_physics =
+        PhysicsConfig { recal_threshold: RECAL_OFF, ..quiet_physics() };
+    let (off, off_state) = train_with_faults(off_physics, &step);
+    assert_eq!(off.telemetry.recal_events, 0);
+    assert!(off.telemetry.drift_err > 1.0, "{}", off.telemetry.drift_err);
+    assert!(off.test_acc.is_finite());
+    for h in &off.history {
+        assert!(h.train_loss.is_finite(), "epoch {}: NaN loss", h.epoch);
+    }
+    assert!(
+        off.test_acc <= clean.test_acc - 0.2,
+        "uncompensated step must degrade accuracy: {} vs clean {}",
+        off.test_acc,
+        clean.test_acc
+    );
+    assert_ne!(off_state, clean_state);
+}
+
+#[test]
+fn ramp_drift_is_continuously_recalibrated() {
+    // ambient drift accelerates mid-run: from tick 2 the walk amplitude
+    // jumps to 0.02 rad/√tick (~2.4 weight units per tick), so every
+    // later tick crosses the threshold and the scheduler must keep
+    // firing — pinning the run to the clean trajectory throughout
+    let ramp = [FaultEvent {
+        at_tick: 2,
+        kind: FaultKind::RampDrift { rate: 0.02 },
+    }];
+    let (clean, clean_state) = train_with_faults(quiet_physics(), &[]);
+    let (on, on_state) = train_with_faults(quiet_physics(), &ramp);
+    assert!(
+        on.telemetry.recal_events >= 2,
+        "ramp must recalibrate repeatedly: {:?}",
+        on.telemetry
+    );
+    assert_eq!(on_state, clean_state, "ramp-compensated trajectory diverged");
+    assert_eq!(on.test_acc.to_bits(), clean.test_acc.to_bits());
+    assert!(on.telemetry.recal_cycles > on.telemetry.recal_events); // >1 cycle each
+}
+
+#[test]
+fn dead_ring_degrades_gracefully_without_recal_storm() {
+    // ring 7 dies with its weight stuck at 0.25: recalibration cannot
+    // recover it, so the scheduler must exclude it from the error
+    // estimate (no endless recal loop) and the run must stay finite
+    let dead = [FaultEvent {
+        at_tick: 1,
+        kind: FaultKind::DeadRing { ring: 7, weight: 0.25 },
+    }];
+    let (clean, _) = train_with_faults(quiet_physics(), &[]);
+    let (res, _) = train_with_faults(quiet_physics(), &dead);
+    assert_eq!(
+        res.telemetry.recal_events, 0,
+        "a dead ring must not trigger a recalibration storm"
+    );
+    assert_eq!(res.telemetry.drift_err, 0.0, "stuck rings are excluded");
+    assert!(res.test_acc.is_finite());
+    assert!(res.telemetry.energy_j.is_finite());
+    for h in &res.history {
+        assert!(h.train_loss.is_finite(), "epoch {}: NaN loss", h.epoch);
+        assert!(h.train_acc.is_finite());
+    }
+    // one stuck ring out of 192 dents but does not destroy the run
+    assert!(
+        res.test_acc >= clean.test_acc - 0.3,
+        "dead ring: {} vs clean {}",
+        res.test_acc,
+        clean.test_acc
+    );
+}
+
+#[test]
+fn default_lifetime_physics_meets_static_accuracy_with_recal() {
+    // the acceptance arm: the paper operating point on an aging device.
+    // The thermal walk is the drifty default; aging is scaled up (1e-4
+    // vs the 2e-6/tick default) so the short tiny run spans the same
+    // device lifetime an MNIST run covers at default rates. The armed
+    // scheduler must hold accuracy at the static preset's level while
+    // the disarmed device visibly ages.
+    let budget = |mut cfg: TrainConfig| {
+        cfg.epochs = 2;
+        cfg.max_steps_per_epoch = Some(8);
+        cfg.n_train = 64;
+        cfg
+    };
+    let run = |physics: PhysicsConfig| {
+        let engine: Arc<dyn StepEngine> =
+            Arc::new(PhotonicEngine::open("artifacts", physics).unwrap());
+        let mut t = Trainer::new(engine, budget(tiny_cfg(physics))).unwrap();
+        let (train, test) = t.load_data().unwrap();
+        t.train(train, test, |_| {}).unwrap()
+    };
+    // multi-tile bank, otherwise the full paper/static operating point
+    let static_physics = PhysicsConfig {
+        bank_rows: 16,
+        bank_cols: 12,
+        ..PhysicsConfig::paper()
+    };
+    let aging_physics = |threshold: f64| PhysicsConfig {
+        drift_rate: DRIFT_RATE_DEFAULT,
+        drift_aging: 1e-4,
+        recal_threshold: threshold,
+        ..static_physics
+    };
+
+    let fresh = run(static_physics);
+    assert!(fresh.test_acc > 0.3, "static sanity: {}", fresh.test_acc);
+
+    let on = run(aging_physics(RECAL_THRESHOLD_DEFAULT));
+    assert!(on.telemetry.recal_events >= 1, "{:?}", on.telemetry);
+    // the scheduler bounds the telemetry-estimated weight error by its
+    // threshold: every dispatch past it was preceded by a recalibration
+    assert!(
+        on.telemetry.drift_err <= RECAL_THRESHOLD_DEFAULT,
+        "{}",
+        on.telemetry.drift_err
+    );
+    assert!(
+        on.test_acc >= fresh.test_acc - 0.08,
+        "recal-on aging device fell behind the static preset: {} vs {}",
+        on.test_acc,
+        fresh.test_acc
+    );
+
+    let off = run(aging_physics(RECAL_OFF));
+    assert_eq!(off.telemetry.recal_events, 0);
+    assert!(
+        off.telemetry.drift_err > RECAL_THRESHOLD_DEFAULT,
+        "uncompensated aging must grow past the threshold: {}",
+        off.telemetry.drift_err
+    );
+    assert!(
+        off.test_acc <= on.test_acc,
+        "aging without recalibration must not beat the scheduler: {} vs {}",
+        off.test_acc,
+        on.test_acc
+    );
+}
+
+/// A drifting, noisy operating point that exercises the whole stochastic
+/// stack at once: live read noise, real converters, thermal walk hot
+/// enough to recalibrate every tick.
+fn drifting_noisy_physics() -> PhysicsConfig {
+    PhysicsConfig {
+        bank_rows: 16,
+        bank_cols: 12,
+        dac_bits: 6,
+        adc_bits: 6,
+        sigma: 0.1,
+        drift_rate: 1e-3,
+        drift_aging: 1e-5,
+        recal_threshold: RECAL_THRESHOLD_DEFAULT,
+        ..PhysicsConfig::ideal()
+    }
+}
+
+#[test]
+fn drifting_training_is_bit_identical_across_thread_counts() {
+    // drift ticks derive from the engine's cycle counter, never from
+    // wall-clock, so the drift/recalibration schedule — and with it the
+    // whole trajectory — must be a pure function of the dispatch sequence
+    let physics = drifting_noisy_physics();
+    let ckpt_at = |threads: usize| {
+        let engine: Arc<dyn StepEngine> = Arc::new(
+            PhotonicEngine::open_threaded("artifacts", physics, threads).unwrap(),
+        );
+        let mut cfg = tiny_cfg(physics);
+        cfg.epochs = 1;
+        cfg.max_steps_per_epoch = Some(6);
+        cfg.n_train = 64;
+        cfg.threads = threads;
+        let mut t = Trainer::new(engine, cfg).unwrap();
+        let (train, test) = t.load_data().unwrap();
+        let res = t.train(train, test, |_| {}).unwrap();
+        assert!(res.test_acc.is_finite());
+        assert!(res.telemetry.recal_events >= 1, "drift never engaged");
+        let path = std::env::temp_dir()
+            .join(format!("pdfa_drift_thread_inv_{threads}.ckpt"));
+        t.save_checkpoint(&path).unwrap();
+        std::fs::read(&path).unwrap()
+    };
+    let a = ckpt_at(1);
+    let b = ckpt_at(4);
+    assert_eq!(a, b, "drifting checkpoints diverged across thread counts");
+}
+
+#[test]
+fn drifting_run_resumes_bit_exactly_from_checkpoint() {
+    // the device blob in the v2 checkpoint carries the op sequence,
+    // counters and drift state, so a resumed drifting run must replay
+    // the uninterrupted trajectory byte for byte — including the
+    // mid-lifetime thermal phases and the recalibration schedule
+    let physics = drifting_noisy_physics();
+    let dir = std::env::temp_dir().join("pdfa_drift_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_to = |epochs: usize, path: &std::path::Path| {
+        let mut cfg = tiny_cfg(physics);
+        cfg.epochs = epochs;
+        cfg.max_steps_per_epoch = Some(6);
+        cfg.n_train = 64;
+        cfg.save_path = Some(path.to_str().unwrap().into());
+        cfg.save_every = 1; // in-loop saves: both arms snapshot at the
+                            // same point of the dispatch sequence
+        cfg
+    };
+    let trainer = |cfg: TrainConfig| {
+        let engine: Arc<dyn StepEngine> =
+            Arc::new(PhotonicEngine::open("artifacts", physics).unwrap());
+        Trainer::new(engine, cfg).unwrap()
+    };
+
+    // uninterrupted: two epochs straight through
+    let full_path = dir.join("full.ckpt");
+    let mut full = trainer(cfg_to(2, &full_path));
+    let (train, test) = full.load_data().unwrap();
+    full.train(train.clone(), test.clone(), |_| {}).unwrap();
+    let want = std::fs::read(&full_path).unwrap();
+
+    // interrupted: one epoch, checkpoint, fresh engine, resume, epoch two
+    let donor_path = dir.join("donor.ckpt");
+    let mut donor = trainer(cfg_to(1, &donor_path));
+    donor.train(train.clone(), test.clone(), |_| {}).unwrap();
+    let ckpt = Checkpoint::load(&donor_path).unwrap();
+    assert!(
+        ckpt.device.is_some(),
+        "photonic checkpoints must carry the device blob"
+    );
+
+    let resumed_path = dir.join("resumed.ckpt");
+    let mut resumed = trainer(cfg_to(2, &resumed_path));
+    resumed.restore(&ckpt).unwrap();
+    assert_eq!(resumed.epochs_done(), 1);
+    resumed.train(train, test, |_| {}).unwrap();
+    let got = std::fs::read(&resumed_path).unwrap();
+    assert_eq!(got, want, "resumed drifting run diverged from uninterrupted");
+}
